@@ -1,0 +1,52 @@
+//! Quickstart: the smallest complete SWALP run.
+//!
+//!   make artifacts && cargo run --release --offline --example quickstart
+//!
+//! Loads the 4-bit (W4F2) logistic-regression artifact, trains with
+//! low-precision SGD, folds the iterates into the host-side SWA
+//! accumulator, and shows the paper's core effect: the averaged model
+//! beats the raw low-precision iterate.
+
+use anyhow::Result;
+
+use swalp::coordinator::{Schedule, TrainConfig, Trainer};
+use swalp::data;
+use swalp::runtime::{artifacts_dir, Manifest, Runtime};
+
+fn main() -> Result<()> {
+    // 1. PJRT client + AOT artifacts (python is NOT involved from here on)
+    let runtime = Runtime::new()?;
+    let manifest = Manifest::load(&artifacts_dir())?;
+    println!("platform: {}", runtime.platform());
+
+    // 2. a model = a (network, quantization config) pair from the manifest
+    let model = runtime.load_model(&manifest, "logreg_fx_f2")?;
+    println!(
+        "model: {} — {} params, all-weight quantization {} (W4F2 fixed point)",
+        model.spec.name,
+        model.spec.param_count(),
+        model.spec.quant.name
+    );
+
+    // 3. dataset substrate (MNIST-like synthetic; DESIGN.md §5)
+    let split = data::build(&model.spec.dataset, 7, 0.5)?;
+
+    // 4. SWALP: warm up with LP-SGD, then average every step (c=1)
+    let trainer = Trainer::new(&model, &split);
+    let mut cfg = TrainConfig::new(
+        1200,                        // total steps
+        400,                         // warm-up before averaging starts
+        1,                           // cycle length c
+        Schedule::Constant(0.01),    // the paper's logreg LR
+    );
+    cfg.eval_every = 400;
+    cfg.verbose = true;
+    let out = trainer.run(&cfg)?;
+
+    // 5. the paper's claim, in two lines:
+    println!("\nlow-precision SGD iterate:  test err {:>6.2}%", out.sgd_test_err);
+    println!("SWALP averaged model:       test err {:>6.2}%  (m={} folds)",
+        out.swa_test_err.unwrap(),
+        out.swa.as_ref().unwrap().m);
+    Ok(())
+}

@@ -1,0 +1,333 @@
+"""AOT compiler: lower every registered (model, quant-config) to HLO text.
+
+Run as `python -m compile.aot --out-dir ../artifacts` (see Makefile
+`artifacts` target). Produces:
+
+  artifacts/<spec>.{init,train,eval[,eval_flex]}.hlo.txt
+  artifacts/manifest.json        — calling conventions + quant metadata
+  artifacts/golden_quant.json    — quantizer golden vectors for the rust
+                                   parity tests (rust/tests/quant_parity.rs)
+
+HLO *text* is the interchange format: jax ≥ 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md). Existing .hlo.txt files
+are reused unless --force; the manifest is always rewritten.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import graphs, qconfig
+from .kernels import qrand, ref
+from .models.cnn import VGGMini
+from .models.linreg import LinReg
+from .models.logreg import LogReg
+from .models.mlp import MLP
+from .models.preresnet import PreResNetMini
+from .models.transformer import TransformerLM
+from .models.wage import WageCNN
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class Spec:
+    def __init__(self, name, make_model, cfg, *, dataset, batch_train,
+                 batch_eval, x_shape, y_shape=(), weight_decay=0.0,
+                 flex_eval=False, grad_norm_eval=False):
+        self.name = name
+        self.make_model = make_model
+        self.cfg = cfg
+        self.dataset = dataset
+        self.batch_train = batch_train
+        self.batch_eval = batch_eval
+        self.x_shape = tuple(x_shape)
+        self.y_shape = tuple(y_shape)
+        self.weight_decay = weight_decay
+        self.flex_eval = flex_eval
+        self.grad_norm_eval = grad_norm_eval
+
+
+def wage_cfg() -> qconfig.TrainQuantConfig:
+    """WAGE-style: 2-bit weights, 8-bit acts, shift-scaled (Big-block BFP)
+    errors/grads, plain SGD (models/wage.py)."""
+    return qconfig.TrainQuantConfig(
+        "wage",
+        w=qconfig.fixed(2, 1), a=qconfig.fixed(8, 5),
+        g=qconfig.bfp(8, small_block=False),
+        e=qconfig.bfp(8, small_block=False),
+        m=qconfig.NONE, rho=0.0,
+    )
+
+
+def registry() -> list[Spec]:
+    specs: list[Spec] = []
+
+    # ---- theory: linear regression (Fig 2 left, App G) ----
+    for cname, cfg in [("fp32", qconfig.fp32()),
+                       ("fx86", qconfig.fixed_weights_only(8, 6))]:
+        specs.append(Spec(
+            f"linreg_{cname}", lambda: LinReg(256), cfg,
+            dataset="linreg_synth", batch_train=1, batch_eval=256,
+            x_shape=(256,), y_shape=()))
+
+    # ---- theory: logistic regression (Fig 2 middle/right, Table 4) ----
+    specs.append(Spec(
+        "logreg_fp32", lambda: LogReg(784, 10), qconfig.fp32(),
+        dataset="mnist_like", batch_train=32, batch_eval=512,
+        x_shape=(784,), grad_norm_eval=True))
+    for f in (2, 4, 6, 8, 10, 12, 14):
+        specs.append(Spec(
+            f"logreg_fx_f{f}", lambda: LogReg(784, 10),
+            qconfig.fixed_weights_only(f + 2, f),
+            dataset="mnist_like", batch_train=32, batch_eval=512,
+            x_shape=(784,), grad_norm_eval=True))
+
+    # ---- Table 1: CIFAR-like x {VGG-mini, PreResNet-mini} ----
+    dl_cfgs = [("fp32", qconfig.fp32(rho=0.9)),
+               ("bfp8big", qconfig.bfp8(small_block=False)),
+               ("bfp8small", qconfig.bfp8(small_block=True))]
+    for ds, classes in [("cifar10", 10), ("cifar100", 100)]:
+        for cname, cfg in dl_cfgs:
+            specs.append(Spec(
+                f"{ds}_vgg_{cname}",
+                lambda classes=classes: VGGMini(classes=classes), cfg,
+                dataset=f"{ds}_like", batch_train=32, batch_eval=256,
+                x_shape=(3, 16, 16), weight_decay=5e-4,
+                flex_eval=(ds == "cifar100" and cname == "bfp8small")))
+            specs.append(Spec(
+                f"{ds}_prn_{cname}",
+                lambda classes=classes: PreResNetMini(classes=classes), cfg,
+                dataset=f"{ds}_like", batch_train=32, batch_eval=256,
+                x_shape=(3, 16, 16), weight_decay=3e-4))
+
+    # ---- Table 2: ImageNet-like ResNet ----
+    for cname, cfg in [("fp32", qconfig.fp32(rho=0.9)),
+                       ("bfp8small", qconfig.bfp8(small_block=True))]:
+        specs.append(Spec(
+            f"imagenet_rn_{cname}",
+            lambda: PreResNetMini(classes=20), cfg,
+            dataset="imagenet_like", batch_train=32, batch_eval=256,
+            x_shape=(3, 16, 16), weight_decay=1e-4))
+
+    # ---- end-to-end LM example ----
+    for cname, cfg in [("fp32", qconfig.fp32(rho=0.9)),
+                       ("bfp8small", qconfig.bfp8(small_block=True))]:
+        specs.append(Spec(
+            f"lm_{cname}", lambda: TransformerLM(), cfg,
+            dataset="zipf_lm", batch_train=8, batch_eval=16,
+            x_shape=(64,), y_shape=(64,)))
+
+    # ---- Table 3: WAGE-style ----
+    specs.append(Spec(
+        "wage_cnn", lambda: WageCNN(classes=10), wage_cfg(),
+        dataset="cifar10_like", batch_train=32, batch_eval=256,
+        x_shape=(3, 16, 16)))
+
+    # ---- qmatmul-on-the-train-path MLP (perf bench / kernel integration) --
+    specs.append(Spec(
+        "mlp_qmm_fx86",
+        lambda: MLP(d_in=256, hidden=128, classes=10, qmm_wl=8, qmm_fl=5),
+        qconfig.fixed_all(8, 6, rho=0.9),
+        dataset="mnist_like_256", batch_train=32, batch_eval=256,
+        x_shape=(256,)))
+
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_io(spec: Spec, gs: graphs.GraphSet):
+    """Build input/output name+shape tables for each entry point."""
+    t_shapes = [(n, gs.shapes[n]) for n in gs.trainable_names]
+    s_shapes = [(n, gs.shapes[n]) for n in gs.state_names]
+    params_io = t_shapes + s_shapes
+    mom_io = [("mom::" + n, sh) for n, sh in t_shapes]
+
+    xb = ("x", (spec.batch_train, *spec.x_shape))
+    yb = ("y", (spec.batch_train, *spec.y_shape))
+    xe = ("x", (spec.batch_eval, *spec.x_shape))
+    ye = ("y", (spec.batch_eval, *spec.y_shape))
+
+    io = {}
+    io["init"] = {
+        "in": [("seed", ())],
+        "out": params_io + mom_io,
+    }
+    io["train"] = {
+        "in": params_io + mom_io + [xb, yb, ("lr", ()), ("step", ())],
+        "out": params_io + mom_io + [("loss", ())],
+    }
+    ev_out = [("loss", ()), ("metric", ())]
+    if spec.grad_norm_eval:
+        ev_out = ev_out + [("grad_norm_sq", ())]
+    io["eval"] = {"in": params_io + [xe, ye], "out": ev_out}
+    if s_shapes:
+        # stateful (BatchNorm) models get the batch-stats eval used for
+        # SWA weight averages (graphs.eval_bs_fn)
+        io["eval_bs"] = {
+            "in": params_io + [xe, ye],
+            "out": [("loss", ()), ("metric", ())],
+        }
+    if spec.flex_eval:
+        io["eval_flex"] = {
+            "in": params_io + [xe, ye, ("act_wl", ())],
+            "out": [("loss", ()), ("metric", ())],
+        }
+    return io
+
+
+def _structs(io_list):
+    return [jax.ShapeDtypeStruct(sh, jnp.float32) for _, sh in io_list]
+
+
+def lower_spec(spec: Spec, out_dir: str, force: bool) -> dict:
+    model = spec.make_model()
+    gs = graphs.build(model, spec.cfg, weight_decay=spec.weight_decay,
+                      flex_eval=spec.flex_eval,
+                      grad_norm_eval=spec.grad_norm_eval)
+    io = _spec_io(spec, gs)
+    fns = {"init": gs.init_fn, "train": gs.train_fn, "eval": gs.eval_fn}
+    if "eval_bs" in io:
+        fns["eval_bs"] = gs.eval_bs_fn
+    if spec.flex_eval:
+        fns["eval_flex"] = gs.eval_flex_fn
+
+    entries = {}
+    for ename, fn in fns.items():
+        fname = f"{spec.name}.{ename}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        if force or not os.path.exists(path):
+            # keep_unused: fp32 configs ignore seed/step; the artifact ABI
+            # must keep every manifest input regardless
+            lowered = jax.jit(fn, keep_unused=True).lower(
+                *_structs(io[ename]["in"]))
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  lowered {fname} ({len(text)//1024} KiB)", flush=True)
+        else:
+            print(f"  cached  {fname}", flush=True)
+        entries[ename] = {
+            "file": fname,
+            "inputs": [{"name": n, "shape": list(sh)}
+                       for n, sh in io[ename]["in"]],
+            "outputs": [{"name": n, "shape": list(sh)}
+                        for n, sh in io[ename]["out"]],
+        }
+
+    return {
+        "name": spec.name,
+        "family": model.family,
+        "task": model.task,
+        "dataset": spec.dataset,
+        "classes": getattr(model, "classes", 0),
+        "quant": spec.cfg.to_json(),
+        "weight_decay": spec.weight_decay,
+        "batch_train": spec.batch_train,
+        "batch_eval": spec.batch_eval,
+        "x_shape": list(spec.x_shape),
+        "y_shape": list(spec.y_shape),
+        "trainable": [{"name": n, "shape": list(gs.shapes[n])}
+                      for n in gs.trainable_names],
+        "state": [{"name": n, "shape": list(gs.shapes[n])}
+                  for n in gs.state_names],
+        "entries": entries,
+    }
+
+
+# ---------------------------------------------------------------------------
+# golden vectors for rust parity (rust/tests/quant_parity.rs)
+# ---------------------------------------------------------------------------
+
+def golden_vectors() -> dict:
+    rs = np.random.RandomState(1234)
+    x = rs.randn(4, 24).astype(np.float32) * 2.5
+    x_flat = [float(v) for v in x.reshape(-1)]
+    cases = []
+    for wl, fl, seed in [(8, 6, 42), (4, 2, 7), (16, 14, 99), (2, 1, 5)]:
+        q = ref.quantize_fixed(jnp.asarray(x), wl, fl, seed)
+        cases.append({"kind": "fixed", "wl": wl, "fl": fl, "seed": seed,
+                      "out": [float(v) for v in np.asarray(q).reshape(-1)]})
+        qn = ref.quantize_fixed(jnp.asarray(x), wl, fl, seed,
+                                stochastic=False)
+        cases.append({"kind": "fixed_nearest", "wl": wl, "fl": fl,
+                      "seed": seed,
+                      "out": [float(v) for v in np.asarray(qn).reshape(-1)]})
+    for wl, axes, seed in [(8, (), 3), (8, (0,), 11), (6, (0,), 13),
+                           (16, (), 17)]:
+        q = ref.quantize_bfp(jnp.asarray(x), wl, seed, block_axes=axes)
+        cases.append({"kind": "bfp", "wl": wl, "ebits": 8,
+                      "block_axes": list(axes), "seed": seed,
+                      "out": [float(v) for v in np.asarray(q).reshape(-1)]})
+    hashes = [int(v) for v in np.asarray(
+        qrand.mix32(jnp.arange(32, dtype=jnp.uint32)))]
+    uniforms = [float(v) for v in np.asarray(
+        qrand.uniform_from_counter(np.uint32(42),
+                                   jnp.arange(32, dtype=jnp.uint32)))]
+    seeds = [int(np.asarray(qrand.derive_seed(a, b, c)))
+             for a, b, c in [(0, 0, 0), (1, 2, 3), (100, 7, 1),
+                             (12345, 42, 5)]]
+    return {"x_shape": [4, 24], "x": x_flat, "cases": cases,
+            "mix32_of_0_31": hashes, "uniform_seed42": uniforms,
+            "derive_seed_cases": seeds}
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None,
+                    help="substring filter on spec names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    specs = registry()
+    if args.list:
+        for s in specs:
+            print(f"{s.name:32s} cfg={s.cfg.name:14s} data={s.dataset}")
+        return
+    if args.only:
+        specs = [s for s in specs if args.only in s.name]
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "models": []}
+    for spec in specs:
+        print(f"[aot] {spec.name}", flush=True)
+        manifest["models"].append(lower_spec(spec, out_dir, args.force))
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out_dir, "golden_quant.json"), "w") as f:
+        json.dump(golden_vectors(), f)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} models "
+          f"-> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

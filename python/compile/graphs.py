@@ -1,0 +1,215 @@
+"""Assemble (model, quant-config) pairs into the three AOT entry points.
+
+Calling convention (recorded in manifest.json, consumed by
+rust/src/runtime/model.rs):
+
+  init :  (seed)                                        -> (T..., S..., M...)
+  train:  (T..., S..., M..., x, y, lr, step)            -> (T..., S..., M..., loss)
+  eval :  (T..., S..., x, y)                            -> (loss, metric[, grad_norm_sq])
+  eval_flex: (T..., S..., x, y, act_wl)                 -> (loss, metric)
+
+T = trainable tensors, S = BatchNorm state, M = momentum buffers — each
+flattened in sorted-name order. All scalars are f32 (step counters are
+exact below 2^24). `metric` is the batch error count for classification /
+LM and the squared-error sum for regression.
+
+train implements Algorithm 2 exactly: Q_A/Q_E sites live inside
+model.apply (via qtrain.ActQuantizer), Q_G is applied to the produced
+gradients, and the fused L1 kernel performs the Q_M/Q_W momentum update.
+Weight decay is folded into the gradient before Q_G (classic SGD-WD), as
+the paper's experiments do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import qconfig, qtrain
+from .kernels import ref
+
+
+def names_of(d: dict) -> list[str]:
+    return sorted(d.keys())
+
+
+def _pack(d: dict) -> list:
+    return [d[k] for k in names_of(d)]
+
+
+def _unpack(names: list[str], vals) -> dict:
+    return dict(zip(names, vals))
+
+
+def _prep_y(task: str, y):
+    if task == "regression":
+        return y
+    return y.astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class GraphSet:
+    """The jit-able callables + naming metadata for one model-config."""
+
+    model: object
+    cfg: qconfig.TrainQuantConfig
+    weight_decay: float
+    trainable_names: list[str]
+    state_names: list[str]
+    shapes: dict  # name -> shape tuple (trainable + state)
+    init_fn: object
+    train_fn: object
+    eval_fn: object
+    eval_bs_fn: object    # eval with train-mode batch stats (SWA models)
+    eval_flex_fn: object  # may be None
+
+
+def build(model, cfg: qconfig.TrainQuantConfig, weight_decay: float = 0.0,
+          flex_eval: bool = False, grad_norm_eval: bool = False,
+          init_seed_default: int = 1) -> GraphSet:
+    # probe init (eager, cheap) to learn names/shapes
+    t0, s0 = model.init(jax.random.PRNGKey(init_seed_default))
+    t_names, s_names = names_of(t0), names_of(s0)
+    shapes = {k: tuple(v.shape) for k, v in {**t0, **s0}.items()}
+    task = model.task
+
+    n_t, n_s = len(t_names), len(s_names)
+
+    # ---------------- init ----------------
+    def init_fn(seed):
+        key = jax.random.PRNGKey(jnp.asarray(seed).astype(jnp.uint32))
+        tr, st = model.init(key)
+        tr = qtrain.quantize_params(cfg, tr, step=0)  # w_0 on the LP grid
+        mom = {k: jnp.zeros_like(v) for k, v in tr.items()}
+        return tuple(_pack(tr) + _pack(st) + _pack(mom))
+
+    # ---------------- train ----------------
+    def train_fn(*args):
+        tr = _unpack(t_names, args[:n_t])
+        st = _unpack(s_names, args[n_t:n_t + n_s])
+        mom = _unpack(t_names, args[n_t + n_s:n_t + n_s + n_t])
+        x, y, lr, step = args[n_t + n_s + n_t:]
+        y_p = _prep_y(task, y)
+        qa = qtrain.ActQuantizer(cfg, step)
+
+        def loss_fn(tr_d):
+            out, new_st = model.apply(tr_d, st, x, qa, train=True)
+            if task == "regression":
+                loss = model.loss(out, y_p)
+            else:
+                loss = model.loss(out, y_p, tr_d)
+            return loss, new_st
+
+        (loss, new_st), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(tr)
+        if weight_decay > 0.0:
+            grads = {k: g + weight_decay * tr[k] for k, g in grads.items()}
+        grads = qtrain.quantize_grads(cfg, grads, step)
+        new_tr, new_mom = qtrain.lp_sgd_update_tree(cfg, tr, mom, grads,
+                                                    lr, step)
+        return tuple(_pack(new_tr) + _pack(new_st) + _pack(new_mom) + [loss])
+
+    # ---------------- eval ----------------
+    eval_cfg = dataclasses.replace(
+        cfg,
+        a=dataclasses.replace(cfg.a, stochastic=False),
+        e=qconfig.NONE,
+    )
+
+    def _metric(out, y_p):
+        if task == "regression":
+            return jnp.sum((out - y_p) ** 2)
+        if task == "lm":
+            B, T, V = out.shape
+            pred = jnp.argmax(out.reshape(B * T, V), axis=-1)
+            return jnp.sum((pred != y_p.reshape(B * T)).astype(jnp.float32))
+        pred = jnp.argmax(out, axis=-1)
+        return jnp.sum((pred != y_p).astype(jnp.float32))
+
+    def eval_fn(*args):
+        tr = _unpack(t_names, args[:n_t])
+        st = _unpack(s_names, args[n_t:n_t + n_s])
+        x, y = args[n_t + n_s:]
+        y_p = _prep_y(task, y)
+        qa = qtrain.ActQuantizer(eval_cfg, jnp.float32(0.0))
+        out, _ = model.apply(tr, st, x, qa, train=False)
+        if task == "regression":
+            loss = model.loss(out, y_p)
+        else:
+            loss = model.loss(out, y_p, tr)
+        res = [loss, _metric(out, y_p)]
+        if grad_norm_eval:
+            # ‖∇f(w)‖² of the FULL-PRECISION objective at this iterate —
+            # the paper's Fig. 2 (middle) metric.
+            fp_qa = qtrain.ActQuantizer(qconfig.fp32(), jnp.float32(0.0))
+
+            def fp_loss(tr_d):
+                o, _ = model.apply(tr_d, st, x, fp_qa, train=False)
+                if task == "regression":
+                    return model.loss(o, y_p)
+                return model.loss(o, y_p, tr_d)
+
+            g = jax.grad(fp_loss)(tr)
+            res.append(sum(jnp.sum(v ** 2) for v in g.values()))
+        return tuple(res)
+
+    # ---------------- eval with batch statistics ----------------
+    # SWA weight averages need BatchNorm statistics recomputed under the
+    # averaged weights (Izmailov et al.'s bn_update); evaluating with
+    # train-mode batch stats over the large eval batch is the stateless
+    # equivalent the coordinator uses for SWA models.
+    def eval_bs_fn(*args):
+        tr = _unpack(t_names, args[:n_t])
+        st = _unpack(s_names, args[n_t:n_t + n_s])
+        x, y = args[n_t + n_s:]
+        y_p = _prep_y(task, y)
+        qa = qtrain.ActQuantizer(eval_cfg, jnp.float32(0.0))
+        out, _ = model.apply(tr, st, x, qa, train=True)
+        if task == "regression":
+            loss = model.loss(out, y_p)
+        else:
+            loss = model.loss(out, y_p, tr)
+        return loss, _metric(out, y_p)
+
+    # ---------------- eval_flex (Fig. 3 right: dynamic W_SWA) ----------------
+    eval_flex_fn = None
+    if flex_eval:
+        def _flex_bfp(x, wl, role):
+            axes = qconfig.block_axes_for(
+                qconfig.bfp(8, small_block=True), role, x.ndim)
+            e = ref.block_exponent(x, 8, axes).astype(jnp.float32)
+            delta = jnp.exp2(e - (wl - 2.0))
+            hi = jnp.exp2(e + 1.0) - delta
+            lo = -jnp.exp2(e + 1.0)
+            q = jnp.clip(jnp.floor(x / delta + 0.5) * delta, lo, hi)
+            return jnp.where(wl > 0.5, q, x)
+
+        def eval_flex_fn(*args):
+            tr = _unpack(t_names, args[:n_t])
+            st = _unpack(s_names, args[n_t:n_t + n_s])
+            x, y, act_wl = args[n_t + n_s:]
+            y_p = _prep_y(task, y)
+
+            class FlexQA:
+                step = jnp.float32(0.0)
+
+                def __call__(self, name, t):
+                    return _flex_bfp(t, act_wl, "act")
+
+            # train=True: Fig-3-right evaluates SWA weight averages, whose
+            # BN stats must come from the batch (see eval_bs_fn)
+            out, _ = model.apply(tr, st, x, FlexQA(), train=True)
+            if task == "regression":
+                loss = model.loss(out, y_p)
+            else:
+                loss = model.loss(out, y_p, tr)
+            return loss, _metric(out, y_p)
+
+    return GraphSet(
+        model=model, cfg=cfg, weight_decay=weight_decay,
+        trainable_names=t_names, state_names=s_names, shapes=shapes,
+        init_fn=init_fn, train_fn=train_fn, eval_fn=eval_fn,
+        eval_bs_fn=eval_bs_fn, eval_flex_fn=eval_flex_fn,
+    )

@@ -1,0 +1,100 @@
+"""L1 tiled quantized matmul kernel — the MXU hot-spot schedule.
+
+(Q_A a) @ (Q_B b) with operand quantization fused into the tile loads.
+This is the paper's "expensive computations are done with low-precision
+numbers" (§3.2) expressed as the canonical TPU Pallas schedule:
+
+  grid = (M/bm, N/bn, K/bk); each (i, j) output tile accumulates over the
+  k axis; A/B tiles are quantized as they land in VMEM, so the MXU only
+  ever sees low-precision operands; the f32 accumulator lives in the
+  output VMEM tile (zeroed at k==0).
+
+Quantization counters are GLOBAL element indices into A and B, so every
+grid instance rounds a given element identically and the kernel is
+bit-exact against ref.qmatmul (quantize whole operand, then jnp dot).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import qrand
+from .quant import INTERPRET, _scalar_spec, _seed_arr
+
+
+def _quantize_tile_fixed(x, seed, idx, wl, fl, stochastic):
+    delta = jnp.float32(2.0 ** (-fl))
+    hi = jnp.float32(2.0 ** (wl - fl - 1) - 2.0 ** (-fl))
+    lo = jnp.float32(-(2.0 ** (wl - fl - 1)))
+    if stochastic:
+        u = qrand.uniform_from_counter(seed, idx)
+    else:
+        u = jnp.float32(0.5)
+    return jnp.clip(jnp.floor(x / delta + u) * delta, lo, hi)
+
+
+def _qmatmul_kernel(seed_a_ref, seed_b_ref, a_ref, b_ref, o_ref, *,
+                    wl, fl, bm, bk, bn, k_full, n_full, stochastic):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    # global flat indices of this A tile (rows i*bm.., cols k*bk..) in (M,K)
+    ar = jnp.uint32(i * bm) + jnp.arange(bm, dtype=jnp.uint32)[:, None]
+    ac = jnp.uint32(k * bk) + jnp.arange(bk, dtype=jnp.uint32)[None, :]
+    a_idx = ar * jnp.uint32(k_full) + ac
+    # global flat indices of this B tile (rows k*bk.., cols j*bn..) in (K,N)
+    br = jnp.uint32(k * bk) + jnp.arange(bk, dtype=jnp.uint32)[:, None]
+    bc = jnp.uint32(j * bn) + jnp.arange(bn, dtype=jnp.uint32)[None, :]
+    b_idx = br * jnp.uint32(n_full) + bc
+
+    a_q = _quantize_tile_fixed(a_ref[...], seed_a_ref[0, 0], a_idx, wl, fl,
+                               stochastic)
+    b_q = _quantize_tile_fixed(b_ref[...], seed_b_ref[0, 0], b_idx, wl, fl,
+                               stochastic)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_q, b_q, preferred_element_type=jnp.float32)
+
+
+def qmatmul_fixed(a, b, seed_a, seed_b, *, wl: int, fl: int,
+                  bm: int = 128, bk: int = 128, bn: int = 128,
+                  stochastic: bool = True):
+    """Tiled (Q(a) @ Q(b)) with fixed-point operand quantization.
+
+    Tile sizes clamp to the operand shape; shapes must divide evenly by the
+    (clamped) tiles — the model layers built on this pick dims that do.
+    """
+    m, k_full = a.shape
+    k2, n_full = b.shape
+    assert k_full == k2, f"inner dims mismatch {a.shape} @ {b.shape}"
+    bm, bk, bn = min(bm, m), min(bk, k_full), min(bn, n_full)
+    assert m % bm == 0 and k_full % bk == 0 and n_full % bn == 0, (
+        f"shape ({m},{k_full})x({k2},{n_full}) not divisible by tiles "
+        f"({bm},{bk},{bn})")
+
+    kernel = functools.partial(
+        _qmatmul_kernel, wl=wl, fl=fl, bm=bm, bk=bk, bn=bn,
+        k_full=k_full, n_full=n_full, stochastic=stochastic,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n_full // bn, k_full // bk),
+        in_specs=[
+            _scalar_spec(),
+            _scalar_spec(),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n_full), jnp.float32),
+        interpret=INTERPRET,
+    )(_seed_arr(seed_a), _seed_arr(seed_b),
+      a.astype(jnp.float32), b.astype(jnp.float32))

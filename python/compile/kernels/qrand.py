@@ -1,0 +1,73 @@
+"""Counter-based RNG shared bit-exactly across L1/L2/rust.
+
+Stochastic rounding needs one uniform u in [0,1) per tensor element per
+quantization event. We derive it from a stateless integer hash of
+(seed, flat_index) so that:
+
+  * the Pallas kernel, the pure-jnp reference oracle, and the rust
+    quantizer (rust/src/rng.rs) produce bit-identical streams;
+  * a training step is a pure function of (params, batch, lr, step) —
+    no RNG state threading through the AOT artifact interface.
+
+The mixer is the 32-bit "lowbias32" finalizer (Ellis / Mulvey family, the
+same construction as murmur3's fmix32 with retuned constants). jnp uint32
+arithmetic wraps mod 2^32, matching rust's `wrapping_mul`/`wrapping_add`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+GOLDEN = 0x9E3779B9  # 2^32 / phi, classic Weyl increment
+MIX1 = 0x7FEB352D
+MIX2 = 0x846CA68B
+CHAIN_INIT = 0x243F6A88  # pi fractional bits
+
+
+def _u32(x) -> jnp.ndarray:
+    if isinstance(x, int):
+        import numpy as np
+        return jnp.asarray(np.uint32(x & 0xFFFFFFFF))
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """lowbias32 finalizer: avalanching 32-bit -> 32-bit hash."""
+    x = _u32(x)
+    x = x ^ (x >> 16)
+    x = x * _u32(MIX1)
+    x = x ^ (x >> 15)
+    x = x * _u32(MIX2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def derive_seed(*parts) -> jnp.ndarray:
+    """Fold integer parts (python ints or traced scalars) into one u32 seed.
+
+    Used to give every (step, tensor_id, purpose) quantization event its own
+    stream: seeds chain as h = mix32(h ^ (part * GOLDEN)).
+    Floats are truncated to u32 first (steps are exact below 2^24).
+    """
+    h = _u32(CHAIN_INIT)
+    for p in parts:
+        h = mix32(h ^ (_u32(p) * _u32(GOLDEN)))
+    return h
+
+
+def uniform_from_counter(seed: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """u32 seed + u32 flat index -> f32 uniform in [0, 1).
+
+    Takes the top 24 bits of the hash so the float conversion is exact.
+    """
+    h = mix32(_u32(idx) * _u32(GOLDEN) + _u32(seed))
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def uniform_field(seed: jnp.ndarray, shape: tuple[int, ...]) -> jnp.ndarray:
+    """Uniform [0,1) tensor of `shape`, element i uses counter i (row-major)."""
+    n = 1
+    for s in shape:
+        n *= s
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    return uniform_from_counter(seed, idx).reshape(shape)

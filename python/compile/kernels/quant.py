@@ -1,0 +1,155 @@
+"""L1 Pallas quantization kernels (fixed-point + block floating point).
+
+Each kernel is a `pl.pallas_call` with interpret=True (the CPU PJRT plugin
+cannot execute Mosaic custom-calls; see /opt/xla-example/README.md). The
+kernel bodies call the same jnp routines as the reference oracle
+(ref.py), traced *inside* the kernel, so kernel-vs-ref parity is bit-exact
+while the pallas structure (Refs, BlockSpecs, grid) carries the TPU
+HBM↔VMEM schedule documented in DESIGN.md §7.
+
+Two shapes of kernel:
+
+* whole-tensor kernels (`q_fixed`, `q_bfp`): grid=(), one VMEM-resident
+  block. This is the right schedule for the tensors SWALP quantizes
+  per-step (weights/grads/momentum of a layer — O(10^4..10^6) elements,
+  well within VMEM for real layer tiles).
+* a row-tiled fixed-point kernel (`q_fixed_tiled`) showing the gridded
+  schedule with global-counter bookkeeping, used by qmatmul.py and by the
+  perf bench.
+
+Seeds are u32 scalars shipped as (1,1) arrays; stochastic-rounding
+counters are GLOBAL flat element indices so tiling does not change the
+rounding decisions (tiled output == whole-tensor output == ref output).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import qrand, ref
+
+INTERPRET = True  # CPU-PJRT target; real-TPU lowering is compile-only here.
+
+
+def _seed_arr(seed) -> jnp.ndarray:
+    if isinstance(seed, int):
+        import numpy as np
+        seed = np.uint32(seed & 0xFFFFFFFF)
+    return jnp.asarray(seed).astype(jnp.uint32).reshape(1, 1)
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 1), lambda *_: (0, 0))
+
+
+# ---------------------------------------------------------------------------
+# whole-tensor fixed-point quantizer
+# ---------------------------------------------------------------------------
+
+def _q_fixed_kernel(seed_ref, x_ref, o_ref, *, wl, fl, stochastic):
+    seed = seed_ref[0, 0]
+    o_ref[...] = ref.quantize_fixed(x_ref[...], wl, fl, seed, stochastic)
+
+
+def q_fixed(x, seed, wl: int, fl: int, stochastic: bool = True):
+    """Fixed-point quantize a whole tensor in one VMEM block."""
+    kernel = functools.partial(
+        _q_fixed_kernel, wl=wl, fl=fl, stochastic=stochastic
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(_seed_arr(seed), x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# whole-tensor BFP quantizer (Big-block / Small-block via block_axes)
+# ---------------------------------------------------------------------------
+
+def _q_bfp_kernel(seed_ref, x_ref, o_ref, *, wl, ebits, block_axes, stochastic):
+    seed = seed_ref[0, 0]
+    o_ref[...] = ref.quantize_bfp(
+        x_ref[...], wl, seed, block_axes=block_axes, ebits=ebits,
+        stochastic=stochastic,
+    )
+
+
+def q_bfp(
+    x,
+    seed,
+    wl: int,
+    block_axes: tuple[int, ...] = (),
+    ebits: int = 8,
+    stochastic: bool = True,
+):
+    """BFP quantize a whole tensor; exponent varies along `block_axes`.
+
+    block_axes=() is the paper's Big-block (one exponent per tensor);
+    block_axes=(0,) gives one exponent per out-channel/row (Small-block
+    weights); block_axes=(0, 1) gives per-sample-per-channel (Small-block
+    activations in NCHW).
+    """
+    kernel = functools.partial(
+        _q_bfp_kernel, wl=wl, ebits=ebits,
+        block_axes=tuple(block_axes), stochastic=stochastic,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(_seed_arr(seed), x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# row-tiled fixed-point quantizer (gridded schedule + global counters)
+# ---------------------------------------------------------------------------
+
+def _q_fixed_tiled_kernel(seed_ref, x_ref, o_ref, *, wl, fl, ncols, bm,
+                          stochastic):
+    i = pl.program_id(0)
+    seed = seed_ref[0, 0]
+    x = x_ref[...]
+    # global flat counters: this block covers rows [i*bm, (i+1)*bm)
+    base = jnp.uint32(i) * jnp.uint32(bm * ncols)
+    idx = base + jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+    delta = jnp.float32(2.0 ** (-fl))
+    hi = jnp.float32(2.0 ** (wl - fl - 1) - 2.0 ** (-fl))
+    lo = jnp.float32(-(2.0 ** (wl - fl - 1)))
+    if stochastic:
+        u = qrand.uniform_from_counter(seed, idx)
+    else:
+        u = jnp.float32(0.5)
+    o_ref[...] = jnp.clip(jnp.floor(x / delta + u) * delta, lo, hi)
+
+
+def q_fixed_tiled(x, seed, wl: int, fl: int, block_rows: int = 128,
+                  stochastic: bool = True):
+    """Fixed-point quantizer tiled over rows of a 2-D tensor.
+
+    Demonstrates the gridded HBM↔VMEM schedule; bit-identical to q_fixed /
+    ref.quantize_fixed because rounding counters are global flat indices.
+    """
+    assert x.ndim == 2, "tiled quantizer operates on 2-D tensors"
+    m, n = x.shape
+    bm = min(block_rows, m)
+    assert m % bm == 0, f"rows {m} must divide by block_rows {bm}"
+    kernel = functools.partial(
+        _q_fixed_tiled_kernel, wl=wl, fl=fl, ncols=n, bm=bm,
+        stochastic=stochastic,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            _scalar_spec(),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(_seed_arr(seed), x.astype(jnp.float32))

@@ -1,0 +1,173 @@
+"""Pure-jnp reference oracle for every L1 kernel.
+
+This module is the single source of truth for quantization semantics
+(paper §3.1, Eq. (1)). The Pallas kernels in quant.py / update.py /
+qmatmul.py must match it bit-exactly (python/tests/test_kernels.py), and
+rust/src/quant/ must match the golden vectors exported from here
+(rust/tests/quant_parity.rs).
+
+Conventions
+-----------
+* Stochastic rounding: Q(x) = clip(floor(x/δ + u)·δ) with u ~ U[0,1) from
+  qrand.uniform_from_counter(seed, flat_index). u = 0.5 recovers
+  round-half-up nearest rounding.
+* Fixed point (W word bits, F fractional bits):
+    δ = 2^-F,  range [-2^(W-F-1), 2^(W-F-1) - δ].
+* Block floating point (W word bits, E_BITS exponent bits): the block
+  shares exponent E = clip(floor_log2(max|x|), -2^(E_BITS-1),
+  2^(E_BITS-1)-1); gap δ = 2^(E-W+2), range [-2^(E+1), 2^(E+1) - δ].
+  (The paper prints the gap as 2^{-E+W-2}; the sign is a typo — the gap
+  must grow with the block magnitude. See DESIGN.md §2.)
+* floor_log2 is computed from the IEEE-754 bit pattern, not log2(), so the
+  rust implementation can match it exactly for every input.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import qrand
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def floor_log2(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(x)) for x > 0 via the IEEE-754 exponent field.
+
+    Denormals and zero map to -127 (the block is then clipped to the
+    minimum representable exponent downstream). Bit-exact and branch-free,
+    mirrored by rust/src/quant/bfp.rs::floor_log2.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+
+
+def stochastic_round_to_grid(
+    x: jnp.ndarray,
+    delta: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    seed,
+    stochastic: bool = True,
+) -> jnp.ndarray:
+    """clip(floor(x/δ + u)·δ, lo, hi) — the common core of Eq. (1)."""
+    x = x.astype(jnp.float32)
+    if stochastic:
+        u = qrand.uniform_field(seed, x.shape)
+    else:
+        u = jnp.float32(0.5)
+    q = jnp.floor(x / delta + u) * delta
+    return jnp.clip(q, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# fixed point (paper Eq. (1))
+# ---------------------------------------------------------------------------
+
+def quantize_fixed(
+    x: jnp.ndarray,
+    wl: int,
+    fl: int,
+    seed,
+    stochastic: bool = True,
+) -> jnp.ndarray:
+    """Fixed-point quantizer: W=wl total bits, F=fl fractional bits."""
+    delta = jnp.float32(2.0 ** (-fl))
+    hi = jnp.float32(2.0 ** (wl - fl - 1) - 2.0 ** (-fl))
+    lo = jnp.float32(-(2.0 ** (wl - fl - 1)))
+    return stochastic_round_to_grid(x, delta, lo, hi, seed, stochastic)
+
+
+# ---------------------------------------------------------------------------
+# block floating point (paper §3.1 + §5 block design)
+# ---------------------------------------------------------------------------
+
+def block_exponent(x: jnp.ndarray, ebits: int, block_axes: tuple[int, ...]):
+    """Shared exponent per block, keepdims layout.
+
+    `block_axes` are the axes along which the exponent VARIES (one exponent
+    per index combination); the exponent is shared over all other axes.
+    block_axes=() is the paper's Big-block (one exponent per tensor).
+    """
+    reduce_axes = tuple(i for i in range(x.ndim) if i not in block_axes)
+    amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    e = floor_log2(amax)
+    emin = -(2 ** (ebits - 1))
+    emax = 2 ** (ebits - 1) - 1
+    return jnp.clip(e, emin, emax)
+
+
+def quantize_bfp(
+    x: jnp.ndarray,
+    wl: int,
+    seed,
+    block_axes: tuple[int, ...] = (),
+    ebits: int = 8,
+    stochastic: bool = True,
+) -> jnp.ndarray:
+    """Block-floating-point quantizer with W=wl word bits per element."""
+    x = x.astype(jnp.float32)
+    e = block_exponent(x, ebits, block_axes)
+    # floor the exponent so δ = 2^(e-wl+2) stays comfortably normal — an
+    # all-zero block would otherwise underflow δ to 0 and produce 0/0
+    # (XLA CPU's exp2 flushes near the normal/denormal boundary, hence
+    # the -110 margin). Mirrored in rust/src/quant/bfp.rs.
+    e = jnp.maximum(e, wl - 110).astype(jnp.float32)
+    delta = jnp.exp2(e - (wl - 2))
+    hi = jnp.exp2(e + 1.0) - delta
+    lo = -jnp.exp2(e + 1.0)
+    return stochastic_round_to_grid(x, delta, lo, hi, seed, stochastic)
+
+
+# ---------------------------------------------------------------------------
+# fused low-precision SGD-with-momentum update (Algorithm 2, step 3)
+# ---------------------------------------------------------------------------
+
+def lp_sgd_momentum_update(
+    w: jnp.ndarray,
+    v: jnp.ndarray,
+    g: jnp.ndarray,
+    lr: jnp.ndarray,
+    rho: float,
+    quantize_w,
+    quantize_m,
+):
+    """v' = ρ·Q_M(v) + g ;  w' = Q_W(w - lr·v').
+
+    `g` is assumed already Q_G-quantized by the backward pass (Algorithm 2
+    quantizes g at production). quantize_w / quantize_m are closures
+    x -> Q(x) with their seeds bound.
+    """
+    v_new = jnp.float32(rho) * quantize_m(v) + g
+    w_new = quantize_w(w - lr * v_new)
+    return w_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# SWA running average fold (Algorithm 1 line 6 / Algorithm 2 step 4)
+# ---------------------------------------------------------------------------
+
+def swa_fold(wbar: jnp.ndarray, w: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """wbar' = (wbar·m + w)/(m+1), m = number of models already averaged."""
+    m = jnp.asarray(m).astype(jnp.float32)
+    return (wbar * m + w) / (m + 1.0)
+
+
+def swa_fold_quantized(wbar, w, m, quantize_swa):
+    """§5.1 'Averaging in Different Precision': fold then Q_SWA."""
+    return quantize_swa(swa_fold(wbar, w, m))
+
+
+# ---------------------------------------------------------------------------
+# reference matmul with quantized operands/output (for qmatmul kernel)
+# ---------------------------------------------------------------------------
+
+def qmatmul(a, b, quantize_a, quantize_b, quantize_out=None):
+    """(Q_A a) @ (Q_B b), optionally Q_out on the product."""
+    out = quantize_a(a) @ quantize_b(b)
+    if quantize_out is not None:
+        out = quantize_out(out)
+    return out

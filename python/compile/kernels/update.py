@@ -1,0 +1,82 @@
+"""L1 fused low-precision SGD-with-momentum update kernel (Algorithm 2 §3).
+
+    v' = ρ·Q_M(v) + g          (g already Q_G-quantized by the backward pass)
+    w' = Q_W(w - α·v')
+
+Fusing Q_M, the momentum axpy, and Q_W into one kernel is the memory-bound
+hot path of SWALP on a real accelerator: a naive L2 implementation streams
+w/v/g through HBM three times (quantize v, update v, update+quantize w);
+the fused kernel streams each operand once (DESIGN.md §7). Also includes
+the SWA fold kernel (Algorithm 1 line 6) with optional Q_SWA for the §5.1
+"averaging in different precision" experiment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .quant import INTERPRET, _scalar_spec, _seed_arr
+
+
+# ---------------------------------------------------------------------------
+# fused LP-SGD momentum update
+# ---------------------------------------------------------------------------
+
+def _lp_sgd_kernel(seed_w_ref, seed_m_ref, lr_ref, w_ref, v_ref, g_ref,
+                   w_out_ref, v_out_ref, *, rho, qw, qm):
+    lr = lr_ref[0, 0]
+    seed_w = seed_w_ref[0, 0]
+    seed_m = seed_m_ref[0, 0]
+    quant_w = lambda t: qw(t, seed_w)
+    quant_m = lambda t: qm(t, seed_m)
+    w_new, v_new = ref.lp_sgd_momentum_update(
+        w_ref[...], v_ref[...], g_ref[...], lr, rho, quant_w, quant_m
+    )
+    w_out_ref[...] = w_new
+    v_out_ref[...] = v_new
+
+
+def lp_sgd_update(w, v, g, lr, seed_w, seed_m, *, rho: float, qw, qm):
+    """Run the fused update kernel on one tensor.
+
+    qw/qm: callables (x, seed) -> quantized x, built from the jnp reference
+    quantizers (they trace *inside* the kernel). Passing
+    `lambda x, s: x` for both recovers full-precision SGD+momentum.
+    """
+    kernel = functools.partial(_lp_sgd_kernel, rho=rho, qw=qw, qm=qm)
+    out_shape = [
+        jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        jax.ShapeDtypeStruct(v.shape, jnp.float32),
+    ]
+    lr_arr = jnp.asarray(lr).astype(jnp.float32).reshape(1, 1)
+    w_new, v_new = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(_seed_arr(seed_w), _seed_arr(seed_m), lr_arr,
+      w.astype(jnp.float32), v.astype(jnp.float32), g.astype(jnp.float32))
+    return w_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# SWA fold kernel
+# ---------------------------------------------------------------------------
+
+def _swa_fold_kernel(m_ref, wbar_ref, w_ref, out_ref):
+    out_ref[...] = ref.swa_fold(wbar_ref[...], w_ref[...], m_ref[0, 0])
+
+
+def swa_fold(wbar, w, m):
+    """wbar' = (wbar·m + w)/(m+1) as a pallas kernel (used by the L2-side
+    averaging artifact; the production L3 path does this fold in rust)."""
+    m_arr = jnp.asarray(m).astype(jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _swa_fold_kernel,
+        out_shape=jax.ShapeDtypeStruct(wbar.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(m_arr, wbar.astype(jnp.float32), w.astype(jnp.float32))

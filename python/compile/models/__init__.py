@@ -1,0 +1,19 @@
+"""L2 model zoo.
+
+Every model implements the same structural interface consumed by
+graphs.py / aot.py:
+
+  init(key)  -> (trainable: dict[str, Array], state: dict[str, Array])
+  apply(trainable, state, x, qa, train) -> (logits, new_state)
+
+* `trainable` tensors are SGD-updated (and Q_W/Q_G/Q_M quantized);
+* `state` tensors (BatchNorm running stats) are updated functionally by
+  `apply` during training and consumed at eval;
+* `qa(name, x)` is the Algorithm-2 activation site (Q_A fwd / Q_E bwd)
+  provided by qtrain.ActQuantizer.
+
+Dicts use dotted names; flattening order (sorted by name) defines the
+artifact calling convention recorded in manifest.json.
+"""
+
+from . import linreg, logreg, mlp, cnn, preresnet, transformer, wage  # noqa: F401

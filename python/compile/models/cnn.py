@@ -1,0 +1,69 @@
+"""VGG-mini — the scaled-down VGG-16 stand-in for Table 1 (DESIGN.md §5).
+
+Same structural family as VGG-16 (3x3 conv stacks + BN + ReLU + maxpool +
+dense head), shrunk to three stages for the single-core CPU budget. All
+Algorithm-2 quantization sites are in place: conv/dense weights quantized
+by Q_W in the update; activations pass through qa() after every ReLU
+(Q_A fwd, Q_E bwd); BN scale/shift quantize per-tensor (§5 modification).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers
+
+
+class VGGMini:
+    family = "vgg_mini"
+    task = "classification"
+
+    def __init__(self, classes: int = 10, in_hw: int = 16,
+                 widths=(16, 32, 64), dense: int = 128):
+        self.classes = classes
+        self.in_hw = in_hw
+        self.widths = tuple(widths)
+        self.dense = dense
+        # two convs per stage, one maxpool after each stage
+        self.flat = self.widths[-1] * (in_hw // (2 ** len(self.widths))) ** 2
+
+    def init(self, key):
+        trainable, state = {}, {}
+        keys = layers.split_keys(key, 2 * len(self.widths) + 2)
+        ki = 0
+        c_in = 3
+        for s, c in enumerate(self.widths):
+            for j in range(2):
+                name = f"s{s}c{j}"
+                trainable[f"{name}.w"] = layers.he_conv(
+                    keys[ki], c, c_in, 3, 3)
+                ki += 1
+                layers.bn_params(f"{name}.bn", c, trainable, state)
+                c_in = c
+        trainable["fc1.w"] = layers.he_dense(keys[ki], self.flat, self.dense)
+        trainable["fc1.b"] = jnp.zeros((self.dense,), jnp.float32)
+        ki += 1
+        trainable["head.w"] = layers.he_dense(keys[ki], self.dense,
+                                              self.classes)
+        trainable["head.b"] = jnp.zeros((self.classes,), jnp.float32)
+        return trainable, state
+
+    def apply(self, trainable, state, x, qa, train: bool):
+        new_state = dict(state)
+        h = x
+        for s, c in enumerate(self.widths):
+            for j in range(2):
+                name = f"s{s}c{j}"
+                h = layers.conv2d(h, trainable[f"{name}.w"])
+                h = layers.batchnorm(f"{name}.bn", h, trainable, state,
+                                     new_state, train)
+                h = qa(f"{name}.act", jnp.maximum(h, 0.0))
+            h = layers.maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = qa("fc1.act",
+               jnp.maximum(h @ trainable["fc1.w"] + trainable["fc1.b"], 0.0))
+        logits = h @ trainable["head.w"] + trainable["head.b"]
+        return logits, new_state
+
+    def loss(self, logits, y_int, trainable):
+        return layers.softmax_xent(logits, y_int)

@@ -1,0 +1,117 @@
+"""Shared building blocks for the model zoo (NCHW convention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def he_conv(key, out_c: int, in_c: int, kh: int, kw: int) -> jnp.ndarray:
+    """He-normal init (He et al. 2015a), as the paper's experiments use."""
+    fan_in = in_c * kh * kw
+    std = jnp.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (out_c, in_c, kh, kw), jnp.float32) * std
+
+
+def he_dense(key, d_in: int, d_out: int) -> jnp.ndarray:
+    std = jnp.sqrt(2.0 / d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+
+
+def split_keys(key, n: int):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def conv2d(x, w, stride: int = 1, padding: str = "SAME"):
+    """x: (B,C,H,W), w: (O,I,kh,kw)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def maxpool2(x):
+    """2x2 max pool, stride 2, NCHW."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, 1, 2, 2), window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+def batchnorm(name: str, x, trainable: dict, state: dict, new_state: dict,
+              train: bool, momentum: float = 0.9, eps: float = 1e-5):
+    """BatchNorm with functional running stats.
+
+    trainable[f"{name}.scale"], trainable[f"{name}.shift"]: (C,)
+    state[f"{name}.mean"], state[f"{name}.var"]: (C,) running stats, updated
+    into `new_state` when train=True and consumed when train=False. The
+    scale/shift tensors are quantized per-tensor (one shared exponent) per
+    the paper's §5 Small-block modification — handled by name in qtrain.
+    """
+    scale = trainable[f"{name}.scale"]
+    shift = trainable[f"{name}.shift"]
+    reduce_axes = (0, 2, 3) if x.ndim == 4 else (0,)
+    shape = (1, -1, 1, 1) if x.ndim == 4 else (1, -1)
+    if train:
+        mean = jnp.mean(x, axis=reduce_axes)
+        var = jnp.var(x, axis=reduce_axes)
+        new_state[f"{name}.mean"] = (
+            momentum * state[f"{name}.mean"] + (1 - momentum) * mean)
+        new_state[f"{name}.var"] = (
+            momentum * state[f"{name}.var"] + (1 - momentum) * var)
+    else:
+        mean = state[f"{name}.mean"]
+        var = state[f"{name}.var"]
+    xn = (x - mean.reshape(shape)) / jnp.sqrt(var.reshape(shape) + eps)
+    return xn * scale.reshape(shape) + shift.reshape(shape)
+
+
+def bn_params(name: str, c: int, trainable: dict, state: dict):
+    trainable[f"{name}.scale"] = jnp.ones((c,), jnp.float32)
+    trainable[f"{name}.shift"] = jnp.zeros((c,), jnp.float32)
+    state[f"{name}.mean"] = jnp.zeros((c,), jnp.float32)
+    state[f"{name}.var"] = jnp.ones((c,), jnp.float32)
+
+
+def layernorm(name: str, x, trainable: dict, eps: float = 1e-5):
+    """LayerNorm over the last axis; scale/shift are per-tensor-quantized."""
+    scale = trainable[f"{name}.scale"]
+    shift = trainable[f"{name}.shift"]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + shift
+
+
+def ln_params(name: str, d: int, trainable: dict):
+    trainable[f"{name}.scale"] = jnp.ones((d,), jnp.float32)
+    trainable[f"{name}.shift"] = jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# losses / metrics
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, y_int):
+    """Mean cross-entropy; y_int: (B,) int class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y_int[:, None], axis=-1)[:, 0]
+    return -jnp.mean(picked)
+
+
+def error_count(logits, y_int):
+    """Number of misclassified samples in the batch (f32 scalar)."""
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.sum((pred != y_int).astype(jnp.float32))

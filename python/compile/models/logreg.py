@@ -1,0 +1,42 @@
+"""L2-regularized multinomial logistic regression (paper §4.3 / App. H).
+
+Objective: softmax cross-entropy + (λ/2)·‖w‖², λ = 1e-4 as in the paper
+(strongly convex, M ≠ 0). Data is an MNIST-like synthetic substitute
+(rust/src/data/images.rs; see DESIGN.md §5). The paper's metric is the
+gradient norm — the eval graph emits the squared gradient norm of the
+full-precision objective at the current iterate, plus loss and error
+count.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+class LogReg:
+    family = "logreg"
+    task = "classification"
+
+    def __init__(self, d: int = 784, classes: int = 10, lam: float = 1e-4):
+        self.d = d
+        self.classes = classes
+        self.lam = lam
+
+    def init(self, key):
+        trainable = {
+            "w": jnp.zeros((self.d, self.classes), jnp.float32),
+            "b": jnp.zeros((self.classes,), jnp.float32),
+        }
+        return trainable, {}
+
+    def apply(self, trainable, state, x, qa, train: bool):
+        logits = qa("logits", x @ trainable["w"] + trainable["b"])
+        return logits, dict(state)
+
+    def loss(self, logits, y_int, trainable):
+        xent = layers.softmax_xent(logits, y_int)
+        reg = 0.5 * self.lam * jnp.sum(trainable["w"] ** 2)
+        return xent + reg

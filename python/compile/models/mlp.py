@@ -1,0 +1,86 @@
+"""Two-layer MLP whose dense layers run on the L1 qmatmul kernel.
+
+This model exists to put the tiled quantized-matmul Pallas kernel
+(kernels/qmatmul.py) on a real train path: both dense layers compute
+(Q(a) @ Q(w)) inside the kernel when the config uses fixed-point
+quantization, so the MXU schedule of DESIGN.md §7 is exercised
+end-to-end. Used by the perf bench and kernel integration tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from ..kernels import qmatmul, ref
+from ..qtrain import seed_for, site_id, TAG_A
+
+
+@functools.lru_cache(maxsize=None)
+def _qmm_vjp(wl: int, fl: int, bm: int, bk: int, bn: int):
+    """custom_vjp wrapper: forward runs the tiled Pallas kernel, backward
+    uses the straight-through estimator through the operand quantizers
+    (d/da (Qa @ Qw) ≈ g @ Qw^T, d/dw ≈ Qa^T @ g) — the pallas_call itself
+    is opaque to jax.grad (its JVP rule cannot handle program_id)."""
+
+    @jax.custom_vjp
+    def qmm(a, w, sa, sw):
+        return qmatmul.qmatmul_fixed(
+            a, w, sa.astype(jnp.uint32), sw.astype(jnp.uint32),
+            wl=wl, fl=fl, bm=bm, bk=bk, bn=bn)
+
+    def fwd(a, w, sa, sw):
+        return qmm(a, w, sa, sw), (a, w, sa, sw)
+
+    def bwd(res, g):
+        a, w, sa, sw = res
+        aq = ref.quantize_fixed(a, wl, fl, sa.astype(jnp.uint32))
+        wq = ref.quantize_fixed(w, wl, fl, sw.astype(jnp.uint32))
+        return (g @ wq.T, aq.T @ g,
+                jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+    qmm.defvjp(fwd, bwd)
+    return qmm
+
+
+class MLP:
+    family = "mlp"
+    task = "classification"
+
+    def __init__(self, d_in: int = 256, hidden: int = 128,
+                 classes: int = 10, qmm_wl: int = 0, qmm_fl: int = 0):
+        """qmm_wl > 0 routes dense layers through qmatmul_fixed(wl, fl)."""
+        self.d_in, self.hidden, self.classes = d_in, hidden, classes
+        self.qmm_wl, self.qmm_fl = qmm_wl, qmm_fl
+
+    def init(self, key):
+        k1, k2 = layers.split_keys(key, 2)
+        trainable = {
+            "fc1.w": layers.he_dense(k1, self.d_in, self.hidden),
+            "fc1.b": jnp.zeros((self.hidden,), jnp.float32),
+            "fc2.w": layers.he_dense(k2, self.hidden, self.classes),
+            "fc2.b": jnp.zeros((self.classes,), jnp.float32),
+        }
+        return trainable, {}
+
+    def _dense(self, name, a, w, step):
+        if self.qmm_wl > 0:
+            sa = seed_for(step, site_id(name + ".a"), TAG_A)
+            sw = seed_for(step, site_id(name + ".w"), TAG_A)
+            qmm = _qmm_vjp(self.qmm_wl, self.qmm_fl, 32, 64, 64)
+            return qmm(a, w, sa.astype(jnp.float32), sw.astype(jnp.float32))
+        return a @ w
+
+    def apply(self, trainable, state, x, qa, train: bool):
+        # step is carried by the qa closure for seed derivation
+        step = getattr(qa, "step", jnp.float32(0.0))
+        h = self._dense("fc1", x, trainable["fc1.w"], step)
+        h = qa("fc1.act", jnp.maximum(h + trainable["fc1.b"], 0.0))
+        logits = self._dense("fc2", h, trainable["fc2.w"], step)
+        return logits + trainable["fc2.b"], dict(state)
+
+    def loss(self, logits, y_int, trainable):
+        return layers.softmax_xent(logits, y_int)

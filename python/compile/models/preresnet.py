@@ -1,0 +1,89 @@
+"""PreResNet-mini — scaled-down Pre-activation ResNet-164 (He et al. 2016).
+
+Same family as the paper's PreResNet: pre-activation residual blocks
+(BN → ReLU → conv → BN → ReLU → conv + identity), three stages with
+stride-2 downsampling and 1x1 projection shortcuts, final BN-ReLU +
+global average pool + linear head. Two blocks per stage for the CPU
+budget (the quantization behaviour under test — BFP block design + SWALP —
+is independent of depth; DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers
+
+
+class PreResNetMini:
+    family = "preresnet_mini"
+    task = "classification"
+
+    def __init__(self, classes: int = 10, widths=(16, 32, 64),
+                 blocks_per_stage: int = 2):
+        self.classes = classes
+        self.widths = tuple(widths)
+        self.bps = blocks_per_stage
+
+    def init(self, key):
+        trainable, state = {}, {}
+        n_conv = 1 + sum(2 * self.bps + 1 for _ in self.widths) + 1
+        keys = layers.split_keys(key, n_conv + 2)
+        ki = 0
+        trainable["stem.w"] = layers.he_conv(keys[ki], self.widths[0], 3, 3, 3)
+        ki += 1
+        c_in = self.widths[0]
+        for s, c in enumerate(self.widths):
+            for b in range(self.bps):
+                name = f"s{s}b{b}"
+                layers.bn_params(f"{name}.bn1", c_in, trainable, state)
+                trainable[f"{name}.conv1.w"] = layers.he_conv(
+                    keys[ki], c, c_in, 3, 3)
+                ki += 1
+                layers.bn_params(f"{name}.bn2", c, trainable, state)
+                trainable[f"{name}.conv2.w"] = layers.he_conv(
+                    keys[ki], c, c, 3, 3)
+                ki += 1
+                if c_in != c:
+                    trainable[f"{name}.proj.w"] = layers.he_conv(
+                        keys[ki], c, c_in, 1, 1)
+                    ki += 1
+                c_in = c
+        layers.bn_params("final.bn", c_in, trainable, state)
+        trainable["head.w"] = layers.he_dense(keys[ki], c_in, self.classes)
+        trainable["head.b"] = jnp.zeros((self.classes,), jnp.float32)
+        return trainable, state
+
+    def apply(self, trainable, state, x, qa, train: bool):
+        new_state = dict(state)
+        h = layers.conv2d(x, trainable["stem.w"])
+        c_in = self.widths[0]
+        for s, c in enumerate(self.widths):
+            for b in range(self.bps):
+                name = f"s{s}b{b}"
+                stride = 2 if (s > 0 and b == 0) else 1
+                pre = layers.batchnorm(f"{name}.bn1", h, trainable, state,
+                                       new_state, train)
+                pre = qa(f"{name}.act1", jnp.maximum(pre, 0.0))
+                out = layers.conv2d(pre, trainable[f"{name}.conv1.w"],
+                                    stride=stride)
+                out = layers.batchnorm(f"{name}.bn2", out, trainable, state,
+                                       new_state, train)
+                out = qa(f"{name}.act2", jnp.maximum(out, 0.0))
+                out = layers.conv2d(out, trainable[f"{name}.conv2.w"])
+                if c_in != c:
+                    shortcut = layers.conv2d(pre, trainable[f"{name}.proj.w"],
+                                             stride=stride)
+                else:
+                    shortcut = h
+                h = shortcut + out
+                c_in = c
+        h = layers.batchnorm("final.bn", h, trainable, state, new_state,
+                             train)
+        h = qa("final.act", jnp.maximum(h, 0.0))
+        h = layers.global_avg_pool(h)
+        logits = h @ trainable["head.w"] + trainable["head.b"]
+        return logits, new_state
+
+    def loss(self, logits, y_int, trainable):
+        return layers.softmax_xent(logits, y_int)

@@ -1,0 +1,99 @@
+"""Decoder-only transformer LM trained under SWALP quantization.
+
+The paper's future-work direction ("we hope can be combined with...")
+instantiated: a causal transformer language model with every Algorithm-2
+quantization site wired — embedding/attention/MLP weights via Q_W,
+activations after attention and MLP via Q_A/Q_E, LayerNorm scale/shift
+per-tensor. This is the end-to-end example driver workload
+(examples/train_lm_e2e.rs) on a synthetic Zipf-bigram corpus
+(rust/src/data/text.rs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+class TransformerLM:
+    family = "transformer_lm"
+    task = "lm"
+
+    def __init__(self, vocab: int = 64, d_model: int = 96, n_layers: int = 3,
+                 n_heads: int = 4, seq_len: int = 64, d_ff: int = 256):
+        assert d_model % n_heads == 0
+        self.vocab, self.d, self.layers = vocab, d_model, n_layers
+        self.heads, self.seq, self.d_ff = n_heads, seq_len, d_ff
+        self.classes = vocab  # for eval plumbing
+
+    def init(self, key):
+        trainable, state = {}, {}
+        keys = layers.split_keys(key, 4 * self.layers + 3)
+        ki = 0
+        std = 0.02
+        trainable["embed.w"] = (
+            jax.random.normal(keys[ki], (self.vocab, self.d)) * std)
+        ki += 1
+        trainable["pos.w"] = (
+            jax.random.normal(keys[ki], (self.seq, self.d)) * std)
+        ki += 1
+        for l in range(self.layers):
+            name = f"l{l}"
+            layers.ln_params(f"{name}.ln1", self.d, trainable)
+            trainable[f"{name}.qkv.w"] = (
+                jax.random.normal(keys[ki], (self.d, 3 * self.d)) * std)
+            ki += 1
+            trainable[f"{name}.attnout.w"] = (
+                jax.random.normal(keys[ki], (self.d, self.d)) * std)
+            ki += 1
+            layers.ln_params(f"{name}.ln2", self.d, trainable)
+            trainable[f"{name}.ff1.w"] = layers.he_dense(
+                keys[ki], self.d, self.d_ff)
+            ki += 1
+            trainable[f"{name}.ff2.w"] = (
+                jax.random.normal(keys[ki], (self.d_ff, self.d)) * std)
+            ki += 1
+        layers.ln_params("final.ln", self.d, trainable)
+        trainable["head.w"] = (
+            jax.random.normal(keys[ki], (self.d, self.vocab)) * std)
+        return trainable, state
+
+    def _attention(self, name, h, trainable, qa):
+        B, T, D = h.shape
+        H, hd = self.heads, self.d // self.heads
+        qkv = h @ trainable[f"{name}.qkv.w"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+        mask = jnp.tril(jnp.ones((T, T), jnp.bool_))
+        att = jnp.where(mask[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        out = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+        out = qa(f"{name}.attn.act", out)
+        return out @ trainable[f"{name}.attnout.w"]
+
+    def apply(self, trainable, state, x, qa, train: bool):
+        """x: (B, T) float token ids; returns (B, T, vocab) logits."""
+        tok = x.astype(jnp.int32)
+        h = trainable["embed.w"][tok] + trainable["pos.w"][None, :, :]
+        for l in range(self.layers):
+            name = f"l{l}"
+            a = layers.layernorm(f"{name}.ln1", h, trainable)
+            h = h + self._attention(name, a, trainable, qa)
+            a = layers.layernorm(f"{name}.ln2", h, trainable)
+            a = qa(f"{name}.ff.act",
+                   jnp.maximum(a @ trainable[f"{name}.ff1.w"], 0.0))
+            h = h + a @ trainable[f"{name}.ff2.w"]
+        h = layers.layernorm("final.ln", h, trainable)
+        logits = h @ trainable["head.w"]
+        return logits, dict(state)
+
+    def loss(self, logits, y_int, trainable):
+        """y_int: (B, T) next-token ids."""
+        B, T, V = logits.shape
+        return layers.softmax_xent(logits.reshape(B * T, V),
+                                   y_int.reshape(B * T))

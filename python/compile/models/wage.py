@@ -1,0 +1,59 @@
+"""WAGE-style quantized CNN (paper Appendix F / Table 3).
+
+Wu et al. (2018) train with 2-bit weights and 8-bit
+activations/gradients/errors, no BatchNorm (replaced by a constant
+layer-wise scale), and plain SGD with a large learning rate (8). We
+implement the WAGE-*style* scheme with this repo's quantizers
+(DESIGN.md §5): weights on the 2-bit fixed grid {-1, -0.5, 0, 0.5},
+activations 8-bit fixed, errors/gradients 8-bit Big-block BFP (WAGE's
+shift-based error scaling is exactly a per-tensor shared exponent).
+The Table 3 claim under test — SWALP composes positively with a
+state-of-the-art LP scheme — only needs the scheme's structure, not its
+exact constants. The quant config lives in aot.py (`wage_cfg`).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers
+
+
+class WageCNN:
+    family = "wage_cnn"
+    task = "classification"
+
+    def __init__(self, classes: int = 10, in_hw: int = 16,
+                 widths=(16, 32, 64)):
+        self.classes = classes
+        self.in_hw = in_hw
+        self.widths = tuple(widths)
+        self.flat = self.widths[-1] * (in_hw // (2 ** len(self.widths))) ** 2
+
+    def init(self, key):
+        trainable, state = {}, {}
+        keys = layers.split_keys(key, len(self.widths) + 1)
+        c_in = 3
+        for s, c in enumerate(self.widths):
+            # WAGE init: uniform-ish scale compatible with the 2-bit grid
+            trainable[f"s{s}.w"] = layers.he_conv(keys[s], c, c_in, 3, 3)
+            c_in = c
+        trainable["head.w"] = layers.he_dense(keys[-1], self.flat,
+                                              self.classes)
+        return trainable, state
+
+    def apply(self, trainable, state, x, qa, train: bool):
+        h = x
+        for s, c in enumerate(self.widths):
+            h = layers.conv2d(h, trainable[f"s{s}.w"])
+            # no BN: WAGE uses a constant per-layer scale; fold it into the
+            # activation path so the 2-bit weight grid stays effective
+            h = h * jnp.float32(0.5)
+            h = qa(f"s{s}.act", jnp.maximum(h, 0.0))
+            h = layers.maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        logits = h @ trainable["head.w"]
+        return logits, dict(state)
+
+    def loss(self, logits, y_int, trainable):
+        return layers.softmax_xent(logits, y_int)

@@ -1,0 +1,129 @@
+"""Quantization configuration shared by L2 graphs and the AOT manifest.
+
+A `QuantFormat` describes one number format; a `TrainQuantConfig` assigns a
+format to each of the five quantizer roles of Algorithm 2 (Q_W, Q_A, Q_G,
+Q_E, Q_M). Configs serialize into manifest.json so the rust coordinator
+knows exactly what numerics each artifact implements.
+
+Block-axis policy for BFP Small-block (paper §5 "Block Design", following
+Song et al. 2017 / Zhou et al. 2016 with the paper's modification that
+biases and BN scale/shift get ONE exponent per tensor):
+
+  role     rank-4 (O,I,kh,kw)   rank-2 (in,out)   rank-1 / BN params
+  weight   per out-channel (0,) per out-unit (1,) per tensor ()
+  grad/mom same as weight
+  act/err  NCHW (B,C,H,W): per (sample, channel) (0,1); (B,F): per sample (0,)
+
+Big-block is one exponent per tensor for every role.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class QuantFormat:
+    """One number format. kind ∈ {none, fixed, bfp}."""
+
+    kind: str = "none"
+    wl: int = 8           # word length (bits per element)
+    fl: int = 6           # fractional bits (fixed point only)
+    ebits: int = 8        # shared-exponent bits (bfp only)
+    small_block: bool = False  # bfp: Small-block vs Big-block exponents
+    stochastic: bool = True
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.kind, "wl": self.wl, "fl": self.fl,
+            "ebits": self.ebits, "small_block": self.small_block,
+            "stochastic": self.stochastic,
+        }
+
+
+NONE = QuantFormat("none")
+
+
+def fixed(wl: int, fl: int, stochastic: bool = True) -> QuantFormat:
+    return QuantFormat("fixed", wl=wl, fl=fl, stochastic=stochastic)
+
+
+def bfp(wl: int, small_block: bool, ebits: int = 8) -> QuantFormat:
+    return QuantFormat("bfp", wl=wl, ebits=ebits, small_block=small_block)
+
+
+@dataclass(frozen=True)
+class TrainQuantConfig:
+    """Formats for the five Algorithm-2 quantizers + optimizer params."""
+
+    name: str
+    w: QuantFormat = NONE   # Q_W — weights / gradient accumulator
+    a: QuantFormat = NONE   # Q_A — activations
+    g: QuantFormat = NONE   # Q_G — weight gradients
+    e: QuantFormat = NONE   # Q_E — back-propagated errors
+    m: QuantFormat = NONE   # Q_M — momentum / velocity
+    rho: float = 0.0        # momentum coefficient (0 = plain SGD)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name, "rho": self.rho,
+            "w": self.w.to_json(), "a": self.a.to_json(),
+            "g": self.g.to_json(), "e": self.e.to_json(),
+            "m": self.m.to_json(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# presets used by the experiment registry (aot.py)
+# ---------------------------------------------------------------------------
+
+def fp32(rho: float = 0.0) -> TrainQuantConfig:
+    return TrainQuantConfig("fp32", rho=rho)
+
+
+def fixed_all(wl: int, fl: int, rho: float = 0.0) -> TrainQuantConfig:
+    """Fixed point everywhere (theory experiments §4.3)."""
+    f = fixed(wl, fl)
+    return TrainQuantConfig(f"fixed_w{wl}f{fl}", w=f, a=f, g=f, e=f, m=f,
+                            rho=rho)
+
+
+def fixed_weights_only(wl: int, fl: int) -> TrainQuantConfig:
+    """Algorithm 1 setting: only the weight/accumulator is quantized."""
+    return TrainQuantConfig(f"fixedw_w{wl}f{fl}", w=fixed(wl, fl))
+
+
+def bfp8(small_block: bool, rho: float = 0.9) -> TrainQuantConfig:
+    """Paper's 8-bit deep-learning setting (§5): all five roles in 8-bit
+    BFP with 8-bit shared exponents."""
+    f = bfp(8, small_block)
+    tag = "small" if small_block else "big"
+    return TrainQuantConfig(f"bfp8_{tag}", w=f, a=f, g=f, e=f, m=f, rho=rho)
+
+
+# ---------------------------------------------------------------------------
+# block-axis resolution
+# ---------------------------------------------------------------------------
+
+def block_axes_for(fmt: QuantFormat, role: str, ndim: int,
+                   per_tensor: bool = False) -> tuple[int, ...]:
+    """Resolve BFP block axes per the Small-block policy table above.
+
+    per_tensor=True forces one exponent per tensor (biases, BN/LN
+    scale-shift — the paper's §5 modification) regardless of rank.
+    """
+    if fmt.kind != "bfp" or not fmt.small_block or per_tensor:
+        return ()
+    if role in ("weight", "grad", "momentum"):
+        if ndim == 4:
+            return (0,)      # conv (O,I,kh,kw): per out-channel
+        if ndim == 2:
+            return (1,)      # dense (in,out): per out-unit
+        return ()
+    if role in ("act", "err"):
+        if ndim == 4:
+            return (0, 1)    # NCHW: per (sample, channel)
+        if ndim >= 2:
+            return (0,)      # (B, F...) : per sample
+        return ()
+    return ()

@@ -1,0 +1,169 @@
+"""Algorithm 2 machinery: quantized forward/backward + LP-SGD update.
+
+This is where the paper's training recipe becomes a pure jax function:
+
+  1. Forward:  a^(l) = Q_A(f_l(a^(l-1), w^(l)))        — `act_site`
+  2. Backward: e^(l-1) = Q_E(∂f_l/∂a^(l-1) · e^(l))    — custom_vjp of the
+     same site: quantizing the activation on the way forward and the
+     cotangent on the way back is exactly the Algorithm-2 recursion.
+     g^(l) = Q_G(∂f_l/∂w^(l) · e^(l))                  — `quantize_grads`
+  3. Update:   v' = ρ·Q_M(v) + g ; w' = Q_W(w - αv')    — fused L1 kernel
+  4. SWA fold happens OUT of band, in the rust coordinator (high
+     precision) or its quantized-averaging mode (§5.1).
+
+Seeds: every quantization event gets its own stream via
+qrand.derive_seed(step, site_id, role_tag); `step` is the (traced) global
+step counter the rust coordinator feeds, so a step is a pure function of
+(params, state, momentum, batch, lr, step) — bit-reproducible.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+from . import qconfig
+from .kernels import qrand, quant, update as upd_kernels
+
+# role tags folded into seeds — keep in sync with rust/src/rng.rs
+TAG_W, TAG_A, TAG_G, TAG_E, TAG_M, TAG_INIT, TAG_DATA = 1, 2, 3, 4, 5, 6, 7
+
+
+def site_id(name: str) -> int:
+    """Stable 32-bit id for a named quantization site."""
+    return zlib.crc32(name.encode()) & 0xFFFFFFFF
+
+
+def _step_u32(step) -> jnp.ndarray:
+    # step arrives as f32 (exact below 2^24); fold to u32 for seeding
+    return jnp.asarray(step).astype(jnp.uint32)
+
+
+def seed_for(step, site: int, tag: int) -> jnp.ndarray:
+    return qrand.derive_seed(_step_u32(step), site, tag)
+
+
+# ---------------------------------------------------------------------------
+# applying one QuantFormat to one tensor (via the L1 pallas kernels)
+# ---------------------------------------------------------------------------
+
+def apply_format(fmt: qconfig.QuantFormat, x, seed, role: str,
+                 per_tensor: bool = False):
+    """Quantize x with fmt using the L1 kernel for that format."""
+    if fmt.kind == "none":
+        return x
+    if fmt.kind == "fixed":
+        return quant.q_fixed(x, seed, fmt.wl, fmt.fl,
+                             stochastic=fmt.stochastic)
+    if fmt.kind == "bfp":
+        axes = qconfig.block_axes_for(fmt, role, x.ndim, per_tensor)
+        return quant.q_bfp(x, seed, fmt.wl, block_axes=axes,
+                           ebits=fmt.ebits, stochastic=fmt.stochastic)
+    raise ValueError(f"unknown quant kind {fmt.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# activation/error quantization sites (custom_vjp)
+# ---------------------------------------------------------------------------
+
+def make_act_site(cfg: qconfig.TrainQuantConfig, name: str):
+    """Build the Q_A-forward / Q_E-backward function for one named site."""
+    sid = site_id(name)
+
+    @jax.custom_vjp
+    def site(x, step):
+        return apply_format(cfg.a, x, seed_for(step, sid, TAG_A), "act")
+
+    def fwd(x, step):
+        return site(x, step), step
+
+    def bwd(step, ct):
+        e = apply_format(cfg.e, ct, seed_for(step, sid, TAG_E), "err")
+        return e, jnp.zeros((), jnp.float32)
+
+    site.defvjp(fwd, bwd)
+    return site
+
+
+class ActQuantizer:
+    """Per-model registry of activation sites.
+
+    Models call `qa("block1.relu", x)`; the first call for a name builds
+    (and caches) its custom_vjp site so repeated tracing reuses it.
+    """
+
+    def __init__(self, cfg: qconfig.TrainQuantConfig, step):
+        self.cfg = cfg
+        self.step = jnp.asarray(step).astype(jnp.float32)
+        self._sites: dict[str, object] = {}
+
+    def __call__(self, name: str, x):
+        if self.cfg.a.kind == "none" and self.cfg.e.kind == "none":
+            return x
+        if name not in self._sites:
+            self._sites[name] = make_act_site(self.cfg, name)
+        return self._sites[name](x, self.step)
+
+
+# ---------------------------------------------------------------------------
+# gradient / weight / momentum tree quantization + fused update
+# ---------------------------------------------------------------------------
+
+def _is_per_tensor(name: str) -> bool:
+    """Biases and norm scale/shift get one exponent per tensor (§5)."""
+    leaf = name.rsplit(".", 1)[-1]
+    return leaf in ("b", "bias", "scale", "shift", "gamma", "beta")
+
+
+def quantize_grads(cfg: qconfig.TrainQuantConfig, grads: dict, step):
+    """Q_G over a named gradient dict (Algorithm 2 step 2, g-production)."""
+    if cfg.g.kind == "none":
+        return grads
+    out = {}
+    for name, g in grads.items():
+        s = seed_for(step, site_id(name), TAG_G)
+        out[name] = apply_format(cfg.g, g, s, "grad", _is_per_tensor(name))
+    return out
+
+
+def lp_sgd_update_tree(cfg: qconfig.TrainQuantConfig, params: dict,
+                       momentum: dict, grads: dict, lr, step):
+    """Fused Algorithm-2 step 3 over every trainable tensor."""
+    new_p, new_m = {}, {}
+    for name in params:
+        w, v, g = params[name], momentum[name], grads[name]
+        per_tensor = _is_per_tensor(name)
+        sid = site_id(name)
+
+        def qw(t, s, _pt=per_tensor):
+            return apply_format(cfg.w, t, s, "weight", _pt)
+
+        def qm(t, s, _pt=per_tensor):
+            return apply_format(cfg.m, t, s, "momentum", _pt)
+
+        if cfg.rho == 0.0 and cfg.m.kind == "none":
+            # plain SGD: w' = Q_W(w - lr*g); skip the momentum stream
+            new_p[name] = qw(w - lr * g, seed_for(step, sid, TAG_W))
+            new_m[name] = v
+        else:
+            w2, v2 = upd_kernels.lp_sgd_update(
+                w, v, g, lr,
+                seed_for(step, sid, TAG_W), seed_for(step, sid, TAG_M),
+                rho=cfg.rho, qw=qw, qm=qm,
+            )
+            new_p[name], new_m[name] = w2, v2
+    return new_p, new_m
+
+
+def quantize_params(cfg: qconfig.TrainQuantConfig, params: dict, step=0):
+    """Q_W over an initialized parameter tree (so training starts on the
+    low-precision grid, matching Algorithm 1's after-warm-up w_0)."""
+    if cfg.w.kind == "none":
+        return params
+    out = {}
+    for name, w in params.items():
+        s = seed_for(step, site_id(name), TAG_W)
+        out[name] = apply_format(cfg.w, w, s, "weight", _is_per_tensor(name))
+    return out

@@ -1,0 +1,81 @@
+"""AOT pipeline: lowering produces parseable HLO with the right arity,
+and the shipped artifacts directory (if built) matches the registry."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, graphs
+
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_linreg_lowering_roundtrip():
+    """Lower the smallest spec end-to-end and sanity-check the HLO text."""
+    spec = next(s for s in aot.registry() if s.name == "linreg_fx86")
+    gs = graphs.build(spec.make_model(), spec.cfg)
+    io = aot._spec_io(spec, gs)
+    lowered = jax.jit(gs.train_fn, keep_unused=True).lower(
+        *aot._structs(io["train"]["in"]))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # parameter count must match the declared calling convention
+    n_inputs = len(io["train"]["in"])
+    assert text.count("parameter(") >= n_inputs
+
+
+def test_manifest_matches_registry_if_built():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    names = {m["name"] for m in manifest["models"]}
+    reg_names = {s.name for s in aot.registry()}
+    assert reg_names <= names, reg_names - names
+    for m in manifest["models"]:
+        for ename, e in m["entries"].items():
+            f = os.path.join(ART, e["file"])
+            assert os.path.exists(f), f"{m['name']}.{ename} missing"
+            assert e["inputs"] and e["outputs"]
+
+
+def test_artifact_io_arity_if_built():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    for m in manifest["models"]:
+        n_t = len(m["trainable"])
+        n_s = len(m["state"])
+        tr = m["entries"]["train"]
+        assert len(tr["inputs"]) == 2 * n_t + n_s + 4, m["name"]
+        assert len(tr["outputs"]) == 2 * n_t + n_s + 1, m["name"]
+        init = m["entries"]["init"]
+        assert len(init["inputs"]) == 1
+        assert len(init["outputs"]) == 2 * n_t + n_s
+        if n_s:
+            assert "eval_bs" in m["entries"], m["name"]
+
+
+def test_quant_metadata_consistency_if_built():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    by_name = {m["name"]: m for m in manifest["models"]}
+    small = by_name["cifar10_vgg_bfp8small"]["quant"]
+    assert small["w"]["kind"] == "bfp" and small["w"]["small_block"]
+    big = by_name["cifar10_vgg_bfp8big"]["quant"]
+    assert big["w"]["kind"] == "bfp" and not big["w"]["small_block"]
+    fx = by_name["logreg_fx_f2"]["quant"]
+    assert fx["w"] == {"kind": "fixed", "wl": 4, "fl": 2, "ebits": 8,
+                       "small_block": False, "stochastic": True}
+    assert fx["a"]["kind"] == "none"  # Algorithm-1 setting: weights only

@@ -1,0 +1,175 @@
+"""Graph builder: calling conventions, quantized-train semantics, eval."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, graphs, qconfig
+from compile.models.linreg import LinReg
+from compile.models.logreg import LogReg
+
+
+@pytest.fixture(scope="module")
+def logreg_gs():
+    return graphs.build(LogReg(32, 4), qconfig.fixed_weights_only(8, 6),
+                        grad_norm_eval=True, flex_eval=False)
+
+
+def test_init_outputs_match_convention(logreg_gs):
+    gs = logreg_gs
+    outs = gs.init_fn(jnp.float32(3.0))
+    n_t, n_s = len(gs.trainable_names), len(gs.state_names)
+    assert len(outs) == 2 * n_t + n_s
+    shapes = [tuple(o.shape) for o in outs[:n_t]]
+    assert shapes == [tuple(gs.shapes[n]) for n in gs.trainable_names]
+    # momentum zeros
+    for mom in outs[n_t + n_s:]:
+        assert float(jnp.abs(mom).max()) == 0.0
+
+
+def test_train_quantizes_weights_to_grid(logreg_gs):
+    gs = logreg_gs
+    vals = list(gs.init_fn(jnp.float32(1.0)))
+    x = jnp.asarray(np.random.RandomState(0).randn(8, 32), jnp.float32)
+    y = jnp.asarray(np.random.RandomState(1).randint(0, 4, 8), jnp.float32)
+    out = gs.train_fn(*vals, x, y, jnp.float32(0.1), jnp.float32(0.0))
+    w_new = np.asarray(out[gs.trainable_names.index("w")])
+    delta = 2.0 ** -6
+    np.testing.assert_allclose(w_new / delta, np.round(w_new / delta),
+                               atol=1e-4)
+    loss = float(out[-1])
+    assert np.isfinite(loss) and loss > 0
+
+
+def test_eval_outputs_loss_metric_gradnorm(logreg_gs):
+    gs = logreg_gs
+    vals = list(gs.init_fn(jnp.float32(1.0)))
+    n_t, n_s = len(gs.trainable_names), len(gs.state_names)
+    params = vals[:n_t + n_s]
+    x = jnp.asarray(np.random.RandomState(2).randn(16, 32), jnp.float32)
+    y = jnp.zeros(16, jnp.float32)
+    loss, metric, gns = gs.eval_fn(*params, x, y)
+    assert float(loss) > 0
+    assert 0 <= float(metric) <= 16
+    assert float(gns) >= 0
+
+
+def test_regression_task_metric_is_sq_err():
+    gs = graphs.build(LinReg(8), qconfig.fp32())
+    vals = list(gs.init_fn(jnp.float32(0.0)))
+    x = jnp.ones((4, 8), jnp.float32)
+    y = jnp.full((4,), 2.0, jnp.float32)
+    loss, metric = gs.eval_fn(vals[0], x, y)
+    # w=0 ⇒ pred 0 ⇒ per-sample sq err 4, sum 16, mean loss 4
+    assert abs(float(metric) - 16.0) < 1e-5
+    assert abs(float(loss) - 4.0) < 1e-5
+
+
+def test_train_step_determinism(logreg_gs):
+    gs = logreg_gs
+    vals = list(gs.init_fn(jnp.float32(1.0)))
+    x = jnp.asarray(np.random.RandomState(3).randn(8, 32), jnp.float32)
+    y = jnp.zeros(8, jnp.float32)
+    o1 = gs.train_fn(*vals, x, y, jnp.float32(0.1), jnp.float32(5.0))
+    o2 = gs.train_fn(*vals, x, y, jnp.float32(0.1), jnp.float32(5.0))
+    np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(o2[0]))
+    # ...and a different step gives different stochastic rounding
+    o3 = gs.train_fn(*vals, x, y, jnp.float32(0.1), jnp.float32(6.0))
+    assert not np.array_equal(np.asarray(o1[0]), np.asarray(o3[0]))
+
+
+# ---------------------------------------------------------------------------
+# registry / manifest coherence
+# ---------------------------------------------------------------------------
+
+def test_registry_names_unique_and_wellformed():
+    specs = aot.registry()
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names))
+    for s in specs:
+        assert s.batch_train >= 1 and s.batch_eval >= 1
+        assert s.cfg.name
+        assert s.dataset
+
+
+def test_spec_io_shapes():
+    specs = {s.name: s for s in aot.registry()}
+    s = specs["logreg_fp32"]
+    gs = graphs.build(s.make_model(), s.cfg, grad_norm_eval=s.grad_norm_eval)
+    io = aot._spec_io(s, gs)
+    train_in = io["train"]["in"]
+    # last four train inputs are x, y, lr, step
+    assert [n for n, _ in train_in[-4:]] == ["x", "y", "lr", "step"]
+    assert train_in[-4][1] == (32, 784)
+    ev = io["eval"]["out"]
+    assert [n for n, _ in ev] == ["loss", "metric", "grad_norm_sq"]
+
+
+def test_golden_vectors_structure():
+    g = aot.golden_vectors()
+    assert len(g["x"]) == 4 * 24
+    assert len(g["mix32_of_0_31"]) == 32
+    assert len(g["uniform_seed42"]) == 32
+    assert all(0.0 <= u < 1.0 for u in g["uniform_seed42"])
+    for case in g["cases"]:
+        assert len(case["out"]) == 96
+
+
+# ---------------------------------------------------------------------------
+# regression tests for bugs found during bring-up
+# ---------------------------------------------------------------------------
+
+def test_bfp_zero_momentum_does_not_nan():
+    """Underflow regression: Q_M of an all-zero momentum tensor must stay
+    zero (δ used to underflow to 0 and emit NaN)."""
+    from compile.kernels import ref as kref
+    q = np.asarray(kref.quantize_bfp(jnp.zeros((64,)), 8, 5, block_axes=()))
+    assert np.isfinite(q).all() and (q == 0).all()
+
+
+def test_bfp8_first_train_step_finite():
+    """The first Algorithm-2 step with zero-initialized momentum under
+    full bfp8 quantization must produce finite weights and loss."""
+    from compile.models.mlp import MLP
+    m = MLP(d_in=32, hidden=16, classes=4)
+    gs = graphs.build(m, qconfig.bfp8(small_block=True))
+    vals = list(gs.init_fn(jnp.float32(1.0)))
+    x = jnp.asarray(np.random.RandomState(0).randn(8, 32), jnp.float32)
+    y = jnp.zeros(8, jnp.float32)
+    out = gs.train_fn(*vals, x, y, jnp.float32(0.05), jnp.float32(0.0))
+    for o in out:
+        assert np.isfinite(np.asarray(o)).all()
+
+
+def test_eval_bs_uses_batch_statistics():
+    """eval_bs must ignore (stale) running stats entirely."""
+    from compile.models.cnn import VGGMini
+    model = VGGMini(classes=4, widths=(8, 8, 8), dense=16)
+    gs = graphs.build(model, qconfig.fp32(rho=0.9))
+    vals = list(gs.init_fn(jnp.float32(1.0)))
+    n_t, n_s = len(gs.trainable_names), len(gs.state_names)
+    tr = vals[:n_t]
+    st = vals[n_t:n_t + n_s]
+    x = jnp.asarray(np.random.RandomState(1).randn(8, 3, 16, 16), jnp.float32)
+    y = jnp.zeros(8, jnp.float32)
+    base = gs.eval_bs_fn(*tr, *st, x, y)
+    # corrupt the running stats wildly: eval_bs output must not move
+    st_bad = [s + 100.0 for s in st]
+    moved = gs.eval_fn(*tr, *st_bad, x, y)
+    same = gs.eval_bs_fn(*tr, *st_bad, x, y)
+    assert float(jnp.abs(same[0] - base[0])) < 1e-5
+    assert float(jnp.abs(moved[0] - base[0])) > 1e-3
+
+
+def test_registry_stateful_models_get_eval_bs():
+    specs = {s.name: s for s in aot.registry()}
+    s = specs["cifar10_vgg_bfp8small"]
+    gs = graphs.build(s.make_model(), s.cfg)
+    io = aot._spec_io(s, gs)
+    assert "eval_bs" in io
+    # stateless models don't
+    s2 = specs["logreg_fp32"]
+    gs2 = graphs.build(s2.make_model(), s2.cfg,
+                       grad_norm_eval=s2.grad_norm_eval)
+    assert "eval_bs" not in aot._spec_io(s2, gs2)

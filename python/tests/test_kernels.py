@@ -1,0 +1,211 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes, word lengths and seeds; every kernel must match
+ref.py bit-exactly (same counter hash, same arithmetic)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import qmatmul, quant, ref, update
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("kernels")
+
+
+def rand_array(shape, seed, scale=3.0):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# fixed point
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    rows=st.integers(1, 12), cols=st.integers(1, 24),
+    wl=st.integers(2, 16), seed=st.integers(0, 2**31),
+    stochastic=st.booleans(),
+)
+def test_q_fixed_matches_ref(rows, cols, wl, seed, stochastic):
+    fl = max(wl - 2, 0)
+    x = rand_array((rows, cols), seed % 1000)
+    k = quant.q_fixed(x, seed, wl, fl, stochastic=stochastic)
+    r = ref.quantize_fixed(x, wl, fl, seed, stochastic=stochastic)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+@hypothesis.given(
+    log_rows=st.integers(0, 4), cols=st.integers(1, 16),
+    seed=st.integers(0, 2**31), block_log=st.integers(0, 3),
+)
+def test_q_fixed_tiled_matches_whole(log_rows, cols, seed, block_log):
+    rows = 2 ** log_rows
+    block = min(2 ** block_log, rows)
+    if rows % block:
+        return
+    x = rand_array((rows, cols), seed % 997)
+    t = quant.q_fixed_tiled(x, seed, 8, 6, block_rows=block)
+    w = quant.q_fixed(x, seed, 8, 6)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(w))
+
+
+def test_q_fixed_values_on_grid_and_clipped():
+    x = rand_array((8, 8), 0, scale=10.0)
+    q = np.asarray(quant.q_fixed(x, 3, 4, 2))
+    delta = 2.0 ** -2
+    assert q.max() <= 2.0 - delta + 1e-7
+    assert q.min() >= -2.0 - 1e-7
+    np.testing.assert_allclose(q / delta, np.round(q / delta), atol=1e-5)
+
+
+def test_stochastic_rounding_unbiased():
+    xs = jnp.full((30000,), 0.318, jnp.float32)
+    acc = 0.0
+    for s in range(3):
+        acc += float(ref.quantize_fixed(xs, 8, 6, s).mean())
+    assert abs(acc / 3 - 0.318) < 3e-4
+
+
+def test_nearest_is_round_half_up():
+    q = np.asarray(ref.quantize_fixed(jnp.asarray([0.375]), 8, 2, 0,
+                                      stochastic=False))
+    assert q[0] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# block floating point
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    rows=st.integers(1, 10), cols=st.integers(1, 20),
+    wl=st.integers(2, 12), seed=st.integers(0, 2**31),
+    axes=st.sampled_from([(), (0,), (1,), (0, 1)]),
+)
+def test_q_bfp_matches_ref(rows, cols, wl, seed, axes):
+    x = rand_array((rows, cols), seed % 991)
+    k = quant.q_bfp(x, seed, wl, block_axes=axes)
+    r = ref.quantize_bfp(x, wl, seed, block_axes=axes)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+def test_bfp_4d_small_block_weight_axes():
+    x = rand_array((4, 3, 3, 3), 7)
+    k = quant.q_bfp(x, 5, 8, block_axes=(0,))
+    r = ref.quantize_bfp(x, 8, 5, block_axes=(0,))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+def test_bfp_block_exponent_independence():
+    # scaling one row must not change another row's quantization when
+    # exponents are per-row
+    x = rand_array((2, 16), 3, scale=1.0)
+    q1 = np.asarray(ref.quantize_bfp(x, 8, 11, block_axes=(0,)))
+    x2 = x.at[1].multiply(1000.0)
+    q2 = np.asarray(ref.quantize_bfp(x2, 8, 11, block_axes=(0,)))
+    np.testing.assert_array_equal(q1[0], q2[0])
+
+
+def test_bfp_big_block_couples_rows():
+    x = rand_array((2, 16), 3, scale=1.0)
+    q1 = np.asarray(ref.quantize_bfp(x, 8, 11, block_axes=()))
+    x2 = x.at[1].multiply(1000.0)
+    q2 = np.asarray(ref.quantize_bfp(x2, 8, 11, block_axes=()))
+    # row 0 collapses to ~0 under the shared (huge) exponent
+    assert np.abs(q2[0]).max() <= np.abs(q1[0]).max()
+    assert not np.array_equal(q1[0], q2[0])
+
+
+def test_bfp_zero_tensor():
+    q = np.asarray(ref.quantize_bfp(jnp.zeros((4, 4)), 8, 1))
+    assert (q == 0).all()
+
+
+def test_floor_log2_bit_trick():
+    vals = jnp.asarray([1.0, 1.5, 2.0, 3.99, 4.0, 0.25, 0.49, 1e-20])
+    e = np.asarray(ref.floor_log2(vals))
+    assert list(e[:7]) == [0, 0, 1, 1, 2, -2, -2]
+
+
+# ---------------------------------------------------------------------------
+# fused update + SWA fold
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    n=st.integers(1, 64), seed=st.integers(0, 2**31),
+    rho=st.sampled_from([0.0, 0.5, 0.9]),
+)
+def test_lp_sgd_update_matches_ref(n, seed, rho):
+    rs = np.random.RandomState(seed % 983)
+    w = jnp.asarray(rs.randn(n).astype(np.float32))
+    v = jnp.asarray(rs.randn(n).astype(np.float32) * 0.1)
+    g = jnp.asarray(rs.randn(n).astype(np.float32) * 0.1)
+
+    def qw(t, s):
+        return ref.quantize_fixed(t, 8, 6, s)
+
+    w2, v2 = update.lp_sgd_update(w, v, g, 0.05, seed, seed + 1,
+                                  rho=rho, qw=qw, qm=qw)
+    w2r, v2r = ref.lp_sgd_momentum_update(
+        w, v, g, jnp.float32(0.05), rho,
+        lambda t: qw(t, seed), lambda t: qw(t, seed + 1))
+    # XLA may fuse ρ·Q(v)+g differently inside vs outside the kernel;
+    # allow 1-ulp reassociation noise on v, and grid-scale noise on w
+    # (a 1-ulp shift can flip one stochastic rounding decision)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v2r),
+                               rtol=2e-7, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w2r),
+                               atol=2.0 ** -6 + 1e-7)
+
+
+def test_swa_fold_kernel_is_running_mean():
+    w1 = jnp.asarray([1.0, 2.0])
+    w2 = jnp.asarray([3.0, 6.0])
+    bar = update.swa_fold(jnp.zeros(2), w1, 0)
+    np.testing.assert_allclose(np.asarray(bar), [1.0, 2.0])
+    bar = update.swa_fold(bar, w2, 1)
+    np.testing.assert_allclose(np.asarray(bar), [2.0, 4.0])
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    m=st.sampled_from([4, 8]), k=st.sampled_from([8, 16]),
+    n=st.sampled_from([4, 12]), seed=st.integers(0, 2**31),
+)
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rs = np.random.RandomState(seed % 977)
+    a = jnp.asarray(rs.randn(m, k).astype(np.float32))
+    b = jnp.asarray(rs.randn(k, n).astype(np.float32))
+    o = qmatmul.qmatmul_fixed(a, b, seed, seed + 9, wl=8, fl=5,
+                              bm=4, bk=4, bn=4)
+    o_ref = ref.qmatmul(
+        a, b,
+        lambda t: ref.quantize_fixed(t, 8, 5, seed),
+        lambda t: ref.quantize_fixed(t, 8, 5, seed + 9))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qmatmul_tiling_invariance():
+    rs = np.random.RandomState(5)
+    a = jnp.asarray(rs.randn(8, 16).astype(np.float32))
+    b = jnp.asarray(rs.randn(16, 8).astype(np.float32))
+    o1 = qmatmul.qmatmul_fixed(a, b, 1, 2, wl=8, fl=5, bm=2, bk=4, bn=2)
+    o2 = qmatmul.qmatmul_fixed(a, b, 1, 2, wl=8, fl=5, bm=8, bk=16, bn=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_qmatmul_rejects_bad_tiles():
+    a = jnp.zeros((6, 8))
+    b = jnp.zeros((8, 8))
+    with pytest.raises(AssertionError):
+        qmatmul.qmatmul_fixed(a, b, 0, 0, wl=8, fl=5, bm=4, bk=4, bn=4)

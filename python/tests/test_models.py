@@ -1,0 +1,130 @@
+"""Model zoo: shapes, state handling, and learnability smoke checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import graphs, qconfig
+from compile.models.cnn import VGGMini
+from compile.models.linreg import LinReg
+from compile.models.logreg import LogReg
+from compile.models.mlp import MLP
+from compile.models.preresnet import PreResNetMini
+from compile.models.transformer import TransformerLM
+from compile.models.wage import WageCNN
+
+
+def noop_qa(name, x):
+    return x
+
+
+noop_qa.step = jnp.float32(0.0)
+
+
+def rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize("model,xshape", [
+    (VGGMini(classes=10), (2, 3, 16, 16)),
+    (PreResNetMini(classes=10), (2, 3, 16, 16)),
+    (WageCNN(classes=10), (2, 3, 16, 16)),
+])
+def test_conv_models_output_shapes(model, xshape):
+    tr, st = model.init(jax.random.PRNGKey(0))
+    logits, new_st = model.apply(tr, st, rand(xshape), noop_qa, train=True)
+    assert logits.shape == (2, 10)
+    assert set(new_st.keys()) == set(st.keys())
+    assert jnp.isfinite(logits).all()
+
+
+def test_vgg_bn_state_updates_in_train_only():
+    model = VGGMini(classes=10)
+    tr, st = model.init(jax.random.PRNGKey(1))
+    x = rand((4, 3, 16, 16), 2)
+    _, st_train = model.apply(tr, st, x, noop_qa, train=True)
+    _, st_eval = model.apply(tr, st, x, noop_qa, train=False)
+    changed = any(
+        not np.array_equal(np.asarray(st[k]), np.asarray(st_train[k]))
+        for k in st)
+    unchanged = all(
+        np.array_equal(np.asarray(st[k]), np.asarray(st_eval[k]))
+        for k in st)
+    assert changed and unchanged
+
+
+def test_transformer_causality():
+    model = TransformerLM(vocab=32, d_model=32, n_layers=1, n_heads=2,
+                          seq_len=8, d_ff=64)
+    tr, st = model.init(jax.random.PRNGKey(3))
+    x = jnp.asarray(np.random.RandomState(0).randint(0, 32, (1, 8)),
+                    jnp.float32)
+    logits1, _ = model.apply(tr, st, x, noop_qa, train=False)
+    # perturb the last token: logits at positions < 7 must not change
+    x2 = x.at[0, 7].set((x[0, 7] + 1) % 32)
+    logits2, _ = model.apply(tr, st, x2, noop_qa, train=False)
+    np.testing.assert_allclose(np.asarray(logits1[0, :7]),
+                               np.asarray(logits2[0, :7]), atol=1e-5)
+    assert not np.allclose(np.asarray(logits1[0, 7]),
+                           np.asarray(logits2[0, 7]))
+
+
+def test_linreg_apply_and_loss():
+    m = LinReg(8)
+    tr, st = m.init(jax.random.PRNGKey(0))
+    x = rand((4, 8))
+    pred, _ = m.apply(tr, st, x, noop_qa, train=True)
+    assert pred.shape == (4,)
+    assert float(m.loss(pred, jnp.zeros(4))) >= 0.0
+
+
+def test_logreg_regularized_loss():
+    m = LogReg(16, 4, lam=1.0)
+    tr, st = m.init(jax.random.PRNGKey(0))
+    tr = {**tr, "w": jnp.ones_like(tr["w"])}
+    logits, _ = m.apply(tr, st, rand((2, 16)), noop_qa, train=True)
+    loss = float(m.loss(logits, jnp.zeros(2, jnp.int32), tr))
+    # loss includes λ/2 ‖w‖² = 0.5 * 64
+    assert loss > 31.0
+
+
+def test_mlp_qmatmul_path_runs_fwd_and_bwd():
+    m = MLP(d_in=256, hidden=128, classes=10, qmm_wl=8, qmm_fl=5)
+    tr, st = m.init(jax.random.PRNGKey(0))
+    x = rand((32, 256), 1)
+    y = jnp.zeros(32, jnp.int32)
+
+    def loss_fn(tr_d):
+        logits, _ = m.apply(tr_d, st, x, noop_qa, train=True)
+        return m.loss(logits, y, tr_d)
+
+    loss, grads = jax.value_and_grad(loss_fn)(tr)
+    assert jnp.isfinite(loss)
+    assert all(jnp.isfinite(g).all() for g in grads.values())
+    assert float(jnp.abs(grads["fc1.w"]).max()) > 0.0
+
+
+def test_fp32_training_reduces_loss_vgg():
+    """Few-step learnability: the full Algorithm-2 graph (fp32 config)
+    must reduce training loss on a separable toy batch."""
+    model = VGGMini(classes=4, widths=(8, 8, 8), dense=16)
+    gs = graphs.build(model, qconfig.fp32(rho=0.9), weight_decay=0.0)
+    rs = np.random.RandomState(0)
+    # 4 fixed class patterns + tiny noise
+    protos = rs.randn(4, 3, 16, 16).astype(np.float32)
+    xs = np.concatenate([protos + 0.05 * rs.randn(4, 3, 16, 16).astype(np.float32)
+                         for _ in range(4)])
+    ys = np.asarray(list(range(4)) * 4, np.float32)
+    vals = list(gs.init_fn(jnp.float32(1.0)))
+    n_t, n_s = len(gs.trainable_names), len(gs.state_names)
+    step = jax.jit(gs.train_fn)
+    losses = []
+    for i in range(8):
+        out = step(*vals, jnp.asarray(xs), jnp.asarray(ys),
+                   jnp.float32(0.05), jnp.float32(i))
+        vals = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.9, losses
+    assert n_t + n_s + n_t == len(vals)

@@ -1,0 +1,109 @@
+"""Algorithm-2 machinery: custom_vjp act sites, tree quantization, update."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import qconfig, qtrain
+from compile.kernels import ref
+
+
+FX = qconfig.fixed_all(8, 6, rho=0.9)
+
+
+def test_act_site_forward_quantizes():
+    qa = qtrain.ActQuantizer(FX, step=3.0)
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 8).astype(np.float32))
+    y = qa("site1", x)
+    sid = qtrain.site_id("site1")
+    expect = ref.quantize_fixed(
+        x, 8, 6, qtrain.seed_for(jnp.float32(3.0), sid, qtrain.TAG_A))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(expect))
+
+
+def test_act_site_backward_applies_qe():
+    site = qtrain.make_act_site(FX, "s")
+    x = jnp.asarray(np.random.RandomState(1).randn(6).astype(np.float32))
+
+    def f(x):
+        return jnp.sum(site(x, jnp.float32(5.0)) * 3.0)
+
+    g = jax.grad(f)(x)
+    sid = qtrain.site_id("s")
+    expect = ref.quantize_fixed(
+        jnp.full((6,), 3.0), 8, 6,
+        qtrain.seed_for(jnp.float32(5.0), sid, qtrain.TAG_E))
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(expect))
+
+
+def test_act_site_noop_for_fp32():
+    qa = qtrain.ActQuantizer(qconfig.fp32(), step=0.0)
+    x = jnp.ones((3,))
+    assert qa("s", x) is x
+
+
+def test_quantize_grads_respects_per_tensor_names():
+    cfg = qconfig.bfp8(small_block=True)
+    g = {
+        "conv.w": jnp.asarray(np.random.RandomState(2).randn(4, 2, 3, 3),
+                              jnp.float32),
+        "bn.scale": jnp.asarray(np.random.RandomState(3).randn(4),
+                                jnp.float32),
+    }
+    out = qtrain.quantize_grads(cfg, g, jnp.float32(1.0))
+    s_w = qtrain.seed_for(jnp.float32(1.0), qtrain.site_id("conv.w"),
+                          qtrain.TAG_G)
+    expect_w = ref.quantize_bfp(g["conv.w"], 8, s_w, block_axes=(0,))
+    np.testing.assert_array_equal(np.asarray(out["conv.w"]),
+                                  np.asarray(expect_w))
+    # scale: per-tensor (block_axes=()) despite small_block
+    s_s = qtrain.seed_for(jnp.float32(1.0), qtrain.site_id("bn.scale"),
+                          qtrain.TAG_G)
+    expect_s = ref.quantize_bfp(g["bn.scale"], 8, s_s, block_axes=())
+    np.testing.assert_array_equal(np.asarray(out["bn.scale"]),
+                                  np.asarray(expect_s))
+
+
+def test_lp_sgd_update_tree_plain_sgd_path():
+    cfg = qconfig.fixed_weights_only(8, 6)
+    p = {"w": jnp.asarray([0.5, -0.25], jnp.float32)}
+    m = {"w": jnp.zeros(2)}
+    g = {"w": jnp.asarray([1.0, -1.0], jnp.float32)}
+    new_p, new_m = qtrain.lp_sgd_update_tree(cfg, p, m, g,
+                                             jnp.float32(0.125),
+                                             jnp.float32(0.0))
+    # w' = Q(w - lr g) on the 2^-6 grid
+    delta = 2.0 ** -6
+    vals = np.asarray(new_p["w"]) / delta
+    np.testing.assert_allclose(vals, np.round(vals), atol=1e-4)
+    # momentum untouched in the plain path
+    np.testing.assert_array_equal(np.asarray(new_m["w"]), np.zeros(2))
+
+
+def test_lp_sgd_update_tree_momentum_path():
+    cfg = qconfig.fixed_all(8, 6, rho=0.9)
+    p = {"w": jnp.asarray([0.5], jnp.float32)}
+    m = {"w": jnp.asarray([0.25], jnp.float32)}
+    g = {"w": jnp.asarray([0.0], jnp.float32)}
+    new_p, new_m = qtrain.lp_sgd_update_tree(cfg, p, m, g,
+                                             jnp.float32(0.0),
+                                             jnp.float32(2.0))
+    # lr=0, g=0: v' = 0.9 * Q(0.25) = 0.225 (0.25 is on the grid)
+    np.testing.assert_allclose(np.asarray(new_m["w"]), [0.225], atol=1e-6)
+
+
+def test_quantize_params_moves_to_grid():
+    cfg = qconfig.fixed_weights_only(4, 2)
+    p = {"w": jnp.asarray([0.3, 1.9, -3.0], jnp.float32)}
+    q = qtrain.quantize_params(cfg, p)
+    delta = 0.25
+    vals = np.asarray(q["w"])
+    assert vals.max() <= 2.0 - delta + 1e-7
+    assert vals.min() >= -2.0
+    np.testing.assert_allclose(vals / delta, np.round(vals / delta),
+                               atol=1e-5)
+
+
+def test_site_id_stable():
+    assert qtrain.site_id("abc") == qtrain.site_id("abc")
+    assert qtrain.site_id("abc") != qtrain.site_id("abd")

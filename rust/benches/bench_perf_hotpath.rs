@@ -1,0 +1,98 @@
+//! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf):
+//!   L3: per-step latency of the compiled train artifacts (end-to-end,
+//!       including literal marshalling) + the marshalling cost alone,
+//!   host quantizer + SWA fold throughput (the rust-side hot loops),
+//!   pure-sim step rate (theory benches' inner loop).
+
+use swalp::coordinator::SwaAccumulator;
+use swalp::data;
+use swalp::quant::{bfp, fixed};
+use swalp::runtime::{artifacts_dir, Manifest, Runtime};
+use swalp::tensor::{NamedTensors, Tensor};
+use swalp::util::bench::{bench, print_result};
+
+fn main() {
+    let n = 1 << 20;
+    let xs: Vec<f32> = (0..n).map(|i| ((i % 997) as f32 - 498.0) * 0.01).collect();
+
+    // ---- host quantizers ----
+    let mut out = xs.clone();
+    let r = bench("quant/fixed W8F6 (1M elems)", 1, 5, 0.5, || {
+        out.copy_from_slice(&xs);
+        fixed::quantize_fixed_slice(&mut out, 8, 6, 42, true);
+    });
+    print_result(&r);
+    println!("    -> {:.0} Melem/s", n as f64 / r.median_s / 1e6);
+
+    let t = Tensor::new(vec![1024, 1024], xs.clone()).unwrap();
+    let r = bench("quant/bfp8 small-block (1024x1024)", 1, 5, 0.5, || {
+        let _ = bfp::quantize_bfp_tensor(&t, 8, 8, 7, &[0], true);
+    });
+    print_result(&r);
+    println!("    -> {:.0} Melem/s", n as f64 / r.median_s / 1e6);
+
+    // ---- SWA fold ----
+    let named: NamedTensors = vec![("w".into(), t.clone())];
+    let mut acc = SwaAccumulator::new(None);
+    acc.fold(&named).unwrap();
+    let r = bench("swa/fold f64 (1M elems)", 1, 5, 0.5, || {
+        acc.fold(&named).unwrap();
+    });
+    print_result(&r);
+    println!("    -> {:.0} Melem/s", n as f64 / r.median_s / 1e6);
+
+    // ---- pure-sim inner loop ----
+    let r = bench("sim/noise_ball_1d 100k steps", 1, 3, 0.5, || {
+        let _ = swalp::sim::noise_ball_1d(0.1, 0.1, 0.01, 100_000, 1, 3);
+    });
+    print_result(&r);
+    println!("    -> {:.1} Msteps/s", 0.1 / r.median_s);
+
+    // ---- compiled artifacts (needs `make artifacts`) ----
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping XLA step benches");
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    for name in ["linreg_fx86", "mlp_qmm_fx86", "cifar10_vgg_bfp8small", "lm_bfp8small"] {
+        let model = match rt.load_model(&manifest, name) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("skipping {name}: {e}");
+                continue;
+            }
+        };
+        let split = data::build(&model.spec.dataset, 3, 0.1).unwrap();
+        let mut loader =
+            swalp::data::loader::Loader::new(&split.train, model.spec.batch_train, 1);
+        let mut ms = model.init(1.0).unwrap();
+        let (x, y) = loader.next_batch();
+        let (x, y) = (x.to_vec(), y.to_vec());
+        let mut step = 0u64;
+        let r = bench(&format!("xla/train_step {name}"), 3, 10, 1.0, || {
+            model.train_step(&mut ms, &x, &y, 0.01, step).unwrap();
+            step += 1;
+        });
+        print_result(&r);
+        let params = model.spec.param_count();
+        println!(
+            "    -> {:.1} steps/s, {} params, {:.1} Mparam-updates/s",
+            1.0 / r.median_s,
+            params,
+            params as f64 / r.median_s / 1e6
+        );
+
+        // marshalling-only cost (literal building for all inputs)
+        let r2 = bench(&format!("xla/marshal-only {name}"), 3, 10, 0.5, || {
+            for (_, t) in ms.trainable.iter().chain(&ms.state).chain(&ms.momentum) {
+                let _ = swalp::runtime::model::tensor_to_literal(t).unwrap();
+            }
+        });
+        print_result(&r2);
+        println!(
+            "    -> marshalling = {:.1}% of step",
+            100.0 * r2.median_s / r.median_s
+        );
+    }
+}

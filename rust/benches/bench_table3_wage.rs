@@ -1,0 +1,21 @@
+//! Regenerates the paper's table3 (see DESIGN.md §4 experiment index).
+//! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
+//! version used for EXPERIMENTS.md.
+
+use swalp::coordinator::experiment::Ctx;
+use swalp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
+    let seeds = args.u64_or("seeds", 1).unwrap_or(1);
+    match Ctx::new(!full, seeds) {
+        Ok(ctx) => {
+            if let Err(e) = ctx.dispatch("table3") {
+                eprintln!("table3 failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        Err(e) => eprintln!("skipping table3: {e} (run `make artifacts`)"),
+    }
+}

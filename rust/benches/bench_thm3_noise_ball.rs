@@ -1,0 +1,34 @@
+//! Theorem 3 lower bound: SGD-LP noise ball Ω(σδ) vs SWALP O(δ²), plus an
+//! α-sweep showing the floor cannot be stepped under by tuning the LR.
+//! Pure simulation (rust/src/sim) — no artifacts required.
+
+use swalp::coordinator::experiment::thm3_noise_ball;
+use swalp::sim;
+use swalp::util::bench::Table;
+use swalp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
+    thm3_noise_ball(!full).unwrap();
+
+    // α-sweep at fixed δ: Theorem 3 says min over α of the floor is still
+    // Ω(σδ) — no step size escapes the quantization ball.
+    println!("\n-- α-sweep at δ=0.05, σ=0.1 (floor vs α) --");
+    let steps = if full { 600_000 } else { 150_000 };
+    let mut t = Table::new(&["α", "SGD-LP E[w²]", "E[w²]/(σδ)"]);
+    let (sigma, delta) = (0.1, 0.05);
+    let mut min_ratio = f64::MAX;
+    for (i, alpha) in [0.4, 0.2, 0.1, 0.05, 0.02, 0.01].iter().enumerate() {
+        let r = sim::noise_ball_1d(*alpha, sigma, delta, steps, 1, 99 + i as u64);
+        let ratio = r.sgd_lp_second_moment / (sigma * delta);
+        min_ratio = min_ratio.min(ratio);
+        t.row(vec![
+            format!("{alpha}"),
+            format!("{:.3e}", r.sgd_lp_second_moment),
+            format!("{ratio:.3}"),
+        ]);
+    }
+    t.print();
+    println!("min over α of E[w²]/(σδ) = {min_ratio:.3} — bounded away from 0 (Thm 3)");
+}

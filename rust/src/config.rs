@@ -1,0 +1,162 @@
+//! Run configuration for `swalp train`: CLI options layered over an
+//! optional JSON config file (the offline image has no serde, so parsing
+//! goes through util::json).
+
+use anyhow::Result;
+
+use crate::coordinator::Schedule;
+use crate::quant::QuantFormat;
+use crate::util::cli::Args;
+use crate::util::json;
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub total_steps: u64,
+    pub warmup_steps: u64,
+    pub cycle: u64,
+    pub lr: f64,
+    pub swa_lr: f64,
+    pub enable_swa: bool,
+    pub swa_bits: Option<u32>,
+    pub eval_every: u64,
+    pub seed: u64,
+    pub data_scale: f64,
+    pub out_csv: Option<String>,
+    pub save_path: Option<String>,
+    pub resume_path: Option<String>,
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "cifar10_vgg_bfp8small".into(),
+            total_steps: 512,
+            warmup_steps: 320,
+            cycle: 32,
+            lr: 0.05,
+            swa_lr: 0.01,
+            enable_swa: true,
+            swa_bits: None,
+            eval_every: 64,
+            seed: 1,
+            data_scale: 0.25,
+            out_csv: None,
+            save_path: None,
+            resume_path: None,
+            verbose: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load defaults <- JSON file (--config) <- CLI options, last wins.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = args.opt("config") {
+            cfg.apply_json(&json::parse_file(std::path::Path::new(path))?)?;
+        }
+        if let Some(m) = args.opt("model") {
+            cfg.model = m.to_string();
+        }
+        cfg.total_steps = args.u64_or("steps", cfg.total_steps)?;
+        cfg.warmup_steps = args.u64_or("warmup", cfg.warmup_steps)?;
+        cfg.cycle = args.u64_or("cycle", cfg.cycle)?.max(1);
+        cfg.lr = args.f64_or("lr", cfg.lr)?;
+        cfg.swa_lr = args.f64_or("swa-lr", cfg.swa_lr)?;
+        cfg.eval_every = args.u64_or("eval-every", cfg.eval_every)?;
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        cfg.data_scale = args.f64_or("data-scale", cfg.data_scale)?;
+        if args.flag("no-swa") {
+            cfg.enable_swa = false;
+        }
+        if let Some(b) = args.opt("swa-bits") {
+            cfg.swa_bits = Some(b.parse()?);
+        }
+        if let Some(o) = args.opt("out-csv") {
+            cfg.out_csv = Some(o.to_string());
+        }
+        if let Some(o) = args.opt("save") {
+            cfg.save_path = Some(o.to_string());
+        }
+        if let Some(o) = args.opt("resume") {
+            cfg.resume_path = Some(o.to_string());
+        }
+        if args.flag("quiet") {
+            cfg.verbose = false;
+        }
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, v: &json::Value) -> Result<()> {
+        if let Some(m) = v.opt("model") {
+            self.model = m.as_str()?.to_string();
+        }
+        for (key, slot) in [
+            ("steps", &mut self.total_steps),
+            ("warmup", &mut self.warmup_steps),
+            ("cycle", &mut self.cycle),
+            ("eval_every", &mut self.eval_every),
+            ("seed", &mut self.seed),
+        ] {
+            if let Some(x) = v.opt(key) {
+                *slot = x.as_f64()? as u64;
+            }
+        }
+        for (key, slot) in [
+            ("lr", &mut self.lr),
+            ("swa_lr", &mut self.swa_lr),
+            ("data_scale", &mut self.data_scale),
+        ] {
+            if let Some(x) = v.opt(key) {
+                *slot = x.as_f64()?;
+            }
+        }
+        if let Some(x) = v.opt("enable_swa") {
+            self.enable_swa = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("swa_bits") {
+            self.swa_bits = Some(x.as_f64()? as u32);
+        }
+        Ok(())
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        Schedule::swalp_paper(self.lr, self.warmup_steps, self.swa_lr)
+    }
+
+    pub fn swa_quant(&self) -> Option<QuantFormat> {
+        self.swa_bits.map(|w| QuantFormat::bfp(w, true))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_overrides_defaults() {
+        let args = Args::parse(
+            "--model lm_bfp8small --steps 99 --no-swa --swa-bits 8"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.model, "lm_bfp8small");
+        assert_eq!(cfg.total_steps, 99);
+        assert!(!cfg.enable_swa);
+        assert_eq!(cfg.swa_bits, Some(8));
+    }
+
+    #[test]
+    fn json_config_applies() {
+        let v = json::parse(r#"{"model":"x","lr":0.5,"steps":7,"enable_swa":false}"#).unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.model, "x");
+        assert_eq!(cfg.lr, 0.5);
+        assert_eq!(cfg.total_steps, 7);
+        assert!(!cfg.enable_swa);
+    }
+}

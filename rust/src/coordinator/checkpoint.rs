@@ -1,0 +1,208 @@
+//! Checkpointing: save/restore the full training state (trainable
+//! weights, BN state, momentum, SWA accumulator, step counter) so long
+//! runs survive restarts and trained models can be shipped.
+//!
+//! Format: a small self-describing binary — magic, version, then a JSON
+//! header (names/shapes/sections) followed by raw little-endian f32/f64
+//! payloads. No external dependencies (the offline image has no
+//! serde/npz), and the header keeps it debuggable.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::ModelState;
+use crate::tensor::{NamedTensors, Tensor};
+use crate::util::json::{self, Value};
+
+const MAGIC: &[u8; 8] = b"SWALPCK1";
+
+pub struct Checkpoint {
+    pub step: u64,
+    pub trainable: NamedTensors,
+    pub state: NamedTensors,
+    pub momentum: NamedTensors,
+    /// SWA accumulator payload (f64) + fold count, if averaging started.
+    pub swa: Option<(NamedTensors, usize)>,
+}
+
+fn section_json(ts: &NamedTensors) -> Value {
+    Value::Arr(
+        ts.iter()
+            .map(|(n, t)| {
+                Value::obj(vec![
+                    ("name", Value::str(n)),
+                    (
+                        "shape",
+                        Value::Arr(t.shape.iter().map(|&d| Value::Num(d as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn write_f32s(out: &mut impl Write, ts: &NamedTensors) -> Result<()> {
+    for (_, t) in ts {
+        for v in &t.data {
+            out.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_section(inp: &mut impl Read, spec: &Value) -> Result<NamedTensors> {
+    let mut out = Vec::new();
+    for item in spec.as_arr()? {
+        let name = item.get("name")?.as_str()?.to_string();
+        let shape = item.get("shape")?.as_shape()?;
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        let mut buf = [0u8; 4];
+        for v in data.iter_mut() {
+            inp.read_exact(&mut buf)?;
+            *v = f32::from_le_bytes(buf);
+        }
+        out.push((name, Tensor::new(shape, data)?));
+    }
+    Ok(out)
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = Value::obj(vec![
+            ("step", Value::Num(self.step as f64)),
+            ("trainable", section_json(&self.trainable)),
+            ("state", section_json(&self.state)),
+            ("momentum", section_json(&self.momentum)),
+            (
+                "swa",
+                match &self.swa {
+                    None => Value::Null,
+                    Some((ts, m)) => Value::obj(vec![
+                        ("m", Value::Num(*m as f64)),
+                        ("tensors", section_json(ts)),
+                    ]),
+                },
+            ),
+        ])
+        .to_string();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        write_f32s(&mut f, &self.trainable)?;
+        write_f32s(&mut f, &self.state)?;
+        write_f32s(&mut f, &self.momentum)?;
+        if let Some((ts, _)) = &self.swa {
+            write_f32s(&mut f, ts)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).map_err(|e| anyhow!("open {}: {e}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a SWALP checkpoint", path.display());
+        }
+        let mut len = [0u8; 8];
+        f.read_exact(&mut len)?;
+        let mut header = vec![0u8; u64::from_le_bytes(len) as usize];
+        f.read_exact(&mut header)?;
+        let h = json::parse(std::str::from_utf8(&header)?)?;
+        let trainable = read_section(&mut f, h.get("trainable")?)?;
+        let state = read_section(&mut f, h.get("state")?)?;
+        let momentum = read_section(&mut f, h.get("momentum")?)?;
+        let swa = match h.get("swa")? {
+            Value::Null => None,
+            v => {
+                let m = v.get("m")?.as_usize()?;
+                Some((read_section(&mut f, v.get("tensors")?)?, m))
+            }
+        };
+        Ok(Checkpoint {
+            step: h.get("step")?.as_usize()? as u64,
+            trainable,
+            state,
+            momentum,
+            swa,
+        })
+    }
+
+    pub fn from_model_state(step: u64, ms: &ModelState, swa: Option<(NamedTensors, usize)>) -> Self {
+        Checkpoint {
+            step,
+            trainable: ms.trainable.clone(),
+            state: ms.state.clone(),
+            momentum: ms.momentum.clone(),
+            swa,
+        }
+    }
+
+    pub fn into_model_state(self) -> ModelState {
+        ModelState {
+            trainable: self.trainable,
+            state: self.state,
+            momentum: self.momentum,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn named(name: &str, shape: Vec<usize>, fill: f32) -> (String, Tensor) {
+        let n = shape.iter().product();
+        (
+            name.to_string(),
+            Tensor::new(shape, (0..n).map(|i| fill + i as f32).collect()).unwrap(),
+        )
+    }
+
+    #[test]
+    fn roundtrip_full_state() {
+        let ck = Checkpoint {
+            step: 1234,
+            trainable: vec![named("a.w", vec![2, 3], 0.5), named("b", vec![4], -1.0)],
+            state: vec![named("bn.mean", vec![4], 0.0)],
+            momentum: vec![named("a.w", vec![2, 3], 9.0), named("b", vec![4], 2.0)],
+            swa: Some((vec![named("a.w", vec![2, 3], 7.0), named("b", vec![4], 3.0)], 17)),
+        };
+        let dir = std::env::temp_dir().join("swalp_ck_test");
+        let path = dir.join("ck.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.trainable, ck.trainable);
+        assert_eq!(back.state, ck.state);
+        assert_eq!(back.momentum, ck.momentum);
+        let (ts, m) = back.swa.unwrap();
+        assert_eq!(m, 17);
+        assert_eq!(ts, ck.swa.unwrap().0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("swalp_ck_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors_cleanly() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/x.bin")).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Run metrics: in-memory series + CSV/JSON export for the experiment
+//! harness and EXPERIMENTS.md.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+#[derive(Default)]
+pub struct MetricsLog {
+    /// (step, series name, value)
+    pub rows: Vec<(u64, String, f64)>,
+}
+
+impl MetricsLog {
+    pub fn log(&mut self, step: u64, key: &str, value: f64) {
+        self.rows.push((step, key.to_string(), value));
+    }
+
+    /// All (step, value) points of one series, in insertion order.
+    pub fn series(&self, key: &str) -> Vec<(u64, f64)> {
+        self.rows
+            .iter()
+            .filter(|(_, k, _)| k == key)
+            .map(|(s, _, v)| (*s, *v))
+            .collect()
+    }
+
+    pub fn last(&self, key: &str) -> Option<f64> {
+        self.series(key).last().map(|(_, v)| *v)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,key,value\n");
+        for (s, k, v) in &self.rows {
+            out.push_str(&format!("{s},{k},{v}\n"));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::Arr(
+            self.rows
+                .iter()
+                .map(|(s, k, v)| {
+                    Value::obj(vec![
+                        ("step", Value::Num(*s as f64)),
+                        ("key", Value::str(k)),
+                        ("value", Value::Num(*v)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_filtering_and_csv() {
+        let mut m = MetricsLog::default();
+        m.log(0, "loss", 2.0);
+        m.log(1, "loss", 1.0);
+        m.log(1, "err", 0.5);
+        assert_eq!(m.series("loss"), vec![(0, 2.0), (1, 1.0)]);
+        assert_eq!(m.last("err"), Some(0.5));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("step,key,value\n"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+}

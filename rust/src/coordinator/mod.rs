@@ -1,0 +1,20 @@
+//! L3 coordinator: the paper's training orchestration (Algorithms 1 & 2).
+//!
+//! The split of responsibilities mirrors the paper's proposed hardware
+//! story (§3.3): the low-precision SGD inner step runs on the
+//! "accelerator" (the compiled XLA artifact), while the weight average —
+//! touched once per cycle, stored in high precision — lives on the
+//! "host" (this module, plain rust f64). The §5.1 variant quantizes the
+//! averaging workload too ([`swa::SwaAccumulator`] with a Q_SWA format).
+
+pub mod checkpoint;
+pub mod experiment;
+pub mod metrics;
+pub mod report;
+pub mod schedule;
+pub mod swa;
+pub mod trainer;
+
+pub use schedule::Schedule;
+pub use swa::SwaAccumulator;
+pub use trainer::{TrainConfig, TrainOutcome, Trainer};

@@ -1,0 +1,68 @@
+//! Report formatting + results persistence shared by the experiment
+//! harness and the benches.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+/// Format a mean ± std pair like the paper's tables.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.2} ± {std:.2}")
+}
+
+/// Format a percentage.
+pub fn pct(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Results directory (override with SWALP_RESULTS).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("SWALP_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}
+
+/// Persist an experiment's structured results as JSON.
+pub fn save(name: &str, v: &Value) -> Result<()> {
+    let path = results_dir().join(format!("{name}.json"));
+    crate::util::json::write_file(&path, v)?;
+    eprintln!("[results] wrote {}", path.display());
+    Ok(())
+}
+
+/// Mean/std across repeated runs.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    (crate::util::mean(xs), crate::util::stddev(xs))
+}
+
+/// Log-log slope estimate between two (x, y) points — used to check
+/// O(1/T) / O(δ²) scaling claims.
+pub fn loglog_slope(x0: f64, y0: f64, x1: f64, y1: f64) -> f64 {
+    ((y1 / y0).ln()) / ((x1 / x0).ln())
+}
+
+/// Does `path` exist under the artifacts dir? Used by benches to skip
+/// gracefully when artifacts have not been built.
+pub fn artifacts_ready(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting() {
+        assert_eq!(pm(6.514, 0.141), "6.51 ± 0.14");
+        assert_eq!(pct(27.2345), "27.23");
+    }
+
+    #[test]
+    fn slope_of_inverse_t() {
+        // y = C/T has slope -1 in log-log
+        let s = loglog_slope(100.0, 1.0, 10_000.0, 0.01);
+        assert!((s + 1.0).abs() < 1e-9);
+    }
+}

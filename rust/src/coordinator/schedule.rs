@@ -1,0 +1,95 @@
+//! Learning-rate schedules (paper Appendix I).
+
+/// All schedules are pure functions of the global step.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    /// Constant α (SWALP's averaging phase uses a constant SWA LR).
+    Constant(f64),
+    /// The paper's SGD budget schedule: α₁ for the first half of the
+    /// budget, linear decay to 0.01·α₁ at 0.9 budgets, then constant.
+    PaperSgd { alpha1: f64, budget: u64 },
+    /// ImageNet-style step decay: α₁ · factor^(step / every).
+    StepDecay { alpha1: f64, factor: f64, every: u64 },
+    /// Warm-up with `inner` for `warmup` steps, then constant `swa_lr` —
+    /// the SWALP composite schedule (App. I: decay low before averaging
+    /// starts, then hold constant).
+    Swalp { inner: Box<Schedule>, warmup: u64, swa_lr: f64 },
+}
+
+impl Schedule {
+    pub fn lr_at(&self, step: u64) -> f64 {
+        match self {
+            Schedule::Constant(a) => *a,
+            Schedule::PaperSgd { alpha1, budget } => {
+                let t = step as f64 / (*budget).max(1) as f64;
+                if t < 0.5 {
+                    *alpha1
+                } else if t < 0.9 {
+                    let frac = (t - 0.5) / 0.4;
+                    alpha1 * (1.0 - frac * 0.99)
+                } else {
+                    alpha1 * 0.01
+                }
+            }
+            Schedule::StepDecay { alpha1, factor, every } => {
+                let every = (*every).max(1);
+                alpha1 * factor.powi((step / every) as i32)
+            }
+            Schedule::Swalp { inner, warmup, swa_lr } => {
+                if step < *warmup {
+                    inner.lr_at(step)
+                } else {
+                    *swa_lr
+                }
+            }
+        }
+    }
+
+    /// The paper's SWALP deep-learning schedule: SGD budget decay during
+    /// warm-up, then a constant averaging LR.
+    pub fn swalp_paper(alpha1: f64, warmup: u64, swa_lr: f64) -> Schedule {
+        Schedule::Swalp {
+            inner: Box::new(Schedule::PaperSgd { alpha1, budget: warmup }),
+            warmup,
+            swa_lr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sgd_shape() {
+        let s = Schedule::PaperSgd { alpha1: 0.1, budget: 1000 };
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(499), 0.1);
+        // at 0.9 budget the LR has decayed to 0.01·α₁
+        assert!((s.lr_at(900) - 0.001).abs() < 1e-4);
+        assert!((s.lr_at(999) - 0.001).abs() < 1e-9);
+        // monotone non-increasing
+        let mut prev = f64::MAX;
+        for t in (0..1000).step_by(50) {
+            let lr = s.lr_at(t);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn swalp_schedule_holds_constant_after_warmup() {
+        let s = Schedule::swalp_paper(0.1, 1000, 0.01);
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(1000), 0.01);
+        assert_eq!(s.lr_at(50_000), 0.01);
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = Schedule::StepDecay { alpha1: 0.1, factor: 0.1, every: 100 };
+        assert_eq!(s.lr_at(0), 0.1);
+        assert!((s.lr_at(100) - 0.01).abs() < 1e-12);
+        assert!((s.lr_at(250) - 0.001).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,171 @@
+//! The SWA accumulator — Algorithm 1 line 6 / Algorithm 2 step (4).
+//!
+//! Runs on the host in f64 ("high precision"); the §5.1 quantized-
+//! averaging variant re-quantizes the stored average to a W_SWA-bit
+//! Small-block BFP after every fold, eliminating high-precision storage
+//! (Fig. 3 right / Table 6).
+
+use anyhow::{bail, Result};
+
+use crate::quant::{self, spec::Role, QuantFormat};
+use crate::rng;
+use crate::tensor::{NamedTensors, Tensor};
+
+pub struct SwaAccumulator {
+    /// f64 running average per tensor (the "high-precision" store).
+    avg: Vec<(String, Vec<f64>, Vec<usize>)>,
+    /// number of models folded in so far (the paper's m).
+    pub m: usize,
+    /// §5.1: quantize the stored average to this format after each fold.
+    pub q_swa: Option<QuantFormat>,
+}
+
+fn is_per_tensor(name: &str) -> bool {
+    // mirrors qtrain._is_per_tensor: biases and norm scale/shift carry one
+    // shared exponent (§5 Small-block modification)
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    matches!(leaf, "b" | "bias" | "scale" | "shift" | "gamma" | "beta")
+}
+
+impl SwaAccumulator {
+    pub fn new(q_swa: Option<QuantFormat>) -> Self {
+        SwaAccumulator { avg: vec![], m: 0, q_swa }
+    }
+
+    /// Restore from a checkpointed average (checkpoint.rs).
+    pub fn restore(tensors: &NamedTensors, m: usize, q_swa: Option<QuantFormat>) -> Self {
+        SwaAccumulator {
+            avg: tensors
+                .iter()
+                .map(|(n, t)| {
+                    (n.clone(), t.data.iter().map(|&v| v as f64).collect(), t.shape.clone())
+                })
+                .collect(),
+            m,
+            q_swa,
+        }
+    }
+
+    /// Fold the current low-precision weights into the running average:
+    /// w̄ ← (w̄·m + w)/(m+1).
+    pub fn fold(&mut self, trainable: &NamedTensors) -> Result<()> {
+        if self.m == 0 {
+            self.avg = trainable
+                .iter()
+                .map(|(n, t)| (n.clone(), t.data.iter().map(|&v| v as f64).collect(), t.shape.clone()))
+                .collect();
+        } else {
+            if self.avg.len() != trainable.len() {
+                bail!("fold: tensor count changed ({} vs {})", self.avg.len(), trainable.len());
+            }
+            let m = self.m as f64;
+            for ((_, acc, _), (_, t)) in self.avg.iter_mut().zip(trainable) {
+                for (a, &v) in acc.iter_mut().zip(&t.data) {
+                    *a = (*a * m + v as f64) / (m + 1.0);
+                }
+            }
+        }
+        self.m += 1;
+        if let Some(fmt) = self.q_swa.clone() {
+            // quantized averaging: the stored average itself lives in
+            // W_SWA-bit BFP (one fold-indexed stochastic event per tensor)
+            for (i, (name, acc, shape)) in self.avg.iter_mut().enumerate() {
+                let t = Tensor::new(
+                    shape.clone(),
+                    acc.iter().map(|&v| v as f32).collect(),
+                )?;
+                let seed = rng::derive_seed(&[self.m as u32, i as u32, 0x5A]);
+                let q = quant::apply_format(&fmt, &t, seed, Role::Weight, is_per_tensor(name));
+                for (a, &v) in acc.iter_mut().zip(&q.data) {
+                    *a = v as f64;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the average as f32 tensors (for eval / export).
+    pub fn average(&self) -> Result<NamedTensors> {
+        if self.m == 0 {
+            bail!("average() before any fold");
+        }
+        self.avg
+            .iter()
+            .map(|(n, acc, shape)| {
+                Ok((n.clone(), Tensor::new(shape.clone(), acc.iter().map(|&v| v as f32).collect())?))
+            })
+            .collect()
+    }
+
+    /// ‖w̄ − w*‖² against a reference flat vector (Fig. 2 left metric).
+    /// Only valid for single-tensor models (linreg).
+    pub fn sq_dist_to(&self, w_star: &[f32]) -> Result<f64> {
+        if self.avg.len() != 1 {
+            bail!("sq_dist_to expects a single-tensor model");
+        }
+        let (_, acc, _) = &self.avg[0];
+        if acc.len() != w_star.len() {
+            bail!("dim mismatch {} vs {}", acc.len(), w_star.len());
+        }
+        Ok(acc
+            .iter()
+            .zip(w_star)
+            .map(|(&a, &b)| (a - b as f64).powi(2))
+            .sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn named(vals: &[f32]) -> NamedTensors {
+        vec![("w".into(), Tensor::new(vec![vals.len()], vals.to_vec()).unwrap())]
+    }
+
+    #[test]
+    fn running_mean_matches_batch_mean() {
+        let mut acc = SwaAccumulator::new(None);
+        let seqs = [[1.0f32, 2.0], [3.0, 4.0], [5.0, 9.0]];
+        for s in &seqs {
+            acc.fold(&named(s)).unwrap();
+        }
+        let avg = acc.average().unwrap();
+        assert!((avg[0].1.data[0] - 3.0).abs() < 1e-6);
+        assert!((avg[0].1.data[1] - 5.0).abs() < 1e-6);
+        assert_eq!(acc.m, 3);
+    }
+
+    #[test]
+    fn quantized_averaging_lands_on_grid() {
+        let fmt = QuantFormat::bfp(8, true);
+        let mut acc = SwaAccumulator::new(Some(fmt));
+        acc.fold(&named(&[0.111, 0.222, 0.333, 0.444])).unwrap();
+        let avg = acc.average().unwrap();
+        // all values on a power-of-two grid scaled by the block exponent
+        let amax = avg[0].1.data.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        assert!(amax > 0.0);
+        // spacing of an 8-bit BFP grid: delta = 2^(e-6)
+        let e = crate::quant::bfp::floor_log2(amax).max(-126);
+        let delta = 2f32.powi(e - 6);
+        for &v in &avg[0].1.data {
+            let k = v / delta;
+            assert!((k - k.round()).abs() < 1e-3, "{v} not on grid {delta}");
+        }
+    }
+
+    #[test]
+    fn sq_dist_tracks_convergence() {
+        let mut acc = SwaAccumulator::new(None);
+        acc.fold(&named(&[1.0, 1.0])).unwrap();
+        assert!((acc.sq_dist_to(&[1.0, 1.0]).unwrap()).abs() < 1e-12);
+        acc.fold(&named(&[3.0, 3.0])).unwrap();
+        // average is (2,2); dist to (1,1) = 2
+        assert!((acc.sq_dist_to(&[1.0, 1.0]).unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_before_fold_errors() {
+        assert!(SwaAccumulator::new(None).average().is_err());
+    }
+}

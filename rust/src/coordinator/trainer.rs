@@ -1,0 +1,246 @@
+//! The SWALP training loop (Algorithm 1 / Algorithm 2 orchestration).
+//!
+//! One `Trainer` run = warm-up phase (low-precision SGD under the inner
+//! LR schedule) followed by the averaging phase (constant SWA LR,
+//! folding the low-precision weights into the host-side accumulator
+//! every `cycle` steps). SGD-only runs are the same loop with averaging
+//! disabled — every paper baseline is a config, not separate code.
+
+use anyhow::Result;
+
+use crate::data::{loader::Loader, Split};
+use crate::quant::QuantFormat;
+use crate::runtime::{EvalOut, LoadedModel, ModelState};
+
+use super::metrics::MetricsLog;
+use super::schedule::Schedule;
+use super::swa::SwaAccumulator;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub total_steps: u64,
+    /// Steps before averaging starts (Algorithm 2's S).
+    pub warmup_steps: u64,
+    /// Averaging cycle length c (in steps).
+    pub cycle: u64,
+    pub schedule: Schedule,
+    /// Disable averaging entirely (SGD / SGD-LP baselines).
+    pub enable_swa: bool,
+    /// §5.1 quantized averaging: Q_SWA format for the accumulator.
+    pub swa_quant: Option<QuantFormat>,
+    /// Evaluate train/test every n steps (0 = only at the end).
+    pub eval_every: u64,
+    pub init_seed: f32,
+    pub data_seed: u64,
+    /// Track ‖w − w*‖² against this reference (linreg, Fig. 2 left).
+    pub w_star: Option<Vec<f32>>,
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn new(total_steps: u64, warmup_steps: u64, cycle: u64, schedule: Schedule) -> Self {
+        TrainConfig {
+            total_steps,
+            warmup_steps,
+            cycle,
+            schedule,
+            enable_swa: true,
+            swa_quant: None,
+            eval_every: 0,
+            init_seed: 1.0,
+            data_seed: 7,
+            w_star: None,
+            verbose: false,
+        }
+    }
+}
+
+pub struct TrainOutcome {
+    pub metrics: MetricsLog,
+    /// Final eval of the raw (low-precision) SGD iterate.
+    pub sgd_eval: EvalOut,
+    /// Final eval of the SWA model (if averaging ran).
+    pub swa_eval: Option<EvalOut>,
+    /// Test error rate (%) helpers for classification tasks.
+    pub sgd_test_err: f64,
+    pub swa_test_err: Option<f64>,
+    pub final_state: ModelState,
+    pub swa: Option<SwaAccumulator>,
+    pub steps_per_epoch: usize,
+}
+
+pub struct Trainer<'a> {
+    pub model: &'a LoadedModel,
+    pub split: &'a Split,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(model: &'a LoadedModel, split: &'a Split) -> Self {
+        Trainer { model, split }
+    }
+
+    /// Aggregate eval over the whole test set in batch_eval chunks.
+    /// Returns (mean loss, error rate in [0,1] or mean sq-err, grad_norm_sq).
+    pub fn eval_set(
+        &self,
+        trainable: &crate::tensor::NamedTensors,
+        state: &crate::tensor::NamedTensors,
+        test: bool,
+    ) -> Result<EvalOut> {
+        self.eval_set_with(trainable, state, test, false)
+    }
+
+    /// Eval an SWA weight average: BatchNorm statistics are recomputed
+    /// from the eval batch (Izmailov et al.'s bn_update equivalent) —
+    /// running stats collected under *different* weights would otherwise
+    /// wreck the averaged model's accuracy.
+    pub fn eval_swa(
+        &self,
+        trainable: &crate::tensor::NamedTensors,
+        state: &crate::tensor::NamedTensors,
+        test: bool,
+    ) -> Result<EvalOut> {
+        self.eval_set_with(trainable, state, test, true)
+    }
+
+    fn eval_set_with(
+        &self,
+        trainable: &crate::tensor::NamedTensors,
+        state: &crate::tensor::NamedTensors,
+        test: bool,
+        batch_stats: bool,
+    ) -> Result<EvalOut> {
+        let ds = if test { &self.split.test } else { &self.split.train };
+        let be = self.model.spec.batch_eval;
+        let mut cursor = 0usize;
+        let (mut xb, mut yb) = (Vec::new(), Vec::new());
+        let mut loss = 0.0;
+        let mut metric = 0.0;
+        let mut gns = 0.0;
+        let mut has_g = false;
+        let mut batches = 0usize;
+        let mut samples = 0usize;
+        while Loader::eval_batch(ds, be, &mut cursor, &mut xb, &mut yb) {
+            let out = if batch_stats {
+                self.model.eval_batch_stats(trainable, state, &xb, &yb)?
+            } else {
+                self.model.eval(trainable, state, &xb, &yb)?
+            };
+            loss += out.loss;
+            metric += out.metric;
+            if let Some(g) = out.grad_norm_sq {
+                gns += g;
+                has_g = true;
+            }
+            batches += 1;
+            samples += be;
+        }
+        // per-token normalization for LM metric
+        let denom = if self.model.spec.task == "lm" {
+            samples * self.model.spec.y_shape.iter().product::<usize>().max(1)
+        } else {
+            samples
+        };
+        Ok(EvalOut {
+            loss: loss / batches.max(1) as f64,
+            metric: metric / denom.max(1) as f64,
+            grad_norm_sq: if has_g { Some(gns / batches.max(1) as f64) } else { None },
+        })
+    }
+
+    pub fn run(&self, cfg: &TrainConfig) -> Result<TrainOutcome> {
+        self.run_resumed(cfg, None)
+    }
+
+    /// Run, optionally resuming from a checkpoint (restores weights,
+    /// momentum, BN state, the SWA accumulator and the step counter).
+    pub fn run_resumed(
+        &self,
+        cfg: &TrainConfig,
+        resume: Option<super::checkpoint::Checkpoint>,
+    ) -> Result<TrainOutcome> {
+        let (mut ms, mut swa, start_step) = match resume {
+            None => (
+                self.model.init(cfg.init_seed)?,
+                SwaAccumulator::new(cfg.swa_quant.clone()),
+                0u64,
+            ),
+            Some(ck) => {
+                let step = ck.step;
+                let swa = match &ck.swa {
+                    Some((ts, m)) => SwaAccumulator::restore(ts, *m, cfg.swa_quant.clone()),
+                    None => SwaAccumulator::new(cfg.swa_quant.clone()),
+                };
+                (ck.into_model_state(), swa, step)
+            }
+        };
+        let mut loader = Loader::new(&self.split.train, self.model.spec.batch_train, cfg.data_seed);
+        let mut metrics = MetricsLog::default();
+        let steps_per_epoch = loader.steps_per_epoch();
+
+        for step in start_step..cfg.total_steps {
+            let lr = cfg.schedule.lr_at(step) as f32;
+            let (x, y) = loader.next_batch();
+            // borrow juggling: copy slices out of the loader's buffers is
+            // avoided — train_step reads them before the next next_batch
+            let loss = {
+                let (x, y): (&[f32], &[f32]) = (x, y);
+                self.model.train_step(&mut ms, x, y, lr, step)?
+            };
+            metrics.log(step, "train_loss", loss);
+
+            let in_avg_phase = cfg.enable_swa && step >= cfg.warmup_steps;
+            if in_avg_phase && (step - cfg.warmup_steps) % cfg.cycle == 0 {
+                swa.fold(&ms.trainable)?;
+            }
+
+            if let Some(w_star) = &cfg.w_star {
+                if step % 64 == 0 || step + 1 == cfg.total_steps {
+                    let d = ms.trainable[0].1.data.iter().zip(w_star)
+                        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>();
+                    metrics.log(step, "sgd_dist_sq", d);
+                    if swa.m > 0 {
+                        metrics.log(step, "swa_dist_sq", swa.sq_dist_to(w_star)?);
+                    }
+                }
+            }
+
+            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+                let ev = self.eval_set(&ms.trainable, &ms.state, true)?;
+                metrics.log(step, "test_loss", ev.loss);
+                metrics.log(step, "test_metric", ev.metric);
+                if swa.m > 0 {
+                    let avg = swa.average()?;
+                    let evs = self.eval_swa(&avg, &ms.state, true)?;
+                    metrics.log(step, "swa_test_loss", evs.loss);
+                    metrics.log(step, "swa_test_metric", evs.metric);
+                }
+                if cfg.verbose {
+                    eprintln!(
+                        "step {:>7} lr {:.4} loss {:.4} test_metric {:.4}",
+                        step, lr, loss, ev.metric
+                    );
+                }
+            }
+        }
+
+        let sgd_eval = self.eval_set(&ms.trainable, &ms.state, true)?;
+        let (swa_eval, swa_out) = if cfg.enable_swa && swa.m > 0 {
+            let avg = swa.average()?;
+            (Some(self.eval_swa(&avg, &ms.state, true)?), Some(swa))
+        } else {
+            (None, None)
+        };
+        Ok(TrainOutcome {
+            sgd_test_err: sgd_eval.metric * 100.0,
+            swa_test_err: swa_eval.map(|e| e.metric * 100.0),
+            sgd_eval,
+            swa_eval,
+            metrics,
+            final_state: ms,
+            swa: swa_out,
+            steps_per_epoch,
+        })
+    }
+}

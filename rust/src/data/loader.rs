@@ -1,0 +1,114 @@
+//! Epoch-shuffled mini-batch loader over an in-memory [`Dataset`].
+
+use crate::rng::StreamRng;
+
+use super::Dataset;
+
+pub struct Loader<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+    rng: StreamRng,
+    pub epoch: usize,
+    // reusable batch buffers (hot path: no per-step allocation)
+    xbuf: Vec<f32>,
+    ybuf: Vec<f32>,
+}
+
+impl<'a> Loader<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> Self {
+        assert!(batch <= ds.n, "batch {} > dataset {}", batch, ds.n);
+        let mut rng = StreamRng::new(seed ^ 0x10AD);
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        rng.shuffle(&mut order);
+        Loader {
+            ds,
+            batch,
+            order,
+            pos: 0,
+            rng,
+            epoch: 0,
+            xbuf: vec![0.0; batch * ds.x_elem()],
+            ybuf: vec![0.0; batch * ds.y_elem()],
+        }
+    }
+
+    /// Steps per epoch (drop-last discipline).
+    pub fn steps_per_epoch(&self) -> usize {
+        (self.ds.n / self.batch).max(1)
+    }
+
+    /// Fill the internal buffers with the next batch and return views.
+    pub fn next_batch(&mut self) -> (&[f32], &[f32]) {
+        if self.pos + self.batch > self.ds.n {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+            self.epoch += 1;
+        }
+        let xe = self.ds.x_elem();
+        let ye = self.ds.y_elem();
+        for b in 0..self.batch {
+            let i = self.order[self.pos + b];
+            self.xbuf[b * xe..(b + 1) * xe].copy_from_slice(self.ds.sample_x(i));
+            self.ybuf[b * ye..(b + 1) * ye].copy_from_slice(self.ds.sample_y(i));
+        }
+        self.pos += self.batch;
+        (&self.xbuf, &self.ybuf)
+    }
+
+    /// Sequential (unshuffled) batches for evaluation; returns None past
+    /// the end. `cursor` advances by whole batches (drop-last).
+    pub fn eval_batch(ds: &'a Dataset, batch: usize, cursor: &mut usize, xbuf: &mut Vec<f32>, ybuf: &mut Vec<f32>) -> bool {
+        if *cursor + batch > ds.n {
+            return false;
+        }
+        xbuf.clear();
+        ybuf.clear();
+        for i in *cursor..*cursor + batch {
+            xbuf.extend_from_slice(ds.sample_x(i));
+            ybuf.extend_from_slice(ds.sample_y(i));
+        }
+        *cursor += batch;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::flat_split;
+
+    #[test]
+    fn batches_cover_epoch_without_repeats() {
+        let s = flat_split(8, 4, 64, 16, 1);
+        let mut loader = Loader::new(&s.train, 16, 0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let (x, _) = loader.next_batch();
+            // fingerprint each sample by its bits
+            for b in 0..16 {
+                let row = &x[b * 8..(b + 1) * 8];
+                let fp: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+                seen.insert(fp);
+            }
+        }
+        assert_eq!(seen.len(), 64, "epoch did not cover each sample once");
+        assert_eq!(loader.epoch, 0);
+        loader.next_batch();
+        assert_eq!(loader.epoch, 1);
+    }
+
+    #[test]
+    fn eval_batches_are_sequential() {
+        let s = flat_split(4, 2, 40, 16, 2);
+        let mut cursor = 0;
+        let (mut xb, mut yb) = (Vec::new(), Vec::new());
+        let mut n = 0;
+        while Loader::eval_batch(&s.test, 8, &mut cursor, &mut xb, &mut yb) {
+            assert_eq!(xb.len(), 8 * 4);
+            n += 1;
+        }
+        assert_eq!(n, 2);
+    }
+}

@@ -1,0 +1,103 @@
+//! Synthetic dataset substrates (DESIGN.md §5).
+//!
+//! The image (CIFAR/MNIST/ImageNet) datasets are not shipped in this
+//! offline image, so each is replaced by a structured synthetic
+//! generator with the same shapes, class counts and split discipline.
+//! The paper's claims under test are *relative orderings* between
+//! training regimes on a fixed data distribution, which these preserve:
+//! class-prototype + augmentation noise tasks have the same
+//! learnable-signal/noise structure that makes quantization hurt and
+//! averaging help.
+
+pub mod images;
+pub mod loader;
+pub mod synth;
+pub mod text;
+
+use anyhow::{bail, Result};
+
+/// An in-memory dataset: `n` samples of `x_shape` with labels/targets of
+/// `y_shape` (scalar () for class ids and regression targets).
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn x_elem(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    pub fn y_elem(&self) -> usize {
+        self.y_shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn sample_x(&self, i: usize) -> &[f32] {
+        let e = self.x_elem();
+        &self.x[i * e..(i + 1) * e]
+    }
+
+    pub fn sample_y(&self, i: usize) -> &[f32] {
+        let e = self.y_elem();
+        &self.y[i * e..(i + 1) * e]
+    }
+}
+
+/// Train/test pair.
+pub struct Split {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Build the dataset named in the manifest (`dataset` field), sized for
+/// the experiment harness. `scale` scales the default sample counts
+/// (benches use scale<1 in --quick mode).
+pub fn build(name: &str, seed: u64, scale: f64) -> Result<Split> {
+    let sz = |n: usize| ((n as f64 * scale) as usize).max(64);
+    // test sets must cover at least one eval batch (batch_eval is 512 for
+    // the logreg artifacts, 256 for the image models, 16 for the LM)
+    let tz = |n: usize, floor: usize| sz(n).max(floor);
+    Ok(match name {
+        "linreg_synth" => synth::linreg_split(256, sz(4096), seed),
+        "mnist_like" => images::flat_split(784, 10, sz(4096), tz(1024, 512), seed),
+        "mnist_like_256" => images::flat_split(256, 10, sz(4096), tz(1024, 512), seed),
+        "cifar10_like" => images::image_split(10, sz(4096), tz(1024, 256), seed),
+        "cifar100_like" => images::image_split(100, sz(4096), tz(1024, 256), seed),
+        "imagenet_like" => images::image_split(20, sz(6144), tz(1024, 256), seed),
+        "zipf_lm" => text::zipf_lm_split(64, 64, sz(2048), tz(256, 16), seed),
+        other => bail!("unknown dataset {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_all() {
+        for name in [
+            "linreg_synth",
+            "mnist_like",
+            "mnist_like_256",
+            "cifar10_like",
+            "cifar100_like",
+            "imagenet_like",
+            "zipf_lm",
+        ] {
+            let s = build(name, 7, 0.05).unwrap();
+            assert!(s.train.n >= 64, "{name}");
+            assert_eq!(s.train.x.len(), s.train.n * s.train.x_elem());
+            assert_eq!(s.train.y.len(), s.train.n * s.train.y_elem());
+        }
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        assert!(build("nope", 0, 1.0).is_err());
+    }
+}

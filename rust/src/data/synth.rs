@@ -1,0 +1,197 @@
+//! Linear-regression synthetic dataset (paper Appendix G) + the exact
+//! empirical optimum via a dense Cholesky solve, so Fig. 2 (left) can
+//! plot ‖w_t − w*‖² against the true minimizer of the *empirical*
+//! objective (the quantity Theorem 1 bounds).
+
+use crate::rng::StreamRng;
+
+use super::{Dataset, Split};
+
+/// App. G: x_i ~ N(0, σ_x² I_d); w_init ~ U[-1,1]^d; y_i ~ N(w_init·x_i, σ_u²),
+/// with d = 256, n = 4096, σ_x = σ_u = 1.
+pub struct LinRegProblem {
+    pub split: Split,
+    pub w_init: Vec<f32>,
+    /// argmin of the empirical mean-squared error (normal equations).
+    pub w_star: Vec<f32>,
+}
+
+pub fn linreg_problem(d: usize, n: usize, seed: u64) -> LinRegProblem {
+    // the empirical optimum needs an over-determined system
+    let n = n.max(2 * d);
+    let mut rng = StreamRng::new(seed);
+    let w_init: Vec<f32> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let start = x.len();
+        let mut dot = 0.0f64;
+        for j in 0..d {
+            let v = rng.normal();
+            x.push(v);
+            dot += (v as f64) * (w_init[j] as f64);
+        }
+        let _ = start;
+        y.push((dot + rng.normal() as f64) as f32);
+    }
+    let w_star = normal_equations(&x, &y, d, n);
+    // held-out set from the same generator (used as the eval batch pool)
+    let mut xt = Vec::with_capacity(256 * d);
+    let mut yt = Vec::with_capacity(256);
+    for _ in 0..256 {
+        let mut dot = 0.0f64;
+        for j in 0..d {
+            let v = rng.normal();
+            xt.push(v);
+            dot += (v as f64) * (w_init[j] as f64);
+        }
+        yt.push((dot + rng.normal() as f64) as f32);
+    }
+    LinRegProblem {
+        split: Split {
+            train: Dataset {
+                name: "linreg_synth".into(),
+                n,
+                x_shape: vec![d],
+                y_shape: vec![],
+                x,
+                y,
+                classes: 0,
+            },
+            test: Dataset {
+                name: "linreg_synth".into(),
+                n: 256,
+                x_shape: vec![d],
+                y_shape: vec![],
+                x: xt,
+                y: yt,
+                classes: 0,
+            },
+        },
+        w_init,
+        w_star,
+    }
+}
+
+pub fn linreg_split(d: usize, n: usize, seed: u64) -> Split {
+    linreg_problem(d, n, seed).split
+}
+
+/// Solve (XᵀX) w = Xᵀy by Cholesky (the objective is (1/n)Σ(w·x−y)²; the
+/// 1/n cancels). X is row-major n×d.
+pub fn normal_equations(x: &[f32], y: &[f32], d: usize, n: usize) -> Vec<f32> {
+    // a = XᵀX (d×d, symmetric), b = Xᵀy
+    let mut a = vec![0.0f64; d * d];
+    let mut b = vec![0.0f64; d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let yi = y[i] as f64;
+        for p in 0..d {
+            let xp = row[p] as f64;
+            b[p] += xp * yi;
+            for q in p..d {
+                a[p * d + q] += xp * row[q] as f64;
+            }
+        }
+    }
+    for p in 0..d {
+        for q in 0..p {
+            a[p * d + q] = a[q * d + p];
+        }
+    }
+    // tiny ridge for numerical safety (f32-sourced Gram matrices can sit
+    // on the PD boundary)
+    let trace: f64 = (0..d).map(|p| a[p * d + p]).sum();
+    let ridge = 1e-9 * trace / d as f64;
+    for p in 0..d {
+        a[p * d + p] += ridge;
+    }
+    cholesky_solve(&mut a, &mut b, d);
+    b.into_iter().map(|v| v as f32).collect()
+}
+
+/// In-place Cholesky A = LLᵀ then two triangular solves; `a` is destroyed
+/// and `b` becomes the solution. Panics if A is not positive definite
+/// (cannot happen for XᵀX with n ≫ d and continuous data).
+pub fn cholesky_solve(a: &mut [f64], b: &mut [f64], d: usize) {
+    // decompose (lower triangle in place)
+    for j in 0..d {
+        for k in 0..j {
+            let ljk = a[j * d + k];
+            for i in j..d {
+                a[i * d + j] -= a[i * d + k] * ljk;
+            }
+        }
+        let diag = a[j * d + j];
+        assert!(diag > 0.0, "matrix not positive definite at {j} ({diag})");
+        let inv = 1.0 / diag.sqrt();
+        for i in j..d {
+            a[i * d + j] *= inv;
+        }
+    }
+    // L z = b
+    for i in 0..d {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= a[i * d + k] * b[k];
+        }
+        b[i] = s / a[i * d + i];
+    }
+    // Lᵀ w = z
+    for i in (0..d).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..d {
+            s -= a[k * d + i] * b[k];
+        }
+        b[i] = s / a[i * d + i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_small_system() {
+        // A = [[4,2],[2,3]], b = [10, 8] -> w = [1.75, 1.5]
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        let mut b = vec![10.0, 8.0];
+        cholesky_solve(&mut a, &mut b, 2);
+        assert!((b[0] - 1.75).abs() < 1e-12);
+        assert!((b[1] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn w_star_is_near_w_init_with_low_noise() {
+        let p = linreg_problem(32, 2048, 3);
+        // with n >> d and unit noise, w* ≈ w_init to within ~1/sqrt(n)
+        let dist: f64 = p
+            .w_star
+            .iter()
+            .zip(&p.w_init)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(dist < 0.5, "‖w*-w_init‖² = {dist}");
+    }
+
+    #[test]
+    fn w_star_beats_w_init_on_training_loss() {
+        let p = linreg_problem(16, 512, 9);
+        let ds = &p.split.train;
+        let loss = |w: &[f32]| -> f64 {
+            (0..ds.n)
+                .map(|i| {
+                    let xi = ds.sample_x(i);
+                    let pred: f64 = xi
+                        .iter()
+                        .zip(w)
+                        .map(|(&a, &b)| (a as f64) * (b as f64))
+                        .sum();
+                    (pred - ds.y[i] as f64).powi(2)
+                })
+                .sum::<f64>()
+                / ds.n as f64
+        };
+        assert!(loss(&p.w_star) <= loss(&p.w_init) + 1e-9);
+    }
+}

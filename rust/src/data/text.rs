@@ -1,0 +1,104 @@
+//! Synthetic Zipf-bigram language-modeling corpus for the end-to-end
+//! transformer example: a Markov chain whose unigram distribution is
+//! Zipfian and whose bigram structure is deterministic-with-noise, so a
+//! model that learns the transitions gets a large loss drop over the
+//! unigram entropy floor.
+
+use crate::rng::StreamRng;
+
+use super::{Dataset, Split};
+
+pub fn zipf_lm_split(
+    vocab: usize,
+    seq_len: usize,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> Split {
+    let mut rng = StreamRng::new(seed ^ 0x217F);
+    // Zipf unigram weights
+    let weights: Vec<f64> = (0..vocab).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+    // deterministic "preferred successor" permutation-ish map
+    let succ: Vec<usize> = (0..vocab).map(|t| (t * 7 + 3) % vocab).collect();
+
+    let make = |rng: &mut StreamRng, n: usize, name: &str| {
+        let mut x = Vec::with_capacity(n * seq_len);
+        let mut y = Vec::with_capacity(n * seq_len);
+        for _ in 0..n {
+            let mut tok = rng.weighted(&weights);
+            let mut seq = Vec::with_capacity(seq_len + 1);
+            seq.push(tok);
+            for _ in 0..seq_len {
+                tok = if rng.uniform() < 0.7 {
+                    succ[tok]
+                } else {
+                    rng.weighted(&weights)
+                };
+                seq.push(tok);
+            }
+            for t in 0..seq_len {
+                x.push(seq[t] as f32);
+                y.push(seq[t + 1] as f32);
+            }
+        }
+        Dataset {
+            name: name.into(),
+            n,
+            x_shape: vec![seq_len],
+            y_shape: vec![seq_len],
+            x,
+            y,
+            classes: vocab,
+        }
+    };
+    let train = make(&mut rng, n_train, "zipf_train");
+    let test = make(&mut rng, n_test, "zipf_test");
+    Split { train, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_shift_alignment() {
+        let s = zipf_lm_split(64, 32, 16, 8, 1);
+        assert_eq!(s.train.x.len(), 16 * 32);
+        assert_eq!(s.train.y.len(), 16 * 32);
+        // y[t] must equal x[t+1] within a sequence
+        for i in 0..16 {
+            let xs = s.train.sample_x(i);
+            let ys = s.train.sample_y(i);
+            for t in 0..31 {
+                assert_eq!(ys[t], xs[t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn bigram_structure_dominates() {
+        let s = zipf_lm_split(64, 64, 64, 8, 2);
+        // count how often y == succ(x)
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for i in 0..s.train.n {
+            let xs = s.train.sample_x(i);
+            let ys = s.train.sample_y(i);
+            for t in 0..64 {
+                let x = xs[t] as usize;
+                if ys[t] as usize == (x * 7 + 3) % 64 {
+                    hits += 1;
+                }
+                total += 1;
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.6, "bigram rate {frac}");
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let s = zipf_lm_split(16, 8, 32, 8, 3);
+        assert!(s.train.x.iter().all(|&t| (0.0..16.0).contains(&t)));
+    }
+}

@@ -1,0 +1,172 @@
+//! `swalp` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   list                         show models in the artifacts manifest
+//!   info                         PJRT platform + artifact summary
+//!   train  --model <name> [...]  run SWALP training (see config.rs opts)
+//!   eval   --model <name>        init + one full eval pass (smoke)
+//!   reproduce --exp <id> [--quick] [--seeds N]
+//!                                regenerate a paper table/figure
+//!                                (fig2-linreg fig2-logreg fig2-bits table1
+//!                                 table2 table3 fig3-frequency
+//!                                 fig3-precision thm3)
+
+use anyhow::{bail, Result};
+
+use swalp::config::RunConfig;
+use swalp::coordinator::experiment::{thm3_noise_ball, Ctx};
+use swalp::coordinator::{TrainConfig, Trainer};
+use swalp::data;
+use swalp::runtime::{artifacts_dir, Manifest, Runtime};
+use swalp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list" => {
+            let manifest = Manifest::load(&artifacts_dir())?;
+            println!("{:<28} {:<14} {:<16} {:>10}", "model", "quant", "dataset", "params");
+            for m in &manifest.models {
+                println!(
+                    "{:<28} {:<14} {:<16} {:>10}",
+                    m.name,
+                    m.quant.name,
+                    m.dataset,
+                    m.param_count()
+                );
+            }
+            Ok(())
+        }
+        "info" => {
+            let rt = Runtime::new()?;
+            let manifest = Manifest::load(&artifacts_dir())?;
+            println!("platform: {}", rt.platform());
+            println!("artifacts: {}", artifacts_dir().display());
+            println!("models: {}", manifest.models.len());
+            Ok(())
+        }
+        "train" => {
+            let cfg = RunConfig::from_args(args)?;
+            train(&cfg)
+        }
+        "eval" => {
+            let model_name = args.req("model")?;
+            let rt = Runtime::new()?;
+            let manifest = Manifest::load(&artifacts_dir())?;
+            let model = rt.load_model(&manifest, model_name)?;
+            let split = data::build(&model.spec.dataset, 7, 0.25)?;
+            let ms = model.init(1.0)?;
+            let trainer = Trainer::new(&model, &split);
+            let out = trainer.eval_set(&ms.trainable, &ms.state, true)?;
+            println!(
+                "{model_name}: init loss {:.4}, metric {:.4}",
+                out.loss, out.metric
+            );
+            Ok(())
+        }
+        "reproduce" => {
+            let exp = args.req("exp")?;
+            let quick = args.flag("quick");
+            if exp == "thm3" {
+                return thm3_noise_ball(quick);
+            }
+            let ctx = Ctx::new(quick, args.u64_or("seeds", 1)?)?;
+            ctx.dispatch(exp)
+        }
+        "help" | _ => {
+            println!("{}", HELP.trim());
+            if cmd != "help" {
+                bail!("unknown command {cmd:?}");
+            }
+            Ok(())
+        }
+    }
+}
+
+fn train(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::new()?;
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let model = rt.load_model(&manifest, &cfg.model)?;
+    println!(
+        "model {} ({} params, quant={}, dataset={})",
+        cfg.model,
+        model.spec.param_count(),
+        model.spec.quant.name,
+        model.spec.dataset
+    );
+    let split = data::build(&model.spec.dataset, cfg.seed, cfg.data_scale)?;
+    let trainer = Trainer::new(&model, &split);
+    let mut tc = TrainConfig::new(cfg.total_steps, cfg.warmup_steps, cfg.cycle, cfg.schedule());
+    tc.enable_swa = cfg.enable_swa;
+    tc.swa_quant = cfg.swa_quant();
+    tc.eval_every = cfg.eval_every;
+    tc.init_seed = cfg.seed as f32;
+    tc.data_seed = cfg.seed;
+    tc.verbose = cfg.verbose;
+    let resume = match &cfg.resume_path {
+        Some(p) => {
+            let ck = swalp::coordinator::checkpoint::Checkpoint::load(std::path::Path::new(p))?;
+            println!("resuming from {p} at step {}", ck.step);
+            Some(ck)
+        }
+        None => None,
+    };
+    let t = swalp::util::Timer::start();
+    let out = trainer.run_resumed(&tc, resume)?;
+    let secs = t.secs();
+    if let Some(p) = &cfg.save_path {
+        let swa_payload = match &out.swa {
+            Some(acc) if acc.m > 0 => Some((acc.average()?, acc.m)),
+            _ => None,
+        };
+        swalp::coordinator::checkpoint::Checkpoint::from_model_state(
+            cfg.total_steps,
+            &out.final_state,
+            swa_payload,
+        )
+        .save(std::path::Path::new(p))?;
+        println!("checkpoint -> {p}");
+    }
+    println!(
+        "done in {:.1}s ({:.1} steps/s): SGD test metric {:.4}",
+        secs,
+        cfg.total_steps as f64 / secs,
+        out.sgd_eval.metric
+    );
+    if let Some(e) = out.swa_eval {
+        println!("SWA  test metric {:.4} (m={})", e.metric, out.swa.as_ref().map(|s| s.m).unwrap_or(0));
+    }
+    if let Some(path) = &cfg.out_csv {
+        out.metrics.write_csv(std::path::Path::new(path))?;
+        println!("metrics -> {path}");
+    }
+    Ok(())
+}
+
+const HELP: &str = r#"
+swalp — SWALP (ICML 2019) reproduction: rust coordinator over AOT JAX/Pallas
+
+USAGE: swalp <command> [options]
+
+  list                          models in artifacts/manifest.json
+  info                          PJRT platform info
+  train --model <name>          SWALP training run
+        [--steps N --warmup N --cycle N --lr X --swa-lr X --seed N]
+        [--no-swa --swa-bits W --eval-every N --data-scale X]
+        [--config file.json --out-csv file.csv --quiet]
+  eval  --model <name>          smoke-eval an initialized model
+  reproduce --exp <id>          regenerate a paper table/figure:
+        fig2-linreg fig2-logreg fig2-bits table1 table2 table3
+        fig3-frequency fig3-precision thm3
+        [--quick --seeds N]
+
+Build artifacts first: make artifacts
+"#;

@@ -1,0 +1,166 @@
+//! Block-floating-point quantizer (paper §3.1 + §5), bit-exact against
+//! ref.quantize_bfp: blocks share exponent E = clip(floor_log2(max|x|),
+//! -2^(E-1), 2^(E-1)-1); gap δ = 2^(E-W+2); range [-2^(E+1), 2^(E+1)-δ].
+
+use crate::rng;
+use crate::tensor::Tensor;
+
+/// floor(log2(x)) via the IEEE-754 exponent field (denormals/zero -> -127),
+/// mirroring ref.floor_log2 exactly.
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    (((x.to_bits() >> 23) & 0xFF) as i32) - 127
+}
+
+/// Quantize a flat slice given precomputed per-element block ids.
+fn quantize_with_blocks(
+    xs: &[f32],
+    block_of: &[usize],
+    n_blocks: usize,
+    wl: u32,
+    ebits: u32,
+    seed: u32,
+    stochastic: bool,
+) -> Vec<f32> {
+    // per-block max |x|
+    let mut amax = vec![0.0f32; n_blocks];
+    for (i, &x) in xs.iter().enumerate() {
+        let b = block_of[i];
+        let a = x.abs();
+        if a > amax[b] {
+            amax[b] = a;
+        }
+    }
+    let emin = -(2i32.pow(ebits - 1));
+    let emax = 2i32.pow(ebits - 1) - 1;
+    // per-block (delta, lo, hi) — computed in f32 like the jnp reference
+    let mut delta = vec![0.0f32; n_blocks];
+    let mut lo = vec![0.0f32; n_blocks];
+    let mut hi = vec![0.0f32; n_blocks];
+    for b in 0..n_blocks {
+        // exponent floor keeps δ a normal f32 (zero blocks would
+        // otherwise underflow δ to 0 and produce 0/0 = NaN); mirrored in
+        // ref.quantize_bfp
+        let e = floor_log2(amax[b]).clamp(emin, emax).max(wl as i32 - 110) as f32;
+        let d = (e - (wl as f32 - 2.0)).exp2();
+        delta[b] = d;
+        hi[b] = (e + 1.0).exp2() - d;
+        lo[b] = -(e + 1.0).exp2();
+    }
+    let mut out = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        let b = block_of[i];
+        let u = if stochastic {
+            rng::uniform_from_counter(seed, i as u32)
+        } else {
+            0.5
+        };
+        let q = (x / delta[b] + u).floor() * delta[b];
+        out.push(q.clamp(lo[b], hi[b]));
+    }
+    out
+}
+
+/// Quantize a tensor; the shared exponent VARIES along `block_axes`
+/// (empty = Big-block, one exponent for the whole tensor).
+pub fn quantize_bfp_tensor(
+    t: &Tensor,
+    wl: u32,
+    ebits: u32,
+    seed: u32,
+    block_axes: &[usize],
+    stochastic: bool,
+) -> Tensor {
+    let shape = &t.shape;
+    let rank = shape.len();
+    // row-major strides
+    let mut strides = vec![1usize; rank];
+    for a in (0..rank.saturating_sub(1)).rev() {
+        strides[a] = strides[a + 1] * shape[a + 1];
+    }
+    // block id = mixed-radix index over the block axes
+    let mut n_blocks = 1usize;
+    let mut block_strides = vec![0usize; rank];
+    for &a in block_axes {
+        block_strides[a] = 1; // placeholder, fixed below
+    }
+    let mut axes_sorted = block_axes.to_vec();
+    axes_sorted.sort();
+    for &a in axes_sorted.iter().rev() {
+        block_strides[a] = n_blocks;
+        n_blocks *= shape[a];
+    }
+    let block_of: Vec<usize> = (0..t.len())
+        .map(|i| {
+            let mut b = 0usize;
+            for &a in &axes_sorted {
+                let coord = (i / strides[a]) % shape[a];
+                b += coord * block_strides[a];
+            }
+            b
+        })
+        .collect();
+    let data = quantize_with_blocks(&t.data, &block_of, n_blocks, wl, ebits, seed, stochastic);
+    Tensor { shape: shape.clone(), data }
+}
+
+/// Big-block convenience wrapper over a flat slice.
+pub fn quantize_bfp(xs: &[f32], wl: u32, ebits: u32, seed: u32, stochastic: bool) -> Vec<f32> {
+    let t = Tensor { shape: vec![xs.len()], data: xs.to_vec() };
+    quantize_bfp_tensor(&t, wl, ebits, seed, &[], stochastic).data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_log2_matches_powers() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(3.999), 1);
+        assert_eq!(floor_log2(4.0), 2);
+        assert_eq!(floor_log2(0.25), -2);
+        assert_eq!(floor_log2(0.0), -127);
+    }
+
+    #[test]
+    fn big_block_stays_in_range() {
+        let xs: Vec<f32> = (-20..20).map(|i| i as f32 * 0.37).collect();
+        let q = quantize_bfp(&xs, 8, 8, 5, true);
+        let amax = xs.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let e = floor_log2(amax) as f32;
+        let hi = (e + 1.0).exp2();
+        for &v in &q {
+            assert!(v.abs() <= hi, "{v} out of [{}, {}]", -hi, hi);
+        }
+    }
+
+    #[test]
+    fn per_row_blocks_use_row_exponents() {
+        // row 0 tiny, row 1 large: with per-row exponents, row 0 keeps
+        // resolution; with a big block it collapses to 0
+        let t = Tensor::new(vec![2, 4], vec![0.01, 0.02, -0.015, 0.005, 100.0, -50.0, 25.0, 75.0]).unwrap();
+        let q_small = quantize_bfp_tensor(&t, 8, 8, 1, &[0], false);
+        let q_big = quantize_bfp_tensor(&t, 8, 8, 1, &[], false);
+        // small-block: row 0 survives
+        assert!(q_small.data[0] != 0.0);
+        // big-block: δ = 2^(6-6)=1 ⇒ row-0 values (≪ 1) vanish
+        assert_eq!(q_big.data[..4], [0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn zero_block_maps_to_zero() {
+        let q = quantize_bfp(&[0.0; 8], 8, 8, 9, true);
+        assert!(q.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn exponent_clipping_with_small_ebits() {
+        // ebits=2 → e ∈ [-2, 1]; a huge block max must clip
+        let q = quantize_bfp(&[1.0e6], 8, 2, 3, false);
+        // e=1: hi = 2^2 - 2^(1-6) = 4 - δ
+        let delta = 2f32.powi(1 - 6);
+        assert_eq!(q[0], 4.0 - delta);
+    }
+}

@@ -1,0 +1,86 @@
+//! Fixed-point stochastic-rounding quantizer (paper Eq. (1)), bit-exact
+//! against ref.quantize_fixed: Q(x) = clip(floor(x/δ + u)·δ, lo, hi) with
+//! u from the shared counter hash (element counter = flat index).
+
+use crate::rng;
+
+/// Quantize a slice in place. `wl` word bits, `fl` fractional bits.
+pub fn quantize_fixed_slice(xs: &mut [f32], wl: u32, fl: i32, seed: u32, stochastic: bool) {
+    let delta = 2f32.powi(-fl);
+    let hi = 2f32.powi(wl as i32 - fl - 1) - delta;
+    let lo = -2f32.powi(wl as i32 - fl - 1);
+    for (i, x) in xs.iter_mut().enumerate() {
+        let u = if stochastic {
+            rng::uniform_from_counter(seed, i as u32)
+        } else {
+            0.5
+        };
+        let q = (*x / delta + u).floor() * delta;
+        *x = q.clamp(lo, hi);
+    }
+}
+
+/// Out-of-place convenience wrapper.
+pub fn quantize_fixed(xs: &[f32], wl: u32, fl: i32, seed: u32, stochastic: bool) -> Vec<f32> {
+    let mut out = xs.to_vec();
+    quantize_fixed_slice(&mut out, wl, fl, seed, stochastic);
+    out
+}
+
+/// Quantize a single value with an explicit counter (simulators use
+/// counter = iteration so each step is a fresh stochastic event).
+#[inline]
+pub fn quantize_fixed_scalar(x: f64, delta: f64, lo: f64, hi: f64, seed: u32, counter: u32) -> f64 {
+    let u = rng::uniform_from_counter(seed, counter) as f64;
+    ((x / delta + u).floor() * delta).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_land_on_grid_and_in_range() {
+        let xs: Vec<f32> = (-40..40).map(|i| i as f32 * 0.13).collect();
+        let q = quantize_fixed(&xs, 8, 6, 3, true);
+        let delta = 2f32.powi(-6);
+        for &v in &q {
+            assert!(v >= -2.0 && v <= 2.0 - delta, "{v}");
+            let k = v / delta;
+            assert!((k - k.round()).abs() < 1e-4, "off grid: {v}");
+        }
+    }
+
+    #[test]
+    fn nearest_rounding_is_deterministic_half_up() {
+        // u = 0.5 -> round-half-up
+        let q = quantize_fixed(&[0.3f32], 8, 2, 0, false);
+        // 0.3/0.25 = 1.2 -> floor(1.2+0.5)=1 -> 0.25
+        assert_eq!(q[0], 0.25);
+        let q = quantize_fixed(&[0.375f32], 8, 2, 0, false);
+        // 1.5 + 0.5 = 2 -> 0.5
+        assert_eq!(q[0], 0.5);
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let n = 40_000;
+        let xs = vec![0.3f32; n];
+        // different seeds → different rounding events
+        let mut sum = 0.0f64;
+        for s in 0..4u32 {
+            let q = quantize_fixed(&xs, 8, 6, s, true);
+            sum += q.iter().map(|&v| v as f64).sum::<f64>();
+        }
+        let mean = sum / (4 * n) as f64;
+        assert!((mean - 0.3).abs() < 2e-4, "biased: {mean}");
+    }
+
+    #[test]
+    fn clipping_saturates() {
+        let q = quantize_fixed(&[100.0, -100.0], 4, 2, 1, true);
+        // W=4,F=2: range [-2, 2-0.25]
+        assert_eq!(q[0], 2.0 - 0.25);
+        assert_eq!(q[1], -2.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! Rust-side quantizers, bit-identical to `python/compile/kernels/ref.py`.
+//!
+//! Used for (a) the quantized-averaging mode of the coordinator (paper
+//! §5.1, Fig. 3 right — Q_SWA runs on the host), (b) the pure-rust LP-SGD
+//! simulators in [`crate::sim`], and (c) cross-layer parity tests against
+//! the golden vectors exported by the AOT step.
+
+pub mod bfp;
+pub mod fixed;
+pub mod spec;
+
+pub use bfp::{quantize_bfp, quantize_bfp_tensor};
+pub use fixed::quantize_fixed;
+pub use spec::{BlockDesign, QuantFormat};
+
+use crate::tensor::Tensor;
+
+/// Quantize a tensor with `fmt`, deriving roles/blocks per `spec`.
+///
+/// `role` follows qconfig.block_axes_for; `per_tensor` forces one shared
+/// exponent (biases / norm scale-shift).
+pub fn apply_format(
+    fmt: &QuantFormat,
+    t: &Tensor,
+    seed: u32,
+    role: spec::Role,
+    per_tensor: bool,
+) -> Tensor {
+    match fmt {
+        QuantFormat::None => t.clone(),
+        QuantFormat::Fixed { wl, fl, stochastic } => {
+            let mut out = t.clone();
+            fixed::quantize_fixed_slice(&mut out.data, *wl, *fl, seed, *stochastic);
+            out
+        }
+        QuantFormat::Bfp { wl, ebits, small_block, stochastic } => {
+            let axes = spec::block_axes_for(*small_block, role, t.rank(), per_tensor);
+            quantize_bfp_tensor(t, *wl, *ebits, seed, &axes, *stochastic)
+        }
+    }
+}

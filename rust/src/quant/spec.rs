@@ -1,0 +1,123 @@
+//! Quantization format descriptors mirroring `python/compile/qconfig.py`,
+//! parsed from the manifest's `quant` metadata.
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+/// Which Algorithm-2 quantizer a tensor is passing through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Weight,
+    Grad,
+    Momentum,
+    Act,
+    Err,
+}
+
+/// Big-block = one exponent per tensor; Small-block = per the §5 policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockDesign {
+    Big,
+    Small,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantFormat {
+    None,
+    Fixed { wl: u32, fl: i32, stochastic: bool },
+    Bfp { wl: u32, ebits: u32, small_block: bool, stochastic: bool },
+}
+
+impl QuantFormat {
+    pub fn fixed(wl: u32, fl: i32) -> Self {
+        QuantFormat::Fixed { wl, fl, stochastic: true }
+    }
+
+    pub fn bfp(wl: u32, small_block: bool) -> Self {
+        QuantFormat::Bfp { wl, ebits: 8, small_block, stochastic: true }
+    }
+
+    /// Parse one format from manifest JSON ({"kind": ..., "wl": ..., ...}).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let kind = v.get("kind")?.as_str()?;
+        Ok(match kind {
+            "none" => QuantFormat::None,
+            "fixed" => QuantFormat::Fixed {
+                wl: v.get("wl")?.as_i64()? as u32,
+                fl: v.get("fl")?.as_i64()? as i32,
+                stochastic: v.get("stochastic")?.as_bool()?,
+            },
+            "bfp" => QuantFormat::Bfp {
+                wl: v.get("wl")?.as_i64()? as u32,
+                ebits: v.get("ebits")?.as_i64()? as u32,
+                small_block: v.get("small_block")?.as_bool()?,
+                stochastic: v.get("stochastic")?.as_bool()?,
+            },
+            other => anyhow::bail!("unknown quant kind {other:?}"),
+        })
+    }
+
+    /// Quantization gap δ for fixed point (theory benches).
+    pub fn delta(&self) -> Option<f64> {
+        match self {
+            QuantFormat::Fixed { fl, .. } => Some(2f64.powi(-*fl)),
+            _ => None,
+        }
+    }
+}
+
+/// Mirror of qconfig.block_axes_for: which axes the shared exponent
+/// VARIES along (exponent shared over the remaining axes).
+pub fn block_axes_for(
+    small_block: bool,
+    role: Role,
+    ndim: usize,
+    per_tensor: bool,
+) -> Vec<usize> {
+    if !small_block || per_tensor {
+        return vec![];
+    }
+    match role {
+        Role::Weight | Role::Grad | Role::Momentum => match ndim {
+            4 => vec![0],
+            2 => vec![1],
+            _ => vec![],
+        },
+        Role::Act | Role::Err => match ndim {
+            4 => vec![0, 1],
+            n if n >= 2 => vec![0],
+            _ => vec![],
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn parse_formats() {
+        let v = json::parse(
+            r#"{"kind":"fixed","wl":8,"fl":6,"ebits":8,"small_block":false,"stochastic":true}"#,
+        )
+        .unwrap();
+        assert_eq!(QuantFormat::from_json(&v).unwrap(), QuantFormat::fixed(8, 6));
+        let v = json::parse(
+            r#"{"kind":"bfp","wl":8,"fl":6,"ebits":8,"small_block":true,"stochastic":true}"#,
+        )
+        .unwrap();
+        assert_eq!(QuantFormat::from_json(&v).unwrap(), QuantFormat::bfp(8, true));
+    }
+
+    #[test]
+    fn block_axes_policy() {
+        assert_eq!(block_axes_for(true, Role::Weight, 4, false), vec![0]);
+        assert_eq!(block_axes_for(true, Role::Weight, 2, false), vec![1]);
+        assert_eq!(block_axes_for(true, Role::Act, 4, false), vec![0, 1]);
+        assert!(block_axes_for(true, Role::Weight, 1, false).is_empty());
+        assert!(block_axes_for(true, Role::Weight, 4, true).is_empty());
+        assert!(block_axes_for(false, Role::Act, 4, false).is_empty());
+    }
+}

@@ -1,0 +1,175 @@
+//! Counter-based RNG, bit-identical to `python/compile/kernels/qrand.py`.
+//!
+//! The quantizer side (mix32 / derive_seed / uniform_from_counter) must
+//! match the Python stream exactly — `rust/tests/quant_parity.rs` checks
+//! it against golden vectors exported by the AOT step. The stream side
+//! (`StreamRng`) is this crate's general-purpose generator for data
+//! synthesis and shuffling; it only needs to be *good*, not cross-matched.
+
+pub const GOLDEN: u32 = 0x9E37_79B9;
+pub const MIX1: u32 = 0x7FEB_352D;
+pub const MIX2: u32 = 0x846C_A68B;
+pub const CHAIN_INIT: u32 = 0x243F_6A88;
+
+/// lowbias32 finalizer — avalanching 32-bit hash (same as qrand.mix32).
+#[inline]
+pub fn mix32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(MIX1);
+    x ^= x >> 15;
+    x = x.wrapping_mul(MIX2);
+    x ^= x >> 16;
+    x
+}
+
+/// Fold integer parts into one u32 seed (same chain as qrand.derive_seed).
+pub fn derive_seed(parts: &[u32]) -> u32 {
+    let mut h = CHAIN_INIT;
+    for &p in parts {
+        h = mix32(h ^ p.wrapping_mul(GOLDEN));
+    }
+    h
+}
+
+/// u32 seed + u32 counter -> f32 uniform in [0, 1), exact via top 24 bits.
+#[inline]
+pub fn uniform_from_counter(seed: u32, idx: u32) -> f32 {
+    let h = mix32(idx.wrapping_mul(GOLDEN).wrapping_add(seed));
+    (h >> 8) as f32 * (1.0 / (1 << 24) as f32)
+}
+
+/// Sequential stream RNG (SplitMix-style over the same mixer) for data
+/// generation, initialization and shuffling on the rust side.
+#[derive(Clone, Debug)]
+pub struct StreamRng {
+    state: u64,
+}
+
+impl StreamRng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xD1B5_4A32_D192_ED03 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // splitmix64
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (self.uniform() as f64).max(1e-12);
+        let u2 = self.uniform() as f64;
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.uniform() as f64 * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix32_avalanches() {
+        // flipping one input bit flips ~half the output bits on average
+        let mut total = 0u32;
+        for i in 0..64u32 {
+            let a = mix32(i);
+            let b = mix32(i ^ 1);
+            total += (a ^ b).count_ones();
+        }
+        let avg = total as f64 / 64.0;
+        assert!((10.0..22.0).contains(&avg), "avalanche avg {avg}");
+    }
+
+    #[test]
+    fn uniform_in_range_and_spread() {
+        let mut below_half = 0;
+        for i in 0..10_000u32 {
+            let u = uniform_from_counter(7, i);
+            assert!((0.0..1.0).contains(&u));
+            if u < 0.5 {
+                below_half += 1;
+            }
+        }
+        assert!((4500..5500).contains(&below_half), "{below_half}");
+    }
+
+    #[test]
+    fn derive_seed_distinguishes_order() {
+        assert_ne!(derive_seed(&[1, 2]), derive_seed(&[2, 1]));
+        assert_ne!(derive_seed(&[0]), derive_seed(&[0, 0]));
+    }
+
+    #[test]
+    fn stream_normal_moments() {
+        let mut r = StreamRng::new(42);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let v = r.normal() as f64;
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = StreamRng::new(1);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

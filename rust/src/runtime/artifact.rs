@@ -1,0 +1,154 @@
+//! manifest.json schema (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::quant::QuantFormat;
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(IoSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_shape()?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl EntrySpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        let io = |key: &str| -> Result<Vec<IoSpec>> {
+            v.get(key)?.as_arr()?.iter().map(IoSpec::from_json).collect()
+        };
+        Ok(EntrySpec {
+            file: v.get("file")?.as_str()?.to_string(),
+            inputs: io("inputs")?,
+            outputs: io("outputs")?,
+        })
+    }
+}
+
+/// The five Algorithm-2 quantizer formats + optimizer momentum.
+#[derive(Clone, Debug)]
+pub struct QuantSet {
+    pub name: String,
+    pub rho: f64,
+    pub w: QuantFormat,
+    pub a: QuantFormat,
+    pub g: QuantFormat,
+    pub e: QuantFormat,
+    pub m: QuantFormat,
+}
+
+impl QuantSet {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(QuantSet {
+            name: v.get("name")?.as_str()?.to_string(),
+            rho: v.get("rho")?.as_f64()?,
+            w: QuantFormat::from_json(v.get("w")?)?,
+            a: QuantFormat::from_json(v.get("a")?)?,
+            g: QuantFormat::from_json(v.get("g")?)?,
+            e: QuantFormat::from_json(v.get("e")?)?,
+            m: QuantFormat::from_json(v.get("m")?)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub family: String,
+    pub task: String,
+    pub dataset: String,
+    pub classes: usize,
+    pub quant: QuantSet,
+    pub weight_decay: f64,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub trainable: Vec<IoSpec>,
+    pub state: Vec<IoSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl ModelSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<IoSpec>> {
+            v.get(key)?.as_arr()?.iter().map(IoSpec::from_json).collect()
+        };
+        let mut entries = BTreeMap::new();
+        for (k, ev) in v.get("entries")?.as_obj()? {
+            entries.insert(k.clone(), EntrySpec::from_json(ev)?);
+        }
+        Ok(ModelSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            family: v.get("family")?.as_str()?.to_string(),
+            task: v.get("task")?.as_str()?.to_string(),
+            dataset: v.get("dataset")?.as_str()?.to_string(),
+            classes: v.get("classes")?.as_usize()?,
+            quant: QuantSet::from_json(v.get("quant")?)?,
+            weight_decay: v.get("weight_decay")?.as_f64()?,
+            batch_train: v.get("batch_train")?.as_usize()?,
+            batch_eval: v.get("batch_eval")?.as_usize()?,
+            x_shape: v.get("x_shape")?.as_shape()?,
+            y_shape: v.get("y_shape")?.as_shape()?,
+            trainable: specs("trainable")?,
+            state: specs("state")?,
+            entries,
+        })
+    }
+
+    /// Trainable parameter count.
+    pub fn param_count(&self) -> usize {
+        self.trainable.iter().map(|t| t.elements()).sum()
+    }
+}
+
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let v = json::parse_file(&dir.join("manifest.json"))?;
+        let models = v
+            .get("models")?
+            .as_arr()?
+            .iter()
+            .map(ModelSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest ({} models)", self.models.len()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.name.as_str()).collect()
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT artifacts and run them from rust.
+//!
+//! `Python never on the request path`: the artifacts directory (built
+//! once by `make artifacts`) contains HLO text + manifest.json; this
+//! module compiles each entry point on a shared PJRT CPU client and
+//! exposes typed init/train/eval calls over [`crate::tensor::Tensor`].
+
+pub mod artifact;
+pub mod model;
+
+pub use artifact::{EntrySpec, IoSpec, Manifest, ModelSpec, QuantSet};
+pub use model::{EvalOut, LoadedModel, ModelState, Runtime};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: $SWALP_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SWALP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,306 @@
+//! Compiled model entry points + typed execution over [`Tensor`]s.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::artifact::{EntrySpec, Manifest, ModelSpec};
+
+/// Shared PJRT client; compile artifacts through this.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_entry(&self, dir: &Path, spec: &EntrySpec) -> Result<CompiledEntry> {
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(CompiledEntry { exe, spec: spec.clone() })
+    }
+
+    /// Compile all entry points of a manifest model.
+    pub fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
+        let spec = manifest.find(name)?.clone();
+        let entry = |k: &str| -> Result<CompiledEntry> {
+            let e = spec
+                .entries
+                .get(k)
+                .ok_or_else(|| anyhow!("model {name}: missing entry {k}"))?;
+            self.compile_entry(&manifest.dir, e)
+                .with_context(|| format!("model {name} entry {k}"))
+        };
+        let eval_flex = if spec.entries.contains_key("eval_flex") {
+            Some(entry("eval_flex")?)
+        } else {
+            None
+        };
+        let eval_bs = if spec.entries.contains_key("eval_bs") {
+            Some(entry("eval_bs")?)
+        } else {
+            None
+        };
+        Ok(LoadedModel {
+            init: entry("init")?,
+            train: entry("train")?,
+            eval: entry("eval")?,
+            eval_bs,
+            eval_flex,
+            spec,
+        })
+    }
+}
+
+pub struct CompiledEntry {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: EntrySpec,
+}
+
+impl CompiledEntry {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.file,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.file))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.spec.file))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.spec.file))
+    }
+}
+
+/// Tensor <-> Literal conversion helpers.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let base = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    base.reshape(&dims).map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))
+}
+
+pub fn slice_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let base = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    base.reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+    Tensor::new(shape.to_vec(), data)
+}
+
+/// The mutable training state the coordinator threads through steps.
+pub struct ModelState {
+    pub trainable: NamedTensors,
+    pub state: NamedTensors,
+    pub momentum: NamedTensors,
+}
+
+impl ModelState {
+    /// Params in artifact order (trainable then state) for eval calls.
+    pub fn eval_params(&self) -> Vec<&Tensor> {
+        self.trainable.iter().map(|(_, t)| t).chain(self.state.iter().map(|(_, t)| t)).collect()
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalOut {
+    pub loss: f64,
+    pub metric: f64,
+    pub grad_norm_sq: Option<f64>,
+}
+
+pub struct LoadedModel {
+    pub spec: ModelSpec,
+    init: CompiledEntry,
+    train: CompiledEntry,
+    eval: CompiledEntry,
+    eval_bs: Option<CompiledEntry>,
+    eval_flex: Option<CompiledEntry>,
+}
+
+impl LoadedModel {
+    /// Run the init artifact: seed -> fresh (trainable, state, momentum).
+    pub fn init(&self, seed: f32) -> Result<ModelState> {
+        let outs = self.init.execute(&[scalar_literal(seed)])?;
+        let n_t = self.spec.trainable.len();
+        let n_s = self.spec.state.len();
+        if outs.len() != 2 * n_t + n_s {
+            bail!("init returned {} tensors, want {}", outs.len(), 2 * n_t + n_s);
+        }
+        let mut trainable = Vec::with_capacity(n_t);
+        let mut state = Vec::with_capacity(n_s);
+        let mut momentum = Vec::with_capacity(n_t);
+        for (i, io) in self.spec.trainable.iter().enumerate() {
+            trainable.push((io.name.clone(), literal_to_tensor(&outs[i], &io.shape)?));
+        }
+        for (i, io) in self.spec.state.iter().enumerate() {
+            state.push((io.name.clone(), literal_to_tensor(&outs[n_t + i], &io.shape)?));
+        }
+        for (i, io) in self.spec.trainable.iter().enumerate() {
+            momentum.push((io.name.clone(), literal_to_tensor(&outs[n_t + n_s + i], &io.shape)?));
+        }
+        Ok(ModelState { trainable, state, momentum })
+    }
+
+    /// One Algorithm-2 training step; updates `ms` in place, returns loss.
+    pub fn train_step(
+        &self,
+        ms: &mut ModelState,
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Result<f64> {
+        let bt = self.spec.batch_train;
+        let mut x_shape = vec![bt];
+        x_shape.extend_from_slice(&self.spec.x_shape);
+        let mut y_shape = vec![bt];
+        y_shape.extend_from_slice(&self.spec.y_shape);
+
+        let mut inputs = Vec::with_capacity(ms.trainable.len() * 2 + ms.state.len() + 4);
+        for (_, t) in &ms.trainable {
+            inputs.push(tensor_to_literal(t)?);
+        }
+        for (_, t) in &ms.state {
+            inputs.push(tensor_to_literal(t)?);
+        }
+        for (_, t) in &ms.momentum {
+            inputs.push(tensor_to_literal(t)?);
+        }
+        inputs.push(slice_to_literal(x, &x_shape)?);
+        inputs.push(slice_to_literal(y, &y_shape)?);
+        inputs.push(scalar_literal(lr));
+        inputs.push(scalar_literal(step as f32));
+
+        let outs = self.train.execute(&inputs)?;
+        let n_t = ms.trainable.len();
+        let n_s = ms.state.len();
+        if outs.len() != 2 * n_t + n_s + 1 {
+            bail!("train returned {} tensors, want {}", outs.len(), 2 * n_t + n_s + 1);
+        }
+        for (i, (_, t)) in ms.trainable.iter_mut().enumerate() {
+            *t = literal_to_tensor(&outs[i], &self.spec.trainable[i].shape)?;
+        }
+        for (i, (_, t)) in ms.state.iter_mut().enumerate() {
+            *t = literal_to_tensor(&outs[n_t + i], &self.spec.state[i].shape)?;
+        }
+        for (i, (_, t)) in ms.momentum.iter_mut().enumerate() {
+            *t = literal_to_tensor(&outs[n_t + n_s + i], &self.spec.trainable[i].shape)?;
+        }
+        let loss = outs[2 * n_t + n_s]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0] as f64;
+        Ok(loss)
+    }
+
+    fn eval_common(
+        &self,
+        entry: &CompiledEntry,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+        extra: Option<f32>,
+    ) -> Result<EvalOut> {
+        let be = self.spec.batch_eval;
+        let mut x_shape = vec![be];
+        x_shape.extend_from_slice(&self.spec.x_shape);
+        let mut y_shape = vec![be];
+        y_shape.extend_from_slice(&self.spec.y_shape);
+        let mut inputs = Vec::with_capacity(trainable.len() + state.len() + 3);
+        for (_, t) in trainable {
+            inputs.push(tensor_to_literal(t)?);
+        }
+        for (_, t) in state {
+            inputs.push(tensor_to_literal(t)?);
+        }
+        inputs.push(slice_to_literal(x, &x_shape)?);
+        inputs.push(slice_to_literal(y, &y_shape)?);
+        if let Some(v) = extra {
+            inputs.push(scalar_literal(v));
+        }
+        let outs = entry.execute(&inputs)?;
+        let get = |i: usize| -> Result<f64> {
+            Ok(outs[i].to_vec::<f32>().map_err(|e| anyhow!("eval out {i}: {e:?}"))?[0] as f64)
+        };
+        Ok(EvalOut {
+            loss: get(0)?,
+            metric: get(1)?,
+            grad_norm_sq: if outs.len() > 2 { Some(get(2)?) } else { None },
+        })
+    }
+
+    /// Evaluate one batch (loss mean, error count / sq-err sum, optional
+    /// full-precision squared gradient norm).
+    pub fn eval(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<EvalOut> {
+        self.eval_common(&self.eval, trainable, state, x, y, None)
+    }
+
+    /// Evaluate with train-mode batch statistics — the stateless
+    /// equivalent of Izmailov et al.'s bn_update, required for SWA weight
+    /// averages whose BN running stats were collected under different
+    /// weights. Falls back to the plain eval for stateless models.
+    pub fn eval_batch_stats(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<EvalOut> {
+        match &self.eval_bs {
+            Some(entry) => self.eval_common(entry, trainable, state, x, y, None),
+            None => self.eval_common(&self.eval, trainable, state, x, y, None),
+        }
+    }
+
+    /// Fig. 3 (right): evaluate with activations quantized to `act_wl`-bit
+    /// Small-block BFP (0 = no activation quantization).
+    pub fn eval_flex(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+        act_wl: f32,
+    ) -> Result<EvalOut> {
+        let entry = self
+            .eval_flex
+            .as_ref()
+            .ok_or_else(|| anyhow!("model {} has no eval_flex entry", self.spec.name))?;
+        self.eval_common(entry, trainable, state, x, y, Some(act_wl))
+    }
+}

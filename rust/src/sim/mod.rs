@@ -1,0 +1,11 @@
+//! Pure-rust LP-SGD simulators for the paper's theory section (§4).
+//!
+//! These run the exact dynamics the theorems analyze — quadratic
+//! objectives, unbiased gradient noise, fixed-point stochastic-rounding
+//! quantization of the accumulator — without XLA in the loop, so the
+//! noise-ball measurements (Theorem 1/2 convergence, Theorem 3 lower
+//! bound) are fast and exact.
+
+pub mod quadratic;
+
+pub use quadratic::{noise_ball_1d, swalp_quadratic, NoiseBallResult, QuadraticRun};

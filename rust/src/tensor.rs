@@ -1,0 +1,126 @@
+//! Minimal dense f32 tensor: shape + row-major data.
+//!
+//! Deliberately tiny — the heavy math lives in the XLA artifacts; the rust
+//! side only needs buffers for parameters, batches and the SWA
+//! accumulator, plus a few reductions for metrics and the simulators.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Scalar value of a rank-0/1-element tensor.
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// ‖a - b‖² (shapes must match).
+    pub fn sq_dist(&self, other: &Tensor) -> Result<f64> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum())
+    }
+
+    /// In-place axpy: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+}
+
+/// A named collection of tensors (a model's parameter set) in a fixed
+/// order — the artifact calling convention.
+pub type NamedTensors = Vec<(String, Tensor)>;
+
+/// Total element count across a parameter set.
+pub fn total_elements(params: &NamedTensors) -> usize {
+    params.iter().map(|(_, t)| t.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 1.0, 1.0]).unwrap();
+        a.axpy(2.0, &b).unwrap();
+        assert_eq!(a.data, vec![3.0, 4.0, 5.0]);
+        assert_eq!(a.sq_dist(&b).unwrap(), 4.0 + 9.0 + 16.0);
+        assert_eq!(b.sq_norm(), 3.0);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(4.5).item().unwrap(), 4.5);
+        assert!(Tensor::zeros(&[2]).item().is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warmup, timed iterations, median/MAD-style robust stats, and a
+//! paper-style table printer shared by the experiment benches.
+
+use std::time::Instant;
+
+use super::{mean, median, stddev};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and `min_secs` seconds
+/// (after `warmup` untimed calls). Returns robust per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, min_secs: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= min_iters && start.elapsed().as_secs_f64() >= min_secs {
+            break;
+        }
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_s: median(&samples),
+        mean_s: mean(&samples),
+        stddev_s: stddev(&samples),
+    }
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<40} {:>10.3} ms/iter (mean {:.3} ± {:.3}, n={})",
+        r.name,
+        r.median_s * 1e3,
+        r.mean_s * 1e3,
+        r.stddev_s * 1e3,
+        r.iters
+    );
+}
+
+/// Fixed-width table printer for the paper-style experiment benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line: String = widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+");
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths.get(i).copied().unwrap_or(4)))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        println!("{line}");
+        println!("{}", fmt_row(&self.headers));
+        println!("{line}");
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let r = bench("noop", 2, 5, 0.0, || n += 1);
+        assert!(r.iters >= 5);
+        assert_eq!(n, r.iters + 2);
+        assert!(r.median_s >= 0.0);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Boolean switches that never consume a following value — keeps
+/// `--quick positional` unambiguous without a full declarative schema.
+const KNOWN_FLAGS: &[&str] = &[
+    "quick", "full", "no-swa", "quiet", "verbose", "with-fp32", "force",
+    "list", "help", "bench", "dump-traj",
+];
+
+impl Args {
+    /// Parse an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.opt(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("train --model vgg --steps=100 --quick pos1 --lr 0.1");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.opt("model"), Some("vgg"));
+        assert_eq!(a.opt("steps"), Some("100"));
+        assert_eq!(a.opt("lr"), Some("0.1"));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("--n 5 --x 2.5");
+        assert_eq!(a.usize_or("n", 1).unwrap(), 5);
+        assert_eq!(a.f64_or("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
+        assert!(a.req("absent").is_err());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // "--k -1" : "-1" doesn't start with "--" so it's a value
+        let a = parse("--k -1");
+        assert_eq!(a.opt("k"), Some("-1"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal property-testing harness (proptest is not in the offline
+//! vendor set): seeded random case generation with failure reporting and
+//! a simple halving shrinker for numeric vectors.
+//!
+//! Used by `rust/tests/prop_invariants.rs` for the coordinator/quantizer
+//! invariants (DESIGN.md §5 substitutions).
+
+use crate::rng::StreamRng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(rng, case_index)`; panics with the failing seed/case on the
+/// first counterexample so the run is reproducible.
+pub fn check<F: FnMut(&mut StreamRng, usize) -> Result<(), String>>(
+    name: &str,
+    cfg: &PropConfig,
+    mut prop: F,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = StreamRng::new(cfg.seed.wrapping_add(case as u64));
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property {name:?} failed (seed={}, case={case}): {msg}", cfg.seed);
+        }
+    }
+}
+
+/// Generate a random f32 vector with magnitudes spanning many binades —
+/// the adversarial input family for quantizers.
+pub fn gen_vec(rng: &mut StreamRng, max_len: usize) -> Vec<f32> {
+    let len = 1 + rng.below(max_len.max(1));
+    (0..len)
+        .map(|_| {
+            let mag = rng.uniform_in(-12.0, 6.0).exp2();
+            let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            match rng.below(16) {
+                0 => 0.0,
+                1 => sign * mag * 1e-3,
+                _ => sign * mag * rng.uniform_in(0.5, 2.0),
+            }
+        })
+        .collect()
+}
+
+/// Shrink a failing vector by halving windows while `still_fails` holds.
+pub fn shrink_vec<F: Fn(&[f32]) -> bool>(input: &[f32], still_fails: F) -> Vec<f32> {
+    let mut cur = input.to_vec();
+    loop {
+        let mut progressed = false;
+        let mut chunk = cur.len() / 2;
+        while chunk >= 1 {
+            let mut i = 0;
+            while i + chunk <= cur.len() {
+                let mut candidate = cur.clone();
+                candidate.drain(i..i + chunk);
+                if !candidate.is_empty() && still_fails(&candidate) {
+                    cur = candidate;
+                    progressed = true;
+                } else {
+                    i += chunk;
+                }
+            }
+            chunk /= 2;
+        }
+        if !progressed {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("tautology", &PropConfig { cases: 16, seed: 1 }, |rng, _| {
+            let v = gen_vec(rng, 32);
+            if v.is_empty() {
+                return Err("empty".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failure() {
+        check("always-fails", &PropConfig { cases: 2, seed: 1 }, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // failure condition: contains a negative value
+        let input: Vec<f32> = vec![1.0, 2.0, -3.0, 4.0, 5.0, 6.0];
+        let out = shrink_vec(&input, |v| v.iter().any(|&x| x < 0.0));
+        assert_eq!(out, vec![-3.0]);
+    }
+}

@@ -1,0 +1,107 @@
+//! Cross-layer parity: the rust quantizers/RNG must match the Python
+//! reference (ref.py / qrand.py) bit-for-bit, verified against the golden
+//! vectors exported by `make artifacts` (artifacts/golden_quant.json).
+
+use std::path::PathBuf;
+
+use swalp::quant::{bfp, fixed};
+use swalp::rng;
+use swalp::tensor::Tensor;
+use swalp::util::json;
+
+fn golden_path() -> Option<PathBuf> {
+    let p = swalp::runtime::artifacts_dir().join("golden_quant.json");
+    p.exists().then_some(p)
+}
+
+fn load() -> Option<json::Value> {
+    golden_path().map(|p| json::parse_file(&p).expect("parse golden_quant.json"))
+}
+
+#[test]
+fn mix32_matches_python() {
+    let Some(g) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let expect = g.get("mix32_of_0_31").unwrap().as_arr().unwrap();
+    for (i, e) in expect.iter().enumerate() {
+        assert_eq!(
+            rng::mix32(i as u32) as i64,
+            e.as_i64().unwrap(),
+            "mix32({i})"
+        );
+    }
+}
+
+#[test]
+fn uniform_counter_matches_python() {
+    let Some(g) = load() else { return };
+    let expect = g.get("uniform_seed42").unwrap().as_f32_vec().unwrap();
+    for (i, &e) in expect.iter().enumerate() {
+        let u = rng::uniform_from_counter(42, i as u32);
+        assert_eq!(u.to_bits(), e.to_bits(), "uniform(42, {i}): {u} vs {e}");
+    }
+}
+
+#[test]
+fn derive_seed_matches_python() {
+    let Some(g) = load() else { return };
+    let expect = g.get("derive_seed_cases").unwrap().as_arr().unwrap();
+    let cases: [[u32; 3]; 4] = [[0, 0, 0], [1, 2, 3], [100, 7, 1], [12345, 42, 5]];
+    for (case, e) in cases.iter().zip(expect) {
+        assert_eq!(rng::derive_seed(case) as i64, e.as_i64().unwrap(), "{case:?}");
+    }
+}
+
+#[test]
+fn fixed_point_quantizer_matches_python() {
+    let Some(g) = load() else { return };
+    let x = g.get("x").unwrap().as_f32_vec().unwrap();
+    let shape = g.get("x_shape").unwrap().as_shape().unwrap();
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        let kind = case.get("kind").unwrap().as_str().unwrap();
+        if !kind.starts_with("fixed") {
+            continue;
+        }
+        let wl = case.get("wl").unwrap().as_i64().unwrap() as u32;
+        let fl = case.get("fl").unwrap().as_i64().unwrap() as i32;
+        let seed = case.get("seed").unwrap().as_i64().unwrap() as u32;
+        let expect = case.get("out").unwrap().as_f32_vec().unwrap();
+        let got = fixed::quantize_fixed(&x, wl, fl, seed, kind == "fixed");
+        for (i, (a, b)) in got.iter().zip(&expect).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{kind} wl={wl} fl={fl} seed={seed} elem {i}: {a} vs {b}"
+            );
+        }
+        let _ = &shape;
+    }
+}
+
+#[test]
+fn bfp_quantizer_matches_python() {
+    let Some(g) = load() else { return };
+    let x = g.get("x").unwrap().as_f32_vec().unwrap();
+    let shape = g.get("x_shape").unwrap().as_shape().unwrap();
+    let t = Tensor::new(shape.clone(), x).unwrap();
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        if case.get("kind").unwrap().as_str().unwrap() != "bfp" {
+            continue;
+        }
+        let wl = case.get("wl").unwrap().as_i64().unwrap() as u32;
+        let ebits = case.get("ebits").unwrap().as_i64().unwrap() as u32;
+        let axes = case.get("block_axes").unwrap().as_shape().unwrap();
+        let seed = case.get("seed").unwrap().as_i64().unwrap() as u32;
+        let expect = case.get("out").unwrap().as_f32_vec().unwrap();
+        let got = bfp::quantize_bfp_tensor(&t, wl, ebits, seed, &axes, true);
+        for (i, (a, b)) in got.data.iter().zip(&expect).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "bfp wl={wl} axes={axes:?} seed={seed} elem {i}: {a} vs {b}"
+            );
+        }
+    }
+}

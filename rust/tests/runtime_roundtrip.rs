@@ -1,0 +1,123 @@
+//! Runtime integration: manifest load, compile, init/train/eval round
+//! trips against the real artifacts (skips gracefully if not built).
+
+use swalp::data;
+use swalp::runtime::{artifacts_dir, Manifest, Runtime};
+
+fn ready() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn manifest_loads_and_is_coherent() {
+    if !ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    assert!(m.models.len() >= 20, "{} models", m.models.len());
+    for spec in &m.models {
+        for key in ["init", "train", "eval"] {
+            let e = spec.entries.get(key).unwrap_or_else(|| panic!("{} missing {key}", spec.name));
+            assert!(
+                m.dir.join(&e.file).exists(),
+                "{} missing file {}",
+                spec.name,
+                e.file
+            );
+        }
+        // train inputs = trainable + state + momentum + x,y,lr,step
+        let train = &spec.entries["train"];
+        assert_eq!(
+            train.inputs.len(),
+            2 * spec.trainable.len() + spec.state.len() + 4,
+            "{} train arity",
+            spec.name
+        );
+        assert_eq!(
+            train.outputs.len(),
+            2 * spec.trainable.len() + spec.state.len() + 1,
+            "{} train outputs",
+            spec.name
+        );
+        assert!(spec.param_count() > 0);
+    }
+}
+
+#[test]
+fn linreg_init_train_eval_roundtrip() {
+    if !ready() {
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let model = rt.load_model(&m, "linreg_fx86").unwrap();
+    let mut ms = model.init(1.0).unwrap();
+    assert_eq!(ms.trainable.len(), 1);
+    assert_eq!(ms.trainable[0].1.shape, vec![256]);
+    // init weights are zeros quantized -> zeros
+    assert!(ms.trainable[0].1.data.iter().all(|&v| v == 0.0));
+
+    let split = data::build("linreg_synth", 3, 0.1).unwrap();
+    let x: Vec<f32> = split.train.sample_x(0).to_vec();
+    let y: Vec<f32> = split.train.sample_y(0).to_vec();
+    let loss0 = model.train_step(&mut ms, &x, &y, 0.001, 0).unwrap();
+    assert!(loss0.is_finite() && loss0 > 0.0);
+    // weights moved onto the 2^-6 grid
+    let delta = 2f32.powi(-6);
+    let w = &ms.trainable[0].1.data;
+    assert!(w.iter().any(|&v| v != 0.0));
+    for &v in w.iter() {
+        let k = v / delta;
+        assert!((k - k.round()).abs() < 1e-3, "{v} off grid");
+    }
+    // determinism: same state/batch/step reproduces bit-identically
+    let ms2 = model.init(1.0).unwrap();
+    let mut ms2 = ms2;
+    let loss1 = model.train_step(&mut ms2, &x, &y, 0.001, 0).unwrap();
+    assert_eq!(loss0, loss1);
+    assert_eq!(ms.trainable[0].1.data, ms2.trainable[0].1.data);
+}
+
+#[test]
+fn logreg_eval_reports_grad_norm() {
+    if !ready() {
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let model = rt.load_model(&m, "logreg_fp32").unwrap();
+    let ms = model.init(1.0).unwrap();
+    let split = data::build("mnist_like", 3, 0.25).unwrap();
+    let be = model.spec.batch_eval;
+    let x: Vec<f32> = (0..be).flat_map(|i| split.test.sample_x(i).to_vec()).collect();
+    let y: Vec<f32> = (0..be).flat_map(|i| split.test.sample_y(i).to_vec()).collect();
+    let out = model.eval(&ms.trainable, &ms.state, &x, &y).unwrap();
+    assert!(out.loss > 0.0);
+    assert!(out.grad_norm_sq.unwrap() > 0.0);
+    // zero-init logistic regression on 10 classes: ~90% error
+    let err = out.metric / be as f64;
+    assert!(err > 0.5, "err {err}");
+}
+
+#[test]
+fn eval_flex_zero_wl_matches_infinite_precision_direction() {
+    if !ready() {
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let model = rt.load_model(&m, "cifar100_vgg_bfp8small").unwrap();
+    let ms = model.init(1.0).unwrap();
+    let split = data::build("cifar100_like", 3, 0.25).unwrap();
+    let be = model.spec.batch_eval;
+    let x: Vec<f32> = (0..be).flat_map(|i| split.test.sample_x(i).to_vec()).collect();
+    let y: Vec<f32> = (0..be).flat_map(|i| split.test.sample_y(i).to_vec()).collect();
+    let full = model.eval_flex(&ms.trainable, &ms.state, &x, &y, 0.0).unwrap();
+    let w16 = model.eval_flex(&ms.trainable, &ms.state, &x, &y, 16.0).unwrap();
+    let w4 = model.eval_flex(&ms.trainable, &ms.state, &x, &y, 4.0).unwrap();
+    // 16-bit activations barely move the loss; 4-bit moves it much more
+    let d16 = (full.loss - w16.loss).abs();
+    let d4 = (full.loss - w4.loss).abs();
+    assert!(d16 < d4 + 1e-9, "d16={d16} d4={d4}");
+}
