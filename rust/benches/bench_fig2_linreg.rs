@@ -1,6 +1,7 @@
 //! Regenerates the paper's fig2-linreg (see DESIGN.md §4 experiment index).
 //! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
-//! version used for EXPERIMENTS.md.
+//! version used for EXPERIMENTS.md. Runs hermetically on the native
+//! backend — no artifacts needed.
 
 use swalp::coordinator::experiment::Ctx;
 use swalp::util::cli::Args;
@@ -16,6 +17,6 @@ fn main() {
                 std::process::exit(1);
             }
         }
-        Err(e) => eprintln!("skipping fig2-linreg: {e} (run `make artifacts`)"),
+        Err(e) => eprintln!("skipping fig2-linreg: {e}"),
     }
 }

@@ -1,13 +1,18 @@
 //! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf):
-//!   L3: per-step latency of the compiled train artifacts (end-to-end,
-//!       including literal marshalling) + the marshalling cost alone,
+//!   native backend per-step latency (the full quantized Algorithm-2
+//!   step: forward/backward kernels + Q_A/Q_E/Q_G/Q_M/Q_W),
 //!   host quantizer + SWA fold throughput (the rust-side hot loops),
 //!   pure-sim step rate (theory benches' inner loop).
+//!
+//! Runs hermetically — no artifacts needed. The XLA artifact step has its
+//! own latency story (literal marshalling dominates); profile it via
+//! `swalp train` under `--features xla-runtime`.
 
 use swalp::coordinator::SwaAccumulator;
 use swalp::data;
+use swalp::native;
 use swalp::quant::{bfp, fixed};
-use swalp::runtime::{artifacts_dir, Manifest, Runtime};
+use swalp::runtime::ModelBackend;
 use swalp::tensor::{NamedTensors, Tensor};
 use swalp::util::bench::{bench, print_result};
 
@@ -48,34 +53,22 @@ fn main() {
     print_result(&r);
     println!("    -> {:.1} Msteps/s", 0.1 / r.median_s);
 
-    // ---- compiled artifacts (needs `make artifacts`) ----
-    if !artifacts_dir().join("manifest.json").exists() {
-        eprintln!("artifacts not built; skipping XLA step benches");
-        return;
-    }
-    let rt = Runtime::new().unwrap();
-    let manifest = Manifest::load(&artifacts_dir()).unwrap();
-    for name in ["linreg_fx86", "mlp_qmm_fx86", "cifar10_vgg_bfp8small", "lm_bfp8small"] {
-        let model = match rt.load_model(&manifest, name) {
-            Ok(m) => m,
-            Err(e) => {
-                eprintln!("skipping {name}: {e}");
-                continue;
-            }
-        };
-        let split = data::build(&model.spec.dataset, 3, 0.1).unwrap();
+    // ---- native backend train steps ----
+    for name in ["linreg_fx86", "logreg_fx_f6", "mlp_qmm_fx86", "mlp_bfp8small"] {
+        let model = native::load(name).unwrap();
+        let split = data::build(&model.spec().dataset, 3, 0.1).unwrap();
         let mut loader =
-            swalp::data::loader::Loader::new(&split.train, model.spec.batch_train, 1);
+            swalp::data::loader::Loader::new(&split.train, model.spec().batch_train, 1);
         let mut ms = model.init(1.0).unwrap();
         let (x, y) = loader.next_batch();
         let (x, y) = (x.to_vec(), y.to_vec());
         let mut step = 0u64;
-        let r = bench(&format!("xla/train_step {name}"), 3, 10, 1.0, || {
+        let r = bench(&format!("native/train_step {name}"), 3, 10, 1.0, || {
             model.train_step(&mut ms, &x, &y, 0.01, step).unwrap();
             step += 1;
         });
         print_result(&r);
-        let params = model.spec.param_count();
+        let params = model.spec().param_count();
         println!(
             "    -> {:.1} steps/s, {} params, {:.1} Mparam-updates/s",
             1.0 / r.median_s,
@@ -83,16 +76,17 @@ fn main() {
             params as f64 / r.median_s / 1e6
         );
 
-        // marshalling-only cost (literal building for all inputs)
-        let r2 = bench(&format!("xla/marshal-only {name}"), 3, 10, 0.5, || {
-            for (_, t) in ms.trainable.iter().chain(&ms.state).chain(&ms.momentum) {
-                let _ = swalp::runtime::model::tensor_to_literal(t).unwrap();
-            }
+        // eval-batch latency (the SWA/test-set evaluation hot path)
+        let be = model.spec().batch_eval.min(split.test.n);
+        let xe: Vec<f32> = (0..be).flat_map(|i| split.test.sample_x(i).to_vec()).collect();
+        let ye: Vec<f32> = (0..be).flat_map(|i| split.test.sample_y(i).to_vec()).collect();
+        let r2 = bench(&format!("native/eval_batch {name}"), 2, 5, 0.5, || {
+            model.eval(&ms.trainable, &ms.state, &xe, &ye).unwrap();
         });
         print_result(&r2);
         println!(
-            "    -> marshalling = {:.1}% of step",
-            100.0 * r2.median_s / r.median_s
+            "    -> {:.1} samples/ms",
+            be as f64 / (r2.median_s * 1e3)
         );
     }
 }

@@ -1,6 +1,10 @@
 //! Regenerates the paper's table3 (see DESIGN.md §4 experiment index).
 //! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
 //! version used for EXPERIMENTS.md.
+//!
+//! Needs the XLA artifact backend (wage_cnn is not in the
+//! native registry): build with --features xla-runtime after `make
+//! artifacts`. Skips gracefully otherwise.
 
 use swalp::coordinator::experiment::Ctx;
 use swalp::util::cli::Args;
@@ -9,13 +13,22 @@ fn main() {
     let args = Args::from_env();
     let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
     let seeds = args.u64_or("seeds", 1).unwrap_or(1);
-    match Ctx::new(!full, seeds) {
-        Ok(ctx) => {
-            if let Err(e) = ctx.dispatch("table3") {
-                eprintln!("table3 failed: {e:#}");
-                std::process::exit(1);
-            }
+    let ctx = match Ctx::new(!full, seeds) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            eprintln!("skipping table3: {e}");
+            return;
         }
-        Err(e) => eprintln!("skipping table3: {e} (run `make artifacts`)"),
+    };
+    if !ctx.can_load("wage_cnn") {
+        eprintln!(
+            "skipping table3: model wage_cnn unavailable \
+             (needs --features xla-runtime and `make artifacts`)"
+        );
+        return;
+    }
+    if let Err(e) = ctx.dispatch("table3") {
+        eprintln!("table3 failed: {e:#}");
+        std::process::exit(1);
     }
 }

@@ -31,7 +31,9 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
-            model: "cifar10_vgg_bfp8small".into(),
+            // a native-registry model, so the default `swalp train` runs
+            // hermetically (no artifacts); see native::model_names()
+            model: "mlp_qmm_fx86".into(),
             total_steps: 512,
             warmup_steps: 320,
             cycle: 32,

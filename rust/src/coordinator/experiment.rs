@@ -10,8 +10,11 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{Schedule, SwaAccumulator, TrainConfig, Trainer};
 use crate::data::{self, loader::Loader, synth};
+use crate::native;
 use crate::quant::{fixed::quantize_fixed, QuantFormat};
-use crate::runtime::{artifacts_dir, LoadedModel, Manifest, Runtime};
+use crate::runtime::ModelBackend;
+#[cfg(feature = "xla-runtime")]
+use crate::runtime::{artifacts_dir, Manifest, Runtime};
 use crate::sim;
 use crate::util::bench::Table;
 use crate::util::json::Value;
@@ -19,26 +22,45 @@ use crate::util::json::Value;
 use super::report;
 
 pub struct Ctx {
-    pub runtime: Runtime,
-    pub manifest: Manifest,
     pub quick: bool,
     pub seeds: u64,
+    /// PJRT client + manifest, when the feature is on and artifacts exist.
+    #[cfg(feature = "xla-runtime")]
+    xla: Option<(Runtime, Manifest)>,
 }
 
 impl Ctx {
+    /// Always succeeds without artifacts: the native registry covers the
+    /// theory experiments; the artifact backend (feature `xla-runtime`)
+    /// is picked up opportunistically for the deep-learning specs. A
+    /// PJRT client that fails to come up (e.g. the vendored xla stub)
+    /// degrades to native-only instead of failing the whole harness.
     pub fn new(quick: bool, seeds: u64) -> Result<Self> {
-        let dir = artifacts_dir();
-        if !report::artifacts_ready(&dir) {
-            bail!(
-                "artifacts not built (no {}/manifest.json) — run `make artifacts`",
-                dir.display()
-            );
-        }
+        #[cfg(feature = "xla-runtime")]
+        let xla = {
+            let dir = artifacts_dir();
+            if report::artifacts_ready(&dir) {
+                match (Runtime::new(), Manifest::load(&dir)) {
+                    (Ok(rt), Ok(manifest)) => Some((rt, manifest)),
+                    (rt, manifest) => {
+                        if let Err(e) = rt {
+                            eprintln!("xla runtime unavailable ({e:#}); native backend only");
+                        }
+                        if let Err(e) = manifest {
+                            eprintln!("artifact manifest unreadable ({e:#}); native backend only");
+                        }
+                        None
+                    }
+                }
+            } else {
+                None
+            }
+        };
         Ok(Ctx {
-            runtime: Runtime::new()?,
-            manifest: Manifest::load(&dir)?,
             quick,
             seeds,
+            #[cfg(feature = "xla-runtime")]
+            xla,
         })
     }
 
@@ -50,8 +72,33 @@ impl Ctx {
         }
     }
 
-    fn load(&self, name: &str) -> Result<LoadedModel> {
-        self.runtime.load_model(&self.manifest, name)
+    /// Native registry first, XLA artifacts second. Also the CLI's
+    /// model-resolution policy (main.rs) — keep it in one place.
+    pub fn load(&self, name: &str) -> Result<Box<dyn ModelBackend>> {
+        if native::supports(name) {
+            return Ok(Box::new(native::load(name)?));
+        }
+        #[cfg(feature = "xla-runtime")]
+        if let Some((rt, manifest)) = &self.xla {
+            return Ok(Box::new(rt.load_model(manifest, name)?));
+        }
+        bail!(
+            "model {name:?} is not in the native registry and the XLA artifact \
+             backend is unavailable (build with --features xla-runtime and run \
+             `make artifacts`)"
+        )
+    }
+
+    /// Would `load(name)` succeed? Benches use this to skip gracefully.
+    pub fn can_load(&self, name: &str) -> bool {
+        if native::supports(name) {
+            return true;
+        }
+        #[cfg(feature = "xla-runtime")]
+        if let Some((_, manifest)) = &self.xla {
+            return manifest.find(name).is_ok();
+        }
+        false
     }
 
     pub fn dispatch(&self, exp: &str) -> Result<()> {
@@ -104,7 +151,7 @@ impl Ctx {
             ("SWALP", "linreg_fx86", true),
         ] {
             let model = self.load(model_name)?;
-            let trainer = Trainer::new(&model, &problem.split);
+            let trainer = Trainer::new(&*model, &problem.split);
             let mut cfg = TrainConfig::new(steps, warmup, 1, Schedule::Constant(alpha));
             cfg.enable_swa = swa;
             cfg.w_star = Some(problem.w_star.clone());
@@ -174,7 +221,7 @@ impl Ctx {
             ("SWALP", "logreg_fx_f2", true),
         ] {
             let model = self.load(model_name)?;
-            let trainer = Trainer::new(&model, &split);
+            let trainer = Trainer::new(&*model, &split);
             let mut cfg = TrainConfig::new(steps, warmup, 1, Schedule::Constant(0.02));
             cfg.enable_swa = swa;
             let out = trainer.run(&cfg)?;
@@ -224,7 +271,7 @@ noise ball (M≠0, Theorem 2) while SWA-FL keeps shrinking");
 
         let mut run_one = |model_name: &str, label: &str| -> Result<()> {
             let model = self.load(model_name)?;
-            let trainer = Trainer::new(&model, &split);
+            let trainer = Trainer::new(&*model, &split);
             let mut cfg = TrainConfig::new(steps, warmup, 1, Schedule::Constant(0.02));
             cfg.enable_swa = true;
             let out = trainer.run(&cfg)?;
@@ -283,12 +330,12 @@ that SGD-LP needs (Theorem 2's δ² vs δ)");
                 for fmt in ["fp32", "bfp8big", "bfp8small"] {
                     let spec_name = format!("{ds}_{mname}_{fmt}");
                     let model = self.load(&spec_name)?;
-                    let split = data::build(&model.spec.dataset, 21, data_scale)?;
-                    let trainer = Trainer::new(&model, &split);
+                    let split = data::build(&model.spec().dataset, 21, data_scale)?;
+                    let trainer = Trainer::new(&*model, &split);
                     let mut errs_sgd = vec![];
                     let mut errs_swa = vec![];
                     for seed in 0..self.seeds {
-                        let spe = (split.train.n / model.spec.batch_train).max(1) as u64;
+                        let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
                         let warmup = warmup_epochs * spe;
                         let steps = warmup + avg_epochs * spe;
                         let mut cfg = TrainConfig::new(
@@ -348,11 +395,11 @@ within each format; 8-bit small-block SWALP ≈ float SGD");
                            freq_per_epoch: u64|
          -> Result<()> {
             let model = self.load(model_name)?;
-            let split = data::build(&model.spec.dataset, 31, data_scale)?;
-            let spe = (split.train.n / model.spec.batch_train).max(1) as u64;
+            let split = data::build(&model.spec().dataset, 31, data_scale)?;
+            let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
             let warmup = warm_epochs * spe;
             let steps = warmup + extra_epochs * spe;
-            let trainer = Trainer::new(&model, &split);
+            let trainer = Trainer::new(&*model, &split);
             let mut cfg = TrainConfig::new(
                 steps.max(warmup + 1),
                 warmup,
@@ -403,11 +450,11 @@ more averaging (+3 ep, 50x/ep) helps monotonically");
         println!("== Table 3: WAGE-style CNN on CIFAR10-like ==");
         let data_scale = if self.quick { 0.15 } else { 0.5 };
         let model = self.load("wage_cnn")?;
-        let split = data::build(&model.spec.dataset, 41, data_scale)?;
-        let spe = (split.train.n / model.spec.batch_train).max(1) as u64;
+        let split = data::build(&model.spec().dataset, 41, data_scale)?;
+        let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
         let warmup = self.pick(10, 4) * spe;
         let steps = warmup + self.pick(4, 2) * spe;
-        let trainer = Trainer::new(&model, &split);
+        let trainer = Trainer::new(&*model, &split);
 
         let mut table = Table::new(&["run", "test err%"]);
         let mut rows_json = vec![];
@@ -453,11 +500,11 @@ more averaging (+3 ep, 50x/ep) helps monotonically");
         println!("== Fig 3 (left) / Table 5: averaging frequency ==");
         let data_scale = if self.quick { 0.15 } else { 0.5 };
         let model = self.load("cifar100_vgg_bfp8small")?;
-        let split = data::build(&model.spec.dataset, 51, data_scale)?;
-        let spe = (split.train.n / model.spec.batch_train).max(1) as u64;
+        let split = data::build(&model.spec().dataset, 51, data_scale)?;
+        let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
         let warmup = self.pick(8, 3) * spe;
         let avg_epochs = self.pick(4, 2);
-        let trainer = Trainer::new(&model, &split);
+        let trainer = Trainer::new(&*model, &split);
 
         // averages per epoch, mirroring Table 5's 1x .. every-batch sweep
         let freqs: &[u64] = if self.quick { &[1, 8] } else { &[1, 2, 8, 32] };
@@ -502,11 +549,11 @@ more averaging (+3 ep, 50x/ep) helps monotonically");
         println!("== Fig 3 (right) / Table 6: averaging precision W_SWA ==");
         let data_scale = if self.quick { 0.15 } else { 0.5 };
         let model = self.load("cifar100_vgg_bfp8small")?;
-        let split = data::build(&model.spec.dataset, 61, data_scale)?;
-        let spe = (split.train.n / model.spec.batch_train).max(1) as u64;
+        let split = data::build(&model.spec().dataset, 61, data_scale)?;
+        let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
         let warmup = self.pick(8, 3) * spe;
         let steps = warmup + self.pick(4, 2) * spe;
-        let trainer = Trainer::new(&model, &split);
+        let trainer = Trainer::new(&*model, &split);
 
         // One training trajectory, many accumulators: the SGD-LP stream is
         // identical across W_SWA, so fold the same weights into one
@@ -524,7 +571,7 @@ more averaging (+3 ep, 50x/ep) helps monotonically");
         }
 
         let mut ms = model.init(1.0)?;
-        let mut loader = Loader::new(&split.train, model.spec.batch_train, 9);
+        let mut loader = Loader::new(&split.train, model.spec().batch_train, 9);
         let sched = Schedule::swalp_paper(0.05, warmup, 0.01);
         for step in 0..steps {
             let lr = sched.lr_at(step) as f32;
@@ -547,7 +594,7 @@ more averaging (+3 ep, 50x/ep) helps monotonically");
             } else {
                 // paper: inference activations quantized to W_SWA too
                 let wl: f32 = label.parse().unwrap();
-                let be = model.spec.batch_eval;
+                let be = model.spec().batch_eval;
                 let mut cursor = 0usize;
                 let (mut xb, mut yb) = (Vec::new(), Vec::new());
                 let (mut loss, mut metric, mut batches, mut samples) = (0.0, 0.0, 0usize, 0usize);

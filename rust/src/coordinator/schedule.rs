@@ -92,4 +92,53 @@ mod tests {
         assert!((s.lr_at(100) - 0.01).abs() < 1e-12);
         assert!((s.lr_at(250) - 0.001).abs() < 1e-12);
     }
+
+    #[test]
+    fn paper_sgd_piecewise_values_exact() {
+        // the three pieces of App. I's budget schedule, checked pointwise:
+        // α₁ for t<0.5, linear α₁·(1 − 0.99·(t−0.5)/0.4) on [0.5, 0.9),
+        // 0.01·α₁ beyond
+        let s = Schedule::PaperSgd { alpha1: 0.2, budget: 1000 };
+        assert_eq!(s.lr_at(0), 0.2);
+        assert_eq!(s.lr_at(250), 0.2);
+        assert_eq!(s.lr_at(499), 0.2);
+        // t = 0.6 -> frac 0.25 -> 0.2·(1 − 0.2475)
+        assert!((s.lr_at(600) - 0.2 * (1.0 - 0.25 * 0.99)).abs() < 1e-12);
+        // t = 0.7 -> frac 0.5 -> 0.2·0.505 = 0.101
+        assert!((s.lr_at(700) - 0.101).abs() < 1e-12);
+        // t = 0.8 -> frac 0.75
+        assert!((s.lr_at(800) - 0.2 * (1.0 - 0.75 * 0.99)).abs() < 1e-12);
+        // final plateau at 0.01·α₁
+        assert!((s.lr_at(900) - 0.002).abs() < 1e-4);
+        assert!((s.lr_at(950) - 0.002).abs() < 1e-12);
+        assert!((s.lr_at(10_000) - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swalp_warmup_boundary_is_exact() {
+        let s = Schedule::Swalp {
+            inner: Box::new(Schedule::StepDecay { alpha1: 0.4, factor: 0.5, every: 10 }),
+            warmup: 25,
+            swa_lr: 0.07,
+        };
+        // inner decay drives steps 0..24
+        assert_eq!(s.lr_at(0), 0.4);
+        assert_eq!(s.lr_at(10), 0.2);
+        assert_eq!(s.lr_at(24), 0.1);
+        // from the warm-up boundary on, constant SWA LR
+        assert_eq!(s.lr_at(25), 0.07);
+        assert_eq!(s.lr_at(26), 0.07);
+        assert_eq!(s.lr_at(1_000_000), 0.07);
+    }
+
+    #[test]
+    fn constant_is_constant_and_zero_budget_is_safe() {
+        assert_eq!(Schedule::Constant(0.3).lr_at(0), 0.3);
+        assert_eq!(Schedule::Constant(0.3).lr_at(u64::MAX), 0.3);
+        // budget 0 must not divide by zero
+        let s = Schedule::PaperSgd { alpha1: 0.1, budget: 0 };
+        assert!(s.lr_at(0).is_finite());
+        let s = Schedule::StepDecay { alpha1: 0.1, factor: 0.5, every: 0 };
+        assert!(s.lr_at(5).is_finite());
+    }
 }

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::quant::{self, spec::Role, QuantFormat};
+use crate::quant::{self, spec::is_per_tensor, spec::Role, QuantFormat};
 use crate::rng;
 use crate::tensor::{NamedTensors, Tensor};
 
@@ -18,13 +18,6 @@ pub struct SwaAccumulator {
     pub m: usize,
     /// §5.1: quantize the stored average to this format after each fold.
     pub q_swa: Option<QuantFormat>,
-}
-
-fn is_per_tensor(name: &str) -> bool {
-    // mirrors qtrain._is_per_tensor: biases and norm scale/shift carry one
-    // shared exponent (§5 Small-block modification)
-    let leaf = name.rsplit('.').next().unwrap_or(name);
-    matches!(leaf, "b" | "bias" | "scale" | "shift" | "gamma" | "beta")
 }
 
 impl SwaAccumulator {
@@ -167,5 +160,53 @@ mod tests {
     #[test]
     fn average_before_fold_errors() {
         assert!(SwaAccumulator::new(None).average().is_err());
+    }
+
+    #[test]
+    fn restore_roundtrips_average_and_fold_count() {
+        let mut acc = SwaAccumulator::new(None);
+        // exactly-representable values, so f64 -> f32 -> f64 is lossless
+        acc.fold(&named(&[1.0, -2.0])).unwrap();
+        acc.fold(&named(&[3.0, 6.0])).unwrap();
+        let avg = acc.average().unwrap();
+        let restored = SwaAccumulator::restore(&avg, acc.m, None);
+        assert_eq!(restored.m, 2);
+        assert_eq!(restored.average().unwrap(), avg);
+        assert!(restored.q_swa.is_none());
+    }
+
+    #[test]
+    fn fold_after_restore_continues_the_running_mean() {
+        let mut direct = SwaAccumulator::new(None);
+        direct.fold(&named(&[1.0, 2.0])).unwrap();
+        direct.fold(&named(&[2.0, 4.0])).unwrap();
+
+        let snapshot = direct.average().unwrap();
+        let mut resumed = SwaAccumulator::restore(&snapshot, direct.m, None);
+
+        direct.fold(&named(&[6.0, 12.0])).unwrap();
+        resumed.fold(&named(&[6.0, 12.0])).unwrap();
+
+        // mean of (1,2,6) = 3 and (2,4,12) = 6 on both paths
+        let a = direct.average().unwrap();
+        let b = resumed.average().unwrap();
+        assert!((a[0].1.data[0] - 3.0).abs() < 1e-6);
+        assert!((a[0].1.data[1] - 6.0).abs() < 1e-6);
+        assert!((b[0].1.data[0] - 3.0).abs() < 1e-6);
+        assert!((b[0].1.data[1] - 6.0).abs() < 1e-6);
+        assert_eq!(direct.m, resumed.m);
+    }
+
+    #[test]
+    fn restore_preserves_quantized_averaging_mode() {
+        let fmt = QuantFormat::bfp(9, true);
+        let mut acc = SwaAccumulator::new(Some(fmt.clone()));
+        acc.fold(&named(&[0.5, 0.25, 0.125, 1.0])).unwrap();
+        let avg = acc.average().unwrap();
+        let mut restored = SwaAccumulator::restore(&avg, acc.m, Some(fmt));
+        assert!(restored.q_swa.is_some());
+        // folding through the restored accumulator still quantizes
+        restored.fold(&named(&[0.5, 0.25, 0.125, 1.0])).unwrap();
+        assert_eq!(restored.m, 2);
     }
 }

@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::data::{loader::Loader, Split};
 use crate::quant::QuantFormat;
-use crate::runtime::{EvalOut, LoadedModel, ModelState};
+use crate::runtime::{EvalOut, ModelBackend, ModelState};
 
 use super::metrics::MetricsLog;
 use super::schedule::Schedule;
@@ -70,12 +70,12 @@ pub struct TrainOutcome {
 }
 
 pub struct Trainer<'a> {
-    pub model: &'a LoadedModel,
+    pub model: &'a dyn ModelBackend,
     pub split: &'a Split,
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(model: &'a LoadedModel, split: &'a Split) -> Self {
+    pub fn new(model: &'a dyn ModelBackend, split: &'a Split) -> Self {
         Trainer { model, split }
     }
 
@@ -111,7 +111,7 @@ impl<'a> Trainer<'a> {
         batch_stats: bool,
     ) -> Result<EvalOut> {
         let ds = if test { &self.split.test } else { &self.split.train };
-        let be = self.model.spec.batch_eval;
+        let be = self.model.spec().batch_eval;
         let mut cursor = 0usize;
         let (mut xb, mut yb) = (Vec::new(), Vec::new());
         let mut loss = 0.0;
@@ -136,8 +136,8 @@ impl<'a> Trainer<'a> {
             samples += be;
         }
         // per-token normalization for LM metric
-        let denom = if self.model.spec.task == "lm" {
-            samples * self.model.spec.y_shape.iter().product::<usize>().max(1)
+        let denom = if self.model.spec().task == "lm" {
+            samples * self.model.spec().y_shape.iter().product::<usize>().max(1)
         } else {
             samples
         };
@@ -174,9 +174,16 @@ impl<'a> Trainer<'a> {
                 (ck.into_model_state(), swa, step)
             }
         };
-        let mut loader = Loader::new(&self.split.train, self.model.spec.batch_train, cfg.data_seed);
+        let mut loader = Loader::new(&self.split.train, self.model.spec().batch_train, cfg.data_seed);
         let mut metrics = MetricsLog::default();
         let steps_per_epoch = loader.steps_per_epoch();
+        // Resumed runs must see the same batch stream an uninterrupted run
+        // would at these steps: replay the loader's shuffle state up to
+        // the checkpoint (no batch materialization) so `run(ckpt at s) +
+        // resume` reproduces `run` bit-for-bit.
+        for _ in 0..start_step {
+            loader.skip_batch();
+        }
 
         for step in start_step..cfg.total_steps {
             let lr = cfg.schedule.lr_at(step) as f32;

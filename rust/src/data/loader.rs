@@ -39,6 +39,18 @@ impl<'a> Loader<'a> {
         (self.ds.n / self.batch).max(1)
     }
 
+    /// Advance the stream by one batch WITHOUT filling the buffers —
+    /// checkpoint-resume replay. Leaves the shuffle state exactly as a
+    /// next_batch() call would, at zero copy cost.
+    pub fn skip_batch(&mut self) {
+        if self.pos + self.batch > self.ds.n {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+            self.epoch += 1;
+        }
+        self.pos += self.batch;
+    }
+
     /// Fill the internal buffers with the next batch and return views.
     pub fn next_batch(&mut self) -> (&[f32], &[f32]) {
         if self.pos + self.batch > self.ds.n {
@@ -97,6 +109,24 @@ mod tests {
         assert_eq!(loader.epoch, 0);
         loader.next_batch();
         assert_eq!(loader.epoch, 1);
+    }
+
+    #[test]
+    fn skip_batch_matches_next_batch_stream() {
+        let s = flat_split(8, 4, 64, 16, 5);
+        // skip across an epoch boundary (64/16 = 4 batches per epoch)
+        let mut a = Loader::new(&s.train, 16, 9);
+        let mut b = Loader::new(&s.train, 16, 9);
+        for _ in 0..6 {
+            a.next_batch();
+            b.skip_batch();
+        }
+        assert_eq!(a.epoch, b.epoch);
+        let (xa, ya) = a.next_batch();
+        let (xa, ya) = (xa.to_vec(), ya.to_vec());
+        let (xb, yb) = b.next_batch();
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
     }
 
     #[test]

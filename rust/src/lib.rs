@@ -1,27 +1,30 @@
 //! SWALP: Stochastic Weight Averaging in Low-Precision Training (ICML 2019).
 //!
-//! Rust L3 coordinator of the three-layer reproduction stack:
+//! Rust reproduction stack, organized around a backend abstraction:
 //!
-//! * [`runtime`] loads the AOT-compiled JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`, built once by `make artifacts`) onto a PJRT
-//!   CPU client and exposes typed `init/train_step/eval` calls — Python is
-//!   never on the training path.
+//! * [`runtime`] defines [`runtime::ModelBackend`] — the typed
+//!   `init/train_step/eval` surface every execution engine implements —
+//!   plus the artifact manifest schema and (behind the `xla-runtime`
+//!   feature) the PJRT loader for the AOT-compiled JAX/Pallas artifacts.
+//! * [`native`] is the default engine: pure-rust dense kernels running
+//!   the full Algorithm-2 quantized step for the linreg/logreg/MLP
+//!   models. `cargo build && cargo test` need nothing but rust.
 //! * [`coordinator`] owns the paper's Algorithm 1/2 orchestration: the
 //!   step loop, warm-up schedule, cyclic SWA trigger, and the
 //!   high-precision (or quantized, §5.1) weight-average accumulator.
 //! * [`quant`] + [`rng`] mirror the Python quantization semantics
-//!   bit-exactly (verified against golden vectors in
-//!   `rust/tests/quant_parity.rs`) for the rust-side quantized-averaging
-//!   mode and the pure-rust simulators.
+//!   bit-exactly (verified against the golden vectors committed under
+//!   `rust/tests/data/` by `rust/tests/quant_parity.rs`).
 //! * [`data`] provides the synthetic dataset substrates (DESIGN.md §5),
 //!   [`sim`] the closed-form LP-SGD dynamics used to validate
-//!   Theorems 1–3 without XLA in the loop.
+//!   Theorems 1–3.
 //! * [`util`] carries the offline-image substrates: JSON, CLI parsing,
 //!   a micro-bench harness and a property-testing harness.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod native;
 pub mod quant;
 pub mod rng;
 pub mod runtime;

@@ -1,8 +1,8 @@
-//! `swalp` — the L3 coordinator CLI.
+//! `swalp` — the SWALP coordinator CLI.
 //!
 //! Subcommands:
-//!   list                         show models in the artifacts manifest
-//!   info                         PJRT platform + artifact summary
+//!   list                         native models (+ artifact manifest if present)
+//!   info                         backend availability summary
 //!   train  --model <name> [...]  run SWALP training (see config.rs opts)
 //!   eval   --model <name>        init + one full eval pass (smoke)
 //!   reproduce --exp <id> [--quick] [--seeds N]
@@ -10,6 +10,10 @@
 //!                                (fig2-linreg fig2-logreg fig2-bits table1
 //!                                 table2 table3 fig3-frequency
 //!                                 fig3-precision thm3)
+//!
+//! Model resolution order: the native rust engine first (hermetic, no
+//! artifacts needed), then — when built with `--features xla-runtime` and
+//! `make artifacts` has run — the AOT artifact runtime.
 
 use anyhow::{bail, Result};
 
@@ -17,7 +21,8 @@ use swalp::config::RunConfig;
 use swalp::coordinator::experiment::{thm3_noise_ball, Ctx};
 use swalp::coordinator::{TrainConfig, Trainer};
 use swalp::data;
-use swalp::runtime::{artifacts_dir, Manifest, Runtime};
+use swalp::native;
+use swalp::runtime::{artifacts_dir, Manifest, ModelBackend};
 use swalp::util::cli::Args;
 
 fn main() {
@@ -28,29 +33,65 @@ fn main() {
     }
 }
 
+/// Model resolution (native registry first, XLA artifacts second) lives
+/// in `Ctx::load` — the CLI and the experiment harness share one policy.
+fn load_backend(name: &str) -> Result<(Ctx, Box<dyn ModelBackend>)> {
+    let ctx = Ctx::new(true, 1)?;
+    let model = ctx.load(name)?;
+    Ok((ctx, model))
+}
+
 fn run(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "list" => {
-            let manifest = Manifest::load(&artifacts_dir())?;
-            println!("{:<28} {:<14} {:<16} {:>10}", "model", "quant", "dataset", "params");
-            for m in &manifest.models {
+            println!("{:<28} {:<14} {:<16} {:>10}  backend", "model", "quant", "dataset", "params");
+            for name in native::model_names() {
+                let m = native::load(&name)?;
+                let s = m.spec();
                 println!(
-                    "{:<28} {:<14} {:<16} {:>10}",
-                    m.name,
-                    m.quant.name,
-                    m.dataset,
-                    m.param_count()
+                    "{:<28} {:<14} {:<16} {:>10}  native",
+                    s.name,
+                    s.quant.name,
+                    s.dataset,
+                    s.param_count()
                 );
+            }
+            let dir = artifacts_dir();
+            if dir.join("manifest.json").exists() {
+                // a stale manifest must not break the hermetic listing
+                // (same degradation policy as experiment::Ctx::new)
+                match Manifest::load(&dir) {
+                    Ok(manifest) => {
+                        for m in &manifest.models {
+                            println!(
+                                "{:<28} {:<14} {:<16} {:>10}  xla-artifact",
+                                m.name,
+                                m.quant.name,
+                                m.dataset,
+                                m.param_count()
+                            );
+                        }
+                    }
+                    Err(e) => println!("(artifact manifest unreadable: {e:#})"),
+                }
+            } else {
+                println!("(no artifact manifest at {}; native models only)", dir.display());
             }
             Ok(())
         }
         "info" => {
-            let rt = Runtime::new()?;
-            let manifest = Manifest::load(&artifacts_dir())?;
-            println!("platform: {}", rt.platform());
-            println!("artifacts: {}", artifacts_dir().display());
-            println!("models: {}", manifest.models.len());
+            println!("native models: {}", native::model_names().len());
+            println!(
+                "xla-runtime feature: {}",
+                if cfg!(feature = "xla-runtime") { "on" } else { "off" }
+            );
+            let dir = artifacts_dir();
+            println!(
+                "artifacts: {} ({})",
+                dir.display(),
+                if dir.join("manifest.json").exists() { "present" } else { "absent" }
+            );
             Ok(())
         }
         "train" => {
@@ -59,12 +100,10 @@ fn run(args: &Args) -> Result<()> {
         }
         "eval" => {
             let model_name = args.req("model")?;
-            let rt = Runtime::new()?;
-            let manifest = Manifest::load(&artifacts_dir())?;
-            let model = rt.load_model(&manifest, model_name)?;
-            let split = data::build(&model.spec.dataset, 7, 0.25)?;
+            let (_ctx, model) = load_backend(model_name)?;
+            let split = data::build(&model.spec().dataset, 7, 0.25)?;
             let ms = model.init(1.0)?;
-            let trainer = Trainer::new(&model, &split);
+            let trainer = Trainer::new(&*model, &split);
             let out = trainer.eval_set(&ms.trainable, &ms.state, true)?;
             println!(
                 "{model_name}: init loss {:.4}, metric {:.4}",
@@ -92,18 +131,16 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn train(cfg: &RunConfig) -> Result<()> {
-    let rt = Runtime::new()?;
-    let manifest = Manifest::load(&artifacts_dir())?;
-    let model = rt.load_model(&manifest, &cfg.model)?;
+    let (_ctx, model) = load_backend(&cfg.model)?;
     println!(
         "model {} ({} params, quant={}, dataset={})",
         cfg.model,
-        model.spec.param_count(),
-        model.spec.quant.name,
-        model.spec.dataset
+        model.spec().param_count(),
+        model.spec().quant.name,
+        model.spec().dataset
     );
-    let split = data::build(&model.spec.dataset, cfg.seed, cfg.data_scale)?;
-    let trainer = Trainer::new(&model, &split);
+    let split = data::build(&model.spec().dataset, cfg.seed, cfg.data_scale)?;
+    let trainer = Trainer::new(&*model, &split);
     let mut tc = TrainConfig::new(cfg.total_steps, cfg.warmup_steps, cfg.cycle, cfg.schedule());
     tc.enable_swa = cfg.enable_swa;
     tc.swa_quant = cfg.swa_quant();
@@ -152,12 +189,12 @@ fn train(cfg: &RunConfig) -> Result<()> {
 }
 
 const HELP: &str = r#"
-swalp — SWALP (ICML 2019) reproduction: rust coordinator over AOT JAX/Pallas
+swalp — SWALP (ICML 2019) reproduction: native rust engine + coordinator
 
 USAGE: swalp <command> [options]
 
-  list                          models in artifacts/manifest.json
-  info                          PJRT platform info
+  list                          native models + artifact manifest
+  info                          backend availability
   train --model <name>          SWALP training run
         [--steps N --warmup N --cycle N --lr X --swa-lr X --seed N]
         [--no-swa --swa-bits W --eval-every N --data-scale X]
@@ -168,5 +205,6 @@ USAGE: swalp <command> [options]
         fig3-frequency fig3-precision thm3
         [--quick --seeds N]
 
-Build artifacts first: make artifacts
+Runs hermetically on the native backend (linreg / logreg / mlp models).
+Deep-learning specs need `make artifacts` + --features xla-runtime.
 "#;

@@ -1,0 +1,429 @@
+//! `NativeBackend` — Algorithm 2 executed entirely in rust.
+//!
+//! One backend = one (architecture, quantization-config) pair described by
+//! a [`ModelSpec`]. The step follows qtrain.py / graphs.py exactly:
+//!
+//!   1. forward: activations pass Q_A at named sites,
+//!   2. backward: the cotangent passes Q_E at the same sites, produced
+//!      weight gradients pass Q_G,
+//!   3. update: v' = ρ·Q_M(v) + g ;  w' = Q_W(w − lr·v').
+//!
+//! Every quantization event derives its seed from (step, site, role) via
+//! the shared counter-hash RNG, so a step is a pure function of
+//! (params, momentum, batch, lr, step) — bit-reproducible, which the
+//! checkpoint-resume tests rely on. Site ids hash the site *name* (FNV-1a
+//! here vs crc32 in the artifacts — the streams differ across backends,
+//! the semantics do not).
+
+use anyhow::{bail, Result};
+
+use crate::quant::{
+    self,
+    spec::{is_per_tensor, Role},
+    QuantFormat,
+};
+use crate::rng::{self, StreamRng};
+use crate::runtime::{EvalOut, ModelBackend, ModelSpec, ModelState};
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::kernels;
+
+/// Role tags folded into quantization seeds (mirror of qtrain.TAG_*).
+const TAG_W: u32 = 1;
+const TAG_A: u32 = 2;
+const TAG_G: u32 = 3;
+const TAG_E: u32 = 4;
+const TAG_M: u32 = 5;
+
+/// Stable 32-bit id for a named quantization site (FNV-1a).
+pub fn site_id(name: &str) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for b in name.bytes() {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn seed_for(step: u64, site: u32, tag: u32) -> u32 {
+    rng::derive_seed(&[step as u32, site, tag])
+}
+
+/// The architectures the native engine implements.
+pub(super) enum Arch {
+    /// f(w) = mean (w·x − y)²; single weight vector (paper §4.3 / App. G).
+    LinReg { d: usize },
+    /// Softmax CE + (λ/2)‖w‖², the strongly-convex App. H objective. Eval
+    /// also reports ‖∇f‖² of the full-precision objective (Fig. 2 middle).
+    LogReg { d: usize, classes: usize, lam: f32 },
+    /// Two dense layers with a ReLU + Q_A/Q_E site between them.
+    Mlp { d_in: usize, hidden: usize, classes: usize },
+}
+
+pub struct NativeBackend {
+    spec: ModelSpec,
+    arch: Arch,
+}
+
+/// Quantize a flat activation/error buffer, reusing the owned storage
+/// where the format allows (fixed point quantizes in place; BFP needs
+/// the tensor shape for its block-axis policy).
+fn quant_buf(fmt: &QuantFormat, mut data: Vec<f32>, shape: &[usize], seed: u32, role: Role) -> Vec<f32> {
+    match fmt {
+        QuantFormat::None => data,
+        QuantFormat::Fixed { wl, fl, stochastic } => {
+            crate::quant::fixed::quantize_fixed_slice(&mut data, *wl, *fl, seed, *stochastic);
+            data
+        }
+        QuantFormat::Bfp { .. } => {
+            let t = Tensor { shape: shape.to_vec(), data };
+            quant::apply_format(fmt, &t, seed, role, false).data
+        }
+    }
+}
+
+fn col_sums(x: &[f32], cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; cols];
+    for row in x.chunks(cols) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+fn get<'a>(ts: &'a NamedTensors, name: &str) -> Result<&'a Tensor> {
+    ts.iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, t)| t)
+        .ok_or_else(|| anyhow::anyhow!("missing tensor {name:?}"))
+}
+
+impl NativeBackend {
+    pub(super) fn new(spec: ModelSpec, arch: Arch) -> Self {
+        NativeBackend { spec, arch }
+    }
+
+    fn batch_of(&self, x: &[f32], y: &[f32]) -> Result<usize> {
+        let xe: usize = self.spec.x_shape.iter().product();
+        if xe == 0 || x.len() % xe != 0 {
+            bail!("x length {} not a multiple of sample size {xe}", x.len());
+        }
+        let b = x.len() / xe;
+        let ye = self.spec.y_shape.iter().product::<usize>().max(1);
+        if y.len() != b * ye {
+            bail!("y length {} does not match batch {b}", y.len());
+        }
+        Ok(b)
+    }
+
+    /// Loss + gradients (in trainable order) under the given activation /
+    /// error formats. Pass `QuantFormat::None` for both to differentiate
+    /// the full-precision objective (the grad-norm eval path).
+    fn grads(
+        &self,
+        tr: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+        b: usize,
+        a_fmt: &QuantFormat,
+        e_fmt: &QuantFormat,
+        step: u64,
+    ) -> Result<(f64, NamedTensors)> {
+        match self.arch {
+            Arch::LinReg { d } => {
+                let w = get(tr, "w")?;
+                // residuals r_i = w·x_i − y_i
+                let mut r = vec![0.0f32; b];
+                kernels::matmul(x, &w.data, b, d, 1, &mut r);
+                let mut loss = 0.0f64;
+                for (ri, &yi) in r.iter_mut().zip(y) {
+                    *ri -= yi;
+                    loss += (*ri as f64) * (*ri as f64);
+                }
+                loss /= b as f64;
+                // g = (2/B)·Xᵀr
+                let mut g = vec![0.0f32; d];
+                kernels::matmul_at_b(x, &r, b, d, 1, &mut g);
+                let c = 2.0 / b as f32;
+                for v in g.iter_mut() {
+                    *v *= c;
+                }
+                Ok((loss, vec![("w".to_string(), Tensor::new(vec![d], g)?)]))
+            }
+            Arch::LogReg { d, classes, lam } => {
+                let w = get(tr, "w")?;
+                let bias = get(tr, "b")?;
+                let site = site_id("logits");
+                let mut z = vec![0.0f32; b * classes];
+                kernels::matmul(x, &w.data, b, d, classes, &mut z);
+                kernels::add_bias(&mut z, &bias.data);
+                let z = quant_buf(
+                    a_fmt,
+                    z,
+                    &[b, classes],
+                    seed_for(step, site, TAG_A),
+                    Role::Act,
+                );
+                let ce = kernels::softmax_ce(&z, y, b, classes, 1.0 / b as f32);
+                let reg: f64 = 0.5 * lam as f64 * w.sq_norm();
+                let loss = ce.loss_sum / b as f64 + reg;
+                let e = quant_buf(
+                    e_fmt,
+                    ce.dlogits,
+                    &[b, classes],
+                    seed_for(step, site, TAG_E),
+                    Role::Err,
+                );
+                let mut gw = vec![0.0f32; d * classes];
+                kernels::matmul_at_b(x, &e, b, d, classes, &mut gw);
+                for (g, &wv) in gw.iter_mut().zip(&w.data) {
+                    *g += lam * wv;
+                }
+                let gb = col_sums(&e, classes);
+                Ok((
+                    loss,
+                    vec![
+                        ("b".to_string(), Tensor::new(vec![classes], gb)?),
+                        ("w".to_string(), Tensor::new(vec![d, classes], gw)?),
+                    ],
+                ))
+            }
+            Arch::Mlp { d_in, hidden, classes } => {
+                let w1 = get(tr, "fc1.w")?;
+                let b1 = get(tr, "fc1.b")?;
+                let w2 = get(tr, "fc2.w")?;
+                let b2 = get(tr, "fc2.b")?;
+                let site = site_id("fc1.act");
+                // forward
+                let mut z1 = vec![0.0f32; b * hidden];
+                kernels::matmul(x, &w1.data, b, d_in, hidden, &mut z1);
+                kernels::add_bias(&mut z1, &b1.data);
+                let mut a1 = z1.clone();
+                kernels::relu(&mut a1);
+                let a1 = quant_buf(
+                    a_fmt,
+                    a1,
+                    &[b, hidden],
+                    seed_for(step, site, TAG_A),
+                    Role::Act,
+                );
+                let mut z2 = vec![0.0f32; b * classes];
+                kernels::matmul(&a1, &w2.data, b, hidden, classes, &mut z2);
+                kernels::add_bias(&mut z2, &b2.data);
+                let ce = kernels::softmax_ce(&z2, y, b, classes, 1.0 / b as f32);
+                let loss = ce.loss_sum / b as f64;
+                // backward
+                let gb2 = col_sums(&ce.dlogits, classes);
+                let mut gw2 = vec![0.0f32; hidden * classes];
+                kernels::matmul_at_b(&a1, &ce.dlogits, b, hidden, classes, &mut gw2);
+                let mut da1 = vec![0.0f32; b * hidden];
+                kernels::matmul_a_bt(&ce.dlogits, &w2.data, b, classes, hidden, &mut da1);
+                let mut e = quant_buf(
+                    e_fmt,
+                    da1,
+                    &[b, hidden],
+                    seed_for(step, site, TAG_E),
+                    Role::Err,
+                );
+                kernels::relu_backward(&mut e, &z1);
+                let gb1 = col_sums(&e, hidden);
+                let mut gw1 = vec![0.0f32; d_in * hidden];
+                kernels::matmul_at_b(x, &e, b, d_in, hidden, &mut gw1);
+                Ok((
+                    loss,
+                    vec![
+                        ("fc1.b".to_string(), Tensor::new(vec![hidden], gb1)?),
+                        ("fc1.w".to_string(), Tensor::new(vec![d_in, hidden], gw1)?),
+                        ("fc2.b".to_string(), Tensor::new(vec![classes], gb2)?),
+                        ("fc2.w".to_string(), Tensor::new(vec![hidden, classes], gw2)?),
+                    ],
+                ))
+            }
+        }
+    }
+
+    /// Forward pass + (loss, metric) with eval-time activation
+    /// quantization (nearest rounding, step 0 — graphs.py eval_cfg).
+    fn eval_forward(&self, tr: &NamedTensors, x: &[f32], y: &[f32], b: usize) -> Result<(f64, f64)> {
+        match self.arch {
+            Arch::LinReg { d } => {
+                let w = get(tr, "w")?;
+                let mut r = vec![0.0f32; b];
+                kernels::matmul(x, &w.data, b, d, 1, &mut r);
+                let mut sq = 0.0f64;
+                for (ri, &yi) in r.iter_mut().zip(y) {
+                    *ri -= yi;
+                    sq += (*ri as f64) * (*ri as f64);
+                }
+                // loss = mean squared error, metric = squared-error sum
+                Ok((sq / b as f64, sq))
+            }
+            Arch::LogReg { d, classes, lam } => {
+                let w = get(tr, "w")?;
+                let bias = get(tr, "b")?;
+                let mut z = vec![0.0f32; b * classes];
+                kernels::matmul(x, &w.data, b, d, classes, &mut z);
+                kernels::add_bias(&mut z, &bias.data);
+                let z = quant_buf(&self.spec.quant.a.nearest(), z, &[b, classes], 0, Role::Act);
+                let ce = kernels::softmax_ce(&z, y, b, classes, 1.0);
+                let loss = ce.loss_sum / b as f64 + 0.5 * lam as f64 * w.sq_norm();
+                Ok((loss, ce.errors))
+            }
+            Arch::Mlp { d_in, hidden, classes } => {
+                let w1 = get(tr, "fc1.w")?;
+                let b1 = get(tr, "fc1.b")?;
+                let w2 = get(tr, "fc2.w")?;
+                let b2 = get(tr, "fc2.b")?;
+                let mut z1 = vec![0.0f32; b * hidden];
+                kernels::matmul(x, &w1.data, b, d_in, hidden, &mut z1);
+                kernels::add_bias(&mut z1, &b1.data);
+                kernels::relu(&mut z1);
+                let a1 = quant_buf(&self.spec.quant.a.nearest(), z1, &[b, hidden], 0, Role::Act);
+                let mut z2 = vec![0.0f32; b * classes];
+                kernels::matmul(&a1, &w2.data, b, hidden, classes, &mut z2);
+                kernels::add_bias(&mut z2, &b2.data);
+                let ce = kernels::softmax_ce(&z2, y, b, classes, 1.0);
+                Ok((ce.loss_sum / b as f64, ce.errors))
+            }
+        }
+    }
+}
+
+impl ModelBackend for NativeBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn init(&self, seed: f32) -> Result<ModelState> {
+        let mut trainable: NamedTensors = match self.arch {
+            Arch::LinReg { d } => vec![("w".to_string(), Tensor::zeros(&[d]))],
+            Arch::LogReg { d, classes, .. } => vec![
+                ("b".to_string(), Tensor::zeros(&[classes])),
+                ("w".to_string(), Tensor::zeros(&[d, classes])),
+            ],
+            Arch::Mlp { d_in, hidden, classes } => {
+                // He-normal dense init, seeded from the f32 bit pattern so
+                // distinct seeds give distinct draws
+                let mut rng = StreamRng::new(seed.to_bits() as u64);
+                let mut he = |fan_in: usize, fan_out: usize| -> Tensor {
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    let data = (0..fan_in * fan_out).map(|_| rng.normal() * std).collect();
+                    Tensor { shape: vec![fan_in, fan_out], data }
+                };
+                let w1 = he(d_in, hidden);
+                let w2 = he(hidden, classes);
+                vec![
+                    ("fc1.b".to_string(), Tensor::zeros(&[hidden])),
+                    ("fc1.w".to_string(), w1),
+                    ("fc2.b".to_string(), Tensor::zeros(&[classes])),
+                    ("fc2.w".to_string(), w2),
+                ]
+            }
+        };
+        // w_0 starts on the low-precision grid (quantize_params, step 0)
+        let qw = &self.spec.quant.w;
+        if !qw.is_none() {
+            for (name, t) in trainable.iter_mut() {
+                let s = seed_for(0, site_id(name), TAG_W);
+                *t = quant::apply_format(qw, t, s, Role::Weight, is_per_tensor(name));
+            }
+        }
+        let momentum = trainable
+            .iter()
+            .map(|(n, t)| (n.clone(), Tensor::zeros(&t.shape)))
+            .collect();
+        Ok(ModelState { trainable, state: vec![], momentum })
+    }
+
+    fn train_step(
+        &self,
+        ms: &mut ModelState,
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Result<f64> {
+        let b = self.batch_of(x, y)?;
+        let q = &self.spec.quant;
+        let (loss, mut grads) = self.grads(&ms.trainable, x, y, b, &q.a, &q.e, step)?;
+        // weight decay folded into the gradient before Q_G (classic SGD-WD)
+        let wd = self.spec.weight_decay as f32;
+        if wd > 0.0 {
+            for ((_, g), (_, w)) in grads.iter_mut().zip(&ms.trainable) {
+                g.axpy(wd, w)?;
+            }
+        }
+        // Q_G at gradient production (Algorithm 2 step 2)
+        if !q.g.is_none() {
+            for (name, g) in grads.iter_mut() {
+                let s = seed_for(step, site_id(name), TAG_G);
+                *g = quant::apply_format(&q.g, g, s, Role::Grad, is_per_tensor(name));
+            }
+        }
+        let rho = q.rho as f32;
+        let plain_sgd = rho == 0.0 && q.m.is_none();
+        for (i, (name, w)) in ms.trainable.iter_mut().enumerate() {
+            let (gname, g) = &grads[i];
+            debug_assert_eq!(gname.as_str(), name.as_str());
+            let sid = site_id(name);
+            let per_tensor = is_per_tensor(name);
+            let quantize_w = |t: &Tensor| -> Tensor {
+                if q.w.is_none() {
+                    t.clone()
+                } else {
+                    quant::apply_format(&q.w, t, seed_for(step, sid, TAG_W), Role::Weight, per_tensor)
+                }
+            };
+            if plain_sgd {
+                // w' = Q_W(w − lr·g)
+                let mut wn = w.clone();
+                wn.axpy(-lr, g)?;
+                *w = quantize_w(&wn);
+            } else {
+                // v' = ρ·Q_M(v) + g ; w' = Q_W(w − lr·v')
+                let v = &mut ms.momentum[i].1;
+                let mut vn = if q.m.is_none() {
+                    v.clone()
+                } else {
+                    quant::apply_format(&q.m, v, seed_for(step, sid, TAG_M), Role::Momentum, per_tensor)
+                };
+                vn.scale(rho);
+                vn.axpy(1.0, g)?;
+                let mut wn = w.clone();
+                wn.axpy(-lr, &vn)?;
+                *w = quantize_w(&wn);
+                *v = vn;
+            }
+        }
+        Ok(loss)
+    }
+
+    fn eval(
+        &self,
+        trainable: &NamedTensors,
+        _state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<EvalOut> {
+        let b = self.batch_of(x, y)?;
+        let (loss, metric) = self.eval_forward(trainable, x, y, b)?;
+        // Fig. 2 (middle): logreg eval also reports ‖∇f‖² of the
+        // FULL-PRECISION objective at this iterate
+        let grad_norm_sq = if matches!(self.arch, Arch::LogReg { .. }) {
+            let (_, g) = self.grads(
+                trainable,
+                x,
+                y,
+                b,
+                &QuantFormat::None,
+                &QuantFormat::None,
+                0,
+            )?;
+            Some(g.iter().map(|(_, t)| t.sq_norm()).sum())
+        } else {
+            None
+        };
+        Ok(EvalOut { loss, metric, grad_norm_sq })
+    }
+}

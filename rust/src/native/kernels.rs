@@ -1,0 +1,246 @@
+//! Dense f32 forward/backward kernels for the native backend.
+//!
+//! Deliberately simple row-major loops (HALP's observation: low-precision
+//! training kernels are small enough to implement directly): matmul in
+//! the three orientations the backward pass needs, bias/ReLU, and the
+//! fused softmax cross-entropy with its gradient. Loss accumulation is
+//! f64; everything else is f32 like the XLA artifacts.
+
+/// out[m,n] = a[m,k] @ b[k,n]. `out` is overwritten.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[k,n] = aᵀ[k,m] @ b[m,n] with a given as [m,k] — the weight-gradient
+/// contraction Xᵀ·E. `out` is overwritten.
+pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (j, &av) in arow.iter().enumerate() {
+            let orow = &mut out[j * n..(j + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m,n] = a[m,k] @ bᵀ[k,n] with b given as [n,k] — the input-error
+/// backprop contraction E·Wᵀ. `out` is overwritten.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// rows += bias, broadcast over leading dims (`x.len() % bias.len() == 0`).
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    debug_assert_eq!(x.len() % bias.len(), 0);
+    for row in x.chunks_mut(bias.len()) {
+        for (o, &b) in row.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+/// Elementwise max(x, 0).
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// grad ⊙ 1[pre > 0] — ReLU backward against the pre-activation.
+pub fn relu_backward(grad: &mut [f32], pre: &[f32]) {
+    debug_assert_eq!(grad.len(), pre.len());
+    for (g, &p) in grad.iter_mut().zip(pre) {
+        if p <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Fused softmax cross-entropy over a batch of logits.
+pub struct CeOut {
+    /// Σᵢ (logsumexp(zᵢ) − zᵢ[yᵢ]) — divide by batch for the mean loss.
+    pub loss_sum: f64,
+    /// Batch error count (argmax ≠ label, first-index tie-break like jnp).
+    pub errors: f64,
+    /// scale · (softmax(zᵢ) − onehot(yᵢ)), flattened [batch, classes].
+    pub dlogits: Vec<f32>,
+}
+
+/// `labels` are float-encoded class ids (the dataset convention); `scale`
+/// is folded into the gradient (pass 1/batch for the mean-loss gradient).
+pub fn softmax_ce(logits: &[f32], labels: &[f32], batch: usize, classes: usize, scale: f32) -> CeOut {
+    debug_assert_eq!(logits.len(), batch * classes);
+    debug_assert_eq!(labels.len(), batch);
+    let mut loss_sum = 0.0f64;
+    let mut errors = 0usize;
+    let mut dlogits = vec![0.0f32; batch * classes];
+    for i in 0..batch {
+        let z = &logits[i * classes..(i + 1) * classes];
+        let y = labels[i] as usize;
+        debug_assert!(y < classes);
+        let mut zmax = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (c, &v) in z.iter().enumerate() {
+            if v > zmax {
+                zmax = v;
+                arg = c;
+            }
+        }
+        if arg != y {
+            errors += 1;
+        }
+        let mut esum = 0.0f32;
+        let d = &mut dlogits[i * classes..(i + 1) * classes];
+        for (e, &v) in d.iter_mut().zip(z) {
+            *e = (v - zmax).exp();
+            esum += *e;
+        }
+        loss_sum += (esum.ln() + zmax - z[y]) as f64;
+        let inv = scale / esum;
+        for (c, e) in d.iter_mut().enumerate() {
+            *e *= inv;
+            if c == y {
+                *e -= scale;
+            }
+        }
+    }
+    CeOut { loss_sum, errors: errors as f64, dlogits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_plain() {
+        // random-ish small matrices; compare against explicit transposes
+        let m = 3;
+        let k = 4;
+        let n = 2;
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..m * n).map(|i| (i as f32 * 1.3).cos()).collect();
+        // at_b: aᵀ(m×k interpreted) @ b -> [k,n]
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let mut want = vec![0.0f32; k * n];
+        matmul(&at, &b, k, m, n, &mut want);
+        let mut got = vec![0.0f32; k * n];
+        matmul_at_b(&a, &b, m, k, n, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+        // a_bt: c[m×k] @ dᵀ with d as [n,k]
+        let d: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut dt = vec![0.0f32; k * n];
+        for i in 0..n {
+            for j in 0..k {
+                dt[j * n + i] = d[i * k + j];
+            }
+        }
+        let mut want2 = vec![0.0f32; m * n];
+        matmul(&a, &dt, m, k, n, &mut want2);
+        let mut got2 = vec![0.0f32; m * n];
+        matmul_a_bt(&a, &d, m, k, n, &mut got2);
+        for (g, w) in got2.iter().zip(&want2) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn bias_and_relu() {
+        let mut x = vec![1.0, -2.0, 3.0, -4.0];
+        add_bias(&mut x, &[1.0, 1.0]);
+        assert_eq!(x, vec![2.0, -1.0, 4.0, -3.0]);
+        let pre = x.clone();
+        relu(&mut x);
+        assert_eq!(x, vec![2.0, 0.0, 4.0, 0.0]);
+        let mut g = vec![1.0f32; 4];
+        relu_backward(&mut g, &pre);
+        assert_eq!(g, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        // zero logits, 4 classes: loss = ln 4, grads = (1/4 - onehot)/B
+        let out = softmax_ce(&[0.0; 8], &[1.0, 3.0], 2, 4, 0.5);
+        assert!((out.loss_sum / 2.0 - 4f64.ln()).abs() < 1e-6);
+        // argmax of all-zero logits is class 0 -> both labels wrong
+        assert_eq!(out.errors, 2.0);
+        assert!((out.dlogits[0] - 0.125).abs() < 1e-6);
+        assert!((out.dlogits[1] + 0.375).abs() < 1e-6);
+        // gradient rows sum to zero
+        let s: f32 = out.dlogits[..4].iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_ce_gradient_matches_finite_difference() {
+        let logits = [0.3f32, -0.7, 1.2, 0.1, 0.9, -0.2];
+        let labels = [2.0f32, 0.0];
+        let base = softmax_ce(&logits, &labels, 2, 3, 1.0);
+        let eps = 1e-3f32;
+        for i in 0..6 {
+            let mut plus = logits;
+            plus[i] += eps;
+            let lp = softmax_ce(&plus, &labels, 2, 3, 1.0).loss_sum;
+            let mut minus = logits;
+            minus[i] -= eps;
+            let lm = softmax_ce(&minus, &labels, 2, 3, 1.0).loss_sum;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - base.dlogits[i]).abs() < 1e-2,
+                "elem {i}: fd {fd} vs analytic {}",
+                base.dlogits[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! Pure-rust execution engine — the default [`crate::runtime::ModelBackend`].
+//!
+//! No Python, no artifacts, no XLA: dense forward/backward kernels
+//! ([`kernels`]) composed into the paper's theory-scale models
+//! ([`backend`]), with the full Algorithm-2 quantized step (Q_W/Q_A/Q_G/
+//! Q_E/Q_M via [`crate::quant`]) executed natively. This is what makes
+//! `cargo test` hermetic and what the trainer integration tests run
+//! against unconditionally.
+//!
+//! The registry mirrors the AOT registry names (python/compile/aot.py)
+//! for the architectures implemented here, so CLI invocations and
+//! experiments are drop-in compatible with the artifact backend:
+//!
+//! | name               | arch               | quantization             |
+//! |--------------------|--------------------|--------------------------|
+//! | `linreg_fp32`      | linear regression  | none                     |
+//! | `linreg_fx86`      | linear regression  | Q_W fixed W8F6           |
+//! | `logreg_fp32`      | logistic regression| none                     |
+//! | `logreg_fx_f{F}`   | logistic regression| Q_W fixed W(F+2)F{F}     |
+//! | `mlp_fp32`         | 256-128-10 MLP     | none, ρ=0.9              |
+//! | `mlp_qmm_fx86`     | 256-128-10 MLP     | all five roles W8F6, ρ=0.9|
+//! | `mlp_bfp8small`    | 256-128-10 MLP     | all five roles 8-bit Small-block BFP, ρ=0.9|
+
+pub mod backend;
+pub mod kernels;
+
+pub use backend::{site_id, NativeBackend};
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::quant::QuantFormat;
+use crate::runtime::{IoSpec, ModelSpec, QuantSet};
+
+use backend::Arch;
+
+/// Fractional-bit sweep mirrored from the AOT registry (Fig. 2 right).
+pub const LOGREG_FRACTIONAL_BITS: [i32; 7] = [2, 4, 6, 8, 10, 12, 14];
+
+/// All model names the native engine provides.
+pub fn model_names() -> Vec<String> {
+    let mut names = vec!["linreg_fp32".to_string(), "linreg_fx86".to_string()];
+    names.push("logreg_fp32".to_string());
+    for f in LOGREG_FRACTIONAL_BITS {
+        names.push(format!("logreg_fx_f{f}"));
+    }
+    names.push("mlp_fp32".to_string());
+    names.push("mlp_qmm_fx86".to_string());
+    names.push("mlp_bfp8small".to_string());
+    names
+}
+
+/// Can `load(name)` succeed? Name-only check, no spec construction.
+pub fn supports(name: &str) -> bool {
+    if let Some(f) = name.strip_prefix("logreg_fx_f") {
+        return f.parse::<i32>().map(|fl| (1..=20).contains(&fl)).unwrap_or(false);
+    }
+    matches!(
+        name,
+        "linreg_fp32" | "linreg_fx86" | "logreg_fp32" | "mlp_fp32" | "mlp_qmm_fx86"
+            | "mlp_bfp8small"
+    )
+}
+
+fn quant_set(
+    name: &str,
+    rho: f64,
+    w: QuantFormat,
+    a: QuantFormat,
+    g: QuantFormat,
+    e: QuantFormat,
+    m: QuantFormat,
+) -> QuantSet {
+    QuantSet { name: name.to_string(), rho, w, a, g, e, m }
+}
+
+fn fp32_quant(rho: f64) -> QuantSet {
+    use QuantFormat::None as N;
+    quant_set("fp32", rho, N, N, N, N, N)
+}
+
+/// Algorithm-1 setting: only the weight/accumulator is quantized.
+fn fixed_weights_only(wl: u32, fl: i32) -> QuantSet {
+    use QuantFormat::None as N;
+    quant_set(
+        &format!("fixedw_w{wl}f{fl}"),
+        0.0,
+        QuantFormat::fixed(wl, fl),
+        N,
+        N,
+        N,
+        N,
+    )
+}
+
+/// Fixed point on all five Algorithm-2 roles (theory experiments §4.3).
+fn fixed_all(wl: u32, fl: i32, rho: f64) -> QuantSet {
+    let f = QuantFormat::fixed(wl, fl);
+    quant_set(
+        &format!("fixed_w{wl}f{fl}"),
+        rho,
+        f.clone(),
+        f.clone(),
+        f.clone(),
+        f.clone(),
+        f,
+    )
+}
+
+/// The paper's 8-bit deep-learning setting (§5): all five roles in 8-bit
+/// BFP with 8-bit shared exponents.
+fn bfp8(small_block: bool, rho: f64) -> QuantSet {
+    let f = QuantFormat::bfp(8, small_block);
+    let tag = if small_block { "small" } else { "big" };
+    quant_set(&format!("bfp8_{tag}"), rho, f.clone(), f.clone(), f.clone(), f.clone(), f)
+}
+
+fn io(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.to_string(), shape: shape.to_vec() }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spec(
+    name: &str,
+    family: &str,
+    task: &str,
+    dataset: &str,
+    classes: usize,
+    quant: QuantSet,
+    batch_train: usize,
+    batch_eval: usize,
+    x_shape: Vec<usize>,
+    trainable: Vec<IoSpec>,
+) -> ModelSpec {
+    ModelSpec {
+        name: name.to_string(),
+        family: family.to_string(),
+        task: task.to_string(),
+        dataset: dataset.to_string(),
+        classes,
+        quant,
+        weight_decay: 0.0,
+        batch_train,
+        batch_eval,
+        x_shape,
+        y_shape: vec![],
+        trainable,
+        state: vec![],
+        entries: BTreeMap::new(),
+    }
+}
+
+const LINREG_D: usize = 256;
+const LOGREG_D: usize = 784;
+const LOGREG_K: usize = 10;
+const LOGREG_LAM: f32 = 1e-4;
+const MLP_D: usize = 256;
+const MLP_H: usize = 128;
+const MLP_K: usize = 10;
+
+fn linreg(name: &str, quant: QuantSet) -> NativeBackend {
+    let s = spec(
+        name,
+        "linreg",
+        "regression",
+        "linreg_synth",
+        0,
+        quant,
+        1,
+        256,
+        vec![LINREG_D],
+        vec![io("w", &[LINREG_D])],
+    );
+    NativeBackend::new(s, Arch::LinReg { d: LINREG_D })
+}
+
+fn logreg(name: &str, quant: QuantSet) -> NativeBackend {
+    let s = spec(
+        name,
+        "logreg",
+        "classification",
+        "mnist_like",
+        LOGREG_K,
+        quant,
+        32,
+        512,
+        vec![LOGREG_D],
+        // sorted-name order, the artifact calling convention
+        vec![io("b", &[LOGREG_K]), io("w", &[LOGREG_D, LOGREG_K])],
+    );
+    NativeBackend::new(s, Arch::LogReg { d: LOGREG_D, classes: LOGREG_K, lam: LOGREG_LAM })
+}
+
+fn mlp(name: &str, quant: QuantSet) -> NativeBackend {
+    let s = spec(
+        name,
+        "mlp",
+        "classification",
+        "mnist_like_256",
+        MLP_K,
+        quant,
+        32,
+        256,
+        vec![MLP_D],
+        vec![
+            io("fc1.b", &[MLP_H]),
+            io("fc1.w", &[MLP_D, MLP_H]),
+            io("fc2.b", &[MLP_K]),
+            io("fc2.w", &[MLP_H, MLP_K]),
+        ],
+    );
+    NativeBackend::new(s, Arch::Mlp { d_in: MLP_D, hidden: MLP_H, classes: MLP_K })
+}
+
+/// Build the named native model. Unknown names report the available set.
+pub fn load(name: &str) -> Result<NativeBackend> {
+    if let Some(f) = name.strip_prefix("logreg_fx_f") {
+        let fl: i32 = f
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad fractional bits in {name:?}"))?;
+        if !(1..=20).contains(&fl) {
+            bail!("fractional bits {fl} out of range in {name:?}");
+        }
+        return Ok(logreg(name, fixed_weights_only(fl as u32 + 2, fl)));
+    }
+    Ok(match name {
+        "linreg_fp32" => linreg(name, fp32_quant(0.0)),
+        "linreg_fx86" => linreg(name, fixed_weights_only(8, 6)),
+        "logreg_fp32" => logreg(name, fp32_quant(0.0)),
+        "mlp_fp32" => mlp(name, fp32_quant(0.9)),
+        "mlp_qmm_fx86" => mlp(name, fixed_all(8, 6, 0.9)),
+        "mlp_bfp8small" => mlp(name, bfp8(true, 0.9)),
+        other => bail!(
+            "unknown native model {other:?} (available: {})",
+            model_names().join(" ")
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelBackend;
+
+    #[test]
+    fn registry_loads_every_listed_model() {
+        for name in model_names() {
+            let m = load(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(m.spec().name, name);
+            assert!(m.spec().param_count() > 0, "{name}");
+        }
+        assert!(load("nope").is_err());
+    }
+
+    #[test]
+    fn supports_agrees_with_load_everywhere() {
+        // supports() is the cheap name-only gate for load(): the two
+        // must never drift, including on the parametric logreg names
+        // and on near-miss spellings
+        let mut probes = model_names();
+        probes.extend(
+            [
+                "logreg_fx_f3",
+                "logreg_fx_f20",
+                "logreg_fx_f0",
+                "logreg_fx_f21",
+                "logreg_fx_f",
+                "logreg_fx_fx",
+                "cifar10_vgg_bfp8small",
+                "wage_cnn",
+                "mlp",
+                "nope",
+                "",
+            ]
+            .map(String::from),
+        );
+        for name in probes {
+            assert_eq!(
+                supports(&name),
+                load(&name).is_ok(),
+                "supports/load drift on {name:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_on_grid() {
+        let m = load("mlp_qmm_fx86").unwrap();
+        let a = m.init(3.0).unwrap();
+        let b = m.init(3.0).unwrap();
+        let c = m.init(4.0).unwrap();
+        for ((_, ta), (_, tb)) in a.trainable.iter().zip(&b.trainable) {
+            assert_eq!(ta.data, tb.data);
+        }
+        // different seeds give different weights
+        let wa = &a.trainable[1].1.data;
+        let wc = &c.trainable[1].1.data;
+        assert_ne!(wa, wc);
+        // W8F6: every weight on the 2^-6 grid
+        let delta = 2f32.powi(-6);
+        for &v in wa.iter().take(64) {
+            let k = v / delta;
+            assert!((k - k.round()).abs() < 1e-3, "{v} off grid");
+        }
+        // momentum starts at zero, state is empty
+        assert!(a.momentum.iter().all(|(_, t)| t.data.iter().all(|&v| v == 0.0)));
+        assert!(a.state.is_empty());
+    }
+}

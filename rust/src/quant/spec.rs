@@ -65,6 +65,29 @@ impl QuantFormat {
             _ => None,
         }
     }
+
+    /// The same format with nearest (round-half-up) instead of stochastic
+    /// rounding — eval-time activation quantization (graphs.py eval_cfg).
+    pub fn nearest(&self) -> QuantFormat {
+        match *self {
+            QuantFormat::None => QuantFormat::None,
+            QuantFormat::Fixed { wl, fl, .. } => QuantFormat::Fixed { wl, fl, stochastic: false },
+            QuantFormat::Bfp { wl, ebits, small_block, .. } => {
+                QuantFormat::Bfp { wl, ebits, small_block, stochastic: false }
+            }
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, QuantFormat::None)
+    }
+}
+
+/// Mirrors qtrain._is_per_tensor: biases and norm scale/shift carry one
+/// shared exponent (§5 Small-block modification) regardless of rank.
+pub fn is_per_tensor(name: &str) -> bool {
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    matches!(leaf, "b" | "bias" | "scale" | "shift" | "gamma" | "beta")
 }
 
 /// Mirror of qconfig.block_axes_for: which axes the shared exponent

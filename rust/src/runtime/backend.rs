@@ -1,0 +1,100 @@
+//! The execution-backend abstraction.
+//!
+//! Every engine that can run a (model, quant-config) pair — the pure-rust
+//! [`crate::native`] kernels, or the XLA artifact runtime behind the
+//! `xla-runtime` feature — exposes the same typed surface to the
+//! coordinator: `init`, `train_step`, `eval`, `eval_batch_stats`. The
+//! trainer, the experiment registry, the CLI and the benches are all
+//! written against `dyn ModelBackend`, so `cargo test` exercises the full
+//! Algorithm-2 loop hermetically while the artifact path stays a drop-in.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::artifact::ModelSpec;
+
+/// The mutable training state the coordinator threads through steps.
+pub struct ModelState {
+    pub trainable: NamedTensors,
+    pub state: NamedTensors,
+    pub momentum: NamedTensors,
+}
+
+impl ModelState {
+    /// Params in artifact order (trainable then state) for eval calls.
+    pub fn eval_params(&self) -> Vec<&Tensor> {
+        self.trainable.iter().map(|(_, t)| t).chain(self.state.iter().map(|(_, t)| t)).collect()
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalOut {
+    pub loss: f64,
+    /// Batch error count (classification / LM) or squared-error sum
+    /// (regression); the trainer normalizes over the eval set.
+    pub metric: f64,
+    pub grad_norm_sq: Option<f64>,
+}
+
+/// One loaded (model, quantization-config) pair on some execution engine.
+pub trait ModelBackend {
+    /// Static metadata: shapes, batch sizes, quant formats, dataset.
+    fn spec(&self) -> &ModelSpec;
+
+    /// Fresh (trainable, state, momentum) for `seed`, with the weights
+    /// already Q_W-quantized onto the low-precision grid (Algorithm 1's
+    /// post-warm-up w_0 discipline).
+    fn init(&self, seed: f32) -> Result<ModelState>;
+
+    /// One Algorithm-2 training step; updates `ms` in place, returns the
+    /// batch training loss. Must be a pure function of
+    /// (state, batch, lr, step) — bit-reproducible across runs.
+    fn train_step(
+        &self,
+        ms: &mut ModelState,
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Result<f64>;
+
+    /// Evaluate one batch: mean loss, error count / sq-err sum, and (for
+    /// models that expose it) the squared gradient norm of the
+    /// full-precision objective at this iterate.
+    fn eval(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<EvalOut>;
+
+    /// Evaluate with train-mode batch statistics — the stateless
+    /// equivalent of Izmailov et al.'s bn_update, required for SWA weight
+    /// averages whose BN running stats were collected under different
+    /// weights. Stateless models fall back to the plain eval.
+    fn eval_batch_stats(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<EvalOut> {
+        self.eval(trainable, state, x, y)
+    }
+
+    /// Fig. 3 (right): evaluate with activations quantized to `act_wl`-bit
+    /// Small-block BFP (0 = no activation quantization). Only the XLA
+    /// artifact backend provides this entry today.
+    fn eval_flex(
+        &self,
+        _trainable: &NamedTensors,
+        _state: &NamedTensors,
+        _x: &[f32],
+        _y: &[f32],
+        _act_wl: f32,
+    ) -> Result<EvalOut> {
+        bail!("model {} has no eval_flex entry on this backend", self.spec().name)
+    }
+}

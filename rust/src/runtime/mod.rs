@@ -1,15 +1,26 @@
-//! PJRT runtime: load the AOT artifacts and run them from rust.
+//! Execution runtimes behind the [`backend::ModelBackend`] abstraction.
 //!
-//! `Python never on the request path`: the artifacts directory (built
-//! once by `make artifacts`) contains HLO text + manifest.json; this
-//! module compiles each entry point on a shared PJRT CPU client and
-//! exposes typed init/train/eval calls over [`crate::tensor::Tensor`].
+//! * [`backend`] — the trait the coordinator is written against, plus the
+//!   shared `ModelState`/`EvalOut` types.
+//! * [`artifact`] — manifest.json schema for the AOT artifact set (built
+//!   once by `make artifacts`); parsed without the XLA runtime so tooling
+//!   and tests can inspect manifests hermetically.
+//! * [`model`] *(feature `xla-runtime`)* — loads the AOT artifacts onto a
+//!   PJRT CPU client and exposes them as a `ModelBackend`; Python is
+//!   never on the training path.
+//!
+//! The default backend is [`crate::native`], which needs no artifacts at
+//! all.
 
 pub mod artifact;
+pub mod backend;
+#[cfg(feature = "xla-runtime")]
 pub mod model;
 
 pub use artifact::{EntrySpec, IoSpec, Manifest, ModelSpec, QuantSet};
-pub use model::{EvalOut, LoadedModel, ModelState, Runtime};
+pub use backend::{EvalOut, ModelBackend, ModelState};
+#[cfg(feature = "xla-runtime")]
+pub use model::{LoadedModel, Runtime};
 
 use std::path::PathBuf;
 

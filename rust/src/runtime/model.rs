@@ -7,6 +7,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::tensor::{NamedTensors, Tensor};
 
 use super::artifact::{EntrySpec, Manifest, ModelSpec};
+use super::backend::{EvalOut, ModelBackend, ModelState};
 
 /// Shared PJRT client; compile artifacts through this.
 pub struct Runtime {
@@ -114,27 +115,6 @@ pub fn scalar_literal(v: f32) -> xla::Literal {
 pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
     let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
     Tensor::new(shape.to_vec(), data)
-}
-
-/// The mutable training state the coordinator threads through steps.
-pub struct ModelState {
-    pub trainable: NamedTensors,
-    pub state: NamedTensors,
-    pub momentum: NamedTensors,
-}
-
-impl ModelState {
-    /// Params in artifact order (trainable then state) for eval calls.
-    pub fn eval_params(&self) -> Vec<&Tensor> {
-        self.trainable.iter().map(|(_, t)| t).chain(self.state.iter().map(|(_, t)| t)).collect()
-    }
-}
-
-#[derive(Clone, Copy, Debug, Default)]
-pub struct EvalOut {
-    pub loss: f64,
-    pub metric: f64,
-    pub grad_norm_sq: Option<f64>,
 }
 
 pub struct LoadedModel {
@@ -302,5 +282,59 @@ impl LoadedModel {
             .as_ref()
             .ok_or_else(|| anyhow!("model {} has no eval_flex entry", self.spec.name))?;
         self.eval_common(entry, trainable, state, x, y, Some(act_wl))
+    }
+}
+
+/// The artifact runtime is one backend among others; the inherent methods
+/// above keep their concrete signatures for direct callers.
+impl ModelBackend for LoadedModel {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn init(&self, seed: f32) -> Result<ModelState> {
+        LoadedModel::init(self, seed)
+    }
+
+    fn train_step(
+        &self,
+        ms: &mut ModelState,
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Result<f64> {
+        LoadedModel::train_step(self, ms, x, y, lr, step)
+    }
+
+    fn eval(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<EvalOut> {
+        LoadedModel::eval(self, trainable, state, x, y)
+    }
+
+    fn eval_batch_stats(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<EvalOut> {
+        LoadedModel::eval_batch_stats(self, trainable, state, x, y)
+    }
+
+    fn eval_flex(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+        act_wl: f32,
+    ) -> Result<EvalOut> {
+        LoadedModel::eval_flex(self, trainable, state, x, y, act_wl)
     }
 }

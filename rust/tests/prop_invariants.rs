@@ -90,6 +90,58 @@ fn prop_bfp_per_row_matches_rowwise_big_block() {
 }
 
 #[test]
+fn prop_bfp_quantization_is_idempotent() {
+    // Q(Q(x)) = Q(x): once on the BFP grid, re-quantizing with nearest
+    // rounding is the identity. Inputs are non-negative (the activation
+    // case — BFP's main consumer after ReLU): a value clipped to the
+    // NEGATIVE range edge −2^(e+1) legitimately bumps the re-derived
+    // block exponent, which is a range change, not a rounding defect.
+    check("bfp idempotent", &cfg(200), |rng, case| {
+        let rows = 1 + rng.below(4);
+        let cols = 1 + rng.below(16);
+        let mut data: Vec<f32> = gen_vec(rng, rows * cols).iter().map(|v| v.abs()).collect();
+        data.resize(rows * cols, 0.25);
+        let t = Tensor::new(vec![rows, cols], data).unwrap();
+        let wl = 4 + (case % 10) as u32;
+        let axes: &[usize] = match case % 3 {
+            0 => &[],
+            1 => &[0],
+            _ => &[1],
+        };
+        let q1 = bfp::quantize_bfp_tensor(&t, wl, 8, rng.next_u32(), axes, true);
+        let q2 = bfp::quantize_bfp_tensor(&q1, wl, 8, rng.next_u32(), axes, false);
+        for (i, (&a, &b)) in q1.data.iter().zip(&q2.data).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("elem {i}: Q(Q(x))={b} != Q(x)={a} (wl={wl}, axes={axes:?})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stochastic_rounding_is_unbiased_in_expectation() {
+    // E[Q(x)] = x for in-range x: average the rounding of n identical
+    // values (each element draws its own uniform) and compare to x.
+    // Var per element ≤ δ²/4, so a 6σ tolerance is 3δ/√n.
+    check("stochastic rounding unbiased", &cfg(40), |rng, case| {
+        let n = 4096;
+        let (wl, fl) = (12, 8);
+        let delta = 2f64.powi(-fl);
+        // x strictly inside the representable range, off-grid
+        let x = rng.uniform_in(-3.0, 3.0) + (delta as f32) / 3.0;
+        let xs = vec![x; n];
+        let q = fixed::quantize_fixed(&xs, wl, fl, rng.next_u32().wrapping_add(case as u32), true);
+        let mean = q.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let tol = 3.0 * delta / (n as f64).sqrt();
+        if (mean - x as f64).abs() > tol {
+            return Err(format!("E[Q({x})] = {mean}, off by {} > {tol}", (mean - x as f64).abs()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_swa_accumulator_equals_arithmetic_mean() {
     check("SWA fold = mean", &cfg(100), |rng, _| {
         let n = 1 + rng.below(16);

@@ -1,0 +1,103 @@
+//! API-compatible stub for the `xla` crate (xla-rs), covering exactly the
+//! surface `swalp::runtime::model` uses.
+//!
+//! It exists so that `--features xla-runtime` type-checks hermetically —
+//! dependency resolution never touches the network and no XLA shared
+//! libraries are required. Every entry point that would need a real PJRT
+//! client returns [`Error::StubOnly`] at runtime. To execute the AOT
+//! artifacts for real, replace this path dependency with the actual
+//! xla-rs crate (see rust/README.md, "Running the XLA artifact backend").
+
+use std::fmt;
+
+/// Stub error: carries a message explaining that the real runtime is absent.
+pub enum Error {
+    StubOnly(&'static str),
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::StubOnly(what) => write!(
+                f,
+                "{what}: built against the vendored xla stub; link the real \
+                 xla-rs crate to execute artifacts (see rust/README.md)"
+            ),
+        }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (stub: holds nothing).
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal(())
+    }
+
+    pub fn scalar(_v: f32) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::StubOnly("Literal::reshape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::StubOnly("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::StubOnly("Literal::to_tuple"))
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::StubOnly("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::StubOnly("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::StubOnly("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::StubOnly("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::StubOnly("PjRtClient::compile"))
+    }
+}
