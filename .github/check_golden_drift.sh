@@ -1,0 +1,59 @@
+#!/usr/bin/env bash
+# Golden-vector drift guard.
+#
+# rust/tests/data/golden_quant.json pins the cross-layer quantizer
+# semantics (rust vs the Python reference). Regenerating it is a
+# deliberate, documented act: any diff that touches the golden file must
+# also touch rust/README.md's "Golden vector regeneration" section in
+# the same change, or CI fails here.
+#
+# Diff range: merge-base..HEAD on pull requests; the full pushed range
+# (PUSH_BASE_SHA, set by CI from github.event.before) on push events so
+# multi-commit pushes can't slip a golden change past the guard. First
+# commits / new branches pass trivially.
+set -euo pipefail
+
+GOLDEN="rust/tests/data/golden_quant.json"
+README="rust/README.md"
+
+ZERO_SHA="0000000000000000000000000000000000000000"
+if [[ -n "${GITHUB_BASE_REF:-}" ]]; then
+  git fetch --quiet origin "$GITHUB_BASE_REF"
+  range="origin/${GITHUB_BASE_REF}...HEAD"
+elif [[ -n "${PUSH_BASE_SHA:-}" && "$PUSH_BASE_SHA" != "$ZERO_SHA" ]] \
+  && git rev-parse --verify --quiet "$PUSH_BASE_SHA" >/dev/null; then
+  range="${PUSH_BASE_SHA}..HEAD"
+elif git rev-parse --verify --quiet HEAD~1 >/dev/null; then
+  range="HEAD~1..HEAD"
+else
+  echo "golden-drift: initial commit, nothing to compare"
+  exit 0
+fi
+
+changed="$(git diff --name-only "$range")"
+
+if ! grep -qx "$GOLDEN" <<<"$changed"; then
+  echo "golden-drift: $GOLDEN unchanged in $range — ok"
+  exit 0
+fi
+
+if ! grep -qx "$README" <<<"$changed"; then
+  echo "golden-drift: FAIL"
+  echo "  $GOLDEN changed in $range but $README did not."
+  echo "  Regenerating the golden vectors must be documented: update the"
+  echo "  'Golden vector regeneration' section of $README (why the"
+  echo "  quantization semantics changed, and with which reference) in"
+  echo "  the same change."
+  exit 1
+fi
+
+if ! git diff "$range" -- "$README" | grep -qi "golden"; then
+  echo "golden-drift: FAIL"
+  echo "  $GOLDEN changed and $README was edited, but the edit does not"
+  echo "  touch the golden-vector regeneration documentation (no diff"
+  echo "  line mentions 'golden'). Document the regeneration in the"
+  echo "  'Golden vector regeneration' section."
+  exit 1
+fi
+
+echo "golden-drift: $GOLDEN changed together with its $README docs — ok"

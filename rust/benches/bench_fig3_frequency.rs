@@ -2,9 +2,9 @@
 //! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
 //! version used for EXPERIMENTS.md.
 //!
-//! Needs the XLA artifact backend (cifar100_vgg_bfp8small is not in the
-//! native registry): build with --features xla-runtime after `make
-//! artifacts`. Skips gracefully otherwise.
+//! Runs on the native conv stack (cifar100_vgg_bfp8small is in the
+//! native registry) — no artifacts needed; the guard below only fires if
+//! the registry regresses.
 
 use swalp::coordinator::experiment::Ctx;
 use swalp::util::cli::Args;

@@ -7,6 +7,12 @@
 //! Runs hermetically — no artifacts needed. The XLA artifact step has its
 //! own latency story (literal marshalling dominates); profile it via
 //! `swalp train` under `--features xla-runtime`.
+//!
+//! Flags: `--quick` trims warmup/iterations (the CI bench-smoke job);
+//! `--json <path>` additionally writes the results as
+//! swalp-bench-v1 JSON (uploaded per-push as the BENCH_hotpath.json
+//! artifact — schema in ROADMAP.md). `RAYON_NUM_THREADS` bounds the
+//! kernel parallelism; see rust/README.md "Parallelism & determinism".
 
 use swalp::coordinator::SwaAccumulator;
 use swalp::data;
@@ -14,47 +20,66 @@ use swalp::native;
 use swalp::quant::{bfp, fixed};
 use swalp::runtime::ModelBackend;
 use swalp::tensor::{NamedTensors, Tensor};
-use swalp::util::bench::{bench, print_result};
+use swalp::util::bench::{bench, print_result, BenchLog, BenchResult};
+use swalp::util::cli::Args;
 
 fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let mut log = BenchLog::new();
+    // (warmup, min_iters, min_secs) for the heavier loops; quick mode is
+    // the CI smoke setting — enough samples for a trend line, not a
+    // stable median
+    let (warm, iters, secs) = if quick { (1, 2, 0.05) } else { (3, 10, 1.0) };
+
+    let report = |log: &mut BenchLog, r: &BenchResult, unit: &str, value: f64| {
+        print_result(r);
+        println!("    -> {value:.1} {unit}");
+        log.push(r);
+        log.push_metric(&r.name, unit, value);
+    };
+
     let n = 1 << 20;
     let xs: Vec<f32> = (0..n).map(|i| ((i % 997) as f32 - 498.0) * 0.01).collect();
 
     // ---- host quantizers ----
     let mut out = xs.clone();
-    let r = bench("quant/fixed W8F6 (1M elems)", 1, 5, 0.5, || {
+    let r = bench("quant/fixed W8F6 (1M elems)", 1, iters.min(5), secs.min(0.5), || {
         out.copy_from_slice(&xs);
         fixed::quantize_fixed_slice(&mut out, 8, 6, 42, true);
     });
-    print_result(&r);
-    println!("    -> {:.0} Melem/s", n as f64 / r.median_s / 1e6);
+    report(&mut log, &r, "Melem/s", n as f64 / r.median_s / 1e6);
 
     let t = Tensor::new(vec![1024, 1024], xs.clone()).unwrap();
-    let r = bench("quant/bfp8 small-block (1024x1024)", 1, 5, 0.5, || {
+    let r = bench("quant/bfp8 small-block (1024x1024)", 1, iters.min(5), secs.min(0.5), || {
         let _ = bfp::quantize_bfp_tensor(&t, 8, 8, 7, &[0], true);
     });
-    print_result(&r);
-    println!("    -> {:.0} Melem/s", n as f64 / r.median_s / 1e6);
+    report(&mut log, &r, "Melem/s", n as f64 / r.median_s / 1e6);
 
     // ---- SWA fold ----
     let named: NamedTensors = vec![("w".into(), t.clone())];
     let mut acc = SwaAccumulator::new(None);
     acc.fold(&named).unwrap();
-    let r = bench("swa/fold f64 (1M elems)", 1, 5, 0.5, || {
+    let r = bench("swa/fold f64 (1M elems)", 1, iters.min(5), secs.min(0.5), || {
         acc.fold(&named).unwrap();
     });
-    print_result(&r);
-    println!("    -> {:.0} Melem/s", n as f64 / r.median_s / 1e6);
+    report(&mut log, &r, "Melem/s", n as f64 / r.median_s / 1e6);
 
     // ---- pure-sim inner loop ----
-    let r = bench("sim/noise_ball_1d 100k steps", 1, 3, 0.5, || {
+    let r = bench("sim/noise_ball_1d 100k steps", 1, iters.min(3), secs.min(0.5), || {
         let _ = swalp::sim::noise_ball_1d(0.1, 0.1, 0.01, 100_000, 1, 3);
     });
-    print_result(&r);
-    println!("    -> {:.1} Msteps/s", 0.1 / r.median_s);
+    report(&mut log, &r, "Msteps/s", 0.1 / r.median_s);
 
-    // ---- native backend train steps ----
-    for name in ["linreg_fx86", "logreg_fx_f6", "mlp_qmm_fx86", "mlp_bfp8small"] {
+    // ---- native backend train steps (dense + conv stacks) ----
+    for name in [
+        "linreg_fx86",
+        "logreg_fx_f6",
+        "mlp_qmm_fx86",
+        "mlp_bfp8small",
+        "cifar10_vgg_bfp8small",
+        "wage_cnn",
+    ] {
         let model = native::load(name).unwrap();
         let split = data::build(&model.spec().dataset, 3, 0.1).unwrap();
         let mut loader =
@@ -63,7 +88,7 @@ fn main() {
         let (x, y) = loader.next_batch();
         let (x, y) = (x.to_vec(), y.to_vec());
         let mut step = 0u64;
-        let r = bench(&format!("native/train_step {name}"), 3, 10, 1.0, || {
+        let r = bench(&format!("native/train_step {name}"), warm, iters, secs, || {
             model.train_step(&mut ms, &x, &y, 0.01, step).unwrap();
             step += 1;
         });
@@ -75,18 +100,27 @@ fn main() {
             params,
             params as f64 / r.median_s / 1e6
         );
+        log.push(&r);
+        log.push_metric(&r.name, "steps/s", 1.0 / r.median_s);
 
         // eval-batch latency (the SWA/test-set evaluation hot path)
         let be = model.spec().batch_eval.min(split.test.n);
         let xe: Vec<f32> = (0..be).flat_map(|i| split.test.sample_x(i).to_vec()).collect();
         let ye: Vec<f32> = (0..be).flat_map(|i| split.test.sample_y(i).to_vec()).collect();
-        let r2 = bench(&format!("native/eval_batch {name}"), 2, 5, 0.5, || {
-            model.eval(&ms.trainable, &ms.state, &xe, &ye).unwrap();
-        });
-        print_result(&r2);
-        println!(
-            "    -> {:.1} samples/ms",
-            be as f64 / (r2.median_s * 1e3)
+        let r2 = bench(
+            &format!("native/eval_batch {name}"),
+            warm.min(2),
+            iters.min(5),
+            secs.min(0.5),
+            || {
+                model.eval(&ms.trainable, &ms.state, &xe, &ye).unwrap();
+            },
         );
+        report(&mut log, &r2, "samples/ms", be as f64 / (r2.median_s * 1e3));
+    }
+
+    println!("kernel threads: {}", rayon::current_num_threads());
+    if let Some(path) = args.opt("json") {
+        log.save(std::path::Path::new(path)).unwrap();
     }
 }

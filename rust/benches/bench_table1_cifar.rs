@@ -2,9 +2,10 @@
 //! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
 //! version used for EXPERIMENTS.md.
 //!
-//! Needs the XLA artifact backend (cifar10_vgg_bfp8small is not in the
-//! native registry): build with --features xla-runtime after `make
-//! artifacts`. Skips gracefully otherwise.
+//! Runs on the native conv stack (the `{cifar10,cifar100}_{vgg,prn}_*`
+//! specs are in the native registry) — no artifacts needed. An
+//! unavailable backend is a hard error, not a skip: this bench executing
+//! real training steps is an acceptance gate for the native engine.
 
 use swalp::coordinator::experiment::Ctx;
 use swalp::util::cli::Args;
@@ -16,16 +17,17 @@ fn main() {
     let ctx = match Ctx::new(!full, seeds) {
         Ok(ctx) => ctx,
         Err(e) => {
-            eprintln!("skipping table1: {e}");
-            return;
+            eprintln!("error: table1 context: {e:#}");
+            std::process::exit(1);
         }
     };
     if !ctx.can_load("cifar10_vgg_bfp8small") {
         eprintln!(
-            "skipping table1: model cifar10_vgg_bfp8small unavailable \
-             (needs --features xla-runtime and `make artifacts`)"
+            "error: model cifar10_vgg_bfp8small unavailable on every backend.\n\
+             registered native models:\n  {}",
+            swalp::native::model_names().join("\n  ")
         );
-        return;
+        std::process::exit(1);
     }
     if let Err(e) = ctx.dispatch("table1") {
         eprintln!("table1 failed: {e:#}");

@@ -2,9 +2,10 @@
 //! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
 //! version used for EXPERIMENTS.md.
 //!
-//! Needs the XLA artifact backend (wage_cnn is not in the
-//! native registry): build with --features xla-runtime after `make
-//! artifacts`. Skips gracefully otherwise.
+//! Runs on the native conv stack (`wage_cnn` is in the native registry)
+//! — no artifacts needed. An unavailable backend is a hard error, not a
+//! skip: this bench executing real training steps is an acceptance gate
+//! for the native engine.
 
 use swalp::coordinator::experiment::Ctx;
 use swalp::util::cli::Args;
@@ -16,16 +17,17 @@ fn main() {
     let ctx = match Ctx::new(!full, seeds) {
         Ok(ctx) => ctx,
         Err(e) => {
-            eprintln!("skipping table3: {e}");
-            return;
+            eprintln!("error: table3 context: {e:#}");
+            std::process::exit(1);
         }
     };
     if !ctx.can_load("wage_cnn") {
         eprintln!(
-            "skipping table3: model wage_cnn unavailable \
-             (needs --features xla-runtime and `make artifacts`)"
+            "error: model wage_cnn unavailable on every backend.\n\
+             registered native models:\n  {}",
+            swalp::native::model_names().join("\n  ")
         );
-        return;
+        std::process::exit(1);
     }
     if let Err(e) = ctx.dispatch("table3") {
         eprintln!("table3 failed: {e:#}");

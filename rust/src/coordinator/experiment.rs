@@ -8,8 +8,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{Schedule, SwaAccumulator, TrainConfig, Trainer};
-use crate::data::{self, loader::Loader, synth};
+use crate::coordinator::{Schedule, SwaAccumulator, TrainConfig, TrainOutcome, Trainer};
+use crate::data::{self, loader::Loader, synth, Split};
 use crate::native;
 use crate::quant::{fixed::quantize_fixed, QuantFormat};
 use crate::runtime::ModelBackend;
@@ -87,6 +87,37 @@ impl Ctx {
              backend is unavailable (build with --features xla-runtime and run \
              `make artifacts`)"
         )
+    }
+
+    /// Run the N seed replicas of one experiment configuration
+    /// concurrently over the backend trait and return the outcomes in
+    /// seed order. Each replica gets its own backend instance (loaded up
+    /// front on this thread — artifact compilation is not re-entrant) and
+    /// its own `TrainConfig` from `mk_cfg(seed)`; a training run is a
+    /// pure function of its config, so the batched results are
+    /// bit-identical to a sequential loop.
+    pub fn run_seeds<F>(&self, name: &str, split: &Split, mk_cfg: F) -> Result<Vec<TrainOutcome>>
+    where
+        F: Fn(u64) -> TrainConfig + Sync,
+    {
+        let n = self.seeds.max(1) as usize;
+        let models: Vec<Box<dyn ModelBackend>> =
+            (0..n).map(|_| self.load(name)).collect::<Result<_>>()?;
+        let mut slots: Vec<Option<Result<TrainOutcome>>> = Vec::new();
+        slots.resize_with(n, || None);
+        let mk_cfg = &mk_cfg;
+        rayon::scope(|s| {
+            for (seed, (model, slot)) in models.iter().zip(slots.iter_mut()).enumerate() {
+                s.spawn(move |_| {
+                    let trainer = Trainer::new(&**model, split);
+                    *slot = Some(trainer.run(&mk_cfg(seed as u64)));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("seed replica did not run"))
+            .collect()
     }
 
     /// Would `load(name)` succeed? Benches use this to skip gracefully.
@@ -331,13 +362,12 @@ that SGD-LP needs (Theorem 2's δ² vs δ)");
                     let spec_name = format!("{ds}_{mname}_{fmt}");
                     let model = self.load(&spec_name)?;
                     let split = data::build(&model.spec().dataset, 21, data_scale)?;
-                    let trainer = Trainer::new(&*model, &split);
-                    let mut errs_sgd = vec![];
-                    let mut errs_swa = vec![];
-                    for seed in 0..self.seeds {
-                        let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
-                        let warmup = warmup_epochs * spe;
-                        let steps = warmup + avg_epochs * spe;
+                    let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
+                    let warmup = warmup_epochs * spe;
+                    let steps = warmup + avg_epochs * spe;
+                    // the N seed replicas run concurrently over the
+                    // backend trait; aggregate mean/std in one pass
+                    let outs = self.run_seeds(&spec_name, &split, |seed| {
                         let mut cfg = TrainConfig::new(
                             steps,
                             warmup,
@@ -346,12 +376,16 @@ that SGD-LP needs (Theorem 2's δ² vs δ)");
                         );
                         cfg.init_seed = 1.0 + seed as f32;
                         cfg.data_seed = 100 + seed;
-                        let out = trainer.run(&cfg)?;
-                        errs_sgd.push(out.sgd_test_err);
-                        errs_swa.push(out.swa_test_err.unwrap_or(f64::NAN));
+                        cfg
+                    })?;
+                    let mut agg_sgd = report::SeedAgg::new();
+                    let mut agg_swa = report::SeedAgg::new();
+                    for out in outs {
+                        agg_sgd.push(out.sgd_test_err);
+                        agg_swa.push(out.swa_test_err.unwrap_or(f64::NAN));
                     }
-                    let (ms, ss) = report::mean_std(&errs_sgd);
-                    let (ma, sa) = report::mean_std(&errs_swa);
+                    let (ms, ss) = (agg_sgd.mean(), agg_sgd.std());
+                    let (ma, sa) = (agg_swa.mean(), agg_swa.std());
                     table.row(vec![
                         ds.into(),
                         mname.into(),

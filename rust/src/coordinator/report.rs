@@ -37,6 +37,46 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     (crate::util::mean(xs), crate::util::stddev(xs))
 }
 
+/// One-pass mean/std (Welford) for multi-seed aggregation: the batched
+/// seed runner streams each replica's scalar in as it completes, no
+/// intermediate vector. Matches [`mean_std`] (sample std, n−1).
+#[derive(Clone, Debug, Default)]
+pub struct SeedAgg {
+    n: f64,
+    mean: f64,
+    m2: f64,
+}
+
+impl SeedAgg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1.0;
+        let d = x - self.mean;
+        self.mean += d / self.n;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation (0 for fewer than two samples).
+    pub fn std(&self) -> f64 {
+        if self.n < 2.0 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1.0)).sqrt()
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n as usize
+    }
+}
+
 /// Log-log slope estimate between two (x, y) points — used to check
 /// O(1/T) / O(δ²) scaling claims.
 pub fn loglog_slope(x0: f64, y0: f64, x1: f64, y1: f64) -> f64 {
@@ -64,5 +104,23 @@ mod tests {
         // y = C/T has slope -1 in log-log
         let s = loglog_slope(100.0, 1.0, 10_000.0, 0.01);
         assert!((s + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seed_agg_matches_two_pass_stats() {
+        let xs = [6.2, 5.9, 7.1, 6.4, 6.0];
+        let mut agg = SeedAgg::new();
+        for &x in &xs {
+            agg.push(x);
+        }
+        let (m, s) = mean_std(&xs);
+        assert!((agg.mean() - m).abs() < 1e-12);
+        assert!((agg.std() - s).abs() < 1e-12);
+        assert_eq!(agg.count(), 5);
+        // degenerate cases
+        let mut one = SeedAgg::new();
+        one.push(3.0);
+        assert_eq!(one.std(), 0.0);
+        assert_eq!(one.mean(), 3.0);
     }
 }

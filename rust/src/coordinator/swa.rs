@@ -41,6 +41,11 @@ impl SwaAccumulator {
 
     /// Fold the current low-precision weights into the running average:
     /// w̄ ← (w̄·m + w)/(m+1).
+    ///
+    /// The update is elementwise, so large tensors fan out over the rayon
+    /// pool in contiguous chunks — bit-identical to the serial pass for
+    /// any thread count (each element's arithmetic is untouched), which
+    /// keeps checkpoint-resume reproducibility intact.
     pub fn fold(&mut self, trainable: &NamedTensors) -> Result<()> {
         if self.m == 0 {
             self.avg = trainable
@@ -53,9 +58,7 @@ impl SwaAccumulator {
             }
             let m = self.m as f64;
             for ((_, acc, _), (_, t)) in self.avg.iter_mut().zip(trainable) {
-                for (a, &v) in acc.iter_mut().zip(&t.data) {
-                    *a = (*a * m + v as f64) / (m + 1.0);
-                }
+                fold_into(acc, &t.data, m);
             }
         }
         self.m += 1;
@@ -106,6 +109,29 @@ impl SwaAccumulator {
             .map(|(&a, &b)| (a - b as f64).powi(2))
             .sum())
     }
+}
+
+/// Elementwise running-mean update, parallel past the threshold where
+/// the pool dispatch amortizes.
+fn fold_into(acc: &mut [f64], w: &[f32], m: f64) {
+    const PAR_MIN: usize = 1 << 16;
+    let serial = |acc: &mut [f64], w: &[f32]| {
+        for (a, &v) in acc.iter_mut().zip(w) {
+            *a = (*a * m + v as f64) / (m + 1.0);
+        }
+    };
+    let threads = rayon::current_num_threads();
+    if acc.len() < PAR_MIN || threads <= 1 {
+        serial(acc, w);
+        return;
+    }
+    let chunk = acc.len().div_ceil(threads);
+    rayon::scope(|s| {
+        for (ac, wc) in acc.chunks_mut(chunk).zip(w.chunks(chunk)) {
+            let serial = &serial;
+            s.spawn(move |_| serial(ac, wc));
+        }
+    });
 }
 
 #[cfg(test)]

@@ -1,15 +1,18 @@
 //! `swalp` — the SWALP coordinator CLI.
 //!
 //! Subcommands:
-//!   list                         native models (+ artifact manifest if present)
-//!   info                         backend availability summary
-//!   train  --model <name> [...]  run SWALP training (see config.rs opts)
-//!   eval   --model <name>        init + one full eval pass (smoke)
-//!   reproduce --exp <id> [--quick] [--seeds N]
-//!                                regenerate a paper table/figure
-//!                                (fig2-linreg fig2-logreg fig2-bits table1
-//!                                 table2 table3 fig3-frequency
-//!                                 fig3-precision thm3)
+//!
+//! ```text
+//! list                         native models (+ artifact manifest if present)
+//! info                         backend availability summary
+//! train  --model <name> [...]  run SWALP training (see config.rs opts)
+//! eval   --model <name>        init + one full eval pass (smoke)
+//! reproduce --exp <id> [--quick] [--seeds N]
+//!                              regenerate a paper table/figure
+//!                              (fig2-linreg fig2-logreg fig2-bits table1
+//!                               table2 table3 fig3-frequency
+//!                               fig3-precision thm3)
+//! ```
 //!
 //! Model resolution order: the native rust engine first (hermetic, no
 //! artifacts needed), then — when built with `--features xla-runtime` and

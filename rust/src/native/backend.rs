@@ -30,9 +30,9 @@ use super::kernels;
 
 /// Role tags folded into quantization seeds (mirror of qtrain.TAG_*).
 const TAG_W: u32 = 1;
-const TAG_A: u32 = 2;
+pub(crate) const TAG_A: u32 = 2;
 const TAG_G: u32 = 3;
-const TAG_E: u32 = 4;
+pub(crate) const TAG_E: u32 = 4;
 const TAG_M: u32 = 5;
 
 /// Stable 32-bit id for a named quantization site (FNV-1a).
@@ -45,7 +45,7 @@ pub fn site_id(name: &str) -> u32 {
     h
 }
 
-fn seed_for(step: u64, site: u32, tag: u32) -> u32 {
+pub(crate) fn seed_for(step: u64, site: u32, tag: u32) -> u32 {
     rng::derive_seed(&[step as u32, site, tag])
 }
 
@@ -58,6 +58,8 @@ pub(super) enum Arch {
     LogReg { d: usize, classes: usize, lam: f32 },
     /// Two dense layers with a ReLU + Q_A/Q_E site between them.
     Mlp { d_in: usize, hidden: usize, classes: usize },
+    /// A small CNN (VGG/PreResNet/WAGE minis) on the im2col conv stack.
+    Conv(crate::native::conv::ConvNet),
 }
 
 pub struct NativeBackend {
@@ -68,7 +70,13 @@ pub struct NativeBackend {
 /// Quantize a flat activation/error buffer, reusing the owned storage
 /// where the format allows (fixed point quantizes in place; BFP needs
 /// the tensor shape for its block-axis policy).
-fn quant_buf(fmt: &QuantFormat, mut data: Vec<f32>, shape: &[usize], seed: u32, role: Role) -> Vec<f32> {
+pub(crate) fn quant_buf(
+    fmt: &QuantFormat,
+    mut data: Vec<f32>,
+    shape: &[usize],
+    seed: u32,
+    role: Role,
+) -> Vec<f32> {
     match fmt {
         QuantFormat::None => data,
         QuantFormat::Fixed { wl, fl, stochastic } => {
@@ -82,7 +90,7 @@ fn quant_buf(fmt: &QuantFormat, mut data: Vec<f32>, shape: &[usize], seed: u32, 
     }
 }
 
-fn col_sums(x: &[f32], cols: usize) -> Vec<f32> {
+pub(crate) fn col_sums(x: &[f32], cols: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; cols];
     for row in x.chunks(cols) {
         for (o, &v) in out.iter_mut().zip(row) {
@@ -92,7 +100,7 @@ fn col_sums(x: &[f32], cols: usize) -> Vec<f32> {
     out
 }
 
-fn get<'a>(ts: &'a NamedTensors, name: &str) -> Result<&'a Tensor> {
+pub(crate) fn get<'a>(ts: &'a NamedTensors, name: &str) -> Result<&'a Tensor> {
     ts.iter()
         .find(|(n, _)| n == name)
         .map(|(_, t)| t)
@@ -240,12 +248,33 @@ impl NativeBackend {
                     ],
                 ))
             }
+            Arch::Conv(ref net) => {
+                let (logits, caches) = net.forward(tr, x, b, a_fmt, step, true)?;
+                let ce = kernels::softmax_ce(&logits, y, b, net.classes, 1.0 / b as f32);
+                let loss = ce.loss_sum / b as f64;
+                let grads = net.backward(tr, caches, ce.dlogits, b, e_fmt, step)?;
+                Ok((loss, grads))
+            }
         }
     }
 
     /// Forward pass + (loss, metric) with eval-time activation
     /// quantization (nearest rounding, step 0 — graphs.py eval_cfg).
     fn eval_forward(&self, tr: &NamedTensors, x: &[f32], y: &[f32], b: usize) -> Result<(f64, f64)> {
+        self.eval_forward_with(tr, x, y, b, &self.spec.quant.a.nearest())
+    }
+
+    /// Eval forward with an explicit activation format — shared by the
+    /// plain eval (the spec's Q_A, nearest-rounded) and `eval_flex`
+    /// (Fig. 3 right: W_SWA-bit Small-block BFP on activations).
+    fn eval_forward_with(
+        &self,
+        tr: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+        b: usize,
+        a_fmt: &QuantFormat,
+    ) -> Result<(f64, f64)> {
         match self.arch {
             Arch::LinReg { d } => {
                 let w = get(tr, "w")?;
@@ -265,7 +294,7 @@ impl NativeBackend {
                 let mut z = vec![0.0f32; b * classes];
                 kernels::matmul(x, &w.data, b, d, classes, &mut z);
                 kernels::add_bias(&mut z, &bias.data);
-                let z = quant_buf(&self.spec.quant.a.nearest(), z, &[b, classes], 0, Role::Act);
+                let z = quant_buf(a_fmt, z, &[b, classes], 0, Role::Act);
                 let ce = kernels::softmax_ce(&z, y, b, classes, 1.0);
                 let loss = ce.loss_sum / b as f64 + 0.5 * lam as f64 * w.sq_norm();
                 Ok((loss, ce.errors))
@@ -279,11 +308,16 @@ impl NativeBackend {
                 kernels::matmul(x, &w1.data, b, d_in, hidden, &mut z1);
                 kernels::add_bias(&mut z1, &b1.data);
                 kernels::relu(&mut z1);
-                let a1 = quant_buf(&self.spec.quant.a.nearest(), z1, &[b, hidden], 0, Role::Act);
+                let a1 = quant_buf(a_fmt, z1, &[b, hidden], 0, Role::Act);
                 let mut z2 = vec![0.0f32; b * classes];
                 kernels::matmul(&a1, &w2.data, b, hidden, classes, &mut z2);
                 kernels::add_bias(&mut z2, &b2.data);
                 let ce = kernels::softmax_ce(&z2, y, b, classes, 1.0);
+                Ok((ce.loss_sum / b as f64, ce.errors))
+            }
+            Arch::Conv(ref net) => {
+                let (logits, _) = net.forward(tr, x, b, a_fmt, 0, false)?;
+                let ce = kernels::softmax_ce(&logits, y, b, net.classes, 1.0);
                 Ok((ce.loss_sum / b as f64, ce.errors))
             }
         }
@@ -319,6 +353,10 @@ impl ModelBackend for NativeBackend {
                     ("fc2.b".to_string(), Tensor::zeros(&[classes])),
                     ("fc2.w".to_string(), w2),
                 ]
+            }
+            Arch::Conv(ref net) => {
+                let mut rng = StreamRng::new(seed.to_bits() as u64);
+                net.init(&mut rng)
             }
         };
         // w_0 starts on the low-precision grid (quantize_params, step 0)
@@ -425,5 +463,32 @@ impl ModelBackend for NativeBackend {
             None
         };
         Ok(EvalOut { loss, metric, grad_norm_sq })
+    }
+
+    /// Fig. 3 (right): evaluate with activations quantized to `act_wl`-bit
+    /// Small-block BFP, nearest rounding (0 = no activation quantization).
+    /// Mirrors the artifact backend's `eval_flex` entry so the fig3
+    /// experiments run natively.
+    fn eval_flex(
+        &self,
+        trainable: &NamedTensors,
+        _state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+        act_wl: f32,
+    ) -> Result<EvalOut> {
+        let b = self.batch_of(x, y)?;
+        let fmt = if act_wl >= 1.0 {
+            QuantFormat::Bfp {
+                wl: act_wl as u32,
+                ebits: 8,
+                small_block: true,
+                stochastic: false,
+            }
+        } else {
+            QuantFormat::None
+        };
+        let (loss, metric) = self.eval_forward_with(trainable, x, y, b, &fmt)?;
+        Ok(EvalOut { loss, metric, grad_norm_sq: None })
     }
 }

@@ -1,0 +1,904 @@
+//! Native conv stack: im2col convolution, pooling, residual blocks and a
+//! small sequential-network interpreter, all composed from the parallel
+//! dense kernels in [`super::kernels`].
+//!
+//! This is what lets the table1 (CIFAR-like VGG/PreResNet minis), table3
+//! (WAGE-style CNN) and fig3 workloads execute real Algorithm-2 steps on
+//! the native backend instead of skipping without XLA artifacts.
+//!
+//! Layout: activations flow **channels-last** — a spatial activation is a
+//! `[b·h·w, ch]` matrix (row = pixel, column = channel) so that
+//! convolution is exactly `im2col · Wᵀ` on the row-parallel matmuls and
+//! bias/ReLU/quantization reuse the dense kernels unchanged. The
+//! dataset's `[b, c, h, w]` input is transposed once at entry
+//! ([`nchw_to_nhwc`]). Conv weights are stored `[oc, k, k, ic]` — 4-D, so
+//! the §5 Small-block policy gives one shared exponent per output filter
+//! (`block_axes_for(Weight, ndim 4) = [0]`), matching the paper.
+//!
+//! Quantization: Q_A is applied after each ReLU site on the forward pass
+//! and Q_E to the arriving cotangent at the same site on the backward
+//! pass, mirroring the MLP backend; Q_G/Q_W/Q_M happen generically in
+//! `NativeBackend::train_step`. Every stochastic event is keyed by
+//! (step, site, role) through the shared counter-hash RNG, so a conv
+//! step is bit-reproducible and thread-count-independent like the dense
+//! models.
+
+use anyhow::{bail, Result};
+
+use crate::quant::{spec::Role, QuantFormat};
+use crate::rng::StreamRng;
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::backend::{col_sums, get, quant_buf, seed_for, site_id, TAG_A, TAG_E};
+use super::kernels;
+
+/// Below this many output elements, im2col/col2im stay serial.
+const PAR_MIN_ELEMS: usize = 64 * 1024;
+
+/// One 3×3-style convolution (stride 1; pooling layers downsample).
+pub struct ConvSpec {
+    pub name: String,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub k: usize,
+    pub pad: usize,
+}
+
+/// A layer of the sequential interpreter.
+pub enum Layer {
+    Conv(ConvSpec),
+    /// ReLU followed by the named Q_A/Q_E quantization site.
+    Relu { site: String },
+    /// 2×2 max pooling, stride 2 (spatial dims must be even).
+    MaxPool2,
+    /// Mean over the spatial dims: `[b·h·w, ch] -> [b, ch]`.
+    GlobalAvgPool,
+    /// Reinterpret `[b·h·w, ch]` as `[b, h·w·ch]` (no data movement).
+    Flatten,
+    Dense { name: String, d_in: usize, d_out: usize },
+    /// `out = input + stack(input)`; the stack must preserve the shape.
+    Residual(Vec<Layer>),
+}
+
+/// An activation in flight: `[b·h·w, ch]` row-major, channels-last.
+struct Act {
+    data: Vec<f32>,
+    b: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+}
+
+impl Act {
+    fn rows(&self) -> usize {
+        self.b * self.h * self.w
+    }
+}
+
+/// Forward-pass caches consumed by the backward walk (one entry per
+/// layer, in traversal order; `Residual` nests its stack's caches).
+/// Opaque to callers: produced by [`ConvNet::forward`], consumed by
+/// [`ConvNet::backward`].
+pub enum Cache {
+    Conv { cols: Vec<f32> },
+    Relu { pre: Vec<f32> },
+    MaxPool { arg: Vec<u32>, in_h: usize, in_w: usize },
+    Gap { in_h: usize, in_w: usize },
+    Flatten { h: usize, w: usize, ch: usize },
+    Dense { input: Vec<f32> },
+    Residual(Vec<Cache>),
+}
+
+/// A small CNN: layers over a square `in_hw`×`in_hw`, `in_ch`-channel
+/// input, ending in a Dense layer producing `classes` logits.
+pub struct ConvNet {
+    pub layers: Vec<Layer>,
+    pub in_ch: usize,
+    pub in_hw: usize,
+    pub classes: usize,
+}
+
+// ---------------------------------------------------------------------
+// data-movement kernels
+// ---------------------------------------------------------------------
+
+/// `[b, c, h, w]` (dataset layout) -> `[b·h·w, c]` (channels-last).
+pub fn nchw_to_nhwc(x: &[f32], b: usize, ch: usize, h: usize, w: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * ch * h * w);
+    let mut out = vec![0.0f32; x.len()];
+    for bi in 0..b {
+        for c in 0..ch {
+            let src = (bi * ch + c) * h * w;
+            for p in 0..h * w {
+                out[(bi * h * w + p) * ch + c] = x[src + p];
+            }
+        }
+    }
+    out
+}
+
+/// Lower a channels-last image batch to patch-rows: output row
+/// `(bi·oh + oy)·ow + ox` holds the k×k×ch receptive field at (oy, ox),
+/// column-major as `(ky·k + kx)·ch + c`. Out-of-bounds taps stay zero
+/// (zero padding). Parallel over batch samples — rows of distinct
+/// samples are disjoint, so chunking cannot change any output.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    k: usize,
+    pad: usize,
+    cols: &mut Vec<f32>,
+) -> (usize, usize) {
+    let oh = h + 2 * pad + 1 - k;
+    let ow = w + 2 * pad + 1 - k;
+    let kkc = k * k * ch;
+    cols.clear();
+    cols.resize(b * oh * ow * kkc, 0.0);
+    let sample_in = h * w * ch;
+    let sample_out = oh * ow * kkc;
+    let fill = |xs: &[f32], cs: &mut [f32]| {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (oy * ow + ox) * kkc;
+                for ky in 0..k {
+                    let iy = (oy + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = (iy as usize * w + ix as usize) * ch;
+                        let dst = row + (ky * k + kx) * ch;
+                        cs[dst..dst + ch].copy_from_slice(&xs[src..src + ch]);
+                    }
+                }
+            }
+        }
+    };
+    if cols.len() >= PAR_MIN_ELEMS && b >= 2 && rayon::current_num_threads() > 1 {
+        rayon::scope(|s| {
+            for (cs, xs) in cols.chunks_mut(sample_out).zip(x.chunks(sample_in)) {
+                let fill = &fill;
+                s.spawn(move |_| fill(xs, cs));
+            }
+        });
+    } else {
+        for (cs, xs) in cols.chunks_mut(sample_out).zip(x.chunks(sample_in)) {
+            fill(xs, cs);
+        }
+    }
+    (b * oh * ow, kkc)
+}
+
+/// Transpose of [`im2col`]: scatter-add patch-row gradients back onto the
+/// `[b·h·w, ch]` input gradient. Parallel over batch samples (each
+/// sample's scatter targets are disjoint).
+pub fn col2im(
+    dcols: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    k: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let oh = h + 2 * pad + 1 - k;
+    let ow = w + 2 * pad + 1 - k;
+    let kkc = k * k * ch;
+    debug_assert_eq!(dcols.len(), b * oh * ow * kkc);
+    let mut dx = vec![0.0f32; b * h * w * ch];
+    let sample_in = h * w * ch;
+    let sample_out = oh * ow * kkc;
+    let fold = |cs: &[f32], xs: &mut [f32]| {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (oy * ow + ox) * kkc;
+                for ky in 0..k {
+                    let iy = (oy + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = (iy as usize * w + ix as usize) * ch;
+                        let src = row + (ky * k + kx) * ch;
+                        for (o, &v) in xs[dst..dst + ch].iter_mut().zip(&cs[src..src + ch]) {
+                            *o += v;
+                        }
+                    }
+                }
+            }
+        }
+    };
+    if dx.len().max(dcols.len()) >= PAR_MIN_ELEMS && b >= 2 && rayon::current_num_threads() > 1 {
+        rayon::scope(|s| {
+            for (xs, cs) in dx.chunks_mut(sample_in).zip(dcols.chunks(sample_out)) {
+                let fold = &fold;
+                s.spawn(move |_| fold(cs, xs));
+            }
+        });
+    } else {
+        for (xs, cs) in dx.chunks_mut(sample_in).zip(dcols.chunks(sample_out)) {
+            fold(cs, xs);
+        }
+    }
+    dx
+}
+
+/// 2×2/stride-2 max pooling over a channels-last batch. Returns the
+/// pooled activations and the flat input index of each winner (strict
+/// `>`, scan order (0,0),(0,1),(1,0),(1,1) — first max wins, so routing
+/// is deterministic).
+pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, ch: usize) -> (Vec<f32>, Vec<u32>) {
+    debug_assert!(h % 2 == 0 && w % 2 == 0);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; b * oh * ow * ch];
+    let mut arg = vec![0u32; out.len()];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let orow = ((bi * oh + oy) * ow + ox) * ch;
+                for c in 0..ch {
+                    let first = ((bi * h + 2 * oy) * w + 2 * ox) * ch + c;
+                    let mut best = x[first];
+                    let mut best_i = first as u32;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            if dy == 0 && dx == 0 {
+                                continue;
+                            }
+                            let idx = ((bi * h + 2 * oy + dy) * w + 2 * ox + dx) * ch + c;
+                            if x[idx] > best {
+                                best = x[idx];
+                                best_i = idx as u32;
+                            }
+                        }
+                    }
+                    out[orow + c] = best;
+                    arg[orow + c] = best_i;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Route pooled gradients back to the argmax positions.
+pub fn maxpool2_backward(dout: &[f32], arg: &[u32], in_len: usize) -> Vec<f32> {
+    debug_assert_eq!(dout.len(), arg.len());
+    let mut dx = vec![0.0f32; in_len];
+    for (&g, &a) in dout.iter().zip(arg) {
+        dx[a as usize] += g;
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------
+// the interpreter
+// ---------------------------------------------------------------------
+
+impl ConvNet {
+    /// Trainable parameter (name, shape) pairs in sorted-name order —
+    /// the artifact calling convention the registry's `ModelSpec` uses.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        fn walk(layers: &[Layer], out: &mut Vec<(String, Vec<usize>)>) {
+            for l in layers {
+                match l {
+                    Layer::Conv(c) => {
+                        out.push((format!("{}.b", c.name), vec![c.out_ch]));
+                        out.push((
+                            format!("{}.w", c.name),
+                            vec![c.out_ch, c.k, c.k, c.in_ch],
+                        ));
+                    }
+                    Layer::Dense { name, d_in, d_out } => {
+                        out.push((format!("{name}.b"), vec![*d_out]));
+                        out.push((format!("{name}.w"), vec![*d_in, *d_out]));
+                    }
+                    Layer::Residual(inner) => walk(inner, out),
+                    _ => {}
+                }
+            }
+        }
+        let mut out = vec![];
+        walk(&self.layers, &mut out);
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// He-normal init for conv/dense weights, zero biases; draws happen
+    /// in layer-definition order (deterministic for a given rng state),
+    /// the returned set is in sorted-name order.
+    pub fn init(&self, rng: &mut StreamRng) -> NamedTensors {
+        fn walk(layers: &[Layer], rng: &mut StreamRng, out: &mut NamedTensors) {
+            for l in layers {
+                match l {
+                    Layer::Conv(c) => {
+                        let fan_in = c.k * c.k * c.in_ch;
+                        let std = (2.0 / fan_in as f32).sqrt();
+                        let data =
+                            (0..c.out_ch * fan_in).map(|_| rng.normal() * std).collect();
+                        out.push((format!("{}.b", c.name), Tensor::zeros(&[c.out_ch])));
+                        out.push((
+                            format!("{}.w", c.name),
+                            Tensor {
+                                shape: vec![c.out_ch, c.k, c.k, c.in_ch],
+                                data,
+                            },
+                        ));
+                    }
+                    Layer::Dense { name, d_in, d_out } => {
+                        let std = (2.0 / *d_in as f32).sqrt();
+                        let data = (0..d_in * d_out).map(|_| rng.normal() * std).collect();
+                        out.push((format!("{name}.b"), Tensor::zeros(&[*d_out])));
+                        out.push((
+                            format!("{name}.w"),
+                            Tensor { shape: vec![*d_in, *d_out], data },
+                        ));
+                    }
+                    Layer::Residual(inner) => walk(inner, rng, out),
+                    _ => {}
+                }
+            }
+        }
+        let mut out = vec![];
+        walk(&self.layers, rng, &mut out);
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Forward pass from the dataset's `[b, c, h, w]` batch to logits.
+    /// With `train` set, returns the caches the backward walk needs;
+    /// eval callers pass `false` (and a nearest-rounding `a_fmt`).
+    pub fn forward(
+        &self,
+        tr: &NamedTensors,
+        x: &[f32],
+        b: usize,
+        a_fmt: &QuantFormat,
+        step: u64,
+        train: bool,
+    ) -> Result<(Vec<f32>, Vec<Cache>)> {
+        let act = Act {
+            data: nchw_to_nhwc(x, b, self.in_ch, self.in_hw, self.in_hw),
+            b,
+            h: self.in_hw,
+            w: self.in_hw,
+            ch: self.in_ch,
+        };
+        let mut caches = vec![];
+        let out = self.forward_stack(&self.layers, tr, act, a_fmt, step, &mut caches, train)?;
+        if out.h != 1 || out.w != 1 || out.ch != self.classes {
+            bail!(
+                "conv net output is [{}x{}x{}], expected logits [{b}, {}]",
+                out.h,
+                out.w,
+                out.ch,
+                self.classes
+            );
+        }
+        Ok((out.data, caches))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_stack(
+        &self,
+        layers: &[Layer],
+        tr: &NamedTensors,
+        mut act: Act,
+        a_fmt: &QuantFormat,
+        step: u64,
+        caches: &mut Vec<Cache>,
+        train: bool,
+    ) -> Result<Act> {
+        for layer in layers {
+            act = match layer {
+                Layer::Conv(c) => {
+                    if act.ch != c.in_ch {
+                        bail!("{}: input has {} channels, want {}", c.name, act.ch, c.in_ch);
+                    }
+                    if c.k > act.h + 2 * c.pad || c.k > act.w + 2 * c.pad {
+                        bail!("{}: kernel {} exceeds padded input", c.name, c.k);
+                    }
+                    let w = get(tr, &format!("{}.w", c.name))?;
+                    let bias = get(tr, &format!("{}.b", c.name))?;
+                    let mut cols = Vec::new();
+                    let (rows, kkc) =
+                        im2col(&act.data, act.b, act.h, act.w, act.ch, c.k, c.pad, &mut cols);
+                    let mut z = vec![0.0f32; rows * c.out_ch];
+                    kernels::matmul_a_bt(&cols, &w.data, rows, kkc, c.out_ch, &mut z);
+                    kernels::add_bias(&mut z, &bias.data);
+                    if train {
+                        caches.push(Cache::Conv { cols });
+                    }
+                    let oh = act.h + 2 * c.pad + 1 - c.k;
+                    let ow = act.w + 2 * c.pad + 1 - c.k;
+                    Act { data: z, b: act.b, h: oh, w: ow, ch: c.out_ch }
+                }
+                Layer::Relu { site } => {
+                    let pre = if train { act.data.clone() } else { Vec::new() };
+                    kernels::relu(&mut act.data);
+                    let rows = act.rows();
+                    act.data = quant_buf(
+                        a_fmt,
+                        act.data,
+                        &[rows, act.ch],
+                        seed_for(step, site_id(site), TAG_A),
+                        Role::Act,
+                    );
+                    if train {
+                        caches.push(Cache::Relu { pre });
+                    }
+                    act
+                }
+                Layer::MaxPool2 => {
+                    if act.h % 2 != 0 || act.w % 2 != 0 {
+                        bail!("maxpool2 on odd spatial dims {}x{}", act.h, act.w);
+                    }
+                    let (data, arg) = maxpool2(&act.data, act.b, act.h, act.w, act.ch);
+                    if train {
+                        caches.push(Cache::MaxPool { arg, in_h: act.h, in_w: act.w });
+                    }
+                    Act { data, b: act.b, h: act.h / 2, w: act.w / 2, ch: act.ch }
+                }
+                Layer::GlobalAvgPool => {
+                    let hw = act.h * act.w;
+                    let inv = 1.0 / hw as f32;
+                    let mut data = vec![0.0f32; act.b * act.ch];
+                    for bi in 0..act.b {
+                        let o = &mut data[bi * act.ch..(bi + 1) * act.ch];
+                        for row in act.data[bi * hw * act.ch..(bi + 1) * hw * act.ch]
+                            .chunks(act.ch)
+                        {
+                            for (ov, &v) in o.iter_mut().zip(row) {
+                                *ov += v;
+                            }
+                        }
+                        for ov in o.iter_mut() {
+                            *ov *= inv;
+                        }
+                    }
+                    if train {
+                        caches.push(Cache::Gap { in_h: act.h, in_w: act.w });
+                    }
+                    Act { data, b: act.b, h: 1, w: 1, ch: act.ch }
+                }
+                Layer::Flatten => {
+                    if train {
+                        caches.push(Cache::Flatten { h: act.h, w: act.w, ch: act.ch });
+                    }
+                    let ch = act.h * act.w * act.ch;
+                    Act { data: act.data, b: act.b, h: 1, w: 1, ch }
+                }
+                Layer::Dense { name, d_in, d_out } => {
+                    if act.h != 1 || act.w != 1 || act.ch != *d_in {
+                        bail!(
+                            "{name}: input is [{}x{}x{}], want a flat [{d_in}]",
+                            act.h,
+                            act.w,
+                            act.ch
+                        );
+                    }
+                    let w = get(tr, &format!("{name}.w"))?;
+                    let bias = get(tr, &format!("{name}.b"))?;
+                    let mut z = vec![0.0f32; act.b * d_out];
+                    kernels::matmul(&act.data, &w.data, act.b, *d_in, *d_out, &mut z);
+                    kernels::add_bias(&mut z, &bias.data);
+                    if train {
+                        caches.push(Cache::Dense { input: act.data });
+                    }
+                    Act { data: z, b: act.b, h: 1, w: 1, ch: *d_out }
+                }
+                Layer::Residual(inner) => {
+                    let skip = act.data.clone();
+                    let (h, w, ch) = (act.h, act.w, act.ch);
+                    let mut inner_caches = vec![];
+                    let mut out = self
+                        .forward_stack(inner, tr, act, a_fmt, step, &mut inner_caches, train)?;
+                    if out.h != h || out.w != w || out.ch != ch {
+                        bail!("residual stack changed shape");
+                    }
+                    for (o, &s) in out.data.iter_mut().zip(&skip) {
+                        *o += s;
+                    }
+                    if train {
+                        caches.push(Cache::Residual(inner_caches));
+                    }
+                    out
+                }
+            };
+        }
+        Ok(act)
+    }
+
+    /// Backward pass: from `dlogits` (already scaled, e.g. softmax-CE
+    /// gradient / batch) to weight gradients in sorted-name order.
+    /// Consumes the forward caches.
+    pub fn backward(
+        &self,
+        tr: &NamedTensors,
+        mut caches: Vec<Cache>,
+        dlogits: Vec<f32>,
+        b: usize,
+        e_fmt: &QuantFormat,
+        step: u64,
+    ) -> Result<NamedTensors> {
+        let d = Act { data: dlogits, b, h: 1, w: 1, ch: self.classes };
+        let mut grads: NamedTensors = vec![];
+        self.backward_stack(&self.layers, tr, d, e_fmt, step, &mut caches, &mut grads)?;
+        if !caches.is_empty() {
+            bail!("backward consumed {} fewer caches than forward produced", caches.len());
+        }
+        grads.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(grads)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward_stack(
+        &self,
+        layers: &[Layer],
+        tr: &NamedTensors,
+        mut d: Act,
+        e_fmt: &QuantFormat,
+        step: u64,
+        caches: &mut Vec<Cache>,
+        grads: &mut NamedTensors,
+    ) -> Result<Act> {
+        for layer in layers.iter().rev() {
+            let cache = caches.pop().ok_or_else(|| anyhow::anyhow!("cache underrun"))?;
+            d = match (layer, cache) {
+                (Layer::Conv(c), Cache::Conv { cols }) => {
+                    let w = get(tr, &format!("{}.w", c.name))?;
+                    let rows = d.rows();
+                    let kkc = c.k * c.k * c.in_ch;
+                    // gw[oc, kkc] = doutᵀ · cols — same layout as w
+                    let mut gw = vec![0.0f32; c.out_ch * kkc];
+                    kernels::matmul_at_b(&d.data, &cols, rows, c.out_ch, kkc, &mut gw);
+                    let gb = col_sums(&d.data, c.out_ch);
+                    grads.push((
+                        format!("{}.w", c.name),
+                        Tensor::new(vec![c.out_ch, c.k, c.k, c.in_ch], gw)?,
+                    ));
+                    grads.push((format!("{}.b", c.name), Tensor::new(vec![c.out_ch], gb)?));
+                    // dinput = col2im(dout · W)
+                    let mut dcols = vec![0.0f32; rows * kkc];
+                    kernels::matmul(&d.data, &w.data, rows, c.out_ch, kkc, &mut dcols);
+                    let in_h = d.h + c.k - 1 - 2 * c.pad;
+                    let in_w = d.w + c.k - 1 - 2 * c.pad;
+                    let dx = col2im(&dcols, d.b, in_h, in_w, c.in_ch, c.k, c.pad);
+                    Act { data: dx, b: d.b, h: in_h, w: in_w, ch: c.in_ch }
+                }
+                (Layer::Relu { site }, Cache::Relu { pre }) => {
+                    let rows = d.rows();
+                    d.data = quant_buf(
+                        e_fmt,
+                        d.data,
+                        &[rows, d.ch],
+                        seed_for(step, site_id(site), TAG_E),
+                        Role::Err,
+                    );
+                    kernels::relu_backward(&mut d.data, &pre);
+                    d
+                }
+                (Layer::MaxPool2, Cache::MaxPool { arg, in_h, in_w }) => {
+                    let dx = maxpool2_backward(&d.data, &arg, d.b * in_h * in_w * d.ch);
+                    Act { data: dx, b: d.b, h: in_h, w: in_w, ch: d.ch }
+                }
+                (Layer::GlobalAvgPool, Cache::Gap { in_h, in_w }) => {
+                    let hw = in_h * in_w;
+                    let inv = 1.0 / hw as f32;
+                    let mut dx = vec![0.0f32; d.b * hw * d.ch];
+                    for bi in 0..d.b {
+                        let grow = &d.data[bi * d.ch..(bi + 1) * d.ch];
+                        for row in dx[bi * hw * d.ch..(bi + 1) * hw * d.ch].chunks_mut(d.ch) {
+                            for (o, &g) in row.iter_mut().zip(grow) {
+                                *o = g * inv;
+                            }
+                        }
+                    }
+                    Act { data: dx, b: d.b, h: in_h, w: in_w, ch: d.ch }
+                }
+                (Layer::Flatten, Cache::Flatten { h, w, ch }) => {
+                    Act { data: d.data, b: d.b, h, w, ch }
+                }
+                (Layer::Dense { name, d_in, d_out }, Cache::Dense { input }) => {
+                    let w = get(tr, &format!("{name}.w"))?;
+                    let mut gw = vec![0.0f32; d_in * d_out];
+                    kernels::matmul_at_b(&input, &d.data, d.b, *d_in, *d_out, &mut gw);
+                    let gb = col_sums(&d.data, *d_out);
+                    grads.push((format!("{name}.w"), Tensor::new(vec![*d_in, *d_out], gw)?));
+                    grads.push((format!("{name}.b"), Tensor::new(vec![*d_out], gb)?));
+                    let mut dx = vec![0.0f32; d.b * d_in];
+                    kernels::matmul_a_bt(&d.data, &w.data, d.b, *d_out, *d_in, &mut dx);
+                    Act { data: dx, b: d.b, h: 1, w: 1, ch: *d_in }
+                }
+                (Layer::Residual(inner), Cache::Residual(mut inner_caches)) => {
+                    let skip = d.data.clone();
+                    let mut dx = self
+                        .backward_stack(inner, tr, d, e_fmt, step, &mut inner_caches, grads)?;
+                    if !inner_caches.is_empty() {
+                        bail!("residual backward cache underrun");
+                    }
+                    for (o, &s) in dx.data.iter_mut().zip(&skip) {
+                        *o += s;
+                    }
+                    dx
+                }
+                _ => bail!("forward/backward cache mismatch"),
+            };
+        }
+        Ok(d)
+    }
+}
+
+// ---------------------------------------------------------------------
+// the registered architectures (16×16×3 inputs, DESIGN.md §5 scale)
+// ---------------------------------------------------------------------
+
+fn conv(name: &str, in_ch: usize, out_ch: usize) -> Layer {
+    Layer::Conv(ConvSpec { name: name.into(), in_ch, out_ch, k: 3, pad: 1 })
+}
+
+fn relu(site: &str) -> Layer {
+    Layer::Relu { site: site.into() }
+}
+
+/// VGG-mini: two 3×3 conv pairs with 2×2 pools, then a dense classifier.
+/// 16×16 -> 8×8 -> 4×4, flatten 512 features.
+pub fn vgg_mini(classes: usize) -> ConvNet {
+    ConvNet {
+        layers: vec![
+            conv("c1", 3, 16),
+            relu("c1.act"),
+            conv("c2", 16, 16),
+            relu("c2.act"),
+            Layer::MaxPool2,
+            conv("c3", 16, 32),
+            relu("c3.act"),
+            conv("c4", 32, 32),
+            relu("c4.act"),
+            Layer::MaxPool2,
+            Layer::Flatten,
+            Layer::Dense { name: "fc".into(), d_in: 4 * 4 * 32, d_out: classes },
+        ],
+        in_ch: 3,
+        in_hw: 16,
+        classes,
+    }
+}
+
+/// PreResNet-mini: a conv stem, two pre-activation residual blocks,
+/// global average pooling, dense head.
+pub fn prn_mini(classes: usize) -> ConvNet {
+    ConvNet {
+        layers: vec![
+            conv("c1", 3, 16),
+            Layer::Residual(vec![
+                relu("r1a.act"),
+                conv("r1a", 16, 16),
+                relu("r1b.act"),
+                conv("r1b", 16, 16),
+            ]),
+            Layer::Residual(vec![
+                relu("r2a.act"),
+                conv("r2a", 16, 16),
+                relu("r2b.act"),
+                conv("r2b", 16, 16),
+            ]),
+            relu("head.act"),
+            Layer::GlobalAvgPool,
+            Layer::Dense { name: "fc".into(), d_in: 16, d_out: classes },
+        ],
+        in_ch: 3,
+        in_hw: 16,
+        classes,
+    }
+}
+
+/// WAGE-style CNN (App. F): a small VGG-ish stack trained on a coarse
+/// fixed-point weight grid with 8-bit activations/errors/gradients.
+pub fn wage_mini(classes: usize) -> ConvNet {
+    ConvNet {
+        layers: vec![
+            conv("c1", 3, 16),
+            relu("c1.act"),
+            Layer::MaxPool2,
+            conv("c2", 16, 32),
+            relu("c2.act"),
+            Layer::MaxPool2,
+            Layer::Flatten,
+            Layer::Dense { name: "fc".into(), d_in: 4 * 4 * 32, d_out: classes },
+        ],
+        in_ch: 3,
+        in_hw: 16,
+        classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nchw_nhwc_roundtrip_layout() {
+        // b=1, c=2, 2x2: x[c][y][x] -> out[(y*2+x)*2 + c]
+        let x = [1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let out = nchw_to_nhwc(&x, 1, 2, 2, 2);
+        assert_eq!(out, vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0]);
+    }
+
+    #[test]
+    fn im2col_identity_for_1x1_kernel() {
+        // k=1, pad=0: cols == input
+        let x: Vec<f32> = (0..2 * 3 * 3 * 2).map(|i| i as f32).collect();
+        let mut cols = Vec::new();
+        let (rows, kkc) = im2col(&x, 2, 3, 3, 2, 1, 0, &mut cols);
+        assert_eq!((rows, kkc), (18, 2));
+        assert_eq!(cols, x);
+    }
+
+    #[test]
+    fn im2col_pads_with_zeros() {
+        // 1 sample, 1 channel, 2x2 input, k=3 pad=1: output 2x2 patches
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut cols = Vec::new();
+        let (rows, kkc) = im2col(&x, 1, 2, 2, 1, 3, 1, &mut cols);
+        assert_eq!((rows, kkc), (4, 9));
+        // patch at (0,0): rows of the 3x3 window centered there
+        assert_eq!(&cols[..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        // patch at (1,1)
+        assert_eq!(&cols[27..36], &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_is_im2col_transpose() {
+        // <im2col(x), c> == <x, col2im(c)> for random-ish x, c — the
+        // adjoint identity that makes the conv backward correct
+        let (b, h, w, ch, k, pad) = (2, 4, 4, 3, 3, 1);
+        let x: Vec<f32> = (0..b * h * w * ch).map(|i| ((i % 13) as f32 - 6.0) * 0.31).collect();
+        let mut cols = Vec::new();
+        let (rows, kkc) = im2col(&x, b, h, w, ch, k, pad, &mut cols);
+        let c: Vec<f32> = (0..rows * kkc).map(|i| ((i % 7) as f32 - 3.0) * 0.17).collect();
+        let lhs: f64 = cols.iter().zip(&c).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+        let folded = col2im(&c, b, h, w, ch, k, pad);
+        let rhs: f64 = x.iter().zip(&folded).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        // 1 sample, 1 channel, 4x4 with known maxima
+        #[rustfmt::skip]
+        let x = [
+            1.0, 5.0,  2.0, 1.0,
+            0.0, 3.0,  8.0, 1.0,
+            1.0, 1.0,  0.0, 2.0,
+            9.0, 1.0,  2.0, 4.0,
+        ];
+        let (out, arg) = maxpool2(&x, 1, 4, 4, 1);
+        assert_eq!(out, vec![5.0, 8.0, 9.0, 4.0]);
+        let dx = maxpool2_backward(&[1.0, 2.0, 3.0, 4.0], &arg, 16);
+        assert_eq!(dx[1], 1.0); // 5.0 at flat idx 1
+        assert_eq!(dx[6], 2.0); // 8.0 at flat idx 6
+        assert_eq!(dx[12], 3.0); // 9.0 at flat idx 12
+        assert_eq!(dx[15], 4.0); // 4.0 at flat idx 15
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    /// Full-precision loss of a tiny net — shared by the finite-difference
+    /// gradient checks below.
+    fn fd_loss(net: &ConvNet, tr: &NamedTensors, x: &[f32], y: &[f32], b: usize) -> f64 {
+        let (logits, _) = net.forward(tr, x, b, &QuantFormat::None, 0, false).unwrap();
+        kernels::softmax_ce(&logits, y, b, net.classes, 1.0 / b as f32).loss_sum / b as f64
+    }
+
+    fn fd_check(net: &ConvNet, seed: u64) {
+        let b = 2;
+        let n = b * net.in_ch * net.in_hw * net.in_hw;
+        let mut rng = StreamRng::new(seed);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..b).map(|_| rng.below(net.classes) as f32).collect();
+        let tr = net.init(&mut rng);
+
+        let (logits, caches) =
+            net.forward(&tr, &x, b, &QuantFormat::None, 0, true).unwrap();
+        let ce = kernels::softmax_ce(&logits, &y, b, net.classes, 1.0 / b as f32);
+        let grads = net
+            .backward(&tr, caches, ce.dlogits, b, &QuantFormat::None, 0)
+            .unwrap();
+        assert_eq!(
+            grads.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+            tr.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+            "gradient order must match trainable order"
+        );
+
+        // small eps keeps the odds of a ReLU kink inside the probe window
+        // negligible; the tolerance still catches transposes, missing
+        // terms and scale factors on any non-vanishing gradient
+        let eps = 2e-3f32;
+        for (ti, (name, t)) in tr.iter().enumerate() {
+            // probe a few spread-out elements of every tensor
+            let probes = [0, t.len() / 2, t.len() - 1];
+            for &pi in &probes {
+                let mut plus = tr.clone();
+                plus[ti].1.data[pi] += eps;
+                let lp = fd_loss(net, &plus, &x, &y, b);
+                let mut minus = tr.clone();
+                minus[ti].1.data[pi] -= eps;
+                let lm = fd_loss(net, &minus, &x, &y, b);
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grads[ti].1.data[pi];
+                assert!(
+                    (fd - an).abs() < 2e-2 * an.abs().max(0.05) + 2e-3,
+                    "{name}[{pi}]: finite-diff {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_dense_gradients_match_finite_differences() {
+        // conv→relu→conv→relu→flatten→dense on a 4x4 input (no pooling:
+        // max argmax flips under finite perturbation; pooling has its own
+        // routing test above)
+        let net = ConvNet {
+            layers: vec![
+                conv("c1", 1, 2),
+                relu("c1.act"),
+                conv("c2", 2, 2),
+                relu("c2.act"),
+                Layer::Flatten,
+                Layer::Dense { name: "fc".into(), d_in: 4 * 4 * 2, d_out: 3 },
+            ],
+            in_ch: 1,
+            in_hw: 4,
+            classes: 3,
+        };
+        fd_check(&net, 11);
+    }
+
+    #[test]
+    fn residual_gap_gradients_match_finite_differences() {
+        let net = ConvNet {
+            layers: vec![
+                conv("c1", 1, 2),
+                Layer::Residual(vec![relu("r1.act"), conv("r1", 2, 2)]),
+                relu("head.act"),
+                Layer::GlobalAvgPool,
+                Layer::Dense { name: "fc".into(), d_in: 2, d_out: 3 },
+            ],
+            in_ch: 1,
+            in_hw: 4,
+            classes: 3,
+        };
+        fd_check(&net, 23);
+    }
+
+    #[test]
+    fn registered_architectures_have_sorted_specs() {
+        for net in [vgg_mini(10), prn_mini(100), wage_mini(10)] {
+            let specs = net.param_specs();
+            let names: Vec<&String> = specs.iter().map(|(n, _)| n).collect();
+            let mut sorted = names.clone();
+            sorted.sort();
+            assert_eq!(names, sorted);
+            let mut rng = StreamRng::new(3);
+            let tr = net.init(&mut rng);
+            assert_eq!(tr.len(), specs.len());
+            for ((n1, shape), (n2, t)) in specs.iter().zip(&tr) {
+                assert_eq!(n1, n2);
+                assert_eq!(shape, &t.shape);
+            }
+        }
+    }
+}

@@ -5,11 +5,45 @@
 //! the three orientations the backward pass needs, bias/ReLU, and the
 //! fused softmax cross-entropy with its gradient. Loss accumulation is
 //! f64; everything else is f32 like the XLA artifacts.
+//!
+//! The three matmuls fan out over the rayon pool once the contraction is
+//! big enough to amortize the dispatch. Parallelism is over **output
+//! rows only**, and every output element's f32 accumulation order is
+//! identical to the serial pass (each `*_serial` kernel computes a row
+//! independently), so results are bit-identical for any thread count —
+//! the property the quantized training step's reproducibility tests
+//! lean on. The `*_serial` variants stay public as the single-thread
+//! reference for the parity tests.
+
+/// Contractions below this many multiply-accumulates run serially — the
+/// pool dispatch (a queue push + wakeup per chunk) costs a few µs.
+const PAR_MIN_MACS: usize = 64 * 1024;
+
+/// How many rows each spawned chunk covers for `rows` total.
+fn rows_per_chunk(rows: usize) -> usize {
+    rows.div_ceil(rayon::current_num_threads()).max(1)
+}
 
 /// out[m,n] = a[m,k] @ b[k,n]. `out` is overwritten.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m * k * n < PAR_MIN_MACS || m < 2 || rayon::current_num_threads() <= 1 {
+        matmul_serial(a, b, m, k, n, out);
+        return;
+    }
+    let rows = rows_per_chunk(m);
+    rayon::scope(|s| {
+        for (oc, ac) in out.chunks_mut(rows * n).zip(a.chunks(rows * k)) {
+            s.spawn(move |_| matmul_serial(ac, b, ac.len() / k, k, n, oc));
+        }
+    });
+}
+
+/// Single-thread `matmul` (also the per-chunk worker).
+pub fn matmul_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(out.len(), m * n);
     out.fill(0.0);
     for i in 0..m {
@@ -26,13 +60,49 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
 
 /// out[k,n] = aᵀ[k,m] @ b[m,n] with a given as [m,k] — the weight-gradient
 /// contraction Xᵀ·E. `out` is overwritten.
+///
+/// Parallelized over the k output rows: every chunk scans all m input
+/// rows in the same ascending order the serial kernel uses, so the
+/// accumulation into each output element is order-identical.
 pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(out.len(), k * n);
+    if m * k * n < PAR_MIN_MACS || k < 2 || rayon::current_num_threads() <= 1 {
+        matmul_at_b_serial(a, b, m, k, n, out);
+        return;
+    }
+    let rows = rows_per_chunk(k);
+    rayon::scope(|s| {
+        for (ci, oc) in out.chunks_mut(rows * n).enumerate() {
+            s.spawn(move |_| matmul_at_b_range(a, b, m, k, n, ci * rows, oc));
+        }
+    });
+}
+
+/// Single-thread `matmul_at_b`.
+pub fn matmul_at_b_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    matmul_at_b_range(a, b, m, k, n, 0, out);
+}
+
+/// The rows [j0, j0 + out.len()/n) of the aᵀ·b product.
+#[allow(clippy::too_many_arguments)]
+fn matmul_at_b_range(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    let jr = out.len() / n;
     out.fill(0.0);
     for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
+        let arow = &a[i * k + j0..i * k + j0 + jr];
         let brow = &b[i * n..(i + 1) * n];
         for (j, &av) in arow.iter().enumerate() {
             let orow = &mut out[j * n..(j + 1) * n];
@@ -48,6 +118,22 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
 pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if m * k * n < PAR_MIN_MACS || m < 2 || rayon::current_num_threads() <= 1 {
+        matmul_a_bt_serial(a, b, m, k, n, out);
+        return;
+    }
+    let rows = rows_per_chunk(m);
+    rayon::scope(|s| {
+        for (oc, ac) in out.chunks_mut(rows * n).zip(a.chunks(rows * k)) {
+            s.spawn(move |_| matmul_a_bt_serial(ac, b, ac.len() / k, k, n, oc));
+        }
+    });
+}
+
+/// Single-thread `matmul_a_bt` (also the per-chunk worker).
+pub fn matmul_a_bt_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(out.len(), m * n);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
@@ -193,6 +279,37 @@ mod tests {
         for (g, w) in got2.iter().zip(&want2) {
             assert!((g - w).abs() < 1e-5, "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn parallel_matmuls_bit_match_single_thread() {
+        // sizes chosen to clear PAR_MIN_MACS so the pooled path runs;
+        // the serial kernels are the 1-thread reference. Bit equality,
+        // not tolerance: parallelism must not change accumulation order.
+        let (m, k, n) = (96, 64, 48); // 294912 MACs
+        let a: Vec<f32> = (0..m * k).map(|i| ((i % 53) as f32 - 26.0) * 0.11).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i % 31) as f32 - 15.0) * 0.07).collect();
+        let mut par = vec![0.0f32; m * n];
+        let mut ser = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut par);
+        matmul_serial(&a, &b, m, k, n, &mut ser);
+        assert!(par.iter().zip(&ser).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        // at_b: a is [m,k], b is [m,n] -> out [k,n]
+        let b2: Vec<f32> = (0..m * n).map(|i| ((i % 29) as f32 - 14.0) * 0.05).collect();
+        let mut par = vec![0.0f32; k * n];
+        let mut ser = vec![0.0f32; k * n];
+        matmul_at_b(&a, &b2, m, k, n, &mut par);
+        matmul_at_b_serial(&a, &b2, m, k, n, &mut ser);
+        assert!(par.iter().zip(&ser).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        // a_bt: a is [m,k], b is [n,k] -> out [m,n]
+        let b3: Vec<f32> = (0..n * k).map(|i| ((i % 37) as f32 - 18.0) * 0.03).collect();
+        let mut par = vec![0.0f32; m * n];
+        let mut ser = vec![0.0f32; m * n];
+        matmul_a_bt(&a, &b3, m, k, n, &mut par);
+        matmul_a_bt_serial(&a, &b3, m, k, n, &mut ser);
+        assert!(par.iter().zip(&ser).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -20,8 +20,15 @@
 //! | `mlp_fp32`         | 256-128-10 MLP     | none, ρ=0.9              |
 //! | `mlp_qmm_fx86`     | 256-128-10 MLP     | all five roles W8F6, ρ=0.9|
 //! | `mlp_bfp8small`    | 256-128-10 MLP     | all five roles 8-bit Small-block BFP, ρ=0.9|
+//! | `{cifar10,cifar100}_{vgg,prn}_{fp32,bfp8big,bfp8small}` | VGG-mini / PreResNet-mini CNN | none or all five roles 8-bit BFP, ρ=0.9 |
+//! | `imagenet_rn_{fp32,bfp8big,bfp8small}` | PreResNet-mini CNN | as above |
+//! | `wage_cnn`         | WAGE-style CNN     | W fixed W2F0; A/G/E fixed W8F5 |
+//!
+//! The CNN rows run on the native im2col conv stack ([`conv`]) — the
+//! table1/table3/fig3 experiment workloads no longer need XLA artifacts.
 
 pub mod backend;
+pub mod conv;
 pub mod kernels;
 
 pub use backend::{site_id, NativeBackend};
@@ -38,6 +45,9 @@ use backend::Arch;
 /// Fractional-bit sweep mirrored from the AOT registry (Fig. 2 right).
 pub const LOGREG_FRACTIONAL_BITS: [i32; 7] = [2, 4, 6, 8, 10, 12, 14];
 
+/// The BFP/float format suffixes of the deep-learning specs.
+const CNN_FORMATS: [&str; 3] = ["fp32", "bfp8big", "bfp8small"];
+
 /// All model names the native engine provides.
 pub fn model_names() -> Vec<String> {
     let mut names = vec!["linreg_fp32".to_string(), "linreg_fx86".to_string()];
@@ -48,7 +58,40 @@ pub fn model_names() -> Vec<String> {
     names.push("mlp_fp32".to_string());
     names.push("mlp_qmm_fx86".to_string());
     names.push("mlp_bfp8small".to_string());
+    for ds in ["cifar10", "cifar100"] {
+        for arch in ["vgg", "prn"] {
+            for fmt in CNN_FORMATS {
+                names.push(format!("{ds}_{arch}_{fmt}"));
+            }
+        }
+    }
+    for fmt in CNN_FORMATS {
+        names.push(format!("imagenet_rn_{fmt}"));
+    }
+    names.push("wage_cnn".to_string());
     names
+}
+
+/// Parse a deep-learning spec name `{ds}_{arch}_{fmt}` into
+/// (dataset, classes, arch, fmt). Mirrors the AOT registry pairings:
+/// cifar10/cifar100 × vgg/prn, imagenet × rn.
+fn parse_cnn(name: &str) -> Option<(&'static str, usize, &'static str, &'static str)> {
+    let (rest, fmt) = name.rsplit_once('_')?;
+    let fmt = *CNN_FORMATS.iter().find(|&&f| f == fmt)?;
+    let (ds, arch) = rest.split_once('_')?;
+    let (dataset, classes) = match ds {
+        "cifar10" => ("cifar10_like", 10),
+        "cifar100" => ("cifar100_like", 100),
+        "imagenet" => ("imagenet_like", 20),
+        _ => return None,
+    };
+    let arch = match (ds, arch) {
+        ("cifar10" | "cifar100", "vgg") => "vgg",
+        ("cifar10" | "cifar100", "prn") => "prn",
+        ("imagenet", "rn") => "rn",
+        _ => return None,
+    };
+    Some((dataset, classes, arch, fmt))
 }
 
 /// Can `load(name)` succeed? Name-only check, no spec construction.
@@ -56,10 +99,13 @@ pub fn supports(name: &str) -> bool {
     if let Some(f) = name.strip_prefix("logreg_fx_f") {
         return f.parse::<i32>().map(|fl| (1..=20).contains(&fl)).unwrap_or(false);
     }
+    if parse_cnn(name).is_some() {
+        return true;
+    }
     matches!(
         name,
         "linreg_fp32" | "linreg_fx86" | "logreg_fp32" | "mlp_fp32" | "mlp_qmm_fx86"
-            | "mlp_bfp8small"
+            | "mlp_bfp8small" | "wage_cnn"
     )
 }
 
@@ -192,6 +238,53 @@ fn logreg(name: &str, quant: QuantSet) -> NativeBackend {
     NativeBackend::new(s, Arch::LogReg { d: LOGREG_D, classes: LOGREG_K, lam: LOGREG_LAM })
 }
 
+/// WAGE-style quantization (App. F / Table 3): weights live on a coarse
+/// 2-bit fixed-point grid (the large-LR + stochastic-rounding regime WAGE
+/// trains in), activations/errors/gradients in 8-bit fixed point, no
+/// momentum.
+fn wage_quant() -> QuantSet {
+    let a8 = QuantFormat::fixed(8, 5);
+    quant_set(
+        "wage_w2a8",
+        0.0,
+        QuantFormat::fixed(2, 0),
+        a8.clone(),
+        a8.clone(),
+        a8,
+        QuantFormat::None,
+    )
+}
+
+/// Build a conv-stack backend: spec shapes come from the net's parameter
+/// list (sorted-name order, the artifact calling convention).
+fn cnn(
+    name: &str,
+    family: &str,
+    dataset: &str,
+    classes: usize,
+    net: conv::ConvNet,
+    quant: QuantSet,
+) -> NativeBackend {
+    let trainable = net
+        .param_specs()
+        .into_iter()
+        .map(|(n, shape)| IoSpec { name: n, shape })
+        .collect();
+    let s = spec(
+        name,
+        family,
+        "classification",
+        dataset,
+        classes,
+        quant,
+        32,
+        256,
+        vec![3, 16, 16],
+        trainable,
+    );
+    NativeBackend::new(s, Arch::Conv(net))
+}
+
 fn mlp(name: &str, quant: QuantSet) -> NativeBackend {
     let s = spec(
         name,
@@ -224,6 +317,18 @@ pub fn load(name: &str) -> Result<NativeBackend> {
         }
         return Ok(logreg(name, fixed_weights_only(fl as u32 + 2, fl)));
     }
+    if let Some((dataset, classes, arch, fmt)) = parse_cnn(name) {
+        let quant = match fmt {
+            "fp32" => fp32_quant(0.9),
+            "bfp8big" => bfp8(false, 0.9),
+            _ => bfp8(true, 0.9),
+        };
+        let net = match arch {
+            "vgg" => conv::vgg_mini(classes),
+            _ => conv::prn_mini(classes), // "prn" and the imagenet "rn"
+        };
+        return Ok(cnn(name, arch, dataset, classes, net, quant));
+    }
     Ok(match name {
         "linreg_fp32" => linreg(name, fp32_quant(0.0)),
         "linreg_fx86" => linreg(name, fixed_weights_only(8, 6)),
@@ -231,6 +336,14 @@ pub fn load(name: &str) -> Result<NativeBackend> {
         "mlp_fp32" => mlp(name, fp32_quant(0.9)),
         "mlp_qmm_fx86" => mlp(name, fixed_all(8, 6, 0.9)),
         "mlp_bfp8small" => mlp(name, bfp8(true, 0.9)),
+        "wage_cnn" => cnn(
+            name,
+            "wage",
+            "cifar10_like",
+            10,
+            conv::wage_mini(10),
+            wage_quant(),
+        ),
         other => bail!(
             "unknown native model {other:?} (available: {})",
             model_names().join(" ")

@@ -1,9 +1,30 @@
 //! Block-floating-point quantizer (paper §3.1 + §5), bit-exact against
 //! ref.quantize_bfp: blocks share exponent E = clip(floor_log2(max|x|),
 //! -2^(E-1), 2^(E-1)-1); gap δ = 2^(E-W+2); range [-2^(E+1), 2^(E+1)-δ].
+//!
+//! Two execution paths, chosen by block geometry, both bit-identical to
+//! the reference semantics (golden vectors + property tests):
+//!
+//! * **Contiguous fast path** — when the block axes are a leading prefix
+//!   of the shape (all the hot Algorithm-2 cases: Big-block `[]`,
+//!   per-row activations `[0]`, per-filter conv weights `[0]`, 4-D
+//!   activations `[0,1]`), every block is a contiguous run of
+//!   `prod(trailing dims)` elements. No per-element block-id table, the
+//!   per-block δ/lo/hi are scalars in registers, uniforms come batched
+//!   from [`rng::uniform_fill_from_counters`], and whole blocks fan out
+//!   over the rayon pool.
+//! * **Generic path** — interleaved blocks (dense-weight per-column
+//!   exponents, axes `[1]`) keep the block-id table; the elementwise
+//!   loop still parallelizes over contiguous index ranges.
+//!
+//! Thread-count invariance: every stochastic rounding event is keyed by
+//! (seed, flat element index) and block statistics are pure maxima, so
+//! chunk boundaries cannot change any output bit.
 
 use crate::rng;
 use crate::tensor::Tensor;
+
+use super::{PAR_MIN_ELEMS, UBUF};
 
 /// floor(log2(x)) via the IEEE-754 exponent field (denormals/zero -> -127),
 /// mirroring ref.floor_log2 exactly.
@@ -12,7 +33,148 @@ pub fn floor_log2(x: f32) -> i32 {
     (((x.to_bits() >> 23) & 0xFF) as i32) - 127
 }
 
-/// Quantize a flat slice given precomputed per-element block ids.
+/// Per-block quantization constants derived from the block max.
+/// `inv = 1/δ` is exact: δ = 2^q with q = e−wl+2 ∈ [−108, 127] (the
+/// `.max(wl−110)` exponent floor bounds it below), and every 2^−q in that
+/// band is representable, so `x·inv` and `x/δ` round identically.
+#[derive(Clone, Copy)]
+struct BlockParams {
+    delta: f32,
+    inv: f32,
+    lo: f32,
+    hi: f32,
+}
+
+fn block_params(amax: f32, wl: u32, ebits: u32) -> BlockParams {
+    let emin = -(2i32.pow(ebits - 1));
+    let emax = 2i32.pow(ebits - 1) - 1;
+    // exponent floor keeps δ a normal f32 (zero blocks would otherwise
+    // underflow δ to 0 and produce 0/0 = NaN); mirrored in ref.quantize_bfp
+    let e = floor_log2(amax).clamp(emin, emax).max(wl as i32 - 110) as f32;
+    let delta = (e - (wl as f32 - 2.0)).exp2();
+    BlockParams {
+        delta,
+        inv: 1.0 / delta,
+        lo: -(e + 1.0).exp2(),
+        hi: (e + 1.0).exp2() - delta,
+    }
+}
+
+fn abs_max(xs: &[f32]) -> f32 {
+    let mut amax = 0.0f32;
+    for &x in xs {
+        let a = x.abs();
+        if a > amax {
+            amax = a;
+        }
+    }
+    amax
+}
+
+/// Quantize `n` contiguous blocks of `bsize` elements each, serially.
+/// `base` is the flat index of `xs[0]` in the full tensor — the counter
+/// stream is positional, so parallel callers pass their chunk offset.
+#[allow(clippy::too_many_arguments)]
+fn quantize_block_run(
+    xs: &[f32],
+    out: &mut [f32],
+    bsize: usize,
+    wl: u32,
+    ebits: u32,
+    seed: u32,
+    base: u32,
+    stochastic: bool,
+) {
+    for (bi, (xb, ob)) in xs.chunks(bsize).zip(out.chunks_mut(bsize)).enumerate() {
+        let p = block_params(abs_max(xb), wl, ebits);
+        let block_base = base.wrapping_add((bi * bsize) as u32);
+        quantize_elems(xb, ob, p, seed, block_base, stochastic);
+    }
+}
+
+/// Contiguous-block quantization with parallel fan-out over whole blocks
+/// (or, for a single big block, over index ranges).
+fn quantize_contiguous(
+    xs: &[f32],
+    bsize: usize,
+    wl: u32,
+    ebits: u32,
+    seed: u32,
+    stochastic: bool,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; xs.len()];
+    let threads = rayon::current_num_threads();
+    let n_blocks = xs.len() / bsize;
+    if xs.len() < PAR_MIN_ELEMS || threads <= 1 {
+        quantize_block_run(xs, &mut out, bsize, wl, ebits, seed, 0, stochastic);
+    } else if n_blocks == 1 {
+        // one big block: split the max (a pure maximum — order-invariant)
+        // and the elementwise pass over index ranges
+        let chunk = xs.len().div_ceil(threads).max(UBUF);
+        let mut maxes = vec![0.0f32; xs.len().div_ceil(chunk)];
+        rayon::scope(|s| {
+            for (m, xc) in maxes.iter_mut().zip(xs.chunks(chunk)) {
+                s.spawn(move |_| *m = abs_max(xc));
+            }
+        });
+        let p = block_params(abs_max(&maxes), wl, ebits);
+        rayon::scope(|s| {
+            for (ci, (oc, xc)) in out.chunks_mut(chunk).zip(xs.chunks(chunk)).enumerate() {
+                s.spawn(move |_| {
+                    quantize_elems(xc, oc, p, seed, (ci * chunk) as u32, stochastic);
+                });
+            }
+        });
+    } else {
+        let blocks_per = n_blocks.div_ceil(threads).max(1);
+        let elems_per = blocks_per * bsize;
+        rayon::scope(|s| {
+            for (ci, (oc, xc)) in out.chunks_mut(elems_per).zip(xs.chunks(elems_per)).enumerate()
+            {
+                s.spawn(move |_| {
+                    quantize_block_run(
+                        xc,
+                        oc,
+                        bsize,
+                        wl,
+                        ebits,
+                        seed,
+                        (ci * elems_per) as u32,
+                        stochastic,
+                    );
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Elementwise pass with fixed block params (single-block helper).
+fn quantize_elems(
+    xs: &[f32],
+    out: &mut [f32],
+    p: BlockParams,
+    seed: u32,
+    base: u32,
+    stochastic: bool,
+) {
+    if !stochastic {
+        for (&x, o) in xs.iter().zip(out.iter_mut()) {
+            *o = ((x * p.inv + 0.5).floor() * p.delta).clamp(p.lo, p.hi);
+        }
+        return;
+    }
+    let mut ubuf = [0.0f32; UBUF];
+    for (ci, (xc, oc)) in xs.chunks(UBUF).zip(out.chunks_mut(UBUF)).enumerate() {
+        let u = &mut ubuf[..xc.len()];
+        rng::uniform_fill_from_counters(seed, base.wrapping_add((ci * UBUF) as u32), u);
+        for ((&x, o), &u) in xc.iter().zip(oc.iter_mut()).zip(u.iter()) {
+            *o = ((x * p.inv + u).floor() * p.delta).clamp(p.lo, p.hi);
+        }
+    }
+}
+
+/// Generic (interleaved-block) path: per-element block ids.
 fn quantize_with_blocks(
     xs: &[f32],
     block_of: &[usize],
@@ -31,32 +193,27 @@ fn quantize_with_blocks(
             amax[b] = a;
         }
     }
-    let emin = -(2i32.pow(ebits - 1));
-    let emax = 2i32.pow(ebits - 1) - 1;
-    // per-block (delta, lo, hi) — computed in f32 like the jnp reference
-    let mut delta = vec![0.0f32; n_blocks];
-    let mut lo = vec![0.0f32; n_blocks];
-    let mut hi = vec![0.0f32; n_blocks];
-    for b in 0..n_blocks {
-        // exponent floor keeps δ a normal f32 (zero blocks would
-        // otherwise underflow δ to 0 and produce 0/0 = NaN); mirrored in
-        // ref.quantize_bfp
-        let e = floor_log2(amax[b]).clamp(emin, emax).max(wl as i32 - 110) as f32;
-        let d = (e - (wl as f32 - 2.0)).exp2();
-        delta[b] = d;
-        hi[b] = (e + 1.0).exp2() - d;
-        lo[b] = -(e + 1.0).exp2();
-    }
-    let mut out = Vec::with_capacity(xs.len());
-    for (i, &x) in xs.iter().enumerate() {
-        let b = block_of[i];
-        let u = if stochastic {
-            rng::uniform_from_counter(seed, i as u32)
-        } else {
-            0.5
-        };
-        let q = (x / delta[b] + u).floor() * delta[b];
-        out.push(q.clamp(lo[b], hi[b]));
+    let params: Vec<BlockParams> = amax.iter().map(|&a| block_params(a, wl, ebits)).collect();
+    let mut out = vec![0.0f32; xs.len()];
+    let run = |start: usize, xc: &[f32], oc: &mut [f32]| {
+        for (j, (&x, o)) in xc.iter().zip(oc.iter_mut()).enumerate() {
+            let i = start + j;
+            let p = params[block_of[i]];
+            let u = if stochastic { rng::uniform_from_counter(seed, i as u32) } else { 0.5 };
+            *o = ((x * p.inv + u).floor() * p.delta).clamp(p.lo, p.hi);
+        }
+    };
+    let threads = rayon::current_num_threads();
+    if xs.len() < PAR_MIN_ELEMS || threads <= 1 {
+        run(0, xs, &mut out);
+    } else {
+        let chunk = xs.len().div_ceil(threads).max(UBUF);
+        rayon::scope(|s| {
+            for (ci, (oc, xc)) in out.chunks_mut(chunk).zip(xs.chunks(chunk)).enumerate() {
+                let run = &run;
+                s.spawn(move |_| run(ci * chunk, xc, oc));
+            }
+        });
     }
     out
 }
@@ -73,6 +230,17 @@ pub fn quantize_bfp_tensor(
 ) -> Tensor {
     let shape = &t.shape;
     let rank = shape.len();
+    let mut axes_sorted = block_axes.to_vec();
+    axes_sorted.sort_unstable();
+    // fast path: leading-prefix block axes make every block contiguous
+    let leading = axes_sorted.iter().enumerate().all(|(i, &a)| a == i);
+    if leading && !t.data.is_empty() {
+        let bsize: usize = shape[axes_sorted.len()..].iter().product();
+        if bsize > 0 {
+            let data = quantize_contiguous(&t.data, bsize, wl, ebits, seed, stochastic);
+            return Tensor { shape: shape.clone(), data };
+        }
+    }
     // row-major strides
     let mut strides = vec![1usize; rank];
     for a in (0..rank.saturating_sub(1)).rev() {
@@ -81,11 +249,6 @@ pub fn quantize_bfp_tensor(
     // block id = mixed-radix index over the block axes
     let mut n_blocks = 1usize;
     let mut block_strides = vec![0usize; rank];
-    for &a in block_axes {
-        block_strides[a] = 1; // placeholder, fixed below
-    }
-    let mut axes_sorted = block_axes.to_vec();
-    axes_sorted.sort();
     for &a in axes_sorted.iter().rev() {
         block_strides[a] = n_blocks;
         n_blocks *= shape[a];
@@ -162,5 +325,96 @@ mod tests {
         // e=1: hi = 2^2 - 2^(1-6) = 4 - δ
         let delta = 2f32.powi(1 - 6);
         assert_eq!(q[0], 4.0 - delta);
+    }
+
+    /// Definitional per-element reference: the formulas of the original
+    /// scalar implementation, with the division form and one hash call
+    /// per element. The production paths must match it bit-for-bit.
+    fn reference_quantize(
+        t: &Tensor,
+        wl: u32,
+        ebits: u32,
+        seed: u32,
+        axes: &[usize],
+        stochastic: bool,
+    ) -> Vec<f32> {
+        let shape = &t.shape;
+        let rank = shape.len();
+        let mut strides = vec![1usize; rank];
+        for a in (0..rank.saturating_sub(1)).rev() {
+            strides[a] = strides[a + 1] * shape[a + 1];
+        }
+        let mut axes_sorted = axes.to_vec();
+        axes_sorted.sort_unstable();
+        let mut n_blocks = 1usize;
+        let mut block_strides = vec![0usize; rank];
+        for &a in axes_sorted.iter().rev() {
+            block_strides[a] = n_blocks;
+            n_blocks *= shape[a];
+        }
+        let block_of: Vec<usize> = (0..t.len())
+            .map(|i| {
+                axes_sorted
+                    .iter()
+                    .map(|&a| ((i / strides[a]) % shape[a]) * block_strides[a])
+                    .sum()
+            })
+            .collect();
+        let mut amax = vec![0.0f32; n_blocks];
+        for (i, &x) in t.data.iter().enumerate() {
+            let a = x.abs();
+            if a > amax[block_of[i]] {
+                amax[block_of[i]] = a;
+            }
+        }
+        let emin = -(2i32.pow(ebits - 1));
+        let emax = 2i32.pow(ebits - 1) - 1;
+        let mut out = Vec::with_capacity(t.len());
+        for (i, &x) in t.data.iter().enumerate() {
+            let e = floor_log2(amax[block_of[i]])
+                .clamp(emin, emax)
+                .max(wl as i32 - 110) as f32;
+            let d = (e - (wl as f32 - 2.0)).exp2();
+            let hi = (e + 1.0).exp2() - d;
+            let lo = -(e + 1.0).exp2();
+            let u = if stochastic { rng::uniform_from_counter(seed, i as u32) } else { 0.5 };
+            out.push(((x / d + u).floor() * d).clamp(lo, hi));
+        }
+        out
+    }
+
+    #[test]
+    fn fast_and_generic_paths_match_reference_bitwise() {
+        // shapes chosen to hit: contiguous fast path serial + parallel
+        // ([0] on a big tensor), the single-big-block parallel split ([]),
+        // and the interleaved generic path ([1]) past the threshold
+        let cases: &[(Vec<usize>, Vec<usize>)] = &[
+            (vec![64, 48], vec![0]),
+            (vec![64, 48], vec![1]),
+            (vec![64, 48], vec![]),
+            (vec![256, 96], vec![0]),   // 24k elems: parallel block path
+            (vec![256, 96], vec![1]),   // 24k elems: parallel generic path
+            (vec![24576], vec![]),      // parallel single-block path
+            (vec![8, 4, 6, 6], vec![0, 1]),
+            (vec![8, 4, 6, 6], vec![2]),
+        ];
+        for (shape, axes) in cases {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n)
+                .map(|i| ((i % 229) as f32 - 114.0) * 0.013 * (1.0 + (i % 7) as f32))
+                .collect();
+            let t = Tensor::new(shape.clone(), data).unwrap();
+            for &stochastic in &[true, false] {
+                let got = quantize_bfp_tensor(&t, 8, 8, 77, axes, stochastic);
+                let want = reference_quantize(&t, 8, 8, 77, axes, stochastic);
+                for (i, (a, b)) in got.data.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "shape {shape:?} axes {axes:?} stochastic {stochastic} elem {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
     }
 }

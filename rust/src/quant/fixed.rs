@@ -1,22 +1,79 @@
 //! Fixed-point stochastic-rounding quantizer (paper Eq. (1)), bit-exact
 //! against ref.quantize_fixed: Q(x) = clip(floor(x/δ + u)·δ, lo, hi) with
 //! u from the shared counter hash (element counter = flat index).
+//!
+//! The hot loop is written for throughput without changing a single
+//! output bit (golden vectors + property tests pin this):
+//!
+//! * the uniforms come from [`rng::uniform_fill_from_counters`] in
+//!   256-element batches instead of one hash call per element;
+//! * `x/δ` becomes `x·(1/δ)` — exact, because δ is a power of two whose
+//!   reciprocal is representable, so both are the correctly-rounded
+//!   value of the same real number (guarded for the |fl| > 126 fringe
+//!   where 1/δ would saturate);
+//! * slices past the `PAR_MIN_ELEMS` threshold fan out over the rayon
+//!   pool in
+//!   contiguous chunks. Each element's rounding event is keyed by its
+//!   flat index, not by anything thread-local, so the output is
+//!   bit-identical for every thread count (including 1).
 
 use crate::rng;
 
+use super::{PAR_MIN_ELEMS, UBUF};
+
 /// Quantize a slice in place. `wl` word bits, `fl` fractional bits.
 pub fn quantize_fixed_slice(xs: &mut [f32], wl: u32, fl: i32, seed: u32, stochastic: bool) {
+    let threads = rayon::current_num_threads();
+    if xs.len() < PAR_MIN_ELEMS || threads <= 1 {
+        quantize_fixed_slice_at(xs, wl, fl, seed, 0, stochastic);
+        return;
+    }
+    let chunk = xs.len().div_ceil(threads).max(UBUF);
+    rayon::scope(|s| {
+        for (ci, part) in xs.chunks_mut(chunk).enumerate() {
+            s.spawn(move |_| {
+                quantize_fixed_slice_at(part, wl, fl, seed, (ci * chunk) as u32, stochastic);
+            });
+        }
+    });
+}
+
+/// Serial kernel with the element counter starting at `base` — the
+/// parallel path hands each chunk its flat offset so the (seed, index)
+/// stream is identical to a single-threaded pass.
+pub fn quantize_fixed_slice_at(
+    xs: &mut [f32],
+    wl: u32,
+    fl: i32,
+    seed: u32,
+    base: u32,
+    stochastic: bool,
+) {
     let delta = 2f32.powi(-fl);
     let hi = 2f32.powi(wl as i32 - fl - 1) - delta;
     let lo = -2f32.powi(wl as i32 - fl - 1);
-    for (i, x) in xs.iter_mut().enumerate() {
-        let u = if stochastic {
-            rng::uniform_from_counter(seed, i as u32)
-        } else {
-            0.5
-        };
-        let q = (*x / delta + u).floor() * delta;
-        *x = q.clamp(lo, hi);
+    // 1/δ is exact for |fl| ≤ 126 (both δ and 2^fl normal); outside that
+    // window fall back to the division form. For δ ∈ {0, ∞} (saturated
+    // powi) multiply and divide agree anyway, but the subnormal-δ band
+    // fl ∈ [128, 149] would differ — hence the guard.
+    let inv = if (-126..=126).contains(&fl) { Some(2f32.powi(fl)) } else { None };
+    let scale = |x: f32| match inv {
+        Some(inv) => x * inv,
+        None => x / delta,
+    };
+    if !stochastic {
+        for x in xs.iter_mut() {
+            *x = ((scale(*x) + 0.5).floor() * delta).clamp(lo, hi);
+        }
+        return;
+    }
+    let mut ubuf = [0.0f32; UBUF];
+    for (ci, chunk) in xs.chunks_mut(UBUF).enumerate() {
+        let u = &mut ubuf[..chunk.len()];
+        rng::uniform_fill_from_counters(seed, base.wrapping_add((ci * UBUF) as u32), u);
+        for (x, &u) in chunk.iter_mut().zip(u.iter()) {
+            *x = ((scale(*x) + u).floor() * delta).clamp(lo, hi);
+        }
     }
 }
 
@@ -82,5 +139,26 @@ mod tests {
         // W=4,F=2: range [-2, 2-0.25]
         assert_eq!(q[0], 2.0 - 0.25);
         assert_eq!(q[1], -2.0);
+    }
+
+    #[test]
+    fn batched_path_matches_per_element_reference() {
+        // the production path (batched uniforms, reciprocal multiply,
+        // parallel past the threshold) must reproduce the definitional
+        // per-element formula bit-for-bit
+        let n = PAR_MIN_ELEMS + 123; // force the parallel branch too
+        let xs: Vec<f32> = (0..n)
+            .map(|i| ((i % 611) as f32 - 300.0) * 0.0173)
+            .collect();
+        let (wl, fl, seed) = (8, 6, 0xABCD);
+        let got = quantize_fixed(&xs, wl, fl, seed, true);
+        let delta = 2f32.powi(-fl);
+        let hi = 2f32.powi(wl as i32 - fl - 1) - delta;
+        let lo = -2f32.powi(wl as i32 - fl - 1);
+        for (i, (&x, &g)) in xs.iter().zip(&got).enumerate() {
+            let u = rng::uniform_from_counter(seed, i as u32);
+            let want = ((x / delta + u).floor() * delta).clamp(lo, hi);
+            assert_eq!(g.to_bits(), want.to_bits(), "elem {i}: {g} vs {want}");
+        }
     }
 }

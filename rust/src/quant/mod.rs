@@ -9,6 +9,14 @@ pub mod bfp;
 pub mod fixed;
 pub mod spec;
 
+/// Below this many elements a quantizer call stays serial — the rayon
+/// fan-out (a queue push + wakeup per chunk) costs more than it buys.
+/// Shared by the fixed and BFP hot loops so the two stay tuned together.
+pub(crate) const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Stack-buffer size for batched uniform draws in the quantizer loops.
+pub(crate) const UBUF: usize = 256;
+
 pub use bfp::{quantize_bfp, quantize_bfp_tensor};
 pub use fixed::quantize_fixed;
 pub use spec::{BlockDesign, QuantFormat};

@@ -38,7 +38,14 @@ pub struct EvalOut {
 }
 
 /// One loaded (model, quantization-config) pair on some execution engine.
-pub trait ModelBackend {
+///
+/// `Send + Sync` because the coordinator runs multi-seed experiment
+/// replicas concurrently over `&dyn ModelBackend`
+/// (`experiment::Ctx::run_seeds`): a backend is immutable after load —
+/// all mutable training state lives in [`ModelState`] — so sharing is
+/// natural for both engines (the native kernels and the compiled-
+/// artifact handles).
+pub trait ModelBackend: Send + Sync {
     /// Static metadata: shapes, batch sizes, quant formats, dataset.
     fn spec(&self) -> &ModelSpec;
 
@@ -85,8 +92,9 @@ pub trait ModelBackend {
     }
 
     /// Fig. 3 (right): evaluate with activations quantized to `act_wl`-bit
-    /// Small-block BFP (0 = no activation quantization). Only the XLA
-    /// artifact backend provides this entry today.
+    /// Small-block BFP (0 = no activation quantization). The native and
+    /// artifact backends both provide this; the default method bails for
+    /// backends without a flex-eval entry.
     fn eval_flex(
         &self,
         _trainable: &NamedTensors,

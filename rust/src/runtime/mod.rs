@@ -5,7 +5,7 @@
 //! * [`artifact`] — manifest.json schema for the AOT artifact set (built
 //!   once by `make artifacts`); parsed without the XLA runtime so tooling
 //!   and tests can inspect manifests hermetically.
-//! * [`model`] *(feature `xla-runtime`)* — loads the AOT artifacts onto a
+//! * `model` *(feature `xla-runtime`)* — loads the AOT artifacts onto a
 //!   PJRT CPU client and exposes them as a `ModelBackend`; Python is
 //!   never on the training path.
 //!

@@ -3,9 +3,19 @@
 //! `cargo bench` targets use `harness = false` and drive this directly:
 //! warmup, timed iterations, median/MAD-style robust stats, and a
 //! paper-style table printer shared by the experiment benches.
+//!
+//! For per-PR perf tracking, results can also be collected into a
+//! [`BenchLog`] and written as JSON (`--json <path>` on
+//! `bench_perf_hotpath`; CI uploads the file as the `BENCH_hotpath.json`
+//! artifact — the schema is documented in ROADMAP.md's perf-tracking
+//! note).
 
+use std::path::Path;
 use std::time::Instant;
 
+use anyhow::Result;
+
+use super::json::Value;
 use super::{mean, median, stddev};
 
 pub struct BenchResult {
@@ -19,6 +29,56 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn per_iter_ms(&self) -> f64 {
         self.median_s * 1e3
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(&self.name)),
+            ("iters", Value::Num(self.iters as f64)),
+            ("median_s", Value::Num(self.median_s)),
+            ("mean_s", Value::Num(self.mean_s)),
+            ("stddev_s", Value::Num(self.stddev_s)),
+        ])
+    }
+}
+
+/// Collects bench results (plus free-form throughput metrics) for the
+/// machine-readable output mode.
+#[derive(Default)]
+pub struct BenchLog {
+    results: Vec<Value>,
+}
+
+impl BenchLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a timing result.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.to_json());
+    }
+
+    /// Record a derived throughput metric (`unit` e.g. "Melem/s") tied to
+    /// the named bench.
+    pub fn push_metric(&mut self, name: &str, unit: &str, value: f64) {
+        self.results.push(Value::obj(vec![
+            ("name", Value::str(name)),
+            ("unit", Value::str(unit)),
+            ("value", Value::Num(value)),
+        ]));
+    }
+
+    /// Write the accumulated results (`{"schema": "swalp-bench-v1",
+    /// "results": [...]}`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let v = Value::obj(vec![
+            ("schema", Value::str("swalp-bench-v1")),
+            ("results", Value::Arr(self.results.clone())),
+        ]);
+        crate::util::json::write_file(path, &v)?;
+        eprintln!("[bench] wrote {}", path.display());
+        Ok(())
     }
 }
 
@@ -121,5 +181,23 @@ mod tests {
         let mut t = Table::new(&["a", "bb"]);
         t.row(vec!["1".into(), "2".into()]);
         t.print();
+    }
+
+    #[test]
+    fn bench_log_roundtrips_through_json() {
+        let mut log = BenchLog::new();
+        let r = bench("noop", 0, 3, 0.0, || {});
+        log.push(&r);
+        log.push_metric("noop", "Melem/s", 123.5);
+        let path = std::env::temp_dir().join("swalp_bench_log_test.json");
+        log.save(&path).unwrap();
+        let v = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str().unwrap(), "swalp-bench-v1");
+        let results = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "noop");
+        assert!(results[0].get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(results[1].get("unit").unwrap().as_str().unwrap(), "Melem/s");
+        let _ = std::fs::remove_file(&path);
     }
 }

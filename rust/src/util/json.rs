@@ -88,7 +88,7 @@ impl Value {
             .collect()
     }
 
-    /// Array of numbers -> Vec<usize> (shapes).
+    /// Array of numbers -> `Vec<usize>` (shapes).
     pub fn as_shape(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }

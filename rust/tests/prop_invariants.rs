@@ -142,6 +142,134 @@ fn prop_stochastic_rounding_is_unbiased_in_expectation() {
 }
 
 #[test]
+fn prop_parallel_matmul_bit_identical_to_serial_for_random_shapes() {
+    use swalp::native::kernels;
+    // random shapes straddling the parallel threshold; the pooled path
+    // must be bit-identical (not merely close) to the serial kernels —
+    // accumulation order per output element is part of the contract
+    check("parallel matmul == serial", &cfg(40), |rng, _| {
+        let m = 1 + rng.below(80);
+        let k = 1 + rng.below(96);
+        let n = 1 + rng.below(64);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let b_at: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let b_bt: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+
+        let (mut p, mut s) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        kernels::matmul(&a, &b, m, k, n, &mut p);
+        kernels::matmul_serial(&a, &b, m, k, n, &mut s);
+        if p.iter().zip(&s).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("matmul diverged at m={m} k={k} n={n}"));
+        }
+
+        let (mut p, mut s) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+        kernels::matmul_at_b(&a, &b_at, m, k, n, &mut p);
+        kernels::matmul_at_b_serial(&a, &b_at, m, k, n, &mut s);
+        if p.iter().zip(&s).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("matmul_at_b diverged at m={m} k={k} n={n}"));
+        }
+
+        let (mut p, mut s) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        kernels::matmul_a_bt(&a, &b_bt, m, k, n, &mut p);
+        kernels::matmul_a_bt_serial(&a, &b_bt, m, k, n, &mut s);
+        if p.iter().zip(&s).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("matmul_a_bt diverged at m={m} k={k} n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_quantizers_bit_identical_to_scalar_reference() {
+    use swalp::rng::uniform_from_counter;
+    // sizes span the serial/parallel threshold; the reference is the
+    // definitional per-element formula with one hash per flat index
+    check("parallel quantizer == scalar reference", &cfg(12), |rng, case| {
+        let n = if case % 2 == 0 { 1 + rng.below(512) } else { 16 * 1024 + rng.below(8192) };
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal() * 4.0).collect();
+        let seed = rng.next_u32();
+        let (wl, fl) = (8, 6);
+        let q = fixed::quantize_fixed(&xs, wl, fl, seed, true);
+        let delta = 2f32.powi(-fl);
+        let hi = 2f32.powi(wl as i32 - fl - 1) - delta;
+        let lo = -2f32.powi(wl as i32 - fl - 1);
+        for (i, (&x, &g)) in xs.iter().zip(&q).enumerate() {
+            let u = uniform_from_counter(seed, i as u32);
+            let want = ((x / delta + u).floor() * delta).clamp(lo, hi);
+            if g.to_bits() != want.to_bits() {
+                return Err(format!("fixed elem {i}: {g} vs {want} (n={n})"));
+            }
+        }
+        // BFP per-row blocks through the contiguous fast path
+        let cols = 1 + rng.below(48);
+        let rows = n.div_ceil(cols);
+        let mut data = xs.clone();
+        data.resize(rows * cols, 0.25);
+        let t = Tensor::new(vec![rows, cols], data.clone()).unwrap();
+        let q = bfp::quantize_bfp_tensor(&t, 8, 8, seed, &[0], true);
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            let amax = row.iter().fold(0.0f32, |m, &v| if v.abs() > m { v.abs() } else { m });
+            let e = bfp::floor_log2(amax).clamp(-128, 127).max(8 - 110) as f32;
+            let d = (e - 6.0).exp2();
+            let bhi = (e + 1.0).exp2() - d;
+            let blo = -(e + 1.0).exp2();
+            for c in 0..cols {
+                let i = r * cols + c;
+                let u = uniform_from_counter(seed, i as u32);
+                let want = ((data[i] / d + u).floor() * d).clamp(blo, bhi);
+                if q.data[i].to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "bfp elem {i} (row {r}): {} vs {want} (rows={rows} cols={cols})",
+                        q.data[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_swa_fold_is_order_independent() {
+    // the multi-seed batching only changes *when* each replica's folds
+    // happen relative to other replicas' work, never the order within an
+    // accumulator — but the aggregate must also be permutation-stable:
+    // folding the same set of models in any order gives the same mean up
+    // to f64 running-average rounding
+    check("SWA fold order independence", &cfg(60), |rng, _| {
+        let n = 1 + rng.below(12);
+        let folds = 2 + rng.below(8);
+        let models: Vec<Vec<f32>> = (0..folds)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let mut fwd = SwaAccumulator::new(None);
+        let mut rev = SwaAccumulator::new(None);
+        for m in &models {
+            fwd.fold(&named_t(m)).unwrap();
+        }
+        for m in models.iter().rev() {
+            rev.fold(&named_t(m)).unwrap();
+        }
+        if fwd.m != rev.m {
+            return Err(format!("fold counts differ: {} vs {}", fwd.m, rev.m));
+        }
+        let (a, b) = (fwd.average().unwrap(), rev.average().unwrap());
+        for (i, (x, y)) in a[0].1.data.iter().zip(&b[0].1.data).enumerate() {
+            if (x - y).abs() > 1e-5 * x.abs().max(1.0) {
+                return Err(format!("elem {i}: {x} vs {y} after {folds} folds"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn named_t(vals: &[f32]) -> NamedTensors {
+    vec![("w".into(), Tensor::new(vec![vals.len()], vals.to_vec()).unwrap())]
+}
+
+#[test]
 fn prop_swa_accumulator_equals_arithmetic_mean() {
     check("SWA fold = mean", &cfg(100), |rng, _| {
         let n = 1 + rng.below(16);

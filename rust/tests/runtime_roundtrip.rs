@@ -74,8 +74,14 @@ fn native_eval_batch_stats_falls_back_to_eval() {
     let b = model.eval_batch_stats(&ms.trainable, &ms.state, &x, &y).unwrap();
     assert_eq!(a.loss.to_bits(), b.loss.to_bits());
     assert_eq!(a.metric.to_bits(), b.metric.to_bits());
-    // the native backend has no flex-eval entry
-    assert!(model.eval_flex(&ms.trainable, &ms.state, &x, &y, 8.0).is_err());
+    // flex eval (Fig. 3 right) runs natively: act_wl = 8 matches this
+    // model's own 8-bit Small-block nearest eval quantization exactly,
+    // and act_wl = 0 disables activation quantization
+    let flex = model.eval_flex(&ms.trainable, &ms.state, &x, &y, 8.0).unwrap();
+    assert_eq!(a.loss.to_bits(), flex.loss.to_bits());
+    assert_eq!(a.metric.to_bits(), flex.metric.to_bits());
+    let unquant = model.eval_flex(&ms.trainable, &ms.state, &x, &y, 0.0).unwrap();
+    assert!(unquant.loss.is_finite());
 }
 
 #[test]

@@ -184,3 +184,97 @@ fn mlp_full_algorithm2_learns() {
     let swa_err = out.swa_test_err.unwrap();
     assert!(swa_err < 60.0, "SWALP test error {swa_err:.1}%");
 }
+
+#[test]
+fn native_cnn_runs_quantized_steps_and_is_reproducible() {
+    // the conv stack under the full 8-bit Small-block BFP Algorithm-2
+    // step: losses stay finite, averaging folds run, and — because every
+    // stochastic event is (step, site, role)-keyed and the parallel
+    // kernels are chunk-invariant — two runs are bit-identical even
+    // though the kernels fan out over the thread pool
+    let model = native::load("cifar10_vgg_bfp8small").unwrap();
+    assert_eq!(model.spec().x_shape, vec![3, 16, 16]);
+    let split = data::build(&model.spec().dataset, 5, 0.05).unwrap();
+    let run = || {
+        let trainer = Trainer::new(&model, &split);
+        let cfg = TrainConfig::new(14, 6, 1, Schedule::Constant(0.05));
+        trainer.run(&cfg).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.sgd_eval.loss.is_finite(), "loss diverged: {}", a.sgd_eval.loss);
+    assert_eq!(a.swa.as_ref().unwrap().m, 8, "averaging phase must fold");
+    for ((n1, t1), (n2, t2)) in a.final_state.trainable.iter().zip(&b.final_state.trainable) {
+        assert_eq!(n1, n2);
+        let bits = |t: &swalp::tensor::Tensor| -> Vec<u32> {
+            t.data.iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits(t1), bits(t2), "{n1}: conv step must be bit-reproducible");
+    }
+    // eval_flex (Fig. 3 right) works natively on the conv stack
+    let flex = model
+        .eval_flex(
+            &a.final_state.trainable,
+            &a.final_state.state,
+            &split.test.x[..32 * 768],
+            &split.test.y[..32],
+            8.0,
+        )
+        .unwrap();
+    assert!(flex.loss.is_finite());
+}
+
+#[test]
+fn wage_cnn_trains_on_the_coarse_grid() {
+    // WAGE-style: weights on the W2F0 grid {-2,-1,0,1}; steps must stay
+    // finite and weights must stay on-grid after every update
+    let model = native::load("wage_cnn").unwrap();
+    let split = data::build(&model.spec().dataset, 9, 0.05).unwrap();
+    let trainer = Trainer::new(&model, &split);
+    let mut cfg = TrainConfig::new(10, 5, 1, Schedule::Constant(1.0));
+    cfg.enable_swa = true;
+    let out = trainer.run(&cfg).unwrap();
+    assert!(out.sgd_eval.loss.is_finite());
+    for (name, t) in &out.final_state.trainable {
+        for &v in t.data.iter().take(64) {
+            assert!(
+                (-2.0..=1.0).contains(&v) && (v - v.round()).abs() < 1e-6,
+                "{name}: {v} off the W2F0 grid"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_multi_seed_matches_sequential_runs() {
+    use swalp::coordinator::experiment::Ctx;
+    // run_seeds executes replicas concurrently over the backend trait;
+    // each replica is a pure function of its config, so the batched
+    // outcomes must equal a sequential loop exactly
+    let split = data::build("linreg_synth", 3, 0.1).unwrap();
+    let mk_cfg = |seed: u64| {
+        let mut cfg = TrainConfig::new(120, 40, 1, Schedule::Constant(0.001));
+        cfg.init_seed = 1.0 + seed as f32;
+        cfg.data_seed = 100 + seed;
+        cfg
+    };
+    let ctx = Ctx::new(true, 3).unwrap();
+    let batched = ctx.run_seeds("linreg_fx86", &split, mk_cfg).unwrap();
+    assert_eq!(batched.len(), 3);
+    for (seed, out) in batched.iter().enumerate() {
+        let model = native::load("linreg_fx86").unwrap();
+        let trainer = Trainer::new(&model, &split);
+        let want = trainer.run(&mk_cfg(seed as u64)).unwrap();
+        assert_eq!(
+            out.sgd_eval.loss.to_bits(),
+            want.sgd_eval.loss.to_bits(),
+            "seed {seed}: batched and sequential runs diverged"
+        );
+        for ((n1, t1), (n2, t2)) in
+            out.final_state.trainable.iter().zip(&want.final_state.trainable)
+        {
+            assert_eq!(n1, n2);
+            assert_eq!(t1.data, t2.data, "seed {seed} tensor {n1}");
+        }
+    }
+}

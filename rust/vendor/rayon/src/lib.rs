@@ -1,0 +1,303 @@
+//! Hermetic shim of the `rayon` API surface swalp uses: a persistent
+//! global thread pool driving `scope`/`spawn`, plus
+//! `current_num_threads`. The offline vendor set has no crates.io, so —
+//! like `vendor/xla-stub` — this path dependency keeps resolution
+//! hermetic while staying drop-in replaceable by the real crate.
+//!
+//! Design constraints (matching how the swalp kernels use it):
+//!
+//! * **Persistent workers.** `scope` is on the per-training-step hot
+//!   path; a thread-spawn per call (~tens of µs) would eat the win for
+//!   medium tensors. Workers start once, at first use, and live for the
+//!   process: N−1 pool threads plus the calling thread, which drains the
+//!   queue itself while waiting ("help-first").
+//! * **Thread count** comes from `RAYON_NUM_THREADS` (same knob as real
+//!   rayon) or `std::thread::available_parallelism()`, read once.
+//!   `RAYON_NUM_THREADS=1` disables pool threads entirely: spawned jobs
+//!   run on the caller inside `scope`'s wait, in submission order.
+//! * **Panic propagation.** A panicking job is caught, the scope still
+//!   waits for every sibling (jobs borrow the caller's stack frame —
+//!   returning early would be unsound), then the first payload is
+//!   re-thrown from `scope`.
+//!
+//! Soundness of the lifetime erasure: jobs are boxed as
+//! `dyn FnOnce + 'scope` and transmuted to `'static` so they can sit in
+//! the global queue. This is sound because `scope` never returns — by
+//! value or by unwind (a drop guard covers the unwind path) — until the
+//! pending-job count hits zero, so no job can outlive the borrows it
+//! captures. This is the classic scoped-thread-pool argument (crossbeam's
+//! scoped threads, rayon's own registry).
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    queue: Mutex<VecDeque<Job>>,
+    work_cv: Condvar,
+}
+
+impl Pool {
+    fn push(&self, job: Job) {
+        self.queue.lock().unwrap().push_back(job);
+        self.work_cv.notify_one();
+    }
+
+    /// Newest-first pop for the help-first wait path: a scope waiting on
+    /// its own just-spawned chunks should pick those up, not an older,
+    /// potentially much coarser job (e.g. a whole seed-replica training
+    /// run queued before it). Workers drain oldest-first for fairness;
+    /// scheduling order never affects results (jobs are position-keyed).
+    fn try_pop_newest(&self) -> Option<Job> {
+        self.queue.lock().unwrap().pop_back()
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let pool = Pool { queue: Mutex::new(VecDeque::new()), work_cv: Condvar::new() };
+        // N−1 workers; the thread calling `scope` is the N-th.
+        for _ in 1..current_num_threads() {
+            std::thread::spawn(worker_loop);
+        }
+        pool
+    })
+}
+
+fn worker_loop() {
+    let pool = pool();
+    loop {
+        let job = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = pool.work_cv.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+/// Number of threads `scope` fans out over (pool workers + the caller).
+/// Fixed for the process at first call: `RAYON_NUM_THREADS` if set to a
+/// positive integer, else the machine's available parallelism.
+pub fn current_num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("RAYON_NUM_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+#[derive(Default)]
+struct ScopeState {
+    pending: Mutex<usize>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl ScopeState {
+    fn complete_one(&self) {
+        let mut pending = self.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Help-first wait: drain the global queue (any scope's jobs — a
+    /// waiting thread is a working thread), then block until this scope's
+    /// pending count reaches zero. The timeout re-drains periodically so
+    /// work enqueued *while* we block (jobs spawning siblings) can never
+    /// strand the last awake thread.
+    fn wait(&self) {
+        let pool = pool();
+        loop {
+            while let Some(job) = pool.try_pop_newest() {
+                job();
+            }
+            let pending = self.pending.lock().unwrap();
+            if *pending == 0 {
+                return;
+            }
+            let _ = self.done_cv.wait_timeout(pending, Duration::from_millis(5)).unwrap();
+        }
+    }
+}
+
+/// Mirror of `rayon::Scope`: spawn point for scoped jobs. Invariant in
+/// `'scope` like the real one.
+pub struct Scope<'scope> {
+    state: Arc<ScopeState>,
+    _marker: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'scope> Scope<'scope> {
+    /// Queue `body` on the pool. It may run on any pool thread or on the
+    /// caller inside `scope`'s wait; it receives `&Scope` so it can spawn
+    /// siblings, exactly like real rayon.
+    pub fn spawn<F>(&self, body: F)
+    where
+        F: FnOnce(&Scope<'scope>) + Send + 'scope,
+    {
+        *self.state.pending.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let child = Scope { state: Arc::clone(&self.state), _marker: PhantomData };
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| body(&child))) {
+                let mut slot = state.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            state.complete_one();
+        });
+        // SAFETY: `scope` waits (normal return *and* unwind) for the
+        // pending count to reach zero before its frame is torn down, so
+        // the 'scope borrows inside the job never dangle. See module doc.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        pool().push(job);
+    }
+}
+
+/// Run `op` with a spawn scope; returns only after every spawned job has
+/// finished. Panics in jobs are re-thrown here after the wait.
+pub fn scope<'scope, OP, R>(op: OP) -> R
+where
+    OP: FnOnce(&Scope<'scope>) -> R,
+{
+    struct WaitGuard<'a>(&'a ScopeState);
+    impl Drop for WaitGuard<'_> {
+        fn drop(&mut self) {
+            self.0.wait();
+        }
+    }
+
+    let state = Arc::new(ScopeState::default());
+    let result = {
+        // the guard waits even if `op` unwinds — jobs borrow this frame
+        let _guard = WaitGuard(&state);
+        let scope = Scope { state: Arc::clone(&state), _marker: PhantomData };
+        op(&scope)
+    };
+    let payload = state.panic.lock().unwrap().take();
+    if let Some(payload) = payload {
+        resume_unwind(payload);
+    }
+    result
+}
+
+/// Run two closures, potentially in parallel, returning both results —
+/// the rayon::join signature restricted to what a shim can promise.
+pub fn join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    let mut rb: Option<RB> = None;
+    let ra = scope(|s| {
+        let slot = &mut rb;
+        s.spawn(move |_| *slot = Some(b()));
+        a()
+    });
+    (ra, rb.expect("join: second closure did not run"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_every_job_and_waits() {
+        let mut out = vec![0usize; 64];
+        scope(|s| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                s.spawn(move |_| *slot = i + 1);
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i + 1));
+    }
+
+    #[test]
+    fn nested_scopes_make_progress() {
+        let hits = AtomicUsize::new(0);
+        scope(|s| {
+            for _ in 0..8 {
+                let hits = &hits;
+                s.spawn(move |_| {
+                    scope(|inner| {
+                        for _ in 0..4 {
+                            inner.spawn(move |_| {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn jobs_can_spawn_siblings() {
+        let hits = AtomicUsize::new(0);
+        scope(|s| {
+            let hits = &hits;
+            s.spawn(move |s2| {
+                hits.fetch_add(1, Ordering::Relaxed);
+                s2.spawn(move |_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn panic_in_job_propagates_after_wait() {
+        let finished = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            scope(|s| {
+                let finished = &finished;
+                s.spawn(move |_| panic!("boom"));
+                for _ in 0..8 {
+                    s.spawn(move |_| {
+                        finished.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // siblings all completed before the panic surfaced
+        assert_eq!(finished.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn join_returns_both() {
+        let (a, b) = join(|| 2 + 2, || "ok");
+        assert_eq!(a, 4);
+        assert_eq!(b, "ok");
+    }
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(current_num_threads() >= 1);
+    }
+}
