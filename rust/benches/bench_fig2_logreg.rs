@@ -1,22 +1,13 @@
-//! Regenerates the paper's fig2-logreg (see DESIGN.md §4 experiment index).
-//! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
-//! version used for EXPERIMENTS.md. Runs hermetically on the native
-//! backend — no artifacts needed.
-
-use swalp::coordinator::experiment::Ctx;
-use swalp::util::cli::Args;
+//! Regenerates the paper's fig2-logreg through the experiment registry
+//! (`swalp::coordinator::registry`) and the grid runner. Quick mode by
+//! default; SWALP_FULL=1 (or --full) runs the full-scale version used
+//! for EXPERIMENTS.md; --seeds N aggregates mean/std over seed replicas
+//! and --threads 1 runs the serial reference. Runs on the native engine
+//! — no artifacts needed — and an unavailable backend is a hard error,
+//! not a skip: this bench executing real training steps is an
+//! acceptance gate for the native engine. Emits the swalp-report-v1
+//! artifact under results/.
 
 fn main() {
-    let args = Args::from_env();
-    let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
-    let seeds = args.u64_or("seeds", 1).unwrap_or(1);
-    match Ctx::new(!full, seeds) {
-        Ok(ctx) => {
-            if let Err(e) = ctx.dispatch("fig2-logreg") {
-                eprintln!("fig2-logreg failed: {e:#}");
-                std::process::exit(1);
-            }
-        }
-        Err(e) => eprintln!("skipping fig2-logreg: {e}"),
-    }
+    swalp::coordinator::runner::bench_main("fig2-logreg");
 }

@@ -1,34 +1,13 @@
-//! Regenerates the paper's fig3-frequency (see DESIGN.md §4 experiment index).
-//! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
-//! version used for EXPERIMENTS.md.
-//!
-//! Runs on the native conv stack (cifar100_vgg_bfp8small is in the
-//! native registry) — no artifacts needed; the guard below only fires if
-//! the registry regresses.
-
-use swalp::coordinator::experiment::Ctx;
-use swalp::util::cli::Args;
+//! Regenerates the paper's fig3-frequency through the experiment registry
+//! (`swalp::coordinator::registry`) and the grid runner. Quick mode by
+//! default; SWALP_FULL=1 (or --full) runs the full-scale version used
+//! for EXPERIMENTS.md; --seeds N aggregates mean/std over seed replicas
+//! and --threads 1 runs the serial reference. Runs on the native engine
+//! — no artifacts needed — and an unavailable backend is a hard error,
+//! not a skip: this bench executing real training steps is an
+//! acceptance gate for the native engine. Emits the swalp-report-v1
+//! artifact under results/.
 
 fn main() {
-    let args = Args::from_env();
-    let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
-    let seeds = args.u64_or("seeds", 1).unwrap_or(1);
-    let ctx = match Ctx::new(!full, seeds) {
-        Ok(ctx) => ctx,
-        Err(e) => {
-            eprintln!("skipping fig3-frequency: {e}");
-            return;
-        }
-    };
-    if !ctx.can_load("cifar100_vgg_bfp8small") {
-        eprintln!(
-            "skipping fig3-frequency: model cifar100_vgg_bfp8small unavailable \
-             (needs --features xla-runtime and `make artifacts`)"
-        );
-        return;
-    }
-    if let Err(e) = ctx.dispatch("fig3-frequency") {
-        eprintln!("fig3-frequency failed: {e:#}");
-        std::process::exit(1);
-    }
+    swalp::coordinator::runner::bench_main("fig3-frequency");
 }

@@ -84,7 +84,7 @@ fn main() {
         let split = data::build(&model.spec().dataset, 3, 0.1).unwrap();
         let mut loader =
             swalp::data::loader::Loader::new(&split.train, model.spec().batch_train, 1);
-        let mut ms = model.init(1.0).unwrap();
+        let mut ms = model.init(1).unwrap();
         let (x, y) = loader.next_batch();
         let (x, y) = (x.to_vec(), y.to_vec());
         let mut step = 0u64;

@@ -1,36 +1,13 @@
-//! Regenerates the paper's table1 (see DESIGN.md §4 experiment index).
-//! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
-//! version used for EXPERIMENTS.md.
-//!
-//! Runs on the native conv stack (the `{cifar10,cifar100}_{vgg,prn}_*`
-//! specs are in the native registry) — no artifacts needed. An
-//! unavailable backend is a hard error, not a skip: this bench executing
-//! real training steps is an acceptance gate for the native engine.
-
-use swalp::coordinator::experiment::Ctx;
-use swalp::util::cli::Args;
+//! Regenerates the paper's table1 through the experiment registry
+//! (`swalp::coordinator::registry`) and the grid runner. Quick mode by
+//! default; SWALP_FULL=1 (or --full) runs the full-scale version used
+//! for EXPERIMENTS.md; --seeds N aggregates mean/std over seed replicas
+//! and --threads 1 runs the serial reference. Runs on the native engine
+//! — no artifacts needed — and an unavailable backend is a hard error,
+//! not a skip: this bench executing real training steps is an
+//! acceptance gate for the native engine. Emits the swalp-report-v1
+//! artifact under results/.
 
 fn main() {
-    let args = Args::from_env();
-    let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
-    let seeds = args.u64_or("seeds", 1).unwrap_or(1);
-    let ctx = match Ctx::new(!full, seeds) {
-        Ok(ctx) => ctx,
-        Err(e) => {
-            eprintln!("error: table1 context: {e:#}");
-            std::process::exit(1);
-        }
-    };
-    if !ctx.can_load("cifar10_vgg_bfp8small") {
-        eprintln!(
-            "error: model cifar10_vgg_bfp8small unavailable on every backend.\n\
-             registered native models:\n  {}",
-            swalp::native::model_names().join("\n  ")
-        );
-        std::process::exit(1);
-    }
-    if let Err(e) = ctx.dispatch("table1") {
-        eprintln!("table1 failed: {e:#}");
-        std::process::exit(1);
-    }
+    swalp::coordinator::runner::bench_main("table1");
 }

@@ -1,36 +1,13 @@
-//! Regenerates the paper's table3 (see DESIGN.md §4 experiment index).
-//! Quick mode by default; SWALP_FULL=1 (or --full) runs the full-scale
-//! version used for EXPERIMENTS.md.
-//!
-//! Runs on the native conv stack (`wage_cnn` is in the native registry)
-//! — no artifacts needed. An unavailable backend is a hard error, not a
-//! skip: this bench executing real training steps is an acceptance gate
-//! for the native engine.
-
-use swalp::coordinator::experiment::Ctx;
-use swalp::util::cli::Args;
+//! Regenerates the paper's table3 through the experiment registry
+//! (`swalp::coordinator::registry`) and the grid runner. Quick mode by
+//! default; SWALP_FULL=1 (or --full) runs the full-scale version used
+//! for EXPERIMENTS.md; --seeds N aggregates mean/std over seed replicas
+//! and --threads 1 runs the serial reference. Runs on the native engine
+//! — no artifacts needed — and an unavailable backend is a hard error,
+//! not a skip: this bench executing real training steps is an
+//! acceptance gate for the native engine. Emits the swalp-report-v1
+//! artifact under results/.
 
 fn main() {
-    let args = Args::from_env();
-    let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
-    let seeds = args.u64_or("seeds", 1).unwrap_or(1);
-    let ctx = match Ctx::new(!full, seeds) {
-        Ok(ctx) => ctx,
-        Err(e) => {
-            eprintln!("error: table3 context: {e:#}");
-            std::process::exit(1);
-        }
-    };
-    if !ctx.can_load("wage_cnn") {
-        eprintln!(
-            "error: model wage_cnn unavailable on every backend.\n\
-             registered native models:\n  {}",
-            swalp::native::model_names().join("\n  ")
-        );
-        std::process::exit(1);
-    }
-    if let Err(e) = ctx.dispatch("table3") {
-        eprintln!("table3 failed: {e:#}");
-        std::process::exit(1);
-    }
+    swalp::coordinator::runner::bench_main("table3");
 }

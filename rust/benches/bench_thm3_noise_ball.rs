@@ -1,17 +1,17 @@
-//! Theorem 3 lower bound: SGD-LP noise ball Ω(σδ) vs SWALP O(δ²), plus an
+//! Theorem 3 lower bound: SGD-LP noise ball Ω(σδ) vs SWALP O(δ²) through
+//! the experiment registry (emits the swalp-report-v1 artifact), plus an
 //! α-sweep showing the floor cannot be stepped under by tuning the LR.
 //! Pure simulation (rust/src/sim) — no artifacts required.
 
-use swalp::coordinator::experiment::thm3_noise_ball;
 use swalp::sim;
 use swalp::util::bench::Table;
 use swalp::util::cli::Args;
 
 fn main() {
+    swalp::coordinator::runner::bench_main("thm3");
+
     let args = Args::from_env();
     let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
-    thm3_noise_ball(!full).unwrap();
-
     // α-sweep at fixed δ: Theorem 3 says min over α of the floor is still
     // Ω(σδ) — no step size escapes the quantization ball.
     println!("\n-- α-sweep at δ=0.05, σ=0.1 (floor vs α) --");

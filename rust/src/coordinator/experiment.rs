@@ -1,41 +1,106 @@
-//! The experiment registry: one function per paper table/figure
-//! (DESIGN.md §4 experiment index). Each regenerates the paper's
-//! rows/series on the scaled-down substrates and persists structured
-//! results under results/ for EXPERIMENTS.md.
+//! Experiment execution context: backend resolution, sizing tiers and
+//! the batched multi-seed primitive.
 //!
-//! Benches (`rust/benches/bench_*.rs`) and the CLI (`swalp reproduce`)
-//! both dispatch into here.
+//! The per-figure logic lives in the declarative registry
+//! ([`super::registry`]); the grid execution machinery lives in the
+//! runner ([`super::runner`]). A [`Ctx`] holds what both need: which
+//! backends are available, the sizing tier (full / quick / smoke), the
+//! seed-replica count, the runner's thread policy and the results
+//! directory. Build one through [`CtxConfig`]:
+//!
+//! ```no_run
+//! use swalp::coordinator::experiment::CtxConfig;
+//! let ctx = CtxConfig::new().quick(true).seeds(3).build().unwrap();
+//! ```
+
+use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{Schedule, SwaAccumulator, TrainConfig, TrainOutcome, Trainer};
-use crate::data::{self, loader::Loader, synth, Split};
+use crate::coordinator::{TrainConfig, TrainOutcome, Trainer};
+use crate::data::Split;
 use crate::native;
-use crate::quant::{fixed::quantize_fixed, QuantFormat};
 use crate::runtime::ModelBackend;
 #[cfg(feature = "xla-runtime")]
 use crate::runtime::{artifacts_dir, Manifest, Runtime};
-use crate::sim;
-use crate::util::bench::Table;
-use crate::util::json::Value;
 
 use super::report;
 
-pub struct Ctx {
-    pub quick: bool,
-    pub seeds: u64,
-    /// PJRT client + manifest, when the feature is on and artifacts exist.
-    #[cfg(feature = "xla-runtime")]
-    xla: Option<(Runtime, Manifest)>,
+/// Builder for [`Ctx`] — quick/smoke sizing, seed replicas, runner
+/// thread policy and results directory in one place instead of a bare
+/// bool-and-int at every call site.
+#[derive(Clone, Debug)]
+pub struct CtxConfig {
+    quick: bool,
+    smoke: bool,
+    seeds: u64,
+    threads: Option<usize>,
+    out_dir: Option<PathBuf>,
 }
 
-impl Ctx {
+impl Default for CtxConfig {
+    fn default() -> Self {
+        CtxConfig { quick: false, smoke: false, seeds: 1, threads: None, out_dir: None }
+    }
+}
+
+impl CtxConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reduced step/sample budgets (the benches' default mode).
+    pub fn quick(mut self, on: bool) -> Self {
+        self.quick = on;
+        self
+    }
+
+    /// Minimal budgets for end-to-end smoke tests: every experiment id
+    /// still runs every phase, at a fraction of the quick sizing.
+    pub fn smoke(mut self, on: bool) -> Self {
+        self.smoke = on;
+        self
+    }
+
+    /// Seed replicas per grid cell (mean/std aggregation).
+    pub fn seeds(mut self, n: u64) -> Self {
+        self.seeds = n.max(1);
+        self
+    }
+
+    /// Runner scheduling policy: `1` executes the flattened work list
+    /// serially on the calling thread (the determinism reference). Any
+    /// other value uses the shared rayon pool, whose size is fixed at
+    /// startup by `RAYON_NUM_THREADS` — `build()` warns when `n` cannot
+    /// be honored instead of silently ignoring it.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Where reports are persisted (default: `SWALP_RESULTS` or
+    /// `results/`).
+    pub fn out_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out_dir = Some(dir.into());
+        self
+    }
+
     /// Always succeeds without artifacts: the native registry covers the
     /// theory experiments; the artifact backend (feature `xla-runtime`)
     /// is picked up opportunistically for the deep-learning specs. A
     /// PJRT client that fails to come up (e.g. the vendored xla stub)
     /// degrades to native-only instead of failing the whole harness.
-    pub fn new(quick: bool, seeds: u64) -> Result<Self> {
+    pub fn build(self) -> Result<Ctx> {
+        if let Some(n) = self.threads {
+            if n > 1 && n != rayon::current_num_threads() {
+                eprintln!(
+                    "note: threads={n} runs on the shared rayon pool of \
+                     {} (fixed at startup; set RAYON_NUM_THREADS={n} to \
+                     resize it) — only threads=1 changes scheduling",
+                    rayon::current_num_threads()
+                );
+            }
+        }
         #[cfg(feature = "xla-runtime")]
         let xla = {
             let dir = artifacts_dir();
@@ -57,19 +122,87 @@ impl Ctx {
             }
         };
         Ok(Ctx {
-            quick,
-            seeds,
+            quick: self.quick,
+            smoke: self.smoke,
+            seeds: self.seeds,
+            threads: self.threads,
+            out_dir: self.out_dir,
             #[cfg(feature = "xla-runtime")]
             xla,
         })
     }
+}
 
-    fn pick(&self, full: u64, quick: u64) -> u64 {
-        if self.quick {
+pub struct Ctx {
+    quick: bool,
+    smoke: bool,
+    seeds: u64,
+    threads: Option<usize>,
+    out_dir: Option<PathBuf>,
+    /// PJRT client + manifest, when the feature is on and artifacts exist.
+    #[cfg(feature = "xla-runtime")]
+    xla: Option<(Runtime, Manifest)>,
+}
+
+impl Ctx {
+    /// Full-scale sizing tier (neither quick nor smoke)?
+    pub fn full(&self) -> bool {
+        !self.quick && !self.smoke
+    }
+
+    pub fn seeds(&self) -> u64 {
+        self.seeds
+    }
+
+    pub fn threads(&self) -> Option<usize> {
+        self.threads
+    }
+
+    /// Sizing tier name for reports: "full" / "quick" / "smoke".
+    pub fn mode(&self) -> &'static str {
+        if self.smoke {
+            "smoke"
+        } else if self.quick {
+            "quick"
+        } else {
+            "full"
+        }
+    }
+
+    /// Step/epoch budget by sizing tier (smoke = quick/8, floor 1).
+    pub fn pick(&self, full: u64, quick: u64) -> u64 {
+        if self.smoke {
+            (quick / 8).max(1)
+        } else if self.quick {
             quick
         } else {
             full
         }
+    }
+
+    /// Dataset scale by sizing tier (smoke = quick/3, floor 0.04).
+    pub fn scale(&self, full: f64, quick: f64) -> f64 {
+        if self.smoke {
+            (quick / 3.0).max(0.04)
+        } else if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+
+    /// Where this context persists its reports.
+    pub fn results_dir(&self) -> PathBuf {
+        self.out_dir.clone().unwrap_or_else(report::results_dir)
+    }
+
+    /// Execution-backend id recorded in reports.
+    pub fn backend_id(&self) -> String {
+        #[cfg(feature = "xla-runtime")]
+        if self.xla.is_some() {
+            return "native+xla-artifact".to_string();
+        }
+        "native".to_string()
     }
 
     /// Native registry first, XLA artifacts second. Also the CLI's
@@ -89,38 +222,7 @@ impl Ctx {
         )
     }
 
-    /// Run the N seed replicas of one experiment configuration
-    /// concurrently over the backend trait and return the outcomes in
-    /// seed order. Each replica gets its own backend instance (loaded up
-    /// front on this thread — artifact compilation is not re-entrant) and
-    /// its own `TrainConfig` from `mk_cfg(seed)`; a training run is a
-    /// pure function of its config, so the batched results are
-    /// bit-identical to a sequential loop.
-    pub fn run_seeds<F>(&self, name: &str, split: &Split, mk_cfg: F) -> Result<Vec<TrainOutcome>>
-    where
-        F: Fn(u64) -> TrainConfig + Sync,
-    {
-        let n = self.seeds.max(1) as usize;
-        let models: Vec<Box<dyn ModelBackend>> =
-            (0..n).map(|_| self.load(name)).collect::<Result<_>>()?;
-        let mut slots: Vec<Option<Result<TrainOutcome>>> = Vec::new();
-        slots.resize_with(n, || None);
-        let mk_cfg = &mk_cfg;
-        rayon::scope(|s| {
-            for (seed, (model, slot)) in models.iter().zip(slots.iter_mut()).enumerate() {
-                s.spawn(move |_| {
-                    let trainer = Trainer::new(&**model, split);
-                    *slot = Some(trainer.run(&mk_cfg(seed as u64)));
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .map(|slot| slot.expect("seed replica did not run"))
-            .collect()
-    }
-
-    /// Would `load(name)` succeed? Benches use this to skip gracefully.
+    /// Would `load(name)` succeed? Benches use this to fail fast.
     pub fn can_load(&self, name: &str) -> bool {
         if native::supports(name) {
             return true;
@@ -132,569 +234,44 @@ impl Ctx {
         false
     }
 
-    pub fn dispatch(&self, exp: &str) -> Result<()> {
-        match exp {
-            "fig2-linreg" => self.fig2_linreg(),
-            "fig2-logreg" => self.fig2_logreg(),
-            "fig2-bits" => self.fig2_bits(),
-            "table1" => self.table1(),
-            "table2" => self.table2(),
-            "table3" => self.table3(),
-            "fig3-frequency" => self.fig3_frequency(),
-            "fig3-precision" => self.fig3_precision(),
-            "thm3" => thm3_noise_ball(self.quick),
-            other => bail!(
-                "unknown experiment {other:?}; known: fig2-linreg fig2-logreg \
-                 fig2-bits table1 table2 table3 fig3-frequency fig3-precision thm3"
-            ),
-        }
-    }
-
-    // -----------------------------------------------------------------
-    // Fig. 2 (left) + App. Fig. 4a: linear regression convergence
-    // -----------------------------------------------------------------
-    pub fn fig2_linreg(&self) -> Result<()> {
-        println!("== Fig 2 (left): linear regression, fixed point W8F6 ==");
-        let n = self.pick(4096, 1024) as usize;
-        let steps = self.pick(200_000, 8_000);
-        // averaging starts once the iterate sits in its noise ball
-        // (the paper's warm-up discipline)
-        let warmup = steps / 4;
-        let problem = synth::linreg_problem(256, n, 7);
-        let alpha = 0.002;
-
-        // ‖Q(w*) − w*‖² reference line (stochastic quantization of w*)
-        let qws = quantize_fixed(&problem.w_star, 8, 6, 1234, true);
-        let q_dist: f64 = qws
-            .iter()
-            .zip(&problem.w_star)
-            .map(|(&a, &b)| ((a - b) as f64).powi(2))
-            .sum();
-
-        let mut table = Table::new(&["run", "final ‖w−w*‖²", "vs ‖Q(w*)−w*‖²"]);
-        let mut results = vec![("q_wstar_dist", Value::Num(q_dist))];
-        let mut curves: Vec<(&str, Vec<(u64, f64)>)> = vec![];
-
-        for (label, model_name, swa) in [
-            ("SGD-FL", "linreg_fp32", false),
-            ("SWA-FL", "linreg_fp32", true),
-            ("SGD-LP", "linreg_fx86", false),
-            ("SWALP", "linreg_fx86", true),
-        ] {
-            let model = self.load(model_name)?;
-            let trainer = Trainer::new(&*model, &problem.split);
-            let mut cfg = TrainConfig::new(steps, warmup, 1, Schedule::Constant(alpha));
-            cfg.enable_swa = swa;
-            cfg.w_star = Some(problem.w_star.clone());
-            let out = trainer.run(&cfg)?;
-            let key = if swa { "swa_dist_sq" } else { "sgd_dist_sq" };
-            let series = out.metrics.series(key);
-            let final_d = series.last().map(|&(_, v)| v).unwrap_or(f64::NAN);
-            table.row(vec![
-                label.into(),
-                format!("{final_d:.3e}"),
-                format!("{:.2}x", final_d / q_dist),
-            ]);
-            results.push((label, Value::Num(final_d)));
-            curves.push((label, series));
-        }
-        table.print();
-        println!("reference: ‖Q(w*)−w*‖² = {q_dist:.3e} (quantization noise floor)");
-
-        // O(1/T) check on the SWALP curve
-        if let Some((_, c)) = curves.iter().find(|(l, _)| *l == "SWALP") {
-            if c.len() >= 4 {
-                let a = c[c.len() / 2];
-                let b = c[c.len() - 1];
-                let slope = report::loglog_slope(a.0 as f64, a.1, b.0 as f64, b.1);
-                println!("SWALP tail log-log slope ≈ {slope:.2} (Theorem 1 predicts -1)");
-                results.push(("swalp_tail_slope", Value::Num(slope)));
-            }
-        }
-        let curves_json = Value::Obj(
-            curves
-                .into_iter()
-                .map(|(l, c)| {
-                    (
-                        l.to_string(),
-                        Value::Arr(
-                            c.into_iter()
-                                .map(|(s, v)| Value::arr_f64(&[s as f64, v]))
-                                .collect(),
-                        ),
-                    )
-                })
-                .collect(),
-        );
-        let mut obj: Vec<(&str, Value)> = results;
-        obj.push(("curves", curves_json));
-        report::save("fig2_linreg", &Value::obj(obj))?;
-        Ok(())
-    }
-
-    // -----------------------------------------------------------------
-    // Fig. 2 (middle): logistic regression gradient norm
-    // -----------------------------------------------------------------
-    pub fn fig2_logreg(&self) -> Result<()> {
-        println!("== Fig 2 (middle): logistic regression (MNIST-like), W4F2 ==");
-        let steps = self.pick(24_000, 3_000);
-        // average only the stationary phase; the paper warms up for a full
-        // epoch budget before folding
-        let warmup = steps * 2 / 3;
-        let split = data::build("mnist_like", 11, if self.quick { 0.25 } else { 1.0 })?;
-
-        let mut table = Table::new(&["run", "final ‖∇f‖² (iterate)", "final ‖∇f‖² (avg)"]);
-        let mut results: Vec<(&str, Value)> = vec![];
-        for (label, model_name, swa) in [
-            ("SGD-FL", "logreg_fp32", false),
-            ("SWA-FL", "logreg_fp32", true),
-            ("SGD-LP", "logreg_fx_f2", false),
-            ("SWALP", "logreg_fx_f2", true),
-        ] {
-            let model = self.load(model_name)?;
-            let trainer = Trainer::new(&*model, &split);
-            let mut cfg = TrainConfig::new(steps, warmup, 1, Schedule::Constant(0.02));
-            cfg.enable_swa = swa;
-            let out = trainer.run(&cfg)?;
-            // gradient norm of the FP TRAINING objective (the quantity
-            // Theorem 2 bounds) at the SGD iterate...
-            let g_iter = trainer
-                .eval_set(&out.final_state.trainable, &out.final_state.state, false)?
-                .grad_norm_sq
-                .unwrap_or(f64::NAN);
-            // ...and at the averaged model
-            let g_avg = if let Some(swa_acc) = &out.swa {
-                let avg = swa_acc.average()?;
-                trainer
-                    .eval_swa(&avg, &out.final_state.state, false)?
-                    .grad_norm_sq
-                    .unwrap_or(f64::NAN)
-            } else {
-                f64::NAN
-            };
-            table.row(vec![
-                label.into(),
-                format!("{g_iter:.3e}"),
-                if g_avg.is_nan() { "-".into() } else { format!("{g_avg:.3e}") },
-            ]);
-            results.push((label, Value::arr_f64(&[g_iter, g_avg])));
-        }
-        table.print();
-        println!("expected ordering: SWALP avg ≪ SGD-LP iterate; SWALP hits a small
-noise ball (M≠0, Theorem 2) while SWA-FL keeps shrinking");
-        report::save("fig2_logreg", &Value::obj(results))?;
-        Ok(())
-    }
-
-    // -----------------------------------------------------------------
-    // Fig. 2 (right) + Table 4: fractional-bit sweep
-    // -----------------------------------------------------------------
-    pub fn fig2_bits(&self) -> Result<()> {
-        println!("== Fig 2 (right) / Table 4: logreg precision sweep ==");
-        let steps = self.pick(16_000, 1_024);
-        let warmup = steps * 2 / 3;
-        let split = data::build("mnist_like", 11, if self.quick { 0.25 } else { 1.0 })?;
-
-        let mut table = Table::new(&[
-            "format", "SGD train err%", "SGD test err%", "SWALP train err%", "SWALP test err%",
-        ]);
-        let mut rows_json = vec![];
-
-        let mut run_one = |model_name: &str, label: &str| -> Result<()> {
-            let model = self.load(model_name)?;
-            let trainer = Trainer::new(&*model, &split);
-            let mut cfg = TrainConfig::new(steps, warmup, 1, Schedule::Constant(0.02));
-            cfg.enable_swa = true;
-            let out = trainer.run(&cfg)?;
-            let sgd_train = trainer
-                .eval_set(&out.final_state.trainable, &out.final_state.state, false)?
-                .metric
-                * 100.0;
-            let avg = out.swa.as_ref().unwrap().average()?;
-            let swa_train =
-                trainer.eval_swa(&avg, &out.final_state.state, false)?.metric * 100.0;
-            let swa_test = out.swa_test_err.unwrap_or(f64::NAN);
-            table.row(vec![
-                label.into(),
-                report::pct(sgd_train),
-                report::pct(out.sgd_test_err),
-                report::pct(swa_train),
-                report::pct(swa_test),
-            ]);
-            rows_json.push(Value::obj(vec![
-                ("format", Value::str(label)),
-                ("sgd_train", Value::Num(sgd_train)),
-                ("sgd_test", Value::Num(out.sgd_test_err)),
-                ("swa_train", Value::Num(swa_train)),
-                ("swa_test", Value::Num(swa_test)),
-            ]));
-            Ok(())
+    /// Run the N seed replicas of one experiment configuration
+    /// concurrently over the backend trait and return the outcomes in
+    /// seed order. Each replica gets its own backend instance (loaded up
+    /// front on this thread — artifact compilation is not re-entrant) and
+    /// its own `TrainConfig` from `mk_cfg(seed)`; a training run is a
+    /// pure function of its config, so the batched results are
+    /// bit-identical to a sequential loop. The general `grid × seeds`
+    /// form of this primitive is [`super::runner::Runner`].
+    pub fn run_seeds<F>(&self, name: &str, split: &Split, mk_cfg: F) -> Result<Vec<TrainOutcome>>
+    where
+        F: Fn(u64) -> TrainConfig + Sync,
+    {
+        let n = self.seeds.max(1) as usize;
+        let models: Vec<Box<dyn ModelBackend>> =
+            (0..n).map(|_| self.load(name)).collect::<Result<_>>()?;
+        let mut slots: Vec<Option<Result<TrainOutcome>>> = Vec::new();
+        slots.resize_with(n, || None);
+        let mk_cfg = &mk_cfg;
+        let run_one = |seed: usize, model: &dyn ModelBackend| {
+            let trainer = Trainer::new(model, split);
+            trainer.run(&mk_cfg(seed as u64))
         };
-
-        run_one("logreg_fp32", "float32")?;
-        let fls: &[u32] = if self.quick { &[2, 6, 10] } else { &[2, 4, 6, 8, 10, 12, 14] };
-        for f in fls {
-            run_one(&format!("logreg_fx_f{f}"), &format!("FL={f}, WL={}", f + 2))?;
-        }
-        table.print();
-        println!("expected shape: SWALP matches float with ~half the fractional bits
-that SGD-LP needs (Theorem 2's δ² vs δ)");
-        report::save("fig2_bits", &Value::Arr(rows_json))?;
-        Ok(())
-    }
-
-    // -----------------------------------------------------------------
-    // Table 1: CIFAR-like × {VGG-mini, PreResNet-mini} × formats
-    // -----------------------------------------------------------------
-    pub fn table1(&self) -> Result<()> {
-        println!("== Table 1: test error (%) — float vs 8-bit big/small-block BFP ==");
-        let data_scale = if self.quick { 0.15 } else { 0.5 };
-        let warmup_epochs = self.pick(8, 2);
-        let avg_epochs = self.pick(4, 1);
-
-        let mut table = Table::new(&[
-            "dataset", "model", "format", "SGD err%", "SWALP err%", "Δ(SWA gain)",
-        ]);
-        let mut rows_json = vec![];
-        for ds in ["cifar10", "cifar100"] {
-            for (mname, alpha1) in [("vgg", 0.05), ("prn", 0.1)] {
-                for fmt in ["fp32", "bfp8big", "bfp8small"] {
-                    let spec_name = format!("{ds}_{mname}_{fmt}");
-                    let model = self.load(&spec_name)?;
-                    let split = data::build(&model.spec().dataset, 21, data_scale)?;
-                    let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
-                    let warmup = warmup_epochs * spe;
-                    let steps = warmup + avg_epochs * spe;
-                    // the N seed replicas run concurrently over the
-                    // backend trait; aggregate mean/std in one pass
-                    let outs = self.run_seeds(&spec_name, &split, |seed| {
-                        let mut cfg = TrainConfig::new(
-                            steps,
-                            warmup,
-                            spe, // average once per epoch (paper default)
-                            Schedule::swalp_paper(alpha1, warmup, 0.01),
-                        );
-                        cfg.init_seed = 1.0 + seed as f32;
-                        cfg.data_seed = 100 + seed;
-                        cfg
-                    })?;
-                    let mut agg_sgd = report::SeedAgg::new();
-                    let mut agg_swa = report::SeedAgg::new();
-                    for out in outs {
-                        agg_sgd.push(out.sgd_test_err);
-                        agg_swa.push(out.swa_test_err.unwrap_or(f64::NAN));
-                    }
-                    let (ms, ss) = (agg_sgd.mean(), agg_sgd.std());
-                    let (ma, sa) = (agg_swa.mean(), agg_swa.std());
-                    table.row(vec![
-                        ds.into(),
-                        mname.into(),
-                        fmt.into(),
-                        report::pm(ms, ss),
-                        report::pm(ma, sa),
-                        format!("{:+.2}", ms - ma),
-                    ]);
-                    rows_json.push(Value::obj(vec![
-                        ("dataset", Value::str(ds)),
-                        ("model", Value::str(mname)),
-                        ("format", Value::str(fmt)),
-                        ("sgd_err", Value::Num(ms)),
-                        ("swalp_err", Value::Num(ma)),
-                    ]));
-                    eprintln!("[table1] {spec_name}: SGD {ms:.2}% SWALP {ma:.2}%");
-                }
+        if self.threads == Some(1) {
+            for (seed, (model, slot)) in models.iter().zip(slots.iter_mut()).enumerate() {
+                *slot = Some(run_one(seed, &**model));
             }
-        }
-        table.print();
-        println!("expected orderings (paper): small-block < big-block; SWALP < SGD-LP
-within each format; 8-bit small-block SWALP ≈ float SGD");
-        report::save("table1", &Value::Arr(rows_json))?;
-        Ok(())
-    }
-
-    // -----------------------------------------------------------------
-    // Table 2: ImageNet-like ResNet
-    // -----------------------------------------------------------------
-    pub fn table2(&self) -> Result<()> {
-        println!("== Table 2: ImageNet-like ResNet-mini, top-1 error (%) ==");
-        let data_scale = if self.quick { 0.15 } else { 0.5 };
-        let warm_epochs = self.pick(6, 2);
-
-        let mut table = Table::new(&["run", "epochs", "top-1 err%"]);
-        let mut rows_json = vec![];
-        let mut run_row = |label: &str,
-                           model_name: &str,
-                           swa: bool,
-                           extra_epochs: u64,
-                           freq_per_epoch: u64|
-         -> Result<()> {
-            let model = self.load(model_name)?;
-            let split = data::build(&model.spec().dataset, 31, data_scale)?;
-            let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
-            let warmup = warm_epochs * spe;
-            let steps = warmup + extra_epochs * spe;
-            let trainer = Trainer::new(&*model, &split);
-            let mut cfg = TrainConfig::new(
-                steps.max(warmup + 1),
-                warmup,
-                (spe / freq_per_epoch.max(1)).max(1),
-                Schedule::Swalp {
-                    inner: Box::new(Schedule::StepDecay {
-                        alpha1: 0.1,
-                        factor: 0.1,
-                        every: (warmup / 3).max(1),
-                    }),
-                    warmup,
-                    swa_lr: 0.01,
-                },
-            );
-            cfg.enable_swa = swa;
-            let out = trainer.run(&cfg)?;
-            let err = if swa { out.swa_test_err.unwrap_or(f64::NAN) } else { out.sgd_test_err };
-            table.row(vec![
-                label.into(),
-                format!("{warm_epochs}+{extra_epochs}"),
-                report::pct(err),
-            ]);
-            rows_json.push(Value::obj(vec![
-                ("run", Value::str(label)),
-                ("err", Value::Num(err)),
-            ]));
-            eprintln!("[table2] {label}: {err:.2}%");
-            Ok(())
-        };
-
-        run_row("SGD", "imagenet_rn_fp32", false, 0, 1)?;
-        run_row("SWA", "imagenet_rn_fp32", true, 1, 1)?;
-        run_row("SGD-LP", "imagenet_rn_bfp8small", false, 0, 1)?;
-        run_row("SWALP (+1 ep)", "imagenet_rn_bfp8small", true, 1, 1)?;
-        run_row("SWALP (+3 ep)", "imagenet_rn_bfp8small", true, 3, 1)?;
-        run_row("SWALP† (50x/ep)", "imagenet_rn_bfp8small", true, 3, 50)?;
-        table.print();
-        println!("expected shape: LP gap ≫ FP gap; SWALP recovers a large share of it,
-more averaging (+3 ep, 50x/ep) helps monotonically");
-        report::save("table2", &Value::Arr(rows_json))?;
-        Ok(())
-    }
-
-    // -----------------------------------------------------------------
-    // Table 3 (App. F): WAGE-style network ± SWALP
-    // -----------------------------------------------------------------
-    pub fn table3(&self) -> Result<()> {
-        println!("== Table 3: WAGE-style CNN on CIFAR10-like ==");
-        let data_scale = if self.quick { 0.15 } else { 0.5 };
-        let model = self.load("wage_cnn")?;
-        let split = data::build(&model.spec().dataset, 41, data_scale)?;
-        let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
-        let warmup = self.pick(10, 4) * spe;
-        let steps = warmup + self.pick(4, 2) * spe;
-        let trainer = Trainer::new(&*model, &split);
-
-        let mut table = Table::new(&["run", "test err%"]);
-        let mut rows_json = vec![];
-        for (label, swa, lr_main, lr_swa) in
-            [("WAGE", false, 2.0, 0.25), ("WAGE-SWALP", true, 2.0, 1.5)]
-        {
-            // WAGE trains with a large LR on the coarse 2-bit grid
-            // (paper: 8 -> decay; SWALP variant: constant 8 then SWA LR 6).
-            // Scaled for the mini network.
-            let mut cfg = TrainConfig::new(
-                steps,
-                warmup,
-                1,
-                Schedule::Swalp {
-                    inner: Box::new(Schedule::StepDecay {
-                        alpha1: lr_main,
-                        factor: 0.5,
-                        every: (warmup / 2).max(1),
-                    }),
-                    warmup,
-                    swa_lr: lr_swa,
-                },
-            );
-            cfg.enable_swa = swa;
-            let out = trainer.run(&cfg)?;
-            let err = if swa { out.swa_test_err.unwrap_or(f64::NAN) } else { out.sgd_test_err };
-            table.row(vec![label.into(), report::pct(err)]);
-            rows_json.push(Value::obj(vec![
-                ("run", Value::str(label)),
-                ("err", Value::Num(err)),
-            ]));
-        }
-        table.print();
-        println!("expected: WAGE-SWALP < WAGE (SWALP composes with an existing LP scheme)");
-        report::save("table3", &Value::Arr(rows_json))?;
-        Ok(())
-    }
-
-    // -----------------------------------------------------------------
-    // Fig. 3 (left) + Table 5: averaging frequency
-    // -----------------------------------------------------------------
-    pub fn fig3_frequency(&self) -> Result<()> {
-        println!("== Fig 3 (left) / Table 5: averaging frequency ==");
-        let data_scale = if self.quick { 0.15 } else { 0.5 };
-        let model = self.load("cifar100_vgg_bfp8small")?;
-        let split = data::build(&model.spec().dataset, 51, data_scale)?;
-        let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
-        let warmup = self.pick(8, 3) * spe;
-        let avg_epochs = self.pick(4, 2);
-        let trainer = Trainer::new(&*model, &split);
-
-        // averages per epoch, mirroring Table 5's 1x .. every-batch sweep
-        let freqs: &[u64] = if self.quick { &[1, 8] } else { &[1, 2, 8, 32] };
-        let mut table = Table::new(&["avg/epoch", "after 1 ep", "final err%"]);
-        let mut rows_json = vec![];
-        for &f in freqs {
-            let cycle = (spe / f).max(1);
-            let steps = warmup + avg_epochs * spe;
-            let mut cfg = TrainConfig::new(steps, warmup, cycle, Schedule::swalp_paper(0.05, warmup, 0.01));
-            cfg.eval_every = spe;
-            let out = trainer.run(&cfg)?;
-            let series = out.metrics.series("swa_test_metric");
-            let after1 = series
-                .iter()
-                .find(|(s, _)| *s >= warmup + spe - 1)
-                .map(|&(_, v)| v * 100.0)
-                .unwrap_or(f64::NAN);
-            let final_err = out.swa_test_err.unwrap_or(f64::NAN);
-            table.row(vec![
-                format!("{f}"),
-                report::pct(after1),
-                report::pct(final_err),
-            ]);
-            rows_json.push(Value::obj(vec![
-                ("avg_per_epoch", Value::Num(f as f64)),
-                ("after_1_epoch", Value::Num(after1)),
-                ("final", Value::Num(final_err)),
-            ]));
-            eprintln!("[fig3-freq] {f}/epoch: after-1ep {after1:.2}% final {final_err:.2}%");
-        }
-        table.print();
-        println!("expected: higher frequency converges faster early; final errors match
-(paper Fig 3 left / Table 5)");
-        report::save("fig3_frequency", &Value::Arr(rows_json))?;
-        Ok(())
-    }
-
-    // -----------------------------------------------------------------
-    // Fig. 3 (right) + Table 6: averaging precision (Q_SWA sweep)
-    // -----------------------------------------------------------------
-    pub fn fig3_precision(&self) -> Result<()> {
-        println!("== Fig 3 (right) / Table 6: averaging precision W_SWA ==");
-        let data_scale = if self.quick { 0.15 } else { 0.5 };
-        let model = self.load("cifar100_vgg_bfp8small")?;
-        let split = data::build(&model.spec().dataset, 61, data_scale)?;
-        let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
-        let warmup = self.pick(8, 3) * spe;
-        let steps = warmup + self.pick(4, 2) * spe;
-        let trainer = Trainer::new(&*model, &split);
-
-        // One training trajectory, many accumulators: the SGD-LP stream is
-        // identical across W_SWA, so fold the same weights into one
-        // accumulator per precision (float + 16..6 bits).
-        let wls: &[u32] = if self.quick { &[16, 8, 6] } else { &[16, 14, 12, 10, 9, 8, 7, 6] };
-        let mut accs: Vec<(String, SwaAccumulator)> = vec![(
-            "float".to_string(),
-            SwaAccumulator::new(None),
-        )];
-        for &w in wls {
-            accs.push((
-                format!("{w}"),
-                SwaAccumulator::new(Some(QuantFormat::bfp(w, true))),
-            ));
-        }
-
-        let mut ms = model.init(1.0)?;
-        let mut loader = Loader::new(&split.train, model.spec().batch_train, 9);
-        let sched = Schedule::swalp_paper(0.05, warmup, 0.01);
-        for step in 0..steps {
-            let lr = sched.lr_at(step) as f32;
-            let (x, y) = loader.next_batch();
-            let (x, y) = (x.to_vec(), y.to_vec());
-            model.train_step(&mut ms, &x, &y, lr, step)?;
-            if step >= warmup && (step - warmup) % spe.min(8) == 0 {
-                for (_, acc) in accs.iter_mut() {
-                    acc.fold(&ms.trainable)?;
+        } else {
+            rayon::scope(|s| {
+                for (seed, (model, slot)) in models.iter().zip(slots.iter_mut()).enumerate() {
+                    s.spawn(move |_| {
+                        *slot = Some(run_one(seed, &**model));
+                    });
                 }
-            }
+            });
         }
-
-        let mut table = Table::new(&["W_SWA", "test err%"]);
-        let mut rows_json = vec![];
-        for (label, acc) in &accs {
-            let avg = acc.average()?;
-            let out = if label == "float" {
-                trainer.eval_swa(&avg, &ms.state, true)?
-            } else {
-                // paper: inference activations quantized to W_SWA too
-                let wl: f32 = label.parse().unwrap();
-                let be = model.spec().batch_eval;
-                let mut cursor = 0usize;
-                let (mut xb, mut yb) = (Vec::new(), Vec::new());
-                let (mut loss, mut metric, mut batches, mut samples) = (0.0, 0.0, 0usize, 0usize);
-                while Loader::eval_batch(&split.test, be, &mut cursor, &mut xb, &mut yb) {
-                    let o = model.eval_flex(&avg, &ms.state, &xb, &yb, wl)?;
-                    loss += o.loss;
-                    metric += o.metric;
-                    batches += 1;
-                    samples += be;
-                }
-                crate::runtime::EvalOut {
-                    loss: loss / batches.max(1) as f64,
-                    metric: metric / samples.max(1) as f64,
-                    grad_norm_sq: None,
-                }
-            };
-            let err = out.metric * 100.0;
-            table.row(vec![label.clone(), report::pct(err)]);
-            rows_json.push(Value::obj(vec![
-                ("w_swa", Value::str(label)),
-                ("err", Value::Num(err)),
-            ]));
-            eprintln!("[fig3-prec] W_SWA={label}: {err:.2}%");
-        }
-        table.print();
-        println!("expected: ≥9 bits ≈ float; 8 bits slight loss; <8 bits degrades fast
-(paper Fig 3 right / Table 6)");
-        report::save("fig3_precision", &Value::Arr(rows_json))?;
-        Ok(())
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("seed replica did not run"))
+            .collect()
     }
-}
-
-// ---------------------------------------------------------------------
-// Theorem 3: pure-simulation noise-ball scaling (no XLA needed)
-// ---------------------------------------------------------------------
-pub fn thm3_noise_ball(quick: bool) -> Result<()> {
-    println!("== Theorem 3: SGD-LP noise ball Ω(σδ) vs SWALP O(δ²) ==");
-    let steps = if quick { 200_000 } else { 1_000_000 };
-    let sigma = 0.1;
-    let alpha = 0.05;
-    let deltas: &[f64] = if quick {
-        &[0.1, 0.025, 0.00625]
-    } else {
-        &[0.1, 0.05, 0.025, 0.0125, 0.00625, 0.003125]
-    };
-
-    let mut table = Table::new(&["δ", "SGD-LP E[w²]", "E[w²]/(σδ)", "SWALP w̄²", "w̄²/δ²"]);
-    let mut rows_json = vec![];
-    for (i, &d) in deltas.iter().enumerate() {
-        let r = sim::noise_ball_1d(alpha, sigma, d, steps, 1, 42 + i as u64);
-        table.row(vec![
-            format!("{d:.5}"),
-            format!("{:.3e}", r.sgd_lp_second_moment),
-            format!("{:.3}", r.sgd_lp_second_moment / (sigma * d)),
-            format!("{:.3e}", r.swalp_sq),
-            format!("{:.3}", r.swalp_sq / (d * d)),
-        ]);
-        rows_json.push(Value::obj(vec![
-            ("delta", Value::Num(d)),
-            ("sgd_lp", Value::Num(r.sgd_lp_second_moment)),
-            ("swalp", Value::Num(r.swalp_sq)),
-        ]));
-    }
-    table.print();
-    println!("expected: E[w²]/(σδ) ≳ constant (lower bound, Thm 3); SWALP column
-sits orders below and shrinks faster than δ");
-    report::save("thm3_noise_ball", &Value::Arr(rows_json))?;
-    Ok(())
 }

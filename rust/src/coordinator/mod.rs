@@ -10,11 +10,16 @@
 pub mod checkpoint;
 pub mod experiment;
 pub mod metrics;
+pub mod registry;
 pub mod report;
+pub mod runner;
 pub mod schedule;
 pub mod swa;
 pub mod trainer;
 
+pub use experiment::{Ctx, CtxConfig};
+pub use report::Report;
+pub use runner::Runner;
 pub use schedule::Schedule;
 pub use swa::SwaAccumulator;
 pub use trainer::{TrainConfig, TrainOutcome, Trainer};

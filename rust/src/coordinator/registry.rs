@@ -1,0 +1,618 @@
+//! The declarative experiment registry.
+//!
+//! Every paper artifact (Fig. 2, Tables 1–3, Fig. 3, Thm. 3) is one
+//! [`ExperimentSpec`] value here: either a **grid** of [`RunSpec`] cells
+//! — (model × schedule × sizing) configurations that the
+//! [`super::runner::Runner`] flattens into `cells × seed replicas` work
+//! items over the rayon pool — or an **analytic** function for the
+//! single-trajectory / closed-form experiments (fig3-precision shares one
+//! SGD-LP stream across many accumulators; thm3 is pure simulation).
+//!
+//! Both the CLI (`swalp reproduce`) and the paper-figure benches resolve
+//! experiments exclusively through [`find`]/[`all`] — there is no other
+//! dispatch path.
+
+use anyhow::Result;
+
+use crate::coordinator::SwaAccumulator;
+use crate::data::{self, loader::Loader};
+use crate::quant::{fixed::quantize_fixed, QuantFormat};
+use crate::sim;
+
+use super::experiment::Ctx;
+use super::report::Cell;
+use super::schedule::Schedule;
+
+/// One registered paper experiment.
+pub struct ExperimentSpec {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// Paper-expectation commentary, rendered under the table and stored
+    /// in the report's `notes` field.
+    pub notes: &'static str,
+    pub kind: ExpKind,
+}
+
+pub enum ExpKind {
+    /// A (model × schedule) grid; the Runner executes every cell × seed
+    /// replica concurrently and aggregates mean/std per cell.
+    Grid {
+        cells: fn(&Ctx) -> Vec<RunSpec>,
+        /// Report-level reference scalars (e.g. ‖Q(w*)−w*‖²).
+        extras: Option<fn(&Ctx) -> Result<Vec<(String, f64)>>>,
+    },
+    /// Produces finished report cells directly (runs on the calling
+    /// thread; kernels inside still parallelize).
+    Analytic(fn(&Ctx) -> Result<Vec<Cell>>),
+}
+
+/// Step budget of one grid cell.
+#[derive(Clone, Debug)]
+pub enum Sizing {
+    /// Absolute step counts.
+    Steps { steps: u64, warmup: u64 },
+    /// Epoch counts, translated through the cell's steps-per-epoch.
+    Epochs { warmup: u64, avg: u64 },
+}
+
+/// Averaging cycle length `c` of one grid cell.
+#[derive(Clone, Debug)]
+pub enum CyclePolicy {
+    Steps(u64),
+    /// `f` averages per epoch (cycle = steps-per-epoch / f).
+    PerEpoch(u64),
+}
+
+/// Learning-rate schedule of one grid cell (warm-up length is resolved
+/// from [`Sizing`] at run time).
+#[derive(Clone, Debug)]
+pub enum SchedSpec {
+    Const(f64),
+    /// [`Schedule::swalp_paper`]: budget decay during warm-up, then the
+    /// constant averaging LR.
+    SwalpPaper { alpha1: f64, swa_lr: f64 },
+    /// Step decay during warm-up (decay every `warmup / every_div`
+    /// steps), then the constant averaging LR.
+    SwalpStep { alpha1: f64, factor: f64, every_div: u64, swa_lr: f64 },
+}
+
+impl SchedSpec {
+    pub fn resolve(&self, warmup: u64) -> Schedule {
+        match *self {
+            SchedSpec::Const(a) => Schedule::Constant(a),
+            SchedSpec::SwalpPaper { alpha1, swa_lr } => {
+                Schedule::swalp_paper(alpha1, warmup, swa_lr)
+            }
+            SchedSpec::SwalpStep { alpha1, factor, every_div, swa_lr } => Schedule::Swalp {
+                inner: Box::new(Schedule::StepDecay {
+                    alpha1,
+                    factor,
+                    every: (warmup / every_div.max(1)).max(1),
+                }),
+                warmup,
+                swa_lr,
+            },
+        }
+    }
+}
+
+/// Training data of one grid cell.
+#[derive(Clone, Debug)]
+pub enum DataSpec {
+    /// `data::build(model.spec().dataset, seed, scale)`.
+    Model { seed: u64, scale: f64 },
+    /// `synth::linreg_problem(d, n, seed)` with ‖w − w*‖² tracking
+    /// against the empirical optimum (Fig. 2 left).
+    LinregWstar { d: usize, n: usize, seed: u64 },
+}
+
+/// What a cell's report metrics are computed from after training.
+#[derive(Clone, Copy, Debug)]
+pub enum EvalKind {
+    /// `sgd_err` / `swalp_err` / `gain` (%) from the final test eval.
+    TestErr,
+    /// Final ‖w−w*‖² of the tracked iterate (plus the distance curve,
+    /// the quantization-noise ratio and the Theorem-1 tail slope).
+    DistSq,
+    /// ‖∇f‖² of the full-precision objective at the LP iterate and at
+    /// the weight average (Fig. 2 middle / Theorem 2).
+    GradNorm,
+    /// Train + test error for both the iterate and the average
+    /// (Fig. 2 right / Table 4).
+    TrainTestErr,
+    /// SWA test error after one averaging epoch and at the end
+    /// (Fig. 3 left / Table 5).
+    SwaTrajectory,
+}
+
+/// One grid cell: a fully-specified training configuration whose seed
+/// replicas the Runner shards across the pool.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub id: String,
+    /// Ordered table label columns.
+    pub labels: Vec<(String, String)>,
+    /// Model registry name (the quantization config is part of the name).
+    pub model: String,
+    pub data: DataSpec,
+    pub sizing: Sizing,
+    pub sched: SchedSpec,
+    pub cycle: CyclePolicy,
+    pub enable_swa: bool,
+    /// Seed replicas for this cell (mean/std aggregation).
+    pub seeds: u64,
+    /// Replica `s` initializes with `init_seed + s` …
+    pub init_seed: u64,
+    /// … and shuffles batches with `data_seed + s`.
+    pub data_seed: u64,
+    pub eval: EvalKind,
+}
+
+impl RunSpec {
+    pub fn new(
+        id: &str,
+        model: &str,
+        data: DataSpec,
+        sizing: Sizing,
+        sched: SchedSpec,
+        eval: EvalKind,
+    ) -> RunSpec {
+        RunSpec {
+            id: id.to_string(),
+            labels: vec![],
+            model: model.to_string(),
+            data,
+            sizing,
+            sched,
+            cycle: CyclePolicy::Steps(1),
+            enable_swa: true,
+            seeds: 1,
+            init_seed: 1,
+            data_seed: 100,
+            eval,
+        }
+    }
+
+    pub fn labels(mut self, labels: &[(&str, &str)]) -> Self {
+        self.labels = labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        self
+    }
+
+    pub fn cycle(mut self, cycle: CyclePolicy) -> Self {
+        self.cycle = cycle;
+        self
+    }
+
+    pub fn swa(mut self, on: bool) -> Self {
+        self.enable_swa = on;
+        self
+    }
+
+    pub fn seeds(mut self, n: u64) -> Self {
+        self.seeds = n.max(1);
+        self
+    }
+}
+
+/// All registered experiments, in paper order.
+pub fn all() -> &'static [ExperimentSpec] {
+    &SPECS
+}
+
+/// Registered experiment ids, in paper order.
+pub fn ids() -> Vec<&'static str> {
+    SPECS.iter().map(|s| s.id).collect()
+}
+
+pub fn find(id: &str) -> Option<&'static ExperimentSpec> {
+    SPECS.iter().find(|s| s.id == id)
+}
+
+static SPECS: [ExperimentSpec; 9] = [
+    ExperimentSpec {
+        id: "fig2-linreg",
+        title: "Fig 2 (left): linear regression, fixed point W8F6",
+        notes: "expected: SWALP final distance ≪ SGD-LP; tail_slope ≈ -1 (Theorem 1); \
+                vs_qnoise compares against the ‖Q(w*)−w*‖² reference",
+        kind: ExpKind::Grid { cells: fig2_linreg_cells, extras: Some(fig2_linreg_extras) },
+    },
+    ExperimentSpec {
+        id: "fig2-logreg",
+        title: "Fig 2 (middle): logistic regression (MNIST-like), W4F2",
+        notes: "expected ordering: SWALP grad_avg ≪ SGD-LP grad_iter; SWALP hits a small \
+                noise ball (M≠0, Theorem 2) while SWA-FL keeps shrinking",
+        kind: ExpKind::Grid { cells: fig2_logreg_cells, extras: None },
+    },
+    ExperimentSpec {
+        id: "fig2-bits",
+        title: "Fig 2 (right) / Table 4: logreg precision sweep",
+        notes: "expected shape: SWALP matches float with ~half the fractional bits that \
+                SGD-LP needs (Theorem 2's δ² vs δ)",
+        kind: ExpKind::Grid { cells: fig2_bits_cells, extras: None },
+    },
+    ExperimentSpec {
+        id: "table1",
+        title: "Table 1: test error (%) — float vs 8-bit big/small-block BFP",
+        notes: "expected orderings (paper): small-block < big-block; SWALP < SGD-LP within \
+                each format; 8-bit small-block SWALP ≈ float SGD",
+        kind: ExpKind::Grid { cells: table1_cells, extras: None },
+    },
+    ExperimentSpec {
+        id: "table2",
+        title: "Table 2: ImageNet-like ResNet-mini, top-1 error (%)",
+        notes: "expected shape: LP gap ≫ FP gap; SWALP recovers a large share of it, more \
+                averaging (+3 ep, 50x/ep) helps monotonically",
+        kind: ExpKind::Grid { cells: table2_cells, extras: None },
+    },
+    ExperimentSpec {
+        id: "table3",
+        title: "Table 3: WAGE-style CNN on CIFAR10-like",
+        notes: "expected: WAGE-SWALP < WAGE (SWALP composes with an existing LP scheme)",
+        kind: ExpKind::Grid { cells: table3_cells, extras: None },
+    },
+    ExperimentSpec {
+        id: "fig3-frequency",
+        title: "Fig 3 (left) / Table 5: averaging frequency",
+        notes: "expected: higher frequency converges faster early (after_1_epoch); final \
+                errors match (paper Fig 3 left / Table 5)",
+        kind: ExpKind::Grid { cells: fig3_frequency_cells, extras: None },
+    },
+    ExperimentSpec {
+        id: "fig3-precision",
+        title: "Fig 3 (right) / Table 6: averaging precision W_SWA",
+        notes: "expected: ≥9 bits ≈ float; 8 bits slight loss; <8 bits degrades fast \
+                (paper Fig 3 right / Table 6)",
+        kind: ExpKind::Analytic(fig3_precision_cells),
+    },
+    ExperimentSpec {
+        id: "thm3",
+        title: "Theorem 3: SGD-LP noise ball Ω(σδ) vs SWALP O(δ²)",
+        notes: "expected: ratio_sgd = E[w²]/(σδ) ≳ constant (lower bound, Thm 3); the SWALP \
+                column sits orders below and shrinks faster than δ",
+        kind: ExpKind::Analytic(thm3_cells),
+    },
+];
+
+// ---------------------------------------------------------------------
+// Fig. 2 (left) + App. Fig. 4a: linear regression convergence
+// ---------------------------------------------------------------------
+
+const FIG2_LINREG_D: usize = 256;
+const FIG2_LINREG_SEED: u64 = 7;
+
+fn fig2_linreg_sizes(ctx: &Ctx) -> (usize, u64) {
+    // linreg_problem clamps n to ≥ 2d for the normal equations
+    let n = ctx.pick(4096, 1024) as usize;
+    let steps = ctx.pick(200_000, 8_000);
+    (n, steps)
+}
+
+fn fig2_linreg_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    let (n, steps) = fig2_linreg_sizes(ctx);
+    // averaging starts once the iterate sits in its noise ball
+    // (the paper's warm-up discipline)
+    let warmup = steps / 4;
+    [
+        ("SGD-FL", "linreg_fp32", false),
+        ("SWA-FL", "linreg_fp32", true),
+        ("SGD-LP", "linreg_fx86", false),
+        ("SWALP", "linreg_fx86", true),
+    ]
+    .into_iter()
+    .map(|(label, model, swa)| {
+        RunSpec::new(
+            label,
+            model,
+            DataSpec::LinregWstar { d: FIG2_LINREG_D, n, seed: FIG2_LINREG_SEED },
+            Sizing::Steps { steps, warmup },
+            SchedSpec::Const(0.002),
+            EvalKind::DistSq,
+        )
+        .labels(&[("run", label)])
+        .swa(swa)
+        .seeds(ctx.seeds())
+    })
+    .collect()
+}
+
+/// ‖Q(w*) − w*‖² reference line (stochastic quantization of w*).
+fn fig2_linreg_extras(ctx: &Ctx) -> Result<Vec<(String, f64)>> {
+    let (n, _) = fig2_linreg_sizes(ctx);
+    let problem = data::synth::linreg_problem(FIG2_LINREG_D, n, FIG2_LINREG_SEED);
+    Ok(vec![("q_wstar_dist".to_string(), q_wstar_dist(&problem.w_star))])
+}
+
+/// ‖Q(w*) − w*‖² for the W8F6 format (the quantization noise floor).
+pub(super) fn q_wstar_dist(w_star: &[f32]) -> f64 {
+    let qws = quantize_fixed(w_star, 8, 6, 1234, true);
+    qws.iter().zip(w_star).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum()
+}
+
+// ---------------------------------------------------------------------
+// Fig. 2 (middle): logistic regression gradient norm
+// ---------------------------------------------------------------------
+
+fn fig2_logreg_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    let steps = ctx.pick(24_000, 3_000);
+    // average only the stationary phase; the paper warms up for a full
+    // epoch budget before folding
+    let warmup = steps * 2 / 3;
+    // the TRAIN-set gradient-norm eval needs ≥ batch_eval (512) samples
+    let scale = ctx.scale(1.0, 0.25).max(0.13);
+    [
+        ("SGD-FL", "logreg_fp32", false),
+        ("SWA-FL", "logreg_fp32", true),
+        ("SGD-LP", "logreg_fx_f2", false),
+        ("SWALP", "logreg_fx_f2", true),
+    ]
+    .into_iter()
+    .map(|(label, model, swa)| {
+        RunSpec::new(
+            label,
+            model,
+            DataSpec::Model { seed: 11, scale },
+            Sizing::Steps { steps, warmup },
+            SchedSpec::Const(0.02),
+            EvalKind::GradNorm,
+        )
+        .labels(&[("run", label)])
+        .swa(swa)
+        .seeds(ctx.seeds())
+    })
+    .collect()
+}
+
+// ---------------------------------------------------------------------
+// Fig. 2 (right) + Table 4: fractional-bit sweep
+// ---------------------------------------------------------------------
+
+fn fig2_bits_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    let steps = ctx.pick(16_000, 1_024);
+    let warmup = steps * 2 / 3;
+    // the TRAIN-set error eval needs ≥ batch_eval (512) samples
+    let scale = ctx.scale(1.0, 0.25).max(0.13);
+    let fls: &[u32] = if ctx.full() { &[2, 4, 6, 8, 10, 12, 14] } else { &[2, 6, 10] };
+    let mut cells = vec![("float32".to_string(), "logreg_fp32".to_string())];
+    cells.extend(
+        fls.iter().map(|f| (format!("FL={f}, WL={}", f + 2), format!("logreg_fx_f{f}"))),
+    );
+    cells
+        .into_iter()
+        .map(|(label, model)| {
+            RunSpec::new(
+                &label,
+                &model,
+                DataSpec::Model { seed: 11, scale },
+                Sizing::Steps { steps, warmup },
+                SchedSpec::Const(0.02),
+                EvalKind::TrainTestErr,
+            )
+            .labels(&[("format", label.as_str())])
+            .seeds(ctx.seeds())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Table 1: CIFAR-like × {VGG-mini, PreResNet-mini} × formats
+// ---------------------------------------------------------------------
+
+fn table1_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    let scale = ctx.scale(0.5, 0.15);
+    let warmup = ctx.pick(8, 2);
+    let avg = ctx.pick(4, 1);
+    let mut cells = Vec::new();
+    for ds in ["cifar10", "cifar100"] {
+        for (mname, alpha1) in [("vgg", 0.05), ("prn", 0.1)] {
+            for fmt in ["fp32", "bfp8big", "bfp8small"] {
+                let model = format!("{ds}_{mname}_{fmt}");
+                cells.push(
+                    RunSpec::new(
+                        &model,
+                        &model,
+                        DataSpec::Model { seed: 21, scale },
+                        Sizing::Epochs { warmup, avg },
+                        SchedSpec::SwalpPaper { alpha1, swa_lr: 0.01 },
+                        EvalKind::TestErr,
+                    )
+                    .labels(&[("dataset", ds), ("model", mname), ("format", fmt)])
+                    // average once per epoch (paper default)
+                    .cycle(CyclePolicy::PerEpoch(1))
+                    .seeds(ctx.seeds()),
+                );
+            }
+        }
+    }
+    cells
+}
+
+// ---------------------------------------------------------------------
+// Table 2: ImageNet-like ResNet
+// ---------------------------------------------------------------------
+
+fn table2_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    let scale = ctx.scale(0.5, 0.15);
+    let warmup = ctx.pick(6, 2);
+    [
+        ("SGD", "fp32", false, 0, 1),
+        ("SWA", "fp32", true, 1, 1),
+        ("SGD-LP", "bfp8small", false, 0, 1),
+        ("SWALP (+1 ep)", "bfp8small", true, 1, 1),
+        ("SWALP (+3 ep)", "bfp8small", true, 3, 1),
+        ("SWALP† (50x/ep)", "bfp8small", true, 3, 50),
+    ]
+    .into_iter()
+    .map(|(label, fmt, swa, extra, freq)| {
+        RunSpec::new(
+            label,
+            &format!("imagenet_rn_{fmt}"),
+            DataSpec::Model { seed: 31, scale },
+            Sizing::Epochs { warmup, avg: extra },
+            SchedSpec::SwalpStep { alpha1: 0.1, factor: 0.1, every_div: 3, swa_lr: 0.01 },
+            EvalKind::TestErr,
+        )
+        .labels(&[("run", label)])
+        .cycle(CyclePolicy::PerEpoch(freq))
+        .swa(swa)
+        .seeds(ctx.seeds())
+    })
+    .collect()
+}
+
+// ---------------------------------------------------------------------
+// Table 3 (App. F): WAGE-style network ± SWALP
+// ---------------------------------------------------------------------
+
+fn table3_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    let scale = ctx.scale(0.5, 0.15);
+    let warmup = ctx.pick(10, 4);
+    let avg = ctx.pick(4, 2);
+    // WAGE trains with a large LR on the coarse 2-bit grid (paper: 8 ->
+    // decay; SWALP variant: constant 8 then SWA LR 6), scaled for the
+    // mini network.
+    [("WAGE", false, 0.25), ("WAGE-SWALP", true, 1.5)]
+        .into_iter()
+        .map(|(label, swa, swa_lr)| {
+            RunSpec::new(
+                label,
+                "wage_cnn",
+                DataSpec::Model { seed: 41, scale },
+                Sizing::Epochs { warmup, avg },
+                SchedSpec::SwalpStep { alpha1: 2.0, factor: 0.5, every_div: 2, swa_lr },
+                EvalKind::TestErr,
+            )
+            .labels(&[("run", label)])
+            .swa(swa)
+            .seeds(ctx.seeds())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3 (left) + Table 5: averaging frequency
+// ---------------------------------------------------------------------
+
+fn fig3_frequency_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    let scale = ctx.scale(0.5, 0.15);
+    let warmup = ctx.pick(8, 3);
+    let avg = ctx.pick(4, 2);
+    // averages per epoch, mirroring Table 5's 1x .. every-batch sweep
+    let freqs: &[u64] = if ctx.full() { &[1, 2, 8, 32] } else { &[1, 8] };
+    freqs
+        .iter()
+        .map(|&f| {
+            let label = format!("{f}");
+            RunSpec::new(
+                &label,
+                "cifar100_vgg_bfp8small",
+                DataSpec::Model { seed: 51, scale },
+                Sizing::Epochs { warmup, avg },
+                SchedSpec::SwalpPaper { alpha1: 0.05, swa_lr: 0.01 },
+                EvalKind::SwaTrajectory,
+            )
+            .labels(&[("avg/epoch", label.as_str())])
+            .cycle(CyclePolicy::PerEpoch(f))
+            .seeds(ctx.seeds())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3 (right) + Table 6: averaging precision (Q_SWA sweep)
+// ---------------------------------------------------------------------
+
+fn fig3_precision_cells(ctx: &Ctx) -> Result<Vec<Cell>> {
+    let model = ctx.load("cifar100_vgg_bfp8small")?;
+    let split = data::build(&model.spec().dataset, 61, ctx.scale(0.5, 0.15))?;
+    let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
+    let warmup = ctx.pick(8, 3) * spe;
+    let steps = warmup + ctx.pick(4, 2) * spe;
+    let trainer = crate::coordinator::Trainer::new(&*model, &split);
+
+    // One training trajectory, many accumulators: the SGD-LP stream is
+    // identical across W_SWA, so fold the same weights into one
+    // accumulator per precision (float + 16..6 bits).
+    let wls: &[u32] = if ctx.full() { &[16, 14, 12, 10, 9, 8, 7, 6] } else { &[16, 8, 6] };
+    let mut accs: Vec<(String, SwaAccumulator)> =
+        vec![("float".to_string(), SwaAccumulator::new(None))];
+    for &w in wls {
+        accs.push((format!("{w}"), SwaAccumulator::new(Some(QuantFormat::bfp(w, true)))));
+    }
+
+    let mut ms = model.init(1)?;
+    let mut loader = Loader::new(&split.train, model.spec().batch_train, 9);
+    let sched = Schedule::swalp_paper(0.05, warmup, 0.01);
+    for step in 0..steps {
+        let lr = sched.lr_at(step) as f32;
+        let (x, y) = loader.next_batch();
+        let (x, y) = (x.to_vec(), y.to_vec());
+        model.train_step(&mut ms, &x, &y, lr, step)?;
+        if step >= warmup && (step - warmup) % spe.min(8) == 0 {
+            for (_, acc) in accs.iter_mut() {
+                acc.fold(&ms.trainable)?;
+            }
+        }
+    }
+
+    let mut cells = Vec::new();
+    for (label, acc) in &accs {
+        let avg = acc.average()?;
+        let out = if label == "float" {
+            trainer.eval_swa(&avg, &ms.state, true)?
+        } else {
+            // paper: inference activations quantized to W_SWA too
+            let wl: f32 = label.parse().unwrap();
+            let be = model.spec().batch_eval;
+            let mut cursor = 0usize;
+            let (mut xb, mut yb) = (Vec::new(), Vec::new());
+            let (mut loss, mut metric, mut batches, mut samples) = (0.0, 0.0, 0usize, 0usize);
+            while Loader::eval_batch(&split.test, be, &mut cursor, &mut xb, &mut yb) {
+                let o = model.eval_flex(&avg, &ms.state, &xb, &yb, wl)?;
+                loss += o.loss;
+                metric += o.metric;
+                batches += 1;
+                samples += be;
+            }
+            crate::runtime::EvalOut {
+                loss: loss / batches.max(1) as f64,
+                metric: metric / samples.max(1) as f64,
+                grad_norm_sq: None,
+            }
+        };
+        let err = out.metric * 100.0;
+        eprintln!("[fig3-precision] W_SWA={label}: {err:.2}%");
+        cells.push(Cell::analytic(label, &[("w_swa", label.as_str())], &[("err", err)]));
+    }
+    Ok(cells)
+}
+
+// ---------------------------------------------------------------------
+// Theorem 3: pure-simulation noise-ball scaling (no backend needed)
+// ---------------------------------------------------------------------
+
+fn thm3_cells(ctx: &Ctx) -> Result<Vec<Cell>> {
+    let steps = ctx.pick(1_000_000, 200_000) as usize;
+    let sigma = 0.1;
+    let alpha = 0.05;
+    let deltas: &[f64] = if ctx.full() {
+        &[0.1, 0.05, 0.025, 0.0125, 0.00625, 0.003125]
+    } else {
+        &[0.1, 0.025, 0.00625]
+    };
+    let mut cells = Vec::new();
+    for (i, &d) in deltas.iter().enumerate() {
+        let r = sim::noise_ball_1d(alpha, sigma, d, steps, 1, 42 + i as u64);
+        let id = format!("{d:.5}");
+        cells.push(Cell::analytic(
+            &id,
+            &[("delta", id.as_str())],
+            &[
+                ("sgd_lp", r.sgd_lp_second_moment),
+                ("ratio_sgd", r.sgd_lp_second_moment / (sigma * d)),
+                ("swalp", r.swalp_sq),
+                ("ratio_swalp", r.swalp_sq / (d * d)),
+            ],
+        ));
+    }
+    Ok(cells)
+}

@@ -1,11 +1,45 @@
-//! Report formatting + results persistence shared by the experiment
-//! harness and the benches.
+//! Structured experiment reports (`swalp-report-v1`) + the shared
+//! formatting helpers.
+//!
+//! Every experiment the [`super::runner::Runner`] executes produces one
+//! [`Report`]: per-cell mean/std aggregates (Welford [`SeedAgg`] over the
+//! seed replicas), wall-clock timings and the backend id. Reports
+//! serialize through [`crate::util::json`] (schema below) so CI, bench
+//! tracking and cross-backend parity checks can diff them, and render to
+//! the human-readable paper-style tables through one shared formatter
+//! ([`Report::render`]).
+//!
+//! Schema (`swalp-report-v1`; arrays-of-pairs keep key order, which
+//! [`crate::util::json::Value`]'s sorted objects would lose):
+//!
+//! ```json
+//! {
+//!   "schema": "swalp-report-v1",
+//!   "experiment": "table1", "title": "...", "backend": "native",
+//!   "mode": "quick", "seeds": 3, "wall_s": 12.5,
+//!   "extras": [["q_wstar_dist", 1.2e-4]],
+//!   "cells": [
+//!     {"id": "cifar10/vgg/fp32",
+//!      "labels": [["dataset", "cifar10"], ["model", "vgg"], ["format", "fp32"]],
+//!      "quant": "fp32", "seeds": 3, "wall_s": 4.2,
+//!      "metrics": [["sgd_err", {"mean": 6.51, "std": 0.14, "n": 3}]],
+//!      "series": [["swalp", [[0, 1.0], [64, 0.5]]]]}
+//!   ],
+//!   "notes": "expected orderings ..."
+//! }
+//! ```
+//!
+//! `wall_s` fields are the only non-deterministic content; equality
+//! checks go through [`Report::fingerprint`], which zeroes them.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::util::bench::Table;
 use crate::util::json::Value;
+
+pub const REPORT_SCHEMA: &str = "swalp-report-v1";
 
 /// Format a mean ± std pair like the paper's tables.
 pub fn pm(mean: f64, std: f64) -> String {
@@ -17,19 +51,23 @@ pub fn pct(v: f64) -> String {
     format!("{v:.2}")
 }
 
-/// Results directory (override with SWALP_RESULTS).
-pub fn results_dir() -> std::path::PathBuf {
-    std::env::var("SWALP_RESULTS")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+/// One scalar value for the shared table formatter: plain fixed-point in
+/// the human range, scientific outside it, "-" for non-finite.
+pub fn num(v: f64) -> String {
+    if !v.is_finite() {
+        "-".into()
+    } else if v != 0.0 && (v.abs() < 1e-2 || v.abs() >= 1e5) {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.2}")
+    }
 }
 
-/// Persist an experiment's structured results as JSON.
-pub fn save(name: &str, v: &Value) -> Result<()> {
-    let path = results_dir().join(format!("{name}.json"));
-    crate::util::json::write_file(&path, v)?;
-    eprintln!("[results] wrote {}", path.display());
-    Ok(())
+/// Results directory (override with SWALP_RESULTS).
+pub fn results_dir() -> PathBuf {
+    std::env::var("SWALP_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
 }
 
 /// Mean/std across repeated runs.
@@ -75,6 +113,309 @@ impl SeedAgg {
     pub fn count(&self) -> usize {
         self.n as usize
     }
+
+    pub fn stat(&self) -> MetricStat {
+        MetricStat { mean: self.mean(), std: self.std(), n: self.count() as u64 }
+    }
+}
+
+/// A seed-aggregated scalar in a report cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricStat {
+    pub mean: f64,
+    pub std: f64,
+    /// How many finite seed replica values went into the aggregate.
+    pub n: u64,
+}
+
+/// One grid cell (or one analytic row) of an experiment report.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Cell {
+    pub id: String,
+    /// Ordered table label columns, e.g. [("dataset","cifar10"), ...].
+    pub labels: Vec<(String, String)>,
+    /// Quantization config name of the cell's model ("" for analytic).
+    pub quant: String,
+    pub seeds: u64,
+    /// Summed wall-clock over the cell's seed replicas.
+    pub wall_s: f64,
+    pub metrics: Vec<(String, MetricStat)>,
+    /// Optional step curves (seed-0 replica only).
+    pub series: Vec<(String, Vec<(u64, f64)>)>,
+}
+
+impl Cell {
+    /// A finished single-sample row for analytic experiments; non-finite
+    /// values are dropped (JSON has no NaN/inf).
+    pub fn analytic(id: &str, labels: &[(&str, &str)], metrics: &[(&str, f64)]) -> Cell {
+        Cell {
+            id: id.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            quant: String::new(),
+            seeds: 1,
+            wall_s: 0.0,
+            metrics: metrics
+                .iter()
+                .filter(|(_, v)| v.is_finite())
+                .map(|(k, v)| (k.to_string(), MetricStat { mean: *v, std: 0.0, n: 1 }))
+                .collect(),
+            series: vec![],
+        }
+    }
+}
+
+/// One experiment's structured results — the `swalp-report-v1` artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    pub experiment: String,
+    pub title: String,
+    /// Execution backend id ("native", "native+xla-artifact").
+    pub backend: String,
+    /// Sizing tier: "full", "quick" or "smoke".
+    pub mode: String,
+    /// Seed replicas requested per grid cell.
+    pub seeds: u64,
+    /// Elapsed wall-clock of the invocation that produced this report
+    /// (cells carry summed per-replica compute time instead, which can
+    /// exceed this many-fold under pool execution).
+    pub wall_s: f64,
+    /// Report-level reference scalars (e.g. the quantization noise floor).
+    pub extras: Vec<(String, f64)>,
+    pub cells: Vec<Cell>,
+    /// Paper-expectation commentary, printed under the table.
+    pub notes: String,
+}
+
+fn pairs_str(ps: &[(String, String)]) -> Value {
+    Value::Arr(
+        ps.iter()
+            .map(|(k, v)| Value::Arr(vec![Value::str(k), Value::str(v)]))
+            .collect(),
+    )
+}
+
+fn pairs_num(ps: &[(String, f64)]) -> Value {
+    Value::Arr(
+        ps.iter()
+            .filter(|(_, v)| v.is_finite())
+            .map(|(k, v)| Value::Arr(vec![Value::str(k), Value::Num(*v)]))
+            .collect(),
+    )
+}
+
+fn parse_pairs(v: &Value) -> Result<Vec<(&Value, &Value)>> {
+    v.as_arr()?
+        .iter()
+        .map(|p| {
+            let p = p.as_arr()?;
+            if p.len() != 2 {
+                bail!("expected a [key, value] pair, got {} items", p.len());
+            }
+            Ok((&p[0], &p[1]))
+        })
+        .collect()
+}
+
+impl Report {
+    /// Serialize; `with_timing = false` zeroes the wall-clock fields,
+    /// which is what makes reports comparable across thread counts.
+    pub fn to_json(&self, with_timing: bool) -> Value {
+        let wall = |w: f64| if with_timing { w } else { 0.0 };
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                Value::obj(vec![
+                    ("id", Value::str(&c.id)),
+                    ("labels", pairs_str(&c.labels)),
+                    ("quant", Value::str(&c.quant)),
+                    ("seeds", Value::Num(c.seeds as f64)),
+                    ("wall_s", Value::Num(wall(c.wall_s))),
+                    (
+                        "metrics",
+                        Value::Arr(
+                            c.metrics
+                                .iter()
+                                .map(|(k, m)| {
+                                    Value::Arr(vec![
+                                        Value::str(k),
+                                        Value::obj(vec![
+                                            ("mean", Value::Num(m.mean)),
+                                            ("std", Value::Num(m.std)),
+                                            ("n", Value::Num(m.n as f64)),
+                                        ]),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "series",
+                        Value::Arr(
+                            c.series
+                                .iter()
+                                .map(|(k, pts)| {
+                                    Value::Arr(vec![
+                                        Value::str(k),
+                                        Value::Arr(
+                                            pts.iter()
+                                                .filter(|(_, v)| v.is_finite())
+                                                .map(|&(s, v)| Value::arr_f64(&[s as f64, v]))
+                                                .collect(),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("schema", Value::str(REPORT_SCHEMA)),
+            ("experiment", Value::str(&self.experiment)),
+            ("title", Value::str(&self.title)),
+            ("backend", Value::str(&self.backend)),
+            ("mode", Value::str(&self.mode)),
+            ("seeds", Value::Num(self.seeds as f64)),
+            ("wall_s", Value::Num(wall(self.wall_s))),
+            ("extras", pairs_num(&self.extras)),
+            ("cells", Value::Arr(cells)),
+            ("notes", Value::str(&self.notes)),
+        ])
+    }
+
+    /// Parse a `swalp-report-v1` value back into a [`Report`].
+    pub fn parse(v: &Value) -> Result<Report> {
+        let schema = v.get("schema")?.as_str()?;
+        if schema != REPORT_SCHEMA {
+            bail!("unsupported report schema {schema:?} (want {REPORT_SCHEMA})");
+        }
+        let mut cells = Vec::new();
+        for c in v.get("cells")?.as_arr()? {
+            let mut labels = Vec::new();
+            for (k, val) in parse_pairs(c.get("labels")?)? {
+                labels.push((k.as_str()?.to_string(), val.as_str()?.to_string()));
+            }
+            let mut metrics = Vec::new();
+            for (k, m) in parse_pairs(c.get("metrics")?)? {
+                metrics.push((
+                    k.as_str()?.to_string(),
+                    MetricStat {
+                        mean: m.get("mean")?.as_f64()?,
+                        std: m.get("std")?.as_f64()?,
+                        n: m.get("n")?.as_u64()?,
+                    },
+                ));
+            }
+            let mut series = Vec::new();
+            for (k, pts) in parse_pairs(c.get("series")?)? {
+                let pts = pts
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        let p = p.as_arr()?;
+                        if p.len() != 2 {
+                            bail!("series point must be [step, value]");
+                        }
+                        Ok((p[0].as_u64()?, p[1].as_f64()?))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                series.push((k.as_str()?.to_string(), pts));
+            }
+            cells.push(Cell {
+                id: c.get("id")?.as_str()?.to_string(),
+                labels,
+                quant: c.get("quant")?.as_str()?.to_string(),
+                seeds: c.get("seeds")?.as_u64()?,
+                wall_s: c.get("wall_s")?.as_f64()?,
+                metrics,
+                series,
+            });
+        }
+        let mut extras = Vec::new();
+        for (k, val) in parse_pairs(v.get("extras")?)? {
+            extras.push((k.as_str()?.to_string(), val.as_f64()?));
+        }
+        Ok(Report {
+            experiment: v.get("experiment")?.as_str()?.to_string(),
+            title: v.get("title")?.as_str()?.to_string(),
+            backend: v.get("backend")?.as_str()?.to_string(),
+            mode: v.get("mode")?.as_str()?.to_string(),
+            seeds: v.get("seeds")?.as_u64()?,
+            wall_s: v.get("wall_s")?.as_f64()?,
+            extras,
+            cells,
+            notes: v.get("notes")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Canonical serialization with the timing fields zeroed — equal
+    /// across thread counts for a deterministic runner.
+    pub fn fingerprint(&self) -> String {
+        self.to_json(false).to_string()
+    }
+
+    /// The one shared human-readable formatter: a paper-style table whose
+    /// columns are the union of label keys and metric names across cells
+    /// (first-appearance order), then the reference extras and notes.
+    pub fn render(&self) {
+        println!("== {} ==", self.title);
+        let mut label_keys: Vec<&str> = Vec::new();
+        let mut metric_keys: Vec<&str> = Vec::new();
+        for c in &self.cells {
+            for (k, _) in &c.labels {
+                if !label_keys.contains(&k.as_str()) {
+                    label_keys.push(k);
+                }
+            }
+            for (k, _) in &c.metrics {
+                if !metric_keys.contains(&k.as_str()) {
+                    metric_keys.push(k);
+                }
+            }
+        }
+        let headers: Vec<&str> = label_keys.iter().chain(metric_keys.iter()).copied().collect();
+        let mut table = Table::new(&headers);
+        for c in &self.cells {
+            let mut row: Vec<String> = label_keys
+                .iter()
+                .map(|k| {
+                    c.labels
+                        .iter()
+                        .find(|(lk, _)| lk == k)
+                        .map(|(_, v)| v.clone())
+                        .unwrap_or_else(|| "-".into())
+                })
+                .collect();
+            for k in &metric_keys {
+                row.push(match c.metrics.iter().find(|(mk, _)| mk == k) {
+                    None => "-".into(),
+                    Some((_, m)) if m.n >= 2 => pm(m.mean, m.std),
+                    Some((_, m)) => num(m.mean),
+                });
+            }
+            table.row(row);
+        }
+        table.print();
+        for (k, v) in &self.extras {
+            println!("reference: {k} = {}", num(*v));
+        }
+        if !self.notes.is_empty() {
+            println!("{}", self.notes);
+        }
+        println!(
+            "[{} | {} mode | seeds={} | backend={} | {:.1}s]",
+            self.experiment, self.mode, self.seeds, self.backend, self.wall_s
+        );
+    }
+
+    /// Persist under `dir/<experiment>.json`.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("{}.json", self.experiment.replace('-', "_")));
+        crate::util::json::write_file(&path, &self.to_json(true))?;
+        Ok(path)
+    }
 }
 
 /// Log-log slope estimate between two (x, y) points — used to check
@@ -97,6 +438,10 @@ mod tests {
     fn formatting() {
         assert_eq!(pm(6.514, 0.141), "6.51 ± 0.14");
         assert_eq!(pct(27.2345), "27.23");
+        assert_eq!(num(6.514), "6.51");
+        assert_eq!(num(1.5e-4), "1.500e-4");
+        assert_eq!(num(f64::NAN), "-");
+        assert_eq!(num(0.0), "0.00");
     }
 
     #[test]
@@ -117,6 +462,9 @@ mod tests {
         assert!((agg.mean() - m).abs() < 1e-12);
         assert!((agg.std() - s).abs() < 1e-12);
         assert_eq!(agg.count(), 5);
+        let st = agg.stat();
+        assert_eq!(st.n, 5);
+        assert_eq!(st.mean, agg.mean());
         // degenerate cases
         let mut one = SeedAgg::new();
         one.push(3.0);

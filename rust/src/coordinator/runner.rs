@@ -1,0 +1,392 @@
+//! The experiment runner: flattens registry specs into one
+//! `cells × seed replicas` work list and shards it across the rayon pool.
+//!
+//! One [`Runner::run_many`] call covers everything from a single
+//! experiment to the full `--all` sweep: every grid cell of every
+//! requested spec becomes `seeds` work items in a single flat list, so a
+//! 12-cell table grid saturates the pool even with one seed replica per
+//! cell (the PR-2 `run_seeds` path could only parallelize within one
+//! model). Execution is deterministic by construction — a training run
+//! is a pure function of its `TrainConfig`, and per-cell seeding derives
+//! from the cell's `RunSpec`, not from scheduling order — so reports are
+//! bit-identical (modulo wall-clock fields) at any thread count;
+//! `ctx.threads() == Some(1)` runs the same list serially on the calling
+//! thread as the reference.
+//!
+//! Backends are loaded and datasets built on the calling thread up front
+//! (artifact compilation is not re-entrant); workers only train and
+//! evaluate.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{TrainConfig, Trainer};
+use crate::data::{self, Split};
+use crate::runtime::ModelBackend;
+use crate::util::Timer;
+
+use super::experiment::{Ctx, CtxConfig};
+use super::registry::{
+    self, CyclePolicy, DataSpec, EvalKind, ExpKind, ExperimentSpec, RunSpec, Sizing,
+};
+use super::report::{Cell, Report, SeedAgg};
+
+/// Executes registry experiments against a [`Ctx`].
+pub struct Runner<'a> {
+    ctx: &'a Ctx,
+}
+
+/// Training data resolved before execution. Cells with the same
+/// [`DataSpec`] (and dataset, for model-derived splits) share one entry
+/// — a table grid builds its split once, not once per format column.
+struct CellData {
+    split: Split,
+    /// Empirical optimum for ‖w−w*‖² tracking (linreg cells).
+    w_star: Option<Vec<f32>>,
+}
+
+/// One (spec, cell, seed) work item.
+struct WorkItem<'a> {
+    spec_i: usize,
+    cell_i: usize,
+    seed: u64,
+    model: Box<dyn ModelBackend>,
+    rs: &'a RunSpec,
+    data: &'a CellData,
+}
+
+/// What a single replica contributes to its cell.
+struct SeedOut {
+    metrics: Vec<(String, f64)>,
+    series: Vec<(String, Vec<(u64, f64)>)>,
+    wall_s: f64,
+}
+
+impl<'a> Runner<'a> {
+    pub fn new(ctx: &'a Ctx) -> Runner<'a> {
+        Runner { ctx }
+    }
+
+    /// Run one experiment.
+    pub fn run(&self, spec: &ExperimentSpec) -> Result<Report> {
+        Ok(self.run_many(&[spec])?.pop().expect("one spec in, one report out"))
+    }
+
+    /// Run several experiments over ONE flattened work list: all grid
+    /// cells × seed replicas execute concurrently across the pool, then
+    /// results aggregate back into one report per spec (input order).
+    pub fn run_many(&self, specs: &[&ExperimentSpec]) -> Result<Vec<Report>> {
+        let ctx = self.ctx;
+        let total_timer = Timer::start();
+        // resolve grids + per-cell quant/data on the calling thread;
+        // identical DataSpecs share one built split across cells/specs
+        let mut grids: Vec<Vec<RunSpec>> = Vec::with_capacity(specs.len());
+        let mut quants: Vec<Vec<String>> = Vec::with_capacity(specs.len());
+        let mut data_of: Vec<Vec<usize>> = Vec::with_capacity(specs.len());
+        let mut pool_keys: Vec<String> = Vec::new();
+        let mut pool: Vec<CellData> = Vec::new();
+        for spec in specs {
+            let cells = match &spec.kind {
+                ExpKind::Grid { cells, .. } => cells(ctx),
+                ExpKind::Analytic(_) => vec![],
+            };
+            let mut cell_quants = Vec::with_capacity(cells.len());
+            let mut cell_data = Vec::with_capacity(cells.len());
+            for rs in &cells {
+                let model = ctx.load(&rs.model)?;
+                cell_quants.push(model.spec().quant.name.clone());
+                let key = match rs.data {
+                    DataSpec::Model { seed, scale } => format!(
+                        "model/{}/{seed}/{:x}",
+                        model.spec().dataset,
+                        scale.to_bits()
+                    ),
+                    DataSpec::LinregWstar { d, n, seed } => format!("linreg/{d}/{n}/{seed}"),
+                };
+                let idx = match pool_keys.iter().position(|k| *k == key) {
+                    Some(i) => i,
+                    None => {
+                        pool.push(build_data(rs, &model.spec().dataset)?);
+                        pool_keys.push(key);
+                        pool.len() - 1
+                    }
+                };
+                cell_data.push(idx);
+            }
+            grids.push(cells);
+            quants.push(cell_quants);
+            data_of.push(cell_data);
+        }
+
+        // flatten into the work list (backends loaded up front)
+        let mut items: Vec<WorkItem> = Vec::new();
+        for (spec_i, cells) in grids.iter().enumerate() {
+            for (cell_i, rs) in cells.iter().enumerate() {
+                for seed in 0..rs.seeds.max(1) {
+                    items.push(WorkItem {
+                        spec_i,
+                        cell_i,
+                        seed,
+                        model: ctx.load(&rs.model)?,
+                        rs,
+                        data: &pool[data_of[spec_i][cell_i]],
+                    });
+                }
+            }
+        }
+
+        // execute: rayon pool by default, serial when threads = 1
+        let mut slots: Vec<Option<Result<SeedOut>>> = Vec::new();
+        slots.resize_with(items.len(), || None);
+        if ctx.threads() == Some(1) {
+            for (item, slot) in items.iter().zip(slots.iter_mut()) {
+                *slot = Some(run_item(item));
+            }
+        } else {
+            rayon::scope(|s| {
+                for (item, slot) in items.iter().zip(slots.iter_mut()) {
+                    s.spawn(move |_| {
+                        *slot = Some(run_item(item));
+                    });
+                }
+            });
+        }
+        let mut outs: Vec<SeedOut> = Vec::with_capacity(slots.len());
+        for (slot, item) in slots.into_iter().zip(&items) {
+            outs.push(
+                slot.expect("work item did not run")
+                    .map_err(|e| e.context(format!("cell {} seed {}", item.rs.id, item.seed)))?,
+            );
+        }
+
+        // aggregate per (spec, cell), then assemble one report per spec
+        let mut reports = Vec::with_capacity(specs.len());
+        for (spec_i, spec) in specs.iter().enumerate() {
+            let mut cells_out: Vec<Cell> = Vec::new();
+            for (cell_i, rs) in grids[spec_i].iter().enumerate() {
+                let mut aggs: Vec<(String, SeedAgg)> = Vec::new();
+                let mut series = Vec::new();
+                let mut wall = 0.0;
+                for (item, out) in items.iter().zip(&outs) {
+                    if item.spec_i != spec_i || item.cell_i != cell_i {
+                        continue;
+                    }
+                    wall += out.wall_s;
+                    if item.seed == 0 {
+                        series = out.series.clone();
+                    }
+                    for (name, v) in &out.metrics {
+                        if !v.is_finite() {
+                            continue;
+                        }
+                        match aggs.iter_mut().find(|(n, _)| n == name) {
+                            Some((_, agg)) => agg.push(*v),
+                            None => {
+                                let mut agg = SeedAgg::new();
+                                agg.push(*v);
+                                aggs.push((name.clone(), agg));
+                            }
+                        }
+                    }
+                }
+                cells_out.push(Cell {
+                    id: rs.id.clone(),
+                    labels: rs.labels.clone(),
+                    quant: quants[spec_i][cell_i].clone(),
+                    seeds: rs.seeds.max(1),
+                    wall_s: wall,
+                    metrics: aggs.into_iter().map(|(n, a)| (n, a.stat())).collect(),
+                    series,
+                });
+            }
+            let mut extras = Vec::new();
+            match &spec.kind {
+                ExpKind::Grid { extras: Some(f), .. } => extras = f(ctx)?,
+                ExpKind::Grid { .. } => {}
+                ExpKind::Analytic(f) => cells_out = f(ctx)?,
+            }
+            reports.push(Report {
+                experiment: spec.id.to_string(),
+                title: spec.title.to_string(),
+                backend: ctx.backend_id(),
+                mode: ctx.mode().to_string(),
+                seeds: ctx.seeds(),
+                // elapsed wall-clock of this invocation so far — NOT the
+                // summed replica time (cells carry those); under pool
+                // execution the sum can exceed elapsed many-fold
+                wall_s: total_timer.secs(),
+                extras,
+                cells: cells_out,
+                notes: spec.notes.to_string(),
+            });
+        }
+        Ok(reports)
+    }
+}
+
+/// Build one shared training-data entry for a cell.
+fn build_data(rs: &RunSpec, dataset: &str) -> Result<CellData> {
+    Ok(match rs.data {
+        DataSpec::Model { seed, scale } => {
+            CellData { split: data::build(dataset, seed, scale)?, w_star: None }
+        }
+        DataSpec::LinregWstar { d, n, seed } => {
+            let problem = data::synth::linreg_problem(d, n, seed);
+            CellData { split: problem.split, w_star: Some(problem.w_star) }
+        }
+    })
+}
+
+/// Train one cell replica and compute its report metrics.
+fn run_item(item: &WorkItem) -> Result<SeedOut> {
+    let t = Timer::start();
+    let rs = item.rs;
+    let model = &*item.model;
+    let split = &item.data.split;
+    let spe = (split.train.n / model.spec().batch_train).max(1) as u64;
+    let (steps, warmup) = match rs.sizing {
+        Sizing::Steps { steps, warmup } => (steps, warmup),
+        Sizing::Epochs { warmup, avg } => (warmup * spe + avg * spe, warmup * spe),
+    };
+    // an averaging run needs at least one post-warm-up step to fold
+    let steps = if rs.enable_swa { steps.max(warmup + 1) } else { steps };
+    let cycle = match rs.cycle {
+        CyclePolicy::Steps(c) => c.max(1),
+        CyclePolicy::PerEpoch(f) => (spe / f.max(1)).max(1),
+    };
+    let mut cfg = TrainConfig::new(steps, warmup, cycle, rs.sched.resolve(warmup));
+    cfg.enable_swa = rs.enable_swa;
+    cfg.init_seed = rs.init_seed + item.seed;
+    cfg.data_seed = rs.data_seed + item.seed;
+    if matches!(rs.eval, EvalKind::DistSq) {
+        cfg.w_star = item.data.w_star.clone();
+    }
+    if matches!(rs.eval, EvalKind::SwaTrajectory) {
+        cfg.eval_every = spe;
+    }
+    let trainer = Trainer::new(model, split);
+    let out = trainer.run(&cfg)?;
+
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    let mut series: Vec<(String, Vec<(u64, f64)>)> = Vec::new();
+    let mut push = |name: &str, v: f64| metrics.push((name.to_string(), v));
+    match rs.eval {
+        EvalKind::TestErr => {
+            push("sgd_err", out.sgd_test_err);
+            if let Some(swa) = out.swa_test_err {
+                push("swalp_err", swa);
+                push("gain", out.sgd_test_err - swa);
+            }
+        }
+        EvalKind::DistSq => {
+            let key = if rs.enable_swa { "swa_dist_sq" } else { "sgd_dist_sq" };
+            let curve = out.metrics.series(key);
+            let final_d = curve.last().map(|&(_, v)| v).unwrap_or(f64::NAN);
+            push("final_dist_sq", final_d);
+            if let Some(w_star) = &item.data.w_star {
+                push("vs_qnoise", final_d / registry::q_wstar_dist(w_star));
+            }
+            // O(1/T) check on the averaged curve (Theorem 1 predicts -1)
+            if rs.enable_swa && curve.len() >= 4 {
+                let a = curve[curve.len() / 2];
+                let b = curve[curve.len() - 1];
+                push(
+                    "tail_slope",
+                    super::report::loglog_slope(a.0 as f64, a.1, b.0 as f64, b.1),
+                );
+            }
+            series.push((key.to_string(), curve));
+        }
+        EvalKind::GradNorm => {
+            // gradient norm of the FP TRAINING objective (the quantity
+            // Theorem 2 bounds) at the SGD iterate...
+            let g_iter = trainer
+                .eval_set(&out.final_state.trainable, &out.final_state.state, false)?
+                .grad_norm_sq
+                .unwrap_or(f64::NAN);
+            push("grad_iter", g_iter);
+            // ...and at the averaged model
+            if let Some(acc) = &out.swa {
+                let avg = acc.average()?;
+                let g_avg = trainer
+                    .eval_swa(&avg, &out.final_state.state, false)?
+                    .grad_norm_sq
+                    .unwrap_or(f64::NAN);
+                push("grad_avg", g_avg);
+            }
+        }
+        EvalKind::TrainTestErr => {
+            let sgd_train = trainer
+                .eval_set(&out.final_state.trainable, &out.final_state.state, false)?
+                .metric
+                * 100.0;
+            push("sgd_train", sgd_train);
+            push("sgd_test", out.sgd_test_err);
+            if let Some(acc) = &out.swa {
+                let avg = acc.average()?;
+                let swa_train =
+                    trainer.eval_swa(&avg, &out.final_state.state, false)?.metric * 100.0;
+                push("swa_train", swa_train);
+                if let Some(swa_test) = out.swa_test_err {
+                    push("swa_test", swa_test);
+                }
+            }
+        }
+        EvalKind::SwaTrajectory => {
+            let curve = out.metrics.series("swa_test_metric");
+            let after1 = curve
+                .iter()
+                .find(|(s, _)| *s >= warmup + spe - 1)
+                .map(|&(_, v)| v * 100.0)
+                .unwrap_or(f64::NAN);
+            push("after_1_epoch", after1);
+            if let Some(final_err) = out.swa_test_err {
+                push("final_err", final_err);
+            }
+        }
+    }
+    let wall_s = t.secs();
+    eprintln!("[{}] seed {} done in {:.1}s", rs.id, item.seed, wall_s);
+    Ok(SeedOut { metrics, series, wall_s })
+}
+
+/// Shared entry point for the paper-figure benches: quick mode by
+/// default, `--full`/`SWALP_FULL=1` for the full-scale version, `--seeds
+/// N` replicas, `--threads 1` for the serial reference. The experiment's
+/// models must be loadable — an unavailable backend is a hard error, not
+/// a skip: these benches executing real training steps is an acceptance
+/// gate for the native engine.
+pub fn bench_main(exp: &str) {
+    let args = crate::util::cli::Args::from_env();
+    let full = args.flag("full") || std::env::var("SWALP_FULL").is_ok();
+    if let Err(e) = bench_run(exp, full, &args) {
+        eprintln!("{exp} failed: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn bench_run(exp: &str, full: bool, args: &crate::util::cli::Args) -> Result<()> {
+    let mut cfg = CtxConfig::new().quick(!full).seeds(args.u64_or("seeds", 1)?);
+    if let Some(t) = args.opt("threads") {
+        cfg = cfg.threads(t.parse()?);
+    }
+    let ctx = cfg.build()?;
+    let Some(spec) = registry::find(exp) else {
+        bail!("unknown experiment {exp:?}; registered: {}", registry::ids().join(" "));
+    };
+    if let ExpKind::Grid { cells, .. } = &spec.kind {
+        for rs in cells(&ctx) {
+            if !ctx.can_load(&rs.model) {
+                bail!(
+                    "model {:?} unavailable on every backend.\nregistered native models:\n  {}",
+                    rs.model,
+                    crate::native::model_names().join("\n  ")
+                );
+            }
+        }
+    }
+    let report = Runner::new(&ctx).run(spec)?;
+    report.render();
+    let path = report.save(&ctx.results_dir())?;
+    eprintln!("[results] wrote {}", path.display());
+    Ok(())
+}

@@ -30,7 +30,7 @@ pub struct TrainConfig {
     pub swa_quant: Option<QuantFormat>,
     /// Evaluate train/test every n steps (0 = only at the end).
     pub eval_every: u64,
-    pub init_seed: f32,
+    pub init_seed: u64,
     pub data_seed: u64,
     /// Track ‖w − w*‖² against this reference (linreg, Fig. 2 left).
     pub w_star: Option<Vec<f32>>,
@@ -47,7 +47,7 @@ impl TrainConfig {
             enable_swa: true,
             swa_quant: None,
             eval_every: 0,
-            init_seed: 1.0,
+            init_seed: 1,
             data_seed: 7,
             w_star: None,
             verbose: false,
@@ -67,6 +67,11 @@ pub struct TrainOutcome {
     pub final_state: ModelState,
     pub swa: Option<SwaAccumulator>,
     pub steps_per_epoch: usize,
+    /// Steps this run actually executed (config total minus any
+    /// checkpoint-resume offset).
+    pub steps: u64,
+    /// Wall-clock of this run (training loop + final evals).
+    pub wall_s: f64,
 }
 
 pub struct Trainer<'a> {
@@ -159,6 +164,7 @@ impl<'a> Trainer<'a> {
         cfg: &TrainConfig,
         resume: Option<super::checkpoint::Checkpoint>,
     ) -> Result<TrainOutcome> {
+        let timer = crate::util::Timer::start();
         let (mut ms, mut swa, start_step) = match resume {
             None => (
                 self.model.init(cfg.init_seed)?,
@@ -248,6 +254,8 @@ impl<'a> Trainer<'a> {
             final_state: ms,
             swa: swa_out,
             steps_per_epoch,
+            steps: cfg.total_steps.saturating_sub(start_step),
+            wall_s: timer.secs(),
         })
     }
 }

@@ -3,30 +3,36 @@
 //! Subcommands:
 //!
 //! ```text
-//! list                         native models (+ artifact manifest if present)
+//! list [--json]                native models (+ artifact manifest if present)
 //! info                         backend availability summary
 //! train  --model <name> [...]  run SWALP training (see config.rs opts)
 //! eval   --model <name>        init + one full eval pass (smoke)
-//! reproduce --exp <id> [--quick] [--seeds N]
-//!                              regenerate a paper table/figure
-//!                              (fig2-linreg fig2-logreg fig2-bits table1
-//!                               table2 table3 fig3-frequency
-//!                               fig3-precision thm3)
+//! reproduce --exp <id>|--all [--quick] [--seeds N] [--threads N]
+//!           [--json [path]] [--out-dir <dir>]
+//!                              run registered experiments through the
+//!                              grid runner; emits swalp-report-v1 JSON
+//! report <path> [--check]      render (or schema-check) a report file
 //! ```
 //!
 //! Model resolution order: the native rust engine first (hermetic, no
 //! artifacts needed), then — when built with `--features xla-runtime` and
 //! `make artifacts` has run — the AOT artifact runtime.
+//!
+//! Exit codes: 0 success, 1 failure, 2 unknown experiment id (the
+//! registered ids are printed so callers can self-correct).
+
+use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
 use swalp::config::RunConfig;
-use swalp::coordinator::experiment::{thm3_noise_ball, Ctx};
-use swalp::coordinator::{TrainConfig, Trainer};
+use swalp::coordinator::experiment::{Ctx, CtxConfig};
+use swalp::coordinator::{registry, Report, Runner, TrainConfig, Trainer};
 use swalp::data;
 use swalp::native;
 use swalp::runtime::{artifacts_dir, Manifest, ModelBackend};
 use swalp::util::cli::Args;
+use swalp::util::json::Value;
 
 fn main() {
     let args = Args::from_env();
@@ -39,7 +45,7 @@ fn main() {
 /// Model resolution (native registry first, XLA artifacts second) lives
 /// in `Ctx::load` — the CLI and the experiment harness share one policy.
 fn load_backend(name: &str) -> Result<(Ctx, Box<dyn ModelBackend>)> {
-    let ctx = Ctx::new(true, 1)?;
+    let ctx = CtxConfig::new().quick(true).build()?;
     let model = ctx.load(name)?;
     Ok((ctx, model))
 }
@@ -47,44 +53,10 @@ fn load_backend(name: &str) -> Result<(Ctx, Box<dyn ModelBackend>)> {
 fn run(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
-        "list" => {
-            println!("{:<28} {:<14} {:<16} {:>10}  backend", "model", "quant", "dataset", "params");
-            for name in native::model_names() {
-                let m = native::load(&name)?;
-                let s = m.spec();
-                println!(
-                    "{:<28} {:<14} {:<16} {:>10}  native",
-                    s.name,
-                    s.quant.name,
-                    s.dataset,
-                    s.param_count()
-                );
-            }
-            let dir = artifacts_dir();
-            if dir.join("manifest.json").exists() {
-                // a stale manifest must not break the hermetic listing
-                // (same degradation policy as experiment::Ctx::new)
-                match Manifest::load(&dir) {
-                    Ok(manifest) => {
-                        for m in &manifest.models {
-                            println!(
-                                "{:<28} {:<14} {:<16} {:>10}  xla-artifact",
-                                m.name,
-                                m.quant.name,
-                                m.dataset,
-                                m.param_count()
-                            );
-                        }
-                    }
-                    Err(e) => println!("(artifact manifest unreadable: {e:#})"),
-                }
-            } else {
-                println!("(no artifact manifest at {}; native models only)", dir.display());
-            }
-            Ok(())
-        }
+        "list" => list(args.flag("json")),
         "info" => {
             println!("native models: {}", native::model_names().len());
+            println!("experiments: {}", registry::ids().join(" "));
             println!(
                 "xla-runtime feature: {}",
                 if cfg!(feature = "xla-runtime") { "on" } else { "off" }
@@ -105,7 +77,7 @@ fn run(args: &Args) -> Result<()> {
             let model_name = args.req("model")?;
             let (_ctx, model) = load_backend(model_name)?;
             let split = data::build(&model.spec().dataset, 7, 0.25)?;
-            let ms = model.init(1.0)?;
+            let ms = model.init(1)?;
             let trainer = Trainer::new(&*model, &split);
             let out = trainer.eval_set(&ms.trainable, &ms.state, true)?;
             println!(
@@ -114,15 +86,8 @@ fn run(args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        "reproduce" => {
-            let exp = args.req("exp")?;
-            let quick = args.flag("quick");
-            if exp == "thm3" {
-                return thm3_noise_ball(quick);
-            }
-            let ctx = Ctx::new(quick, args.u64_or("seeds", 1)?)?;
-            ctx.dispatch(exp)
-        }
+        "reproduce" => reproduce(args),
+        "report" => report_cmd(args),
         "help" | _ => {
             println!("{}", HELP.trim());
             if cmd != "help" {
@@ -131,6 +96,181 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
     }
+}
+
+fn list(json: bool) -> Result<()> {
+    let dir = artifacts_dir();
+    // a stale manifest must not break the hermetic listing (same
+    // degradation policy as CtxConfig::build)
+    let manifest = if dir.join("manifest.json").exists() {
+        match Manifest::load(&dir) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                if json {
+                    eprintln!("(artifact manifest unreadable: {e:#})");
+                } else {
+                    println!("(artifact manifest unreadable: {e:#})");
+                }
+                None
+            }
+        }
+    } else {
+        None
+    };
+    if json {
+        let mut models = Vec::new();
+        for name in native::model_names() {
+            let s = native::load(&name)?;
+            let s = s.spec();
+            models.push(Value::obj(vec![
+                ("name", Value::str(&s.name)),
+                ("quant", Value::str(&s.quant.name)),
+                ("dataset", Value::str(&s.dataset)),
+                ("params", Value::Num(s.param_count() as f64)),
+                ("backend", Value::str("native")),
+            ]));
+        }
+        if let Some(manifest) = &manifest {
+            for m in &manifest.models {
+                models.push(Value::obj(vec![
+                    ("name", Value::str(&m.name)),
+                    ("quant", Value::str(&m.quant.name)),
+                    ("dataset", Value::str(&m.dataset)),
+                    ("params", Value::Num(m.param_count() as f64)),
+                    ("backend", Value::str("xla-artifact")),
+                ]));
+            }
+        }
+        let experiments =
+            Value::Arr(registry::ids().into_iter().map(Value::str).collect());
+        let out = Value::obj(vec![
+            ("schema", Value::str("swalp-list-v1")),
+            ("models", Value::Arr(models)),
+            ("experiments", experiments),
+        ]);
+        println!("{}", out.to_string());
+        return Ok(());
+    }
+    println!("{:<28} {:<14} {:<16} {:>10}  backend", "model", "quant", "dataset", "params");
+    for name in native::model_names() {
+        let m = native::load(&name)?;
+        let s = m.spec();
+        println!(
+            "{:<28} {:<14} {:<16} {:>10}  native",
+            s.name,
+            s.quant.name,
+            s.dataset,
+            s.param_count()
+        );
+    }
+    match &manifest {
+        Some(manifest) => {
+            for m in &manifest.models {
+                println!(
+                    "{:<28} {:<14} {:<16} {:>10}  xla-artifact",
+                    m.name,
+                    m.quant.name,
+                    m.dataset,
+                    m.param_count()
+                );
+            }
+        }
+        None if !dir.join("manifest.json").exists() => {
+            println!("(no artifact manifest at {}; native models only)", dir.display());
+        }
+        None => {}
+    }
+    println!("experiments: {}", registry::ids().join(" "));
+    Ok(())
+}
+
+fn reproduce(args: &Args) -> Result<()> {
+    let mut cfg = CtxConfig::new()
+        .quick(args.flag("quick"))
+        .seeds(args.u64_or("seeds", 1)?);
+    if let Some(t) = args.opt("threads") {
+        cfg = cfg.threads(t.parse().map_err(|e| anyhow::anyhow!("--threads: {e}"))?);
+    }
+    if let Some(dir) = args.opt("out-dir") {
+        cfg = cfg.out_dir(dir);
+    }
+    let ctx = cfg.build()?;
+    let specs: Vec<&registry::ExperimentSpec> = if args.flag("all") {
+        registry::all().iter().collect()
+    } else {
+        let exp = args.req("exp")?;
+        match registry::find(exp) {
+            Some(s) => vec![s],
+            None => {
+                eprintln!("unknown experiment {exp:?}; registered ids:");
+                for id in registry::ids() {
+                    eprintln!("  {id}");
+                }
+                std::process::exit(2);
+            }
+        }
+    };
+    let reports = Runner::new(&ctx).run_many(&specs)?;
+    let results_dir = ctx.results_dir();
+    for r in &reports {
+        r.render();
+        let path = r.save(&results_dir)?;
+        eprintln!("[results] wrote {}", path.display());
+    }
+    // --json [path]: one machine-readable artifact for the whole call
+    let json_out: Option<PathBuf> = args
+        .opt("json")
+        .map(PathBuf::from)
+        .or_else(|| args.flag("json").then(|| results_dir.join("report.json")));
+    if let Some(path) = json_out {
+        let v = if reports.len() == 1 {
+            reports[0].to_json(true)
+        } else {
+            Value::obj(vec![
+                ("schema", Value::str("swalp-report-set-v1")),
+                (
+                    "reports",
+                    Value::Arr(reports.iter().map(|r| r.to_json(true)).collect()),
+                ),
+            ])
+        };
+        swalp::util::json::write_file(&path, &v)?;
+        println!("report -> {}", path.display());
+    }
+    Ok(())
+}
+
+/// `swalp report <path> [--check]` — render a saved `swalp-report-v1`
+/// file, or verify it round-trips through the schema (parse →
+/// re-serialize → re-parse → compare).
+fn report_cmd(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: swalp report <path> [--check]"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let report = Report::parse(&swalp::util::json::parse(&text)?)?;
+    if args.flag("check") {
+        // round-trip against the FILE's bytes, not the parsed value — a
+        // tampered or non-canonically-written report must fail here
+        if report.to_json(true).to_string() != text.trim_end() {
+            bail!("{path}: file is not the canonical serialization of its report");
+        }
+        let back = Report::parse(&report.to_json(true))?;
+        if back != report {
+            bail!("{path}: report did not survive a serialize→parse round-trip");
+        }
+        println!(
+            "ok: {} ({} cells, schema {})",
+            report.experiment,
+            report.cells.len(),
+            swalp::coordinator::report::REPORT_SCHEMA
+        );
+    } else {
+        report.render();
+    }
+    Ok(())
 }
 
 fn train(cfg: &RunConfig) -> Result<()> {
@@ -148,7 +288,7 @@ fn train(cfg: &RunConfig) -> Result<()> {
     tc.enable_swa = cfg.enable_swa;
     tc.swa_quant = cfg.swa_quant();
     tc.eval_every = cfg.eval_every;
-    tc.init_seed = cfg.seed as f32;
+    tc.init_seed = cfg.seed;
     tc.data_seed = cfg.seed;
     tc.verbose = cfg.verbose;
     let resume = match &cfg.resume_path {
@@ -159,9 +299,8 @@ fn train(cfg: &RunConfig) -> Result<()> {
         }
         None => None,
     };
-    let t = swalp::util::Timer::start();
     let out = trainer.run_resumed(&tc, resume)?;
-    let secs = t.secs();
+    let secs = out.wall_s;
     if let Some(p) = &cfg.save_path {
         let swa_payload = match &out.swa {
             Some(acc) if acc.m > 0 => Some((acc.average()?, acc.m)),
@@ -178,7 +317,7 @@ fn train(cfg: &RunConfig) -> Result<()> {
     println!(
         "done in {:.1}s ({:.1} steps/s): SGD test metric {:.4}",
         secs,
-        cfg.total_steps as f64 / secs,
+        out.steps as f64 / secs.max(1e-9),
         out.sgd_eval.metric
     );
     if let Some(e) = out.swa_eval {
@@ -196,18 +335,24 @@ swalp — SWALP (ICML 2019) reproduction: native rust engine + coordinator
 
 USAGE: swalp <command> [options]
 
-  list                          native models + artifact manifest
+  list [--json]                 native models + artifact manifest
   info                          backend availability
   train --model <name>          SWALP training run
         [--steps N --warmup N --cycle N --lr X --swa-lr X --seed N]
         [--no-swa --swa-bits W --eval-every N --data-scale X]
         [--config file.json --out-csv file.csv --quiet]
   eval  --model <name>          smoke-eval an initialized model
-  reproduce --exp <id>          regenerate a paper table/figure:
+  reproduce --exp <id> | --all  run registered paper experiments through
+        the grid runner (cells x seed replicas over the thread pool):
         fig2-linreg fig2-logreg fig2-bits table1 table2 table3
         fig3-frequency fig3-precision thm3
-        [--quick --seeds N]
+        [--quick --seeds N --threads 1 (serial reference; pool size is
+         fixed at startup by RAYON_NUM_THREADS)]
+        [--json [path] --out-dir <dir>]
+        emits swalp-report-v1 JSON; unknown --exp exits 2 with the
+        registered ids
+  report <path> [--check]       render / schema-check a report file
 
-Runs hermetically on the native backend (linreg / logreg / mlp models).
-Deep-learning specs need `make artifacts` + --features xla-runtime.
+Runs hermetically on the native backend (linreg / logreg / mlp / CNN
+models). Other specs need `make artifacts` + --features xla-runtime.
 "#;

@@ -329,7 +329,7 @@ impl ModelBackend for NativeBackend {
         &self.spec
     }
 
-    fn init(&self, seed: f32) -> Result<ModelState> {
+    fn init(&self, seed: u64) -> Result<ModelState> {
         let mut trainable: NamedTensors = match self.arch {
             Arch::LinReg { d } => vec![("w".to_string(), Tensor::zeros(&[d]))],
             Arch::LogReg { d, classes, .. } => vec![
@@ -337,9 +337,8 @@ impl ModelBackend for NativeBackend {
                 ("w".to_string(), Tensor::zeros(&[d, classes])),
             ],
             Arch::Mlp { d_in, hidden, classes } => {
-                // He-normal dense init, seeded from the f32 bit pattern so
-                // distinct seeds give distinct draws
-                let mut rng = StreamRng::new(seed.to_bits() as u64);
+                // He-normal dense init: every u64 seed is its own stream
+                let mut rng = StreamRng::new(seed);
                 let mut he = |fan_in: usize, fan_out: usize| -> Tensor {
                     let std = (2.0 / fan_in as f32).sqrt();
                     let data = (0..fan_in * fan_out).map(|_| rng.normal() * std).collect();
@@ -355,7 +354,7 @@ impl ModelBackend for NativeBackend {
                 ]
             }
             Arch::Conv(ref net) => {
-                let mut rng = StreamRng::new(seed.to_bits() as u64);
+                let mut rng = StreamRng::new(seed);
                 net.init(&mut rng)
             }
         };

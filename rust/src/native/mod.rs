@@ -400,9 +400,9 @@ mod tests {
     #[test]
     fn init_is_deterministic_and_on_grid() {
         let m = load("mlp_qmm_fx86").unwrap();
-        let a = m.init(3.0).unwrap();
-        let b = m.init(3.0).unwrap();
-        let c = m.init(4.0).unwrap();
+        let a = m.init(3).unwrap();
+        let b = m.init(3).unwrap();
+        let c = m.init(4).unwrap();
         for ((_, ta), (_, tb)) in a.trainable.iter().zip(&b.trainable) {
             assert_eq!(ta.data, tb.data);
         }
@@ -410,6 +410,11 @@ mod tests {
         let wa = &a.trainable[1].1.data;
         let wc = &c.trainable[1].1.data;
         assert_ne!(wa, wc);
+        // u64 seeds don't collapse onto the f32 grid: adjacent large
+        // seeds (indistinguishable after an f32 cast) stay distinct
+        let big = m.init((1u64 << 40) + 1).unwrap();
+        let big2 = m.init((1u64 << 40) + 2).unwrap();
+        assert_ne!(big.trainable[1].1.data, big2.trainable[1].1.data);
         // W8F6: every weight on the 2^-6 grid
         let delta = 2f32.powi(-6);
         for &v in wa.iter().take(64) {

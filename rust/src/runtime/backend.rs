@@ -51,8 +51,10 @@ pub trait ModelBackend: Send + Sync {
 
     /// Fresh (trainable, state, momentum) for `seed`, with the weights
     /// already Q_W-quantized onto the low-precision grid (Algorithm 1's
-    /// post-warm-up w_0 discipline).
-    fn init(&self, seed: f32) -> Result<ModelState>;
+    /// post-warm-up w_0 discipline). The seed is a full-width `u64` —
+    /// backends whose init ABI is narrower (the f32-scalar artifact
+    /// entry) must document their truncation, not force it on callers.
+    fn init(&self, seed: u64) -> Result<ModelState>;
 
     /// One Algorithm-2 training step; updates `ms` in place, returns the
     /// batch training loss. Must be a pure function of

@@ -128,8 +128,11 @@ pub struct LoadedModel {
 
 impl LoadedModel {
     /// Run the init artifact: seed -> fresh (trainable, state, momentum).
-    pub fn init(&self, seed: f32) -> Result<ModelState> {
-        let outs = self.init.execute(&[scalar_literal(seed)])?;
+    /// The artifact ABI takes the seed as a scalar f32, so values above
+    /// 2^24 collapse onto the f32 grid on this backend only (the native
+    /// engine threads the full u64 through).
+    pub fn init(&self, seed: u64) -> Result<ModelState> {
+        let outs = self.init.execute(&[scalar_literal(seed as f32)])?;
         let n_t = self.spec.trainable.len();
         let n_s = self.spec.state.len();
         if outs.len() != 2 * n_t + n_s {
@@ -292,7 +295,7 @@ impl ModelBackend for LoadedModel {
         &self.spec
     }
 
-    fn init(&self, seed: f32) -> Result<ModelState> {
+    fn init(&self, seed: u64) -> Result<ModelState> {
         LoadedModel::init(self, seed)
     }
 

@@ -59,6 +59,10 @@ impl Value {
         Ok(self.as_f64()? as usize)
     }
 
+    pub fn as_u64(&self) -> Result<u64> {
+        Ok(self.as_f64()? as u64)
+    }
+
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),

@@ -1,0 +1,210 @@
+//! The declarative experiment subsystem end-to-end: report schema
+//! round-trips, grid-runner determinism across thread policies, every
+//! registered experiment id running through the single Runner path, and
+//! the CLI contract (`list --json`, unknown `--exp` → exit 2).
+
+use std::process::Command;
+
+use swalp::coordinator::experiment::CtxConfig;
+use swalp::coordinator::registry::{
+    self, DataSpec, EvalKind, ExpKind, ExperimentSpec, RunSpec, SchedSpec, Sizing,
+};
+use swalp::coordinator::report::{Cell, MetricStat, Report, REPORT_SCHEMA};
+use swalp::coordinator::Runner;
+use swalp::util::json;
+
+fn sample_report() -> Report {
+    Report {
+        experiment: "table1".into(),
+        title: "Table 1: test error (%)".into(),
+        backend: "native".into(),
+        mode: "quick".into(),
+        seeds: 3,
+        wall_s: 12.5,
+        extras: vec![("q_wstar_dist".into(), 1.25e-4)],
+        cells: vec![
+            Cell {
+                id: "cifar10/vgg/fp32".into(),
+                labels: vec![("dataset".into(), "cifar10".into()), ("model".into(), "vgg".into())],
+                quant: "fp32".into(),
+                seeds: 3,
+                wall_s: 4.25,
+                metrics: vec![
+                    ("sgd_err".into(), MetricStat { mean: 6.51, std: 0.14, n: 3 }),
+                    ("swalp_err".into(), MetricStat { mean: 6.25, std: 0.0, n: 3 }),
+                ],
+                series: vec![("swa_dist_sq".into(), vec![(0, 1.5), (64, 0.25)])],
+            },
+            Cell::analytic("0.10000", &[("delta", "0.10000")], &[("sgd_lp", 2.5e-3)]),
+        ],
+        notes: "expected orderings".into(),
+    }
+}
+
+#[test]
+fn report_serialize_parse_roundtrip() {
+    let report = sample_report();
+    let v = report.to_json(true);
+    assert_eq!(v.get("schema").unwrap().as_str().unwrap(), REPORT_SCHEMA);
+    // Value -> string -> Value -> Report preserves everything
+    let text = v.to_string();
+    let back = Report::parse(&json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, report);
+    // canonical: serializing the parsed report reproduces the text
+    assert_eq!(back.to_json(true).to_string(), text);
+    // the fingerprint zeroes the wall-clock fields and nothing else
+    let mut timed = report.clone();
+    timed.wall_s = 99.0;
+    timed.cells[0].wall_s = 77.0;
+    assert_eq!(timed.fingerprint(), report.fingerprint());
+    let mut differs = report.clone();
+    differs.cells[0].metrics[0].1.mean += 1.0;
+    assert_ne!(differs.fingerprint(), report.fingerprint());
+}
+
+#[test]
+fn report_parse_rejects_bad_schema() {
+    let mut v = sample_report().to_json(true);
+    if let json::Value::Obj(m) = &mut v {
+        m.insert("schema".into(), json::Value::str("swalp-bench-v1"));
+    }
+    assert!(Report::parse(&v).is_err());
+}
+
+/// A tiny two-cell linreg grid — small enough to run twice in a test,
+/// shaped like the real table grids (multiple cells × seed replicas).
+fn tiny_grid_cells(ctx: &swalp::coordinator::Ctx) -> Vec<RunSpec> {
+    ["linreg_fx86", "linreg_fp32"]
+        .into_iter()
+        .map(|model| {
+            RunSpec::new(
+                model,
+                model,
+                DataSpec::LinregWstar { d: 256, n: 512, seed: 7 },
+                Sizing::Steps { steps: 120, warmup: 40 },
+                SchedSpec::Const(0.001),
+                EvalKind::DistSq,
+            )
+            .labels(&[("model", model)])
+            .seeds(ctx.seeds())
+        })
+        .collect()
+}
+
+static TINY_SPEC: ExperimentSpec = ExperimentSpec {
+    id: "tiny-grid",
+    title: "tiny linreg grid (test only)",
+    notes: "",
+    kind: ExpKind::Grid { cells: tiny_grid_cells, extras: None },
+};
+
+#[test]
+fn runner_reports_are_identical_across_thread_policies() {
+    // the flattened grid × seeds work list must produce bit-identical
+    // reports (modulo wall-time, which the fingerprint zeroes) whether it
+    // runs serially or sharded across the pool
+    let pool = CtxConfig::new().quick(true).seeds(2).build().unwrap();
+    let serial = CtxConfig::new().quick(true).seeds(2).threads(1).build().unwrap();
+    let r_pool = Runner::new(&pool).run(&TINY_SPEC).unwrap();
+    let r_serial = Runner::new(&serial).run(&TINY_SPEC).unwrap();
+    assert_eq!(r_pool.cells.len(), 2);
+    assert_eq!(r_pool.cells[0].seeds, 2);
+    assert!(r_pool.cells[0].metrics.iter().any(|(k, _)| k == "final_dist_sq"));
+    assert_eq!(
+        r_pool.fingerprint(),
+        r_serial.fingerprint(),
+        "grid execution must be deterministic across thread policies"
+    );
+    // wall-clock is still recorded in the timed serialization
+    assert!(r_pool.cells.iter().all(|c| c.wall_s > 0.0));
+}
+
+#[test]
+fn every_registered_experiment_runs_end_to_end() {
+    // smoke tier: minimal budgets, but every id goes through the single
+    // registry/Runner path, renders, and round-trips its report
+    let dir = std::env::temp_dir().join(format!("swalp_exp_smoke_{}", std::process::id()));
+    let ctx = CtxConfig::new().smoke(true).out_dir(&dir).build().unwrap();
+    let runner = Runner::new(&ctx);
+    assert_eq!(registry::all().len(), 9);
+    for spec in registry::all() {
+        let report = runner
+            .run(spec)
+            .unwrap_or_else(|e| panic!("experiment {} failed: {e:#}", spec.id));
+        assert_eq!(report.experiment, spec.id);
+        assert_eq!(report.mode, "smoke");
+        assert!(!report.cells.is_empty(), "{}: no cells", spec.id);
+        for cell in &report.cells {
+            assert!(!cell.metrics.is_empty(), "{}: cell {} has no metrics", spec.id, cell.id);
+        }
+        report.render();
+        let path = report.save(&dir).unwrap();
+        let back = Report::parse(&json::parse_file(&path).unwrap()).unwrap();
+        assert_eq!(back, report, "{}: saved report did not round-trip", spec.id);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_unknown_experiment_exits_2_with_registered_ids() {
+    let out = Command::new(env!("CARGO_BIN_EXE_swalp"))
+        .args(["reproduce", "--exp", "bogus"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    for id in registry::ids() {
+        assert!(stderr.contains(id), "stderr missing {id}: {stderr}");
+    }
+}
+
+#[test]
+fn cli_list_json_is_machine_readable() {
+    let out = Command::new(env!("CARGO_BIN_EXE_swalp"))
+        .args(["list", "--json"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let v = json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(v.get("schema").unwrap().as_str().unwrap(), "swalp-list-v1");
+    let models = v.get("models").unwrap().as_arr().unwrap();
+    assert!(models.len() >= 20, "expected the full native registry, got {}", models.len());
+    assert!(models.iter().any(|m| {
+        m.get("name").ok().and_then(|n| n.as_str().ok()) == Some("linreg_fx86")
+    }));
+    let exps = v.get("experiments").unwrap().as_arr().unwrap();
+    assert_eq!(exps.len(), registry::ids().len());
+}
+
+#[test]
+fn cli_report_check_accepts_runner_output() {
+    let dir = std::env::temp_dir().join(format!("swalp_report_check_{}", std::process::id()));
+    let out = Command::new(env!("CARGO_BIN_EXE_swalp"))
+        .args([
+            "reproduce",
+            "--exp",
+            "thm3",
+            "--quick",
+            "--json",
+        ])
+        .arg(dir.join("thm3_report.json"))
+        .env("SWALP_RESULTS", dir.join("results"))
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "reproduce failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let check = Command::new(env!("CARGO_BIN_EXE_swalp"))
+        .args(["report", dir.join("thm3_report.json").to_str().unwrap(), "--check"])
+        .output()
+        .unwrap();
+    assert!(
+        check.status.success(),
+        "report --check failed: {}",
+        String::from_utf8_lossy(&check.stderr)
+    );
+    assert!(String::from_utf8_lossy(&check.stdout).contains("ok: thm3"));
+    std::fs::remove_dir_all(&dir).ok();
+}

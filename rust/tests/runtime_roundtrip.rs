@@ -9,7 +9,7 @@ use swalp::runtime::{artifacts_dir, Manifest, ModelBackend};
 #[test]
 fn native_linreg_init_train_eval_roundtrip() {
     let model = native::load("linreg_fx86").unwrap();
-    let mut ms = model.init(1.0).unwrap();
+    let mut ms = model.init(1).unwrap();
     assert_eq!(ms.trainable.len(), 1);
     assert_eq!(ms.trainable[0].1.shape, vec![256]);
     // init weights are zeros quantized -> zeros
@@ -29,12 +29,12 @@ fn native_linreg_init_train_eval_roundtrip() {
         assert!((k - k.round()).abs() < 1e-3, "{v} off grid");
     }
     // determinism: same state/batch/step reproduces bit-identically
-    let mut ms2 = model.init(1.0).unwrap();
+    let mut ms2 = model.init(1).unwrap();
     let loss1 = model.train_step(&mut ms2, &x, &y, 0.001, 0).unwrap();
     assert_eq!(loss0, loss1);
     assert_eq!(ms.trainable[0].1.data, ms2.trainable[0].1.data);
     // ...while a different step index draws a different rounding stream
-    let mut ms3 = model.init(1.0).unwrap();
+    let mut ms3 = model.init(1).unwrap();
     model.train_step(&mut ms3, &x, &y, 0.001, 1).unwrap();
     assert_ne!(ms.trainable[0].1.data, ms3.trainable[0].1.data);
 
@@ -49,7 +49,7 @@ fn native_linreg_init_train_eval_roundtrip() {
 #[test]
 fn native_logreg_eval_reports_grad_norm() {
     let model = native::load("logreg_fp32").unwrap();
-    let ms = model.init(1.0).unwrap();
+    let ms = model.init(1).unwrap();
     let split = data::build("mnist_like", 3, 0.25).unwrap();
     let be = model.spec().batch_eval;
     let x: Vec<f32> = (0..be).flat_map(|i| split.test.sample_x(i).to_vec()).collect();
@@ -65,7 +65,7 @@ fn native_logreg_eval_reports_grad_norm() {
 #[test]
 fn native_eval_batch_stats_falls_back_to_eval() {
     let model = native::load("mlp_bfp8small").unwrap();
-    let ms = model.init(1.0).unwrap();
+    let ms = model.init(1).unwrap();
     let split = data::build("mnist_like_256", 3, 0.25).unwrap();
     let be = model.spec().batch_eval;
     let x: Vec<f32> = (0..be).flat_map(|i| split.test.sample_x(i).to_vec()).collect();
@@ -95,7 +95,7 @@ fn native_specs_are_coherent_with_their_datasets() {
         assert!(split.test.n >= spec.batch_eval, "{name} test < batch_eval");
         assert!(spec.entries.is_empty(), "{name}: native specs carry no entries");
         // mixed-model guard: a train step on the right shapes succeeds
-        let mut ms = model.init(1.0).unwrap();
+        let mut ms = model.init(1).unwrap();
         let x: Vec<f32> = split.train.sample_x(0).to_vec();
         let xb: Vec<f32> = x
             .iter()

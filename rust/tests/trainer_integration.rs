@@ -154,7 +154,7 @@ fn checkpoint_resume_reproduces_uninterrupted_run() {
 #[test]
 fn checkpoint_roundtrips_through_disk_on_native_state() {
     let model = native::load("mlp_qmm_fx86").unwrap();
-    let ms = model.init(2.0).unwrap();
+    let ms = model.init(2).unwrap();
     let ck = Checkpoint::from_model_state(42, &ms, None);
     let dir = std::env::temp_dir().join("swalp_native_ck");
     let path = dir.join("native.bin");
@@ -247,18 +247,18 @@ fn wage_cnn_trains_on_the_coarse_grid() {
 
 #[test]
 fn batched_multi_seed_matches_sequential_runs() {
-    use swalp::coordinator::experiment::Ctx;
+    use swalp::coordinator::experiment::CtxConfig;
     // run_seeds executes replicas concurrently over the backend trait;
     // each replica is a pure function of its config, so the batched
     // outcomes must equal a sequential loop exactly
     let split = data::build("linreg_synth", 3, 0.1).unwrap();
     let mk_cfg = |seed: u64| {
         let mut cfg = TrainConfig::new(120, 40, 1, Schedule::Constant(0.001));
-        cfg.init_seed = 1.0 + seed as f32;
+        cfg.init_seed = 1 + seed;
         cfg.data_seed = 100 + seed;
         cfg
     };
-    let ctx = Ctx::new(true, 3).unwrap();
+    let ctx = CtxConfig::new().quick(true).seeds(3).build().unwrap();
     let batched = ctx.run_seeds("linreg_fx86", &split, mk_cfg).unwrap();
     assert_eq!(batched.len(), 3);
     for (seed, out) in batched.iter().enumerate() {
