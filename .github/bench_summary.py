@@ -1,0 +1,51 @@
+#!/usr/bin/env python3
+"""Render the gemm/* entries of a swalp-bench-v1 JSON as a markdown table.
+
+CI's bench-smoke job pipes the output into $GITHUB_STEP_SUMMARY so the
+GEMM GFLOP/s trend is visible on the run page without downloading the
+BENCH_hotpath.json artifact. Schema: docs/PERF.md.
+"""
+import json
+import sys
+
+
+def main(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "swalp-bench-v1":
+        print(f"unexpected schema in {path}: {doc.get('schema')!r}", file=sys.stderr)
+        return 1
+    # timing entries carry median_s; throughput entries carry unit/value
+    # under the same name — join the two streams by name
+    medians = {}
+    gflops = {}
+    order = []
+    for r in doc.get("results", []):
+        name = r.get("name", "")
+        if not name.startswith("gemm/"):
+            continue
+        if "median_s" in r:
+            medians[name] = r["median_s"]
+        if r.get("unit") == "GFLOP/s":
+            if name not in gflops:
+                order.append(name)
+            gflops[name] = r["value"]
+    print("### GEMM engine (swalp-bench-v1, quick mode)\n")
+    if not order:
+        print("_no gemm/* entries in this artifact_")
+        return 0
+    print("| bench | GFLOP/s | median ms/iter |")
+    print("|---|---:|---:|")
+    for name in order:
+        med = medians.get(name)
+        med_ms = f"{med * 1e3:.2f}" if med is not None else "—"
+        print(f"| `{name}` | {gflops[name]:.2f} | {med_ms} |")
+    naive = gflops.get("gemm/naive serial 256^3")
+    blocked = gflops.get("gemm/blocked 256^3")
+    if naive and blocked:
+        print(f"\nblocked / naive-serial speedup on 256^3: **{blocked / naive:.1f}x**")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_hotpath.json"))

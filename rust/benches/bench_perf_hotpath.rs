@@ -1,4 +1,6 @@
 //! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf):
+//!   GEMM engine GFLOP/s (blocked + fused epilogues vs the naive serial
+//!   reference, on shapes taken from the registered models),
 //!   native backend per-step latency (the full quantized Algorithm-2
 //!   step: forward/backward kernels + Q_A/Q_E/Q_G/Q_M/Q_W),
 //!   host quantizer + SWA fold throughput (the rust-side hot loops),
@@ -11,13 +13,14 @@
 //! Flags: `--quick` trims warmup/iterations (the CI bench-smoke job);
 //! `--json <path>` additionally writes the results as
 //! swalp-bench-v1 JSON (uploaded per-push as the BENCH_hotpath.json
-//! artifact — schema in ROADMAP.md). `RAYON_NUM_THREADS` bounds the
-//! kernel parallelism; see rust/README.md "Parallelism & determinism".
+//! artifact — schema in docs/PERF.md, which also explains how to read
+//! the `gemm/*` GFLOP/s table). `RAYON_NUM_THREADS` bounds the kernel
+//! parallelism; see rust/README.md "Parallelism & determinism".
 
 use swalp::coordinator::SwaAccumulator;
 use swalp::data;
-use swalp::native;
-use swalp::quant::{bfp, fixed};
+use swalp::native::{self, gemm, kernels};
+use swalp::quant::{bfp, fixed, QuantFormat};
 use swalp::runtime::ModelBackend;
 use swalp::tensor::{NamedTensors, Tensor};
 use swalp::util::bench::{bench, print_result, BenchLog, BenchResult};
@@ -38,6 +41,64 @@ fn main() {
         log.push(r);
         log.push_metric(&r.name, unit, value);
     };
+
+    // ---- GEMM engine: blocked + fused epilogues vs naive serial ----
+    // Shapes from the registered models (MLP layers, im2col conv GEMMs)
+    // plus the canonical 256^3. `_bt` rows use the A·Bᵀ orientation the
+    // conv stack issues. docs/PERF.md explains how to read this table;
+    // the acceptance bar is blocked ≥ 3× naive serial on 256^3.
+    {
+        let (gw, gi, gs) = if quick { (1, 2, 0.03) } else { (2, 5, 0.5) };
+        let shapes: &[(&str, usize, usize, usize, bool)] = &[
+            ("256^3", 256, 256, 256, false),
+            ("mlp fc1 eval 256x256x128", 256, 256, 128, false),
+            ("vgg c2 im2col 8192x144x16", 8192, 144, 16, true),
+            ("vgg c4 im2col 2048x288x32", 2048, 288, 32, true),
+        ];
+        for &(label, m, k, n, bt) in shapes {
+            let a: Vec<f32> = (0..m * k).map(|i| ((i % 601) as f32 - 300.0) * 0.003).collect();
+            let blen = if bt { n * k } else { k * n };
+            let bm: Vec<f32> = (0..blen).map(|i| ((i % 419) as f32 - 209.0) * 0.005).collect();
+            let mut out = vec![0.0f32; m * n];
+            let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+            let variants = ["naive serial", "blocked serial", "blocked"];
+            for (vi, variant) in variants.into_iter().enumerate() {
+                let r = bench(&format!("gemm/{variant} {label}"), gw, gi, gs, || {
+                    match (bt, vi) {
+                        (false, 0) => kernels::matmul_serial(&a, &bm, m, k, n, &mut out),
+                        (false, 1) => gemm::matmul_serial(&a, &bm, m, k, n, &mut out),
+                        (false, _) => gemm::matmul(&a, &bm, m, k, n, &mut out),
+                        (true, 0) => kernels::matmul_a_bt_serial(&a, &bm, m, k, n, &mut out),
+                        (true, 1) => gemm::matmul_a_bt_serial(&a, &bm, m, k, n, &mut out),
+                        (true, _) => gemm::matmul_a_bt(&a, &bm, m, k, n, &mut out),
+                    }
+                });
+                report(&mut log, &r, "GFLOP/s", gflop / r.median_s);
+            }
+        }
+
+        // fused quantize epilogue vs a separate full-tensor pass
+        let (m, k, n) = (256, 256, 256);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i % 601) as f32 - 300.0) * 0.003).collect();
+        let bm: Vec<f32> = (0..k * n).map(|i| ((i % 419) as f32 - 209.0) * 0.005).collect();
+        let mut out = vec![0.0f32; m * n];
+        let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+        let fmt = QuantFormat::fixed(8, 6);
+        let ep = gemm::Epilogue {
+            bias: None,
+            relu: false,
+            quant: Some(gemm::FusedQuant { fmt: &fmt, seed: 42, rng_base: 0 }),
+        };
+        let r = bench("gemm/fused fixed-W8F6 256^3", gw, gi, gs, || {
+            gemm::matmul_into_quant(&a, &bm, m, k, n, &mut out, &ep);
+        });
+        report(&mut log, &r, "GFLOP/s", gflop / r.median_s);
+        let r = bench("gemm/separate fixed-W8F6 256^3", gw, gi, gs, || {
+            gemm::matmul(&a, &bm, m, k, n, &mut out);
+            fixed::quantize_fixed_slice(&mut out, 8, 6, 42, true);
+        });
+        report(&mut log, &r, "GFLOP/s", gflop / r.median_s);
+    }
 
     let n = 1 << 20;
     let xs: Vec<f32> = (0..n).map(|i| ((i % 997) as f32 - 498.0) * 0.01).collect();

@@ -16,6 +16,17 @@
 //! Backends are loaded and datasets built on the calling thread up front
 //! (artifact compilation is not re-entrant); workers only train and
 //! evaluate.
+//!
+//! ```no_run
+//! use swalp::coordinator::{registry, CtxConfig, Runner};
+//!
+//! // reproduce one registered experiment in quick mode and read the
+//! // structured swalp-report-v1 result (see docs/PERF.md for the schema)
+//! let ctx = CtxConfig::new().quick(true).build().unwrap();
+//! let spec = registry::find("fig2-linreg").expect("registered id");
+//! let report = Runner::new(&ctx).run(spec).unwrap();
+//! println!("{} cells from backend {}", report.cells.len(), report.backend);
+//! ```
 
 use anyhow::{bail, Result};
 

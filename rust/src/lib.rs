@@ -6,9 +6,10 @@
 //!   `init/train_step/eval` surface every execution engine implements —
 //!   plus the artifact manifest schema and (behind the `xla-runtime`
 //!   feature) the PJRT loader for the AOT-compiled JAX/Pallas artifacts.
-//! * [`native`] is the default engine: pure-rust dense kernels running
-//!   the full Algorithm-2 quantized step for the linreg/logreg/MLP
-//!   models. `cargo build && cargo test` need nothing but rust.
+//! * [`native`] is the default engine: the cache-blocked GEMM with
+//!   fused quantize epilogues ([`native::gemm`]) under the full
+//!   Algorithm-2 quantized step for the linreg/logreg/MLP/CNN models.
+//!   `cargo build && cargo test` need nothing but rust.
 //! * [`coordinator`] owns the paper's Algorithm 1/2 orchestration: the
 //!   step loop, warm-up schedule, cyclic SWA trigger, and the
 //!   high-precision (or quantized, §5.1) weight-average accumulator.

@@ -26,6 +26,7 @@ use crate::rng::{self, StreamRng};
 use crate::runtime::{EvalOut, ModelBackend, ModelSpec, ModelState};
 use crate::tensor::{NamedTensors, Tensor};
 
+use super::gemm::{self, Epilogue, FusedQuant};
 use super::kernels;
 
 /// Role tags folded into quantization seeds (mirror of qtrain.TAG_*).
@@ -143,7 +144,7 @@ impl NativeBackend {
                 let w = get(tr, "w")?;
                 // residuals r_i = w·x_i − y_i
                 let mut r = vec![0.0f32; b];
-                kernels::matmul(x, &w.data, b, d, 1, &mut r);
+                gemm::matmul(x, &w.data, b, d, 1, &mut r);
                 let mut loss = 0.0f64;
                 for (ri, &yi) in r.iter_mut().zip(y) {
                     *ri -= yi;
@@ -152,7 +153,7 @@ impl NativeBackend {
                 loss /= b as f64;
                 // g = (2/B)·Xᵀr
                 let mut g = vec![0.0f32; d];
-                kernels::matmul_at_b(x, &r, b, d, 1, &mut g);
+                gemm::matmul_at_b(x, &r, b, d, 1, &mut g);
                 let c = 2.0 / b as f32;
                 for v in g.iter_mut() {
                     *v *= c;
@@ -163,15 +164,25 @@ impl NativeBackend {
                 let w = get(tr, "w")?;
                 let bias = get(tr, "b")?;
                 let site = site_id("logits");
+                // logits = Q_A(x·w + b): bias and quantizer fused into
+                // the GEMM epilogue (bit-identical to the separate pass)
                 let mut z = vec![0.0f32; b * classes];
-                kernels::matmul(x, &w.data, b, d, classes, &mut z);
-                kernels::add_bias(&mut z, &bias.data);
-                let z = quant_buf(
-                    a_fmt,
-                    z,
-                    &[b, classes],
-                    seed_for(step, site, TAG_A),
-                    Role::Act,
+                gemm::matmul_into_quant(
+                    x,
+                    &w.data,
+                    b,
+                    d,
+                    classes,
+                    &mut z,
+                    &Epilogue {
+                        bias: Some(&bias.data),
+                        relu: false,
+                        quant: Some(FusedQuant {
+                            fmt: a_fmt,
+                            seed: seed_for(step, site, TAG_A),
+                            rng_base: 0,
+                        }),
+                    },
                 );
                 let ce = kernels::softmax_ce(&z, y, b, classes, 1.0 / b as f32);
                 let reg: f64 = 0.5 * lam as f64 * w.sq_norm();
@@ -184,7 +195,7 @@ impl NativeBackend {
                     Role::Err,
                 );
                 let mut gw = vec![0.0f32; d * classes];
-                kernels::matmul_at_b(x, &e, b, d, classes, &mut gw);
+                gemm::matmul_at_b(x, &e, b, d, classes, &mut gw);
                 for (g, &wv) in gw.iter_mut().zip(&w.data) {
                     *g += lam * wv;
                 }
@@ -203,10 +214,19 @@ impl NativeBackend {
                 let w2 = get(tr, "fc2.w")?;
                 let b2 = get(tr, "fc2.b")?;
                 let site = site_id("fc1.act");
-                // forward
+                // forward: the bias rides the GEMM epilogue; the ReLU +
+                // Q_A stay separate because the backward pass needs the
+                // pre-activation z1
                 let mut z1 = vec![0.0f32; b * hidden];
-                kernels::matmul(x, &w1.data, b, d_in, hidden, &mut z1);
-                kernels::add_bias(&mut z1, &b1.data);
+                gemm::matmul_into_quant(
+                    x,
+                    &w1.data,
+                    b,
+                    d_in,
+                    hidden,
+                    &mut z1,
+                    &Epilogue { bias: Some(&b1.data), relu: false, quant: None },
+                );
                 let mut a1 = z1.clone();
                 kernels::relu(&mut a1);
                 let a1 = quant_buf(
@@ -217,27 +237,43 @@ impl NativeBackend {
                     Role::Act,
                 );
                 let mut z2 = vec![0.0f32; b * classes];
-                kernels::matmul(&a1, &w2.data, b, hidden, classes, &mut z2);
-                kernels::add_bias(&mut z2, &b2.data);
+                gemm::matmul_into_quant(
+                    &a1,
+                    &w2.data,
+                    b,
+                    hidden,
+                    classes,
+                    &mut z2,
+                    &Epilogue { bias: Some(&b2.data), relu: false, quant: None },
+                );
                 let ce = kernels::softmax_ce(&z2, y, b, classes, 1.0 / b as f32);
                 let loss = ce.loss_sum / b as f64;
-                // backward
+                // backward: Q_E fuses into the E·Wᵀ backprop GEMM
                 let gb2 = col_sums(&ce.dlogits, classes);
                 let mut gw2 = vec![0.0f32; hidden * classes];
-                kernels::matmul_at_b(&a1, &ce.dlogits, b, hidden, classes, &mut gw2);
-                let mut da1 = vec![0.0f32; b * hidden];
-                kernels::matmul_a_bt(&ce.dlogits, &w2.data, b, classes, hidden, &mut da1);
-                let mut e = quant_buf(
-                    e_fmt,
-                    da1,
-                    &[b, hidden],
-                    seed_for(step, site, TAG_E),
-                    Role::Err,
+                gemm::matmul_at_b(&a1, &ce.dlogits, b, hidden, classes, &mut gw2);
+                let mut e = vec![0.0f32; b * hidden];
+                gemm::matmul_a_bt_into_quant(
+                    &ce.dlogits,
+                    &w2.data,
+                    b,
+                    classes,
+                    hidden,
+                    &mut e,
+                    &Epilogue {
+                        bias: None,
+                        relu: false,
+                        quant: Some(FusedQuant {
+                            fmt: e_fmt,
+                            seed: seed_for(step, site, TAG_E),
+                            rng_base: 0,
+                        }),
+                    },
                 );
                 kernels::relu_backward(&mut e, &z1);
                 let gb1 = col_sums(&e, hidden);
                 let mut gw1 = vec![0.0f32; d_in * hidden];
-                kernels::matmul_at_b(x, &e, b, d_in, hidden, &mut gw1);
+                gemm::matmul_at_b(x, &e, b, d_in, hidden, &mut gw1);
                 Ok((
                     loss,
                     vec![
@@ -279,7 +315,7 @@ impl NativeBackend {
             Arch::LinReg { d } => {
                 let w = get(tr, "w")?;
                 let mut r = vec![0.0f32; b];
-                kernels::matmul(x, &w.data, b, d, 1, &mut r);
+                gemm::matmul(x, &w.data, b, d, 1, &mut r);
                 let mut sq = 0.0f64;
                 for (ri, &yi) in r.iter_mut().zip(y) {
                     *ri -= yi;
@@ -292,9 +328,19 @@ impl NativeBackend {
                 let w = get(tr, "w")?;
                 let bias = get(tr, "b")?;
                 let mut z = vec![0.0f32; b * classes];
-                kernels::matmul(x, &w.data, b, d, classes, &mut z);
-                kernels::add_bias(&mut z, &bias.data);
-                let z = quant_buf(a_fmt, z, &[b, classes], 0, Role::Act);
+                gemm::matmul_into_quant(
+                    x,
+                    &w.data,
+                    b,
+                    d,
+                    classes,
+                    &mut z,
+                    &Epilogue {
+                        bias: Some(&bias.data),
+                        relu: false,
+                        quant: Some(FusedQuant { fmt: a_fmt, seed: 0, rng_base: 0 }),
+                    },
+                );
                 let ce = kernels::softmax_ce(&z, y, b, classes, 1.0);
                 let loss = ce.loss_sum / b as f64 + 0.5 * lam as f64 * w.sq_norm();
                 Ok((loss, ce.errors))
@@ -304,14 +350,32 @@ impl NativeBackend {
                 let b1 = get(tr, "fc1.b")?;
                 let w2 = get(tr, "fc2.w")?;
                 let b2 = get(tr, "fc2.b")?;
-                let mut z1 = vec![0.0f32; b * hidden];
-                kernels::matmul(x, &w1.data, b, d_in, hidden, &mut z1);
-                kernels::add_bias(&mut z1, &b1.data);
-                kernels::relu(&mut z1);
-                let a1 = quant_buf(a_fmt, z1, &[b, hidden], 0, Role::Act);
+                // eval keeps no caches, so bias + ReLU + Q_A all fuse
+                // into the fc1 GEMM epilogue
+                let mut a1 = vec![0.0f32; b * hidden];
+                gemm::matmul_into_quant(
+                    x,
+                    &w1.data,
+                    b,
+                    d_in,
+                    hidden,
+                    &mut a1,
+                    &Epilogue {
+                        bias: Some(&b1.data),
+                        relu: true,
+                        quant: Some(FusedQuant { fmt: a_fmt, seed: 0, rng_base: 0 }),
+                    },
+                );
                 let mut z2 = vec![0.0f32; b * classes];
-                kernels::matmul(&a1, &w2.data, b, hidden, classes, &mut z2);
-                kernels::add_bias(&mut z2, &b2.data);
+                gemm::matmul_into_quant(
+                    &a1,
+                    &w2.data,
+                    b,
+                    hidden,
+                    classes,
+                    &mut z2,
+                    &Epilogue { bias: Some(&b2.data), relu: false, quant: None },
+                );
                 let ce = kernels::softmax_ce(&z2, y, b, classes, 1.0);
                 Ok((ce.loss_sum / b as f64, ce.errors))
             }

@@ -1,6 +1,7 @@
 //! Native conv stack: im2col convolution, pooling, residual blocks and a
-//! small sequential-network interpreter, all composed from the parallel
-//! dense kernels in [`super::kernels`].
+//! small sequential-network interpreter. The im2col contractions run on
+//! the cache-blocked GEMM engine ([`super::gemm`], bias fused into the
+//! epilogue); the elementwise ops come from [`super::kernels`].
 //!
 //! This is what lets the table1 (CIFAR-like VGG/PreResNet minis), table3
 //! (WAGE-style CNN) and fig3 workloads execute real Algorithm-2 steps on
@@ -30,6 +31,7 @@ use crate::rng::StreamRng;
 use crate::tensor::{NamedTensors, Tensor};
 
 use super::backend::{col_sums, get, quant_buf, seed_for, site_id, TAG_A, TAG_E};
+use super::gemm::{self, Epilogue};
 use super::kernels;
 
 /// Below this many output elements, im2col/col2im stay serial.
@@ -416,8 +418,17 @@ impl ConvNet {
                     let (rows, kkc) =
                         im2col(&act.data, act.b, act.h, act.w, act.ch, c.k, c.pad, &mut cols);
                     let mut z = vec![0.0f32; rows * c.out_ch];
-                    kernels::matmul_a_bt(&cols, &w.data, rows, kkc, c.out_ch, &mut z);
-                    kernels::add_bias(&mut z, &bias.data);
+                    // conv = im2col · Wᵀ on the blocked engine, bias in
+                    // the epilogue (Q_A follows at the ReLU site)
+                    gemm::matmul_a_bt_into_quant(
+                        &cols,
+                        &w.data,
+                        rows,
+                        kkc,
+                        c.out_ch,
+                        &mut z,
+                        &Epilogue { bias: Some(&bias.data), relu: false, quant: None },
+                    );
                     if train {
                         caches.push(Cache::Conv { cols });
                     }
@@ -492,8 +503,15 @@ impl ConvNet {
                     let w = get(tr, &format!("{name}.w"))?;
                     let bias = get(tr, &format!("{name}.b"))?;
                     let mut z = vec![0.0f32; act.b * d_out];
-                    kernels::matmul(&act.data, &w.data, act.b, *d_in, *d_out, &mut z);
-                    kernels::add_bias(&mut z, &bias.data);
+                    gemm::matmul_into_quant(
+                        &act.data,
+                        &w.data,
+                        act.b,
+                        *d_in,
+                        *d_out,
+                        &mut z,
+                        &Epilogue { bias: Some(&bias.data), relu: false, quant: None },
+                    );
                     if train {
                         caches.push(Cache::Dense { input: act.data });
                     }
@@ -563,7 +581,7 @@ impl ConvNet {
                     let kkc = c.k * c.k * c.in_ch;
                     // gw[oc, kkc] = doutᵀ · cols — same layout as w
                     let mut gw = vec![0.0f32; c.out_ch * kkc];
-                    kernels::matmul_at_b(&d.data, &cols, rows, c.out_ch, kkc, &mut gw);
+                    gemm::matmul_at_b(&d.data, &cols, rows, c.out_ch, kkc, &mut gw);
                     let gb = col_sums(&d.data, c.out_ch);
                     grads.push((
                         format!("{}.w", c.name),
@@ -572,7 +590,7 @@ impl ConvNet {
                     grads.push((format!("{}.b", c.name), Tensor::new(vec![c.out_ch], gb)?));
                     // dinput = col2im(dout · W)
                     let mut dcols = vec![0.0f32; rows * kkc];
-                    kernels::matmul(&d.data, &w.data, rows, c.out_ch, kkc, &mut dcols);
+                    gemm::matmul(&d.data, &w.data, rows, c.out_ch, kkc, &mut dcols);
                     let in_h = d.h + c.k - 1 - 2 * c.pad;
                     let in_w = d.w + c.k - 1 - 2 * c.pad;
                     let dx = col2im(&dcols, d.b, in_h, in_w, c.in_ch, c.k, c.pad);
@@ -614,12 +632,12 @@ impl ConvNet {
                 (Layer::Dense { name, d_in, d_out }, Cache::Dense { input }) => {
                     let w = get(tr, &format!("{name}.w"))?;
                     let mut gw = vec![0.0f32; d_in * d_out];
-                    kernels::matmul_at_b(&input, &d.data, d.b, *d_in, *d_out, &mut gw);
+                    gemm::matmul_at_b(&input, &d.data, d.b, *d_in, *d_out, &mut gw);
                     let gb = col_sums(&d.data, *d_out);
                     grads.push((format!("{name}.w"), Tensor::new(vec![*d_in, *d_out], gw)?));
                     grads.push((format!("{name}.b"), Tensor::new(vec![*d_out], gb)?));
                     let mut dx = vec![0.0f32; d.b * d_in];
-                    kernels::matmul_a_bt(&d.data, &w.data, d.b, *d_out, *d_in, &mut dx);
+                    gemm::matmul_a_bt(&d.data, &w.data, d.b, *d_out, *d_in, &mut dx);
                     Act { data: dx, b: d.b, h: 1, w: 1, ch: *d_in }
                 }
                 (Layer::Residual(inner), Cache::Residual(mut inner_caches)) => {

@@ -1,0 +1,608 @@
+//! Cache-blocked, register-tiled GEMM engine with fused quantize
+//! epilogues — the production matmul path of the native backend.
+//!
+//! The naive kernels in [`super::kernels`] stay as the definitional
+//! reference; this module re-implements the same three contraction
+//! orientations (`A·B`, `Aᵀ·B`, `A·Bᵀ`) with the classic GotoBLAS
+//! structure while keeping every output **bit-identical** to the naive
+//! serial loops:
+//!
+//! * **Register tiling.** The micro-kernel accumulates an `MR×NR` f32
+//!   tile in local accumulators; the inner loop is written so LLVM keeps
+//!   the tile in vector registers and vectorizes the `NR` lanes.
+//! * **Panel blocking.** A is packed into `MR`-row strips per `MC×KC`
+//!   block, B into `NR`-column strips per `KC`-deep panel, so the
+//!   micro-kernel streams contiguous memory with the B strip L1-hot.
+//! * **Row-panel parallelism.** The pool splits **output rows only**
+//!   (via the shared partition helper in [`super::kernels`]): each
+//!   output element is produced whole by one thread, in the same
+//!   ascending-k accumulation order as the naive serial kernel, so
+//!   results are bit-identical for every thread count.
+//!
+//! Why bit-identity holds: for each output element the naive kernels
+//! compute `((0 + a₀b₀) + a₁b₁) + …` ascending in the contraction index.
+//! The blocked engine performs the *same* per-element chain — the
+//! micro-kernel walks k ascending inside a panel, panels are visited
+//! ascending, and the accumulator round-trips through the output buffer
+//! between panels (an exact f32 store/load). Tiling only reorders work
+//! *across* output elements, never within one.
+//!
+//! **Fused epilogue.** [`matmul_into_quant`] / [`matmul_a_bt_into_quant`]
+//! apply bias, ReLU and the Algorithm-2 quantizers to each completed
+//! row-panel while it is still cache-hot, instead of paying a second
+//! full-tensor memory pass after the GEMM. Stochastic rounding stays
+//! reproducible because every rounding event is keyed by the element's
+//! flat position ([`crate::rng::uniform_from_counter`]), not by thread or
+//! call order — so the fused result is bit-identical to the separate
+//! `matmul → add_bias → relu → quantize` pipeline. Big-block BFP is the
+//! one format whose shared exponent needs the global max; it is applied
+//! by the same entry points in a final whole-tensor pass (still one call,
+//! no intermediate buffer copies).
+//!
+//! ```
+//! use swalp::native::gemm::{self, Epilogue, FusedQuant};
+//! use swalp::quant::QuantFormat;
+//!
+//! // out = Q(A·B) with the quantizer fused into the tile loop.
+//! let (m, k, n) = (2, 3, 2);
+//! let a = vec![0.5f32; m * k];
+//! let b = vec![0.25f32; k * n];
+//! let mut out = vec![0.0f32; m * n];
+//! let fmt = QuantFormat::Fixed { wl: 8, fl: 6, stochastic: false };
+//! let ep = Epilogue {
+//!     bias: None,
+//!     relu: false,
+//!     quant: Some(FusedQuant { fmt: &fmt, seed: 7, rng_base: 0 }),
+//! };
+//! gemm::matmul_into_quant(&a, &b, m, k, n, &mut out, &ep);
+//! // 0.5 · 0.25 · 3 = 0.375 sits on the 2⁻⁶ grid already
+//! assert!(out.iter().all(|&v| v == 0.375));
+//! ```
+
+use crate::quant::{bfp, fixed, QuantFormat};
+
+use super::kernels;
+
+/// Micro-tile rows: accumulator rows held in registers. 4×8 keeps the
+/// tile (8 SSE2 / 4 AVX2 vectors) plus a B strip row and an A broadcast
+/// inside the baseline x86-64 register file without spills.
+pub const MR: usize = 4;
+/// Micro-tile columns: one or two vector registers of f32 lanes.
+pub const NR: usize = 8;
+/// Rows per packed A block: bounds the per-thread packing buffer and
+/// keeps the block (`MC·KC` floats) L2-resident.
+pub const MC: usize = 128;
+/// Contraction depth per panel: a `KC×NR` B strip is 8 KiB — L1-resident
+/// across all `MC/MR` micro-kernel invocations that reuse it.
+pub const KC: usize = 256;
+
+/// Below this many multiply-accumulates the packing + dispatch overhead
+/// outweighs the win; the naive serial kernels run instead (bit-identical
+/// by construction, so the dispatch choice is unobservable in outputs).
+const GEMM_MIN_MACS: usize = 64 * 1024;
+
+/// Quantization stage of a fused [`Epilogue`].
+///
+/// `fmt` follows the Algorithm-2 activation/error policy for 2-D GEMM
+/// outputs (`[rows, n]`): fixed point is elementwise, Small-block BFP
+/// shares one exponent per output row (`block_axes_for(Act|Err, 2) =
+/// [0]`), Big-block BFP one exponent for the whole tensor. Counters are
+/// `rng_base + flat index`, matching a separate quantization pass over
+/// the full buffer (callers mirroring `quant_buf` pass `rng_base: 0`).
+pub struct FusedQuant<'a> {
+    pub fmt: &'a QuantFormat,
+    pub seed: u32,
+    pub rng_base: u32,
+}
+
+/// What happens to an output tile after its last panel is accumulated,
+/// while the rows are still cache-hot. Stages run in the fixed order
+/// bias → ReLU → quantize, mirroring the separate-pass pipeline.
+#[derive(Default)]
+pub struct Epilogue<'a> {
+    /// Per-column bias (length n), broadcast over rows.
+    pub bias: Option<&'a [f32]>,
+    /// `max(x, 0)` with the same `< 0` test as [`kernels::relu`].
+    pub relu: bool,
+    pub quant: Option<FusedQuant<'a>>,
+}
+
+/// out[m,n] = a[m,k] @ b[k,n], blocked + pool-parallel. Bit-identical to
+/// [`kernels::matmul_serial`] at every thread count.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    matmul_into_quant(a, b, m, k, n, out, &Epilogue::default());
+}
+
+/// [`matmul`] with a fused epilogue: bias/ReLU/quantization applied to
+/// each completed row-panel in cache instead of a second memory pass.
+/// Bit-identical to `matmul → add_bias → relu → quantize`.
+pub fn matmul_into_quant(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    ep: &Epilogue,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    validate_epilogue(ep);
+    if m * k * n < GEMM_MIN_MACS {
+        kernels::matmul_serial(a, b, m, k, n, out);
+        finish_small(out, n, ep);
+        return;
+    }
+    let av = View { data: a, rs: k, cs: 1 };
+    let bv = View { data: b, rs: n, cs: 1 };
+    blocked(av, bv, m, k, n, out, ep, false);
+}
+
+/// Single-thread blocked [`matmul`] — the engine with the pool fan-out
+/// and the small-size naive fallback disabled. Reference entry for the
+/// parity tests and the `bench_perf_hotpath` GEMM table.
+pub fn matmul_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let av = View { data: a, rs: k, cs: 1 };
+    let bv = View { data: b, rs: n, cs: 1 };
+    blocked(av, bv, m, k, n, out, &Epilogue::default(), true);
+}
+
+/// out[k,n] = aᵀ @ b with a given as [m,k], b as [m,n] — the
+/// weight-gradient contraction. Blocked + pool-parallel, bit-identical
+/// to [`kernels::matmul_at_b_serial`].
+pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    if m * k * n < GEMM_MIN_MACS {
+        kernels::matmul_at_b_serial(a, b, m, k, n, out);
+        return;
+    }
+    // Aᵀ is a strided view of a: element (j, i) lives at a[i·k + j].
+    let av = View { data: a, rs: 1, cs: k };
+    let bv = View { data: b, rs: n, cs: 1 };
+    blocked(av, bv, k, m, n, out, &Epilogue::default(), false);
+}
+
+/// Single-thread blocked [`matmul_at_b`] (no fallback) — parity/bench
+/// reference.
+pub fn matmul_at_b_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let av = View { data: a, rs: 1, cs: k };
+    let bv = View { data: b, rs: n, cs: 1 };
+    blocked(av, bv, k, m, n, out, &Epilogue::default(), true);
+}
+
+/// out[m,n] = a @ bᵀ with b given as [n,k] — the im2col convolution and
+/// input-error contraction. Blocked + pool-parallel, bit-identical to
+/// [`kernels::matmul_a_bt_serial`].
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    matmul_a_bt_into_quant(a, b, m, k, n, out, &Epilogue::default());
+}
+
+/// [`matmul_a_bt`] with a fused epilogue (see [`matmul_into_quant`]).
+pub fn matmul_a_bt_into_quant(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    ep: &Epilogue,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    validate_epilogue(ep);
+    if m * k * n < GEMM_MIN_MACS {
+        kernels::matmul_a_bt_serial(a, b, m, k, n, out);
+        finish_small(out, n, ep);
+        return;
+    }
+    let av = View { data: a, rs: k, cs: 1 };
+    // Bᵀ is a strided view of b: element (p, j) lives at b[j·k + p].
+    let bv = View { data: b, rs: 1, cs: k };
+    blocked(av, bv, m, k, n, out, ep, false);
+}
+
+/// Single-thread blocked [`matmul_a_bt`] (no fallback) — parity/bench
+/// reference.
+pub fn matmul_a_bt_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let av = View { data: a, rs: k, cs: 1 };
+    let bv = View { data: b, rs: 1, cs: k };
+    blocked(av, bv, m, k, n, out, &Epilogue::default(), true);
+}
+
+// ---------------------------------------------------------------------
+// engine internals
+// ---------------------------------------------------------------------
+
+/// Read-only strided 2-D view — lets one packing routine serve all three
+/// contraction orientations (transposition is a stride swap).
+#[derive(Clone, Copy)]
+struct View<'a> {
+    data: &'a [f32],
+    rs: usize,
+    cs: usize,
+}
+
+impl View<'_> {
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.rs + c * self.cs]
+    }
+}
+
+/// One packed KC-deep slice of B: `NR`-column strips, each strip holding
+/// `kc` rows of `NR` consecutive values (zero-padded past column n).
+struct Panel {
+    p0: usize,
+    kc: usize,
+    data: Vec<f32>,
+}
+
+fn pack_b_panels(b: View, k: usize, n: usize) -> Vec<Panel> {
+    let strips = n.div_ceil(NR);
+    let mut panels = Vec::with_capacity(k.div_ceil(KC));
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        let mut data = vec![0.0f32; strips * kc * NR];
+        for s in 0..strips {
+            let base = s * kc * NR;
+            let j0 = s * NR;
+            let jw = NR.min(n - j0);
+            for p in 0..kc {
+                let drow = &mut data[base + p * NR..base + p * NR + jw];
+                for (c, d) in drow.iter_mut().enumerate() {
+                    *d = b.at(p0 + p, j0 + c);
+                }
+            }
+        }
+        panels.push(Panel { p0, kc, data });
+        p0 += kc;
+    }
+    panels
+}
+
+/// Pack rows [row0, row0+mc) × cols [p0, p0+kc) of A into `MR`-row
+/// strips: strip s holds, for each p, the `MR` values of rows
+/// `s·MR..s·MR+MR` (zero-padded past row mc) at contraction index p.
+fn pack_a_block(a: View, row0: usize, mc: usize, p0: usize, kc: usize, dst: &mut Vec<f32>) {
+    let strips = mc.div_ceil(MR);
+    dst.clear();
+    dst.resize(strips * kc * MR, 0.0);
+    for s in 0..strips {
+        let base = s * kc * MR;
+        let i0 = s * MR;
+        let iw = MR.min(mc - i0);
+        for p in 0..kc {
+            let dcol = &mut dst[base + p * MR..base + p * MR + iw];
+            for (r, d) in dcol.iter_mut().enumerate() {
+                *d = a.at(row0 + i0 + r, p0 + p);
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[r][c] += Σ_p ap[p][r] · bp[p][c]`, p ascending
+/// — each element's adds happen in the exact naive-kernel order. `ap` is
+/// one packed A strip (`kc×MR`), `bp` one packed B strip (`kc×NR`).
+#[inline]
+fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (arow, brow) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for (accr, &av) in acc.iter_mut().zip(arow) {
+            for (o, &bv) in accr.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Multiply one packed A block against one packed B panel into the
+/// block's output rows. `first` selects zero- vs continue-accumulation
+/// (the accumulator round-trips through `out` between panels; an f32
+/// store/load is exact, so the per-element chain matches the naive one).
+fn block_gemm(
+    ap: &[f32],
+    mc: usize,
+    bpanel: &[f32],
+    kc: usize,
+    n: usize,
+    first: bool,
+    out: &mut [f32],
+) {
+    let mstrips = mc.div_ceil(MR);
+    let nstrips = n.div_ceil(NR);
+    for js in 0..nstrips {
+        let bstrip = &bpanel[js * kc * NR..(js + 1) * kc * NR];
+        let j0 = js * NR;
+        let jw = NR.min(n - j0);
+        for is in 0..mstrips {
+            let astrip = &ap[is * kc * MR..(is + 1) * kc * MR];
+            let i0 = is * MR;
+            let iw = MR.min(mc - i0);
+            let mut acc = [[0.0f32; NR]; MR];
+            if !first {
+                for (r, accr) in acc.iter_mut().enumerate().take(iw) {
+                    let o0 = (i0 + r) * n + j0;
+                    accr[..jw].copy_from_slice(&out[o0..o0 + jw]);
+                }
+            }
+            micro_kernel(astrip, bstrip, &mut acc);
+            for (r, accr) in acc.iter().enumerate().take(iw) {
+                let o0 = (i0 + r) * n + j0;
+                out[o0..o0 + jw].copy_from_slice(&accr[..jw]);
+            }
+        }
+    }
+}
+
+/// One thread's share: all panels of rows [row0, row0+rows), MC block at
+/// a time, running the row-local epilogue on each block as it completes.
+fn gemm_rows(
+    a: View,
+    panels: &[Panel],
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out_rows: &mut [f32],
+    ep: &Epilogue,
+) {
+    let mut apack = Vec::new();
+    let mut ic = 0;
+    while ic < rows {
+        let mc = MC.min(rows - ic);
+        let block_out = &mut out_rows[ic * n..(ic + mc) * n];
+        for (pi, panel) in panels.iter().enumerate() {
+            pack_a_block(a, row0 + ic, mc, panel.p0, panel.kc, &mut apack);
+            block_gemm(&apack, mc, &panel.data, panel.kc, n, pi == 0, block_out);
+        }
+        apply_rows(block_out, row0 + ic, n, ep);
+        ic += mc;
+    }
+}
+
+/// The blocked driver behind every public entry point.
+#[allow(clippy::too_many_arguments)]
+fn blocked(
+    a: View,
+    b: View,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    ep: &Epilogue,
+    force_serial: bool,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        finish_small(out, n, ep);
+        return;
+    }
+    let panels = pack_b_panels(b, k, n);
+    if force_serial || rayon::current_num_threads() <= 1 || m < 2 {
+        gemm_rows(a, &panels, n, 0, m, out, ep);
+    } else {
+        // Row-only split via the shared partition helper, rounded up to
+        // whole MR strips. Any row split yields the same bits (each row
+        // is computed whole by one thread); the alignment merely avoids
+        // half-empty edge strips at chunk seams.
+        let chunk = kernels::rows_per_chunk(m).next_multiple_of(MR);
+        let panels = &panels;
+        rayon::scope(|s| {
+            for (ci, oc) in out.chunks_mut(chunk * n).enumerate() {
+                s.spawn(move |_| {
+                    let rows = kernels::chunk_rows(oc.len(), n);
+                    gemm_rows(a, panels, n, ci * chunk, rows, oc, ep);
+                });
+            }
+        });
+    }
+    apply_whole(out, ep);
+}
+
+/// Epilogue for the naive-fallback and k = 0 paths: the row-local stages
+/// over the whole buffer, then the whole-tensor stage. Same helpers as
+/// the blocked path, so the two stay bit-identical by construction.
+fn finish_small(out: &mut [f32], n: usize, ep: &Epilogue) {
+    apply_rows(out, 0, n, ep);
+    apply_whole(out, ep);
+}
+
+/// Row-local epilogue stages (bias, ReLU, fixed / Small-block-BFP
+/// quantization) over the completed rows [row0, row0 + chunk.len()/n).
+/// Counters are `rng_base + flat index`, so any row partition produces
+/// the bits of one pass over the full buffer.
+fn apply_rows(chunk: &mut [f32], row0: usize, n: usize, ep: &Epilogue) {
+    if chunk.is_empty() || n == 0 {
+        return;
+    }
+    // reuse the reference kernels so the fused==separate bit contract
+    // holds by construction, not by keeping two copies in sync
+    if let Some(bias) = ep.bias {
+        debug_assert_eq!(bias.len(), n);
+        kernels::add_bias(chunk, bias);
+    }
+    if ep.relu {
+        kernels::relu(chunk);
+    }
+    if let Some(q) = &ep.quant {
+        let base = q.rng_base.wrapping_add((row0 * n) as u32);
+        match *q.fmt {
+            QuantFormat::None => {}
+            QuantFormat::Fixed { wl, fl, stochastic } => {
+                fixed::quantize_fixed_slice_at(chunk, wl, fl, q.seed, base, stochastic);
+            }
+            QuantFormat::Bfp { wl, ebits, small_block: true, stochastic } => {
+                bfp::quantize_bfp_blocks_inplace_at(chunk, n, wl, ebits, q.seed, base, stochastic);
+            }
+            // Big-block BFP shares one exponent across the whole output;
+            // `apply_whole` runs it once every row-panel is complete.
+            QuantFormat::Bfp { small_block: false, .. } => {}
+        }
+    }
+}
+
+/// Reject unsupported epilogue configurations before any work is done:
+/// big-block BFP counters always start at the tensor's flat index 0, so
+/// a nonzero `rng_base` would be silently ignored — panic up front
+/// instead of after paying for the whole GEMM.
+fn validate_epilogue(ep: &Epilogue) {
+    if let Some(q) = &ep.quant {
+        if matches!(q.fmt, QuantFormat::Bfp { small_block: false, .. }) {
+            assert_eq!(q.rng_base, 0, "big-block BFP fusion supports rng_base 0 only");
+        }
+    }
+}
+
+/// Whole-tensor epilogue stage: Big-block BFP, whose shared exponent is
+/// the global max and therefore cannot run per row-panel.
+fn apply_whole(out: &mut [f32], ep: &Epilogue) {
+    if let Some(q) = &ep.quant {
+        if let QuantFormat::Bfp { wl, ebits, small_block: false, stochastic } = *q.fmt {
+            debug_assert_eq!(q.rng_base, 0, "checked by validate_epilogue");
+            bfp::quantize_bfp_slice_inplace(out, wl, ebits, q.seed, stochastic);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocked_matmul_known_values() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]] — through the
+        // full blocked path (matmul_serial skips the naive fallback)
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut out = [0.0f32; 4];
+        matmul_serial(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn blocked_spans_multiple_panels_and_strips() {
+        // k > KC forces the multi-panel store/reload path; m, n force
+        // edge strips. Compare against the naive serial kernel bitwise.
+        let (m, k, n) = (MC + MR + 1, KC + 7, 2 * NR + 3);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i % 83) as f32 - 41.0) * 0.03).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i % 67) as f32 - 33.0) * 0.05).collect();
+        let mut want = vec![0.0f32; m * n];
+        kernels::matmul_serial(&a, &b, m, k, n, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        matmul_serial(&a, &b, m, k, n, &mut got);
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let mut got = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut got);
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn transposed_orientations_match_naive() {
+        let (m, k, n) = (37, 29, 23);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b_at: Vec<f32> = (0..m * n).map(|i| (i as f32 * 1.3).cos()).collect();
+        let b_bt: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.37).sin()).collect();
+
+        let mut want = vec![0.0f32; k * n];
+        kernels::matmul_at_b_serial(&a, &b_at, m, k, n, &mut want);
+        let mut got = vec![0.0f32; k * n];
+        matmul_at_b_serial(&a, &b_at, m, k, n, &mut got);
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        let mut want = vec![0.0f32; m * n];
+        kernels::matmul_a_bt_serial(&a, &b_bt, m, k, n, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        matmul_a_bt_serial(&a, &b_bt, m, k, n, &mut got);
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn fused_bias_relu_fixed_matches_separate_pipeline() {
+        // 139k MACs: above GEMM_MIN_MACS, so the fused path runs blocked
+        let (m, k, n) = (65, 65, 33);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i % 19) as f32 - 9.0) * 0.11).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i % 23) as f32 - 11.0) * 0.07).collect();
+        let bias: Vec<f32> = (0..n).map(|i| (i as f32 - 16.0) * 0.3).collect();
+        let fmt = QuantFormat::Fixed { wl: 8, fl: 4, stochastic: true };
+
+        let mut want = vec![0.0f32; m * n];
+        kernels::matmul_serial(&a, &b, m, k, n, &mut want);
+        kernels::add_bias(&mut want, &bias);
+        kernels::relu(&mut want);
+        fixed::quantize_fixed_slice_at(&mut want, 8, 4, 99, 0, true);
+
+        let mut got = vec![0.0f32; m * n];
+        let ep = Epilogue {
+            bias: Some(&bias),
+            relu: true,
+            quant: Some(FusedQuant { fmt: &fmt, seed: 99, rng_base: 0 }),
+        };
+        matmul_into_quant(&a, &b, m, k, n, &mut got, &ep);
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn nonzero_rng_base_offsets_the_counter_stream() {
+        // fused with rng_base = R must equal a separate quantize pass
+        // whose counters start at R (both below and above the naive
+        // fallback threshold)
+        for (m, k, n) in [(9usize, 11usize, 7usize), (65, 65, 33)] {
+            let a: Vec<f32> = (0..m * k).map(|i| ((i % 31) as f32 - 15.0) * 0.09).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| ((i % 29) as f32 - 14.0) * 0.06).collect();
+            let base = 0xDEAD_0000u32;
+            let fmt = QuantFormat::Fixed { wl: 8, fl: 5, stochastic: true };
+
+            let mut want = vec![0.0f32; m * n];
+            kernels::matmul_serial(&a, &b, m, k, n, &mut want);
+            fixed::quantize_fixed_slice_at(&mut want, 8, 5, 7, base, true);
+
+            let mut got = vec![0.0f32; m * n];
+            let ep = Epilogue {
+                bias: None,
+                relu: false,
+                quant: Some(FusedQuant { fmt: &fmt, seed: 7, rng_base: base }),
+            };
+            matmul_into_quant(&a, &b, m, k, n, &mut got, &ep);
+            assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "big-block BFP fusion")]
+    fn big_block_rng_base_is_rejected_up_front() {
+        let fmt = QuantFormat::Bfp { wl: 8, ebits: 8, small_block: false, stochastic: true };
+        let ep = Epilogue {
+            bias: None,
+            relu: false,
+            quant: Some(FusedQuant { fmt: &fmt, seed: 1, rng_base: 1 }),
+        };
+        let mut out = [0.0f32; 2];
+        matmul_into_quant(&[1.0, 2.0], &[3.0, 4.0, 5.0, 6.0], 1, 2, 2, &mut out, &ep);
+    }
+
+    #[test]
+    fn degenerate_shapes_are_safe() {
+        // k = 0: out is the (quantized) zero matrix; n = 1 matvec edge
+        let mut out = [1.0f32; 6];
+        matmul(&[], &[], 2, 0, 3, &mut out);
+        assert_eq!(out, [0.0; 6]);
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [2.0f32, 1.0, 0.5];
+        let mut out = [0.0f32; 1];
+        matmul(&a, &b, 1, 3, 1, &mut out);
+        assert_eq!(out, [5.5]);
+    }
+}

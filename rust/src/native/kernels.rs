@@ -1,4 +1,5 @@
-//! Dense f32 forward/backward kernels for the native backend.
+//! Dense f32 kernels for the native backend: the **naive reference**
+//! matmuls plus the elementwise forward/backward ops.
 //!
 //! Deliberately simple row-major loops (HALP's observation: low-precision
 //! training kernels are small enough to implement directly): matmul in
@@ -6,22 +7,53 @@
 //! fused softmax cross-entropy with its gradient. Loss accumulation is
 //! f64; everything else is f32 like the XLA artifacts.
 //!
+//! The production GEMM path is the cache-blocked engine in
+//! [`super::gemm`]; the kernels here define its semantics — the blocked
+//! engine must reproduce the `*_serial` loops bit-for-bit (pinned by
+//! `rust/tests/gemm_parity.rs`), and every output element's f32
+//! accumulation order is part of that contract.
+//!
 //! The three matmuls fan out over the rayon pool once the contraction is
 //! big enough to amortize the dispatch. Parallelism is over **output
-//! rows only**, and every output element's f32 accumulation order is
-//! identical to the serial pass (each `*_serial` kernel computes a row
-//! independently), so results are bit-identical for any thread count —
-//! the property the quantized training step's reproducibility tests
-//! lean on. The `*_serial` variants stay public as the single-thread
-//! reference for the parity tests.
+//! rows only** (the shared [`rows_per_chunk`]/[`chunk_rows`] partition),
+//! and every output element's f32 accumulation order is identical to the
+//! serial pass (each `*_serial` kernel computes a row independently), so
+//! results are bit-identical for any thread count — the property the
+//! quantized training step's reproducibility tests lean on. The
+//! `*_serial` variants stay public as the single-thread reference for
+//! the parity tests.
 
 /// Contractions below this many multiply-accumulates run serially — the
 /// pool dispatch (a queue push + wakeup per chunk) costs a few µs.
 const PAR_MIN_MACS: usize = 64 * 1024;
 
-/// How many rows each spawned chunk covers for `rows` total.
-fn rows_per_chunk(rows: usize) -> usize {
+/// Rows per pool chunk when fanning `rows` output rows over the pool:
+/// `c = ceil(rows / threads)`, min 1. Slicing a buffer with
+/// `chunks_mut(c · row_len)` then yields `ceil(rows / c)` chunks of
+/// exactly `c` rows each — except the last, which carries the `rows % c`
+/// remainder when that is nonzero. Shared by all three matmul
+/// orientations and by the blocked engine in [`super::gemm`], so the
+/// remainder policy lives in exactly one place.
+pub fn rows_per_chunk(rows: usize) -> usize {
     rows.div_ceil(rayon::current_num_threads()).max(1)
+}
+
+/// Recover a chunk's row count from its flat slice: `out_chunk_len /
+/// n`, asserting the [`rows_per_chunk`] partition invariant (chunks hold
+/// whole rows) in one place instead of at every call site.
+pub fn chunk_rows(out_chunk_len: usize, n: usize) -> usize {
+    debug_assert!(n > 0, "row partition needs a positive row length");
+    debug_assert_eq!(out_chunk_len % n, 0, "chunk must hold whole rows");
+    out_chunk_len / n
+}
+
+/// [`chunk_rows`] for splits that carry matching `a` rows along: also
+/// asserts the `a` chunk covers exactly the same rows (`rows · k`
+/// elements) as the output chunk.
+pub fn chunk_rows_with_a(out_chunk_len: usize, n: usize, a_chunk_len: usize, k: usize) -> usize {
+    let rows = chunk_rows(out_chunk_len, n);
+    debug_assert_eq!(a_chunk_len, rows * k, "a-chunk rows must match out-chunk rows");
+    rows
 }
 
 /// out[m,n] = a[m,k] @ b[k,n]. `out` is overwritten.
@@ -36,7 +68,10 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
     let rows = rows_per_chunk(m);
     rayon::scope(|s| {
         for (oc, ac) in out.chunks_mut(rows * n).zip(a.chunks(rows * k)) {
-            s.spawn(move |_| matmul_serial(ac, b, ac.len() / k, k, n, oc));
+            s.spawn(move |_| {
+                let mr = chunk_rows_with_a(oc.len(), n, ac.len(), k);
+                matmul_serial(ac, b, mr, k, n, oc);
+            });
         }
     });
 }
@@ -75,7 +110,10 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
     let rows = rows_per_chunk(k);
     rayon::scope(|s| {
         for (ci, oc) in out.chunks_mut(rows * n).enumerate() {
-            s.spawn(move |_| matmul_at_b_range(a, b, m, k, n, ci * rows, oc));
+            s.spawn(move |_| {
+                debug_assert!(chunk_rows(oc.len(), n) > 0);
+                matmul_at_b_range(a, b, m, k, n, ci * rows, oc);
+            });
         }
     });
 }
@@ -126,7 +164,10 @@ pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
     let rows = rows_per_chunk(m);
     rayon::scope(|s| {
         for (oc, ac) in out.chunks_mut(rows * n).zip(a.chunks(rows * k)) {
-            s.spawn(move |_| matmul_a_bt_serial(ac, b, ac.len() / k, k, n, oc));
+            s.spawn(move |_| {
+                let mr = chunk_rows_with_a(oc.len(), n, ac.len(), k);
+                matmul_a_bt_serial(ac, b, mr, k, n, oc);
+            });
         }
     });
 }

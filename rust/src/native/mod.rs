@@ -26,9 +26,17 @@
 //!
 //! The CNN rows run on the native im2col conv stack ([`conv`]) — the
 //! table1/table3/fig3 experiment workloads no longer need XLA artifacts.
+//!
+//! All dense and im2col contractions execute on the cache-blocked,
+//! register-tiled GEMM engine ([`gemm`]), which also fuses the
+//! Algorithm-2 quantize/bias/ReLU epilogues into the tile loop where a
+//! quantizer directly follows a matmul; the naive loops in [`kernels`]
+//! remain the bit-exact reference. See `docs/ARCHITECTURE.md` and
+//! `docs/PERF.md` at the repo root.
 
 pub mod backend;
 pub mod conv;
+pub mod gemm;
 pub mod kernels;
 
 pub use backend::{site_id, NativeBackend};

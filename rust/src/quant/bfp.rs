@@ -92,6 +92,74 @@ fn quantize_block_run(
     }
 }
 
+/// In-place contiguous-block quantization with the counter stream
+/// starting at flat index `base` — the fused-GEMM epilogue entry
+/// ([`crate::native::gemm`]). Serial: the caller owns any parallel
+/// split (and passes each chunk's flat offset as `base`), which is what
+/// keeps the bits identical to a single pass over the full tensor.
+///
+/// Bit-identical to [`quantize_bfp_tensor`] with leading block axes
+/// (block size = `bsize`) when `base` is the chunk's flat offset and
+/// chunk boundaries fall on block boundaries.
+pub fn quantize_bfp_blocks_inplace_at(
+    xs: &mut [f32],
+    bsize: usize,
+    wl: u32,
+    ebits: u32,
+    seed: u32,
+    base: u32,
+    stochastic: bool,
+) {
+    if bsize == 0 || xs.is_empty() {
+        return;
+    }
+    for (bi, xb) in xs.chunks_mut(bsize).enumerate() {
+        let p = block_params(abs_max(xb), wl, ebits);
+        let block_base = base.wrapping_add((bi * bsize) as u32);
+        quantize_elems_inplace(xb, p, seed, block_base, stochastic);
+    }
+}
+
+/// In-place Big-block (one shared exponent for the whole slice)
+/// quantization — the fused-GEMM whole-tensor epilogue stage. Same
+/// parallel fan-out and bit stream as [`quantize_bfp_tensor`] with no
+/// block axes.
+pub fn quantize_bfp_slice_inplace(
+    xs: &mut [f32],
+    wl: u32,
+    ebits: u32,
+    seed: u32,
+    stochastic: bool,
+) {
+    if xs.is_empty() {
+        return;
+    }
+    let threads = rayon::current_num_threads();
+    if xs.len() < PAR_MIN_ELEMS || threads <= 1 {
+        let p = block_params(abs_max(xs), wl, ebits);
+        quantize_elems_inplace(xs, p, seed, 0, stochastic);
+        return;
+    }
+    // mirror of `quantize_contiguous`'s single-big-block branch, minus
+    // the src→dst buffer: split the max (a pure maximum —
+    // order-invariant), then the elementwise pass over index ranges
+    let chunk = xs.len().div_ceil(threads).max(UBUF);
+    let mut maxes = vec![0.0f32; xs.len().div_ceil(chunk)];
+    rayon::scope(|s| {
+        for (m, xc) in maxes.iter_mut().zip(xs.chunks(chunk)) {
+            s.spawn(move |_| *m = abs_max(xc));
+        }
+    });
+    let p = block_params(abs_max(&maxes), wl, ebits);
+    rayon::scope(|s| {
+        for (ci, oc) in xs.chunks_mut(chunk).enumerate() {
+            s.spawn(move |_| {
+                quantize_elems_inplace(oc, p, seed, (ci * chunk) as u32, stochastic);
+            });
+        }
+    });
+}
+
 /// Contiguous-block quantization with parallel fan-out over whole blocks
 /// (or, for a single big block, over index ranges).
 fn quantize_contiguous(
@@ -149,7 +217,16 @@ fn quantize_contiguous(
     out
 }
 
-/// Elementwise pass with fixed block params (single-block helper).
+/// The per-element BFP rounding formula — the ONE place it lives; both
+/// the src→dst and the in-place loops below call through here so the
+/// two paths cannot drift.
+#[inline]
+fn quantize_one(x: f32, p: BlockParams, u: f32) -> f32 {
+    ((x * p.inv + u).floor() * p.delta).clamp(p.lo, p.hi)
+}
+
+/// Elementwise pass with fixed block params (single-block helper),
+/// src→dst — one read stream, one write stream.
 fn quantize_elems(
     xs: &[f32],
     out: &mut [f32],
@@ -160,7 +237,7 @@ fn quantize_elems(
 ) {
     if !stochastic {
         for (&x, o) in xs.iter().zip(out.iter_mut()) {
-            *o = ((x * p.inv + 0.5).floor() * p.delta).clamp(p.lo, p.hi);
+            *o = quantize_one(x, p, 0.5);
         }
         return;
     }
@@ -169,7 +246,26 @@ fn quantize_elems(
         let u = &mut ubuf[..xc.len()];
         rng::uniform_fill_from_counters(seed, base.wrapping_add((ci * UBUF) as u32), u);
         for ((&x, o), &u) in xc.iter().zip(oc.iter_mut()).zip(u.iter()) {
-            *o = ((x * p.inv + u).floor() * p.delta).clamp(p.lo, p.hi);
+            *o = quantize_one(x, p, u);
+        }
+    }
+}
+
+/// [`quantize_elems`] operating in place — the fused-GEMM epilogue
+/// variant, where the data is already resident in the output buffer.
+fn quantize_elems_inplace(xs: &mut [f32], p: BlockParams, seed: u32, base: u32, stochastic: bool) {
+    if !stochastic {
+        for x in xs.iter_mut() {
+            *x = quantize_one(*x, p, 0.5);
+        }
+        return;
+    }
+    let mut ubuf = [0.0f32; UBUF];
+    for (ci, chunk) in xs.chunks_mut(UBUF).enumerate() {
+        let u = &mut ubuf[..chunk.len()];
+        rng::uniform_fill_from_counters(seed, base.wrapping_add((ci * UBUF) as u32), u);
+        for (x, &u) in chunk.iter_mut().zip(u.iter()) {
+            *x = quantize_one(*x, p, u);
         }
     }
 }

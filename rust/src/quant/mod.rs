@@ -2,8 +2,30 @@
 //!
 //! Used for (a) the quantized-averaging mode of the coordinator (paper
 //! §5.1, Fig. 3 right — Q_SWA runs on the host), (b) the pure-rust LP-SGD
-//! simulators in [`crate::sim`], and (c) cross-layer parity tests against
-//! the golden vectors exported by the AOT step.
+//! simulators in [`crate::sim`], (c) cross-layer parity tests against
+//! the golden vectors exported by the AOT step, and (d) the fused GEMM
+//! epilogues in [`crate::native::gemm`], which call the in-place
+//! `*_at`/`*_inplace` entry points with each chunk's flat offset so the
+//! stochastic-rounding stream stays positional.
+//!
+//! Every stochastic rounding event is keyed by `(seed, flat element
+//! index)` through the counter-hash RNG, so quantization is a pure
+//! function of `(data, format, seed)` — reproducible at any thread
+//! count:
+//!
+//! ```
+//! use swalp::quant::{quantize_fixed, QuantFormat};
+//!
+//! // nearest rounding onto the W8F2 fixed-point grid (δ = 0.25)
+//! let q = quantize_fixed(&[0.3], 8, 2, 0, false);
+//! assert_eq!(q, vec![0.25]);
+//! // the format descriptor knows its quantization gap
+//! assert_eq!(QuantFormat::fixed(8, 6).delta(), Some(2f64.powi(-6)));
+//! // stochastic rounding is deterministic per (seed, position)
+//! let a = quantize_fixed(&[0.3; 64], 8, 6, 7, true);
+//! let b = quantize_fixed(&[0.3; 64], 8, 6, 7, true);
+//! assert_eq!(a, b);
+//! ```
 
 pub mod bfp;
 pub mod fixed;

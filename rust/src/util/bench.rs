@@ -7,8 +7,7 @@
 //! For per-PR perf tracking, results can also be collected into a
 //! [`BenchLog`] and written as JSON (`--json <path>` on
 //! `bench_perf_hotpath`; CI uploads the file as the `BENCH_hotpath.json`
-//! artifact — the schema is documented in ROADMAP.md's perf-tracking
-//! note).
+//! artifact — the schema is documented in docs/PERF.md).
 
 use std::path::Path;
 use std::time::Instant;

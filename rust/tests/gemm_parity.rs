@@ -1,0 +1,181 @@
+//! Blocked-GEMM parity: the cache-blocked engine (`native::gemm`) must
+//! be **bit-identical** to the naive serial kernels (`native::kernels`),
+//! and the fused quantize epilogue bit-identical to the separate
+//! `matmul → add_bias → relu → quantize` pipeline. Per output element
+//! the f32 accumulation order is part of the contract — tiling may only
+//! reorder work across elements, never within one.
+//!
+//! `RAYON_NUM_THREADS` is read once per process, so the pinned-count
+//! sweep re-runs the same assertions in subprocesses at 1, 2 and 8
+//! threads. The naive serial reference is single-threaded and therefore
+//! identical across those processes, so green at every count also pins
+//! the blocked outputs across thread counts transitively.
+
+use std::process::Command;
+
+use swalp::native::{gemm, kernels};
+use swalp::quant::{self, spec::Role, QuantFormat};
+use swalp::rng::StreamRng;
+use swalp::tensor::Tensor;
+
+/// Odd, prime-ish and power-of-two extents: exercises single/partial
+/// micro-tiles, edge strips, the naive-fallback threshold and shapes
+/// spanning multiple MC blocks and KC panels.
+const DIMS: [usize; 6] = [1, 3, 8, 17, 64, 129];
+
+fn mat(rng: &mut StreamRng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str, m: usize, k: usize, n: usize) {
+    assert_eq!(got.len(), want.len(), "{what} m={m} k={k} n={n}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what} m={m} k={k} n={n} elem {i}: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn blocked_matmuls_bit_match_naive_across_shapes() {
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let mut rng = StreamRng::new((m * 1_000_000 + k * 1_000 + n) as u64);
+                let a = mat(&mut rng, m * k);
+                let b = mat(&mut rng, k * n);
+
+                // A·B: production (pool + fallback) and forced-blocked
+                let mut want = vec![0.0f32; m * n];
+                kernels::matmul_serial(&a, &b, m, k, n, &mut want);
+                let mut got = vec![0.0f32; m * n];
+                gemm::matmul(&a, &b, m, k, n, &mut got);
+                assert_bits(&got, &want, "matmul", m, k, n);
+                let mut got = vec![0.0f32; m * n];
+                gemm::matmul_serial(&a, &b, m, k, n, &mut got);
+                assert_bits(&got, &want, "matmul_serial", m, k, n);
+
+                // Aᵀ·B: a is [m,k], b2 is [m,n] -> out [k,n]
+                let b2 = mat(&mut rng, m * n);
+                let mut want = vec![0.0f32; k * n];
+                kernels::matmul_at_b_serial(&a, &b2, m, k, n, &mut want);
+                let mut got = vec![0.0f32; k * n];
+                gemm::matmul_at_b(&a, &b2, m, k, n, &mut got);
+                assert_bits(&got, &want, "matmul_at_b", m, k, n);
+                let mut got = vec![0.0f32; k * n];
+                gemm::matmul_at_b_serial(&a, &b2, m, k, n, &mut got);
+                assert_bits(&got, &want, "matmul_at_b_serial", m, k, n);
+
+                // A·Bᵀ: b3 is [n,k] -> out [m,n]
+                let b3 = mat(&mut rng, n * k);
+                let mut want = vec![0.0f32; m * n];
+                kernels::matmul_a_bt_serial(&a, &b3, m, k, n, &mut want);
+                let mut got = vec![0.0f32; m * n];
+                gemm::matmul_a_bt(&a, &b3, m, k, n, &mut got);
+                assert_bits(&got, &want, "matmul_a_bt", m, k, n);
+                let mut got = vec![0.0f32; m * n];
+                gemm::matmul_a_bt_serial(&a, &b3, m, k, n, &mut got);
+                assert_bits(&got, &want, "matmul_a_bt_serial", m, k, n);
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_epilogue_bit_matches_separate_pipeline() {
+    let fmts = [
+        QuantFormat::None,
+        QuantFormat::Fixed { wl: 8, fl: 6, stochastic: true },
+        QuantFormat::Fixed { wl: 8, fl: 6, stochastic: false },
+        QuantFormat::Bfp { wl: 8, ebits: 8, small_block: true, stochastic: true },
+        QuantFormat::Bfp { wl: 8, ebits: 8, small_block: true, stochastic: false },
+        QuantFormat::Bfp { wl: 8, ebits: 8, small_block: false, stochastic: true },
+    ];
+    // below and above the naive-fallback threshold, with edge tiles;
+    // (129, 33, 129) gives m·n = 16641 ≥ PAR_MIN_ELEMS so the parallel
+    // branch of the big-block whole-tensor quantizer is exercised too
+    let shapes =
+        [(3usize, 17usize, 8usize), (17, 64, 129), (64, 64, 64), (129, 129, 17), (129, 33, 129)];
+    for (si, &(m, k, n)) in shapes.iter().enumerate() {
+        let mut rng = StreamRng::new(0xF00D + si as u64);
+        let a = mat(&mut rng, m * k);
+        let b = mat(&mut rng, k * n);
+        let bt = mat(&mut rng, n * k);
+        let bias = mat(&mut rng, n);
+        for (fi, fmt) in fmts.iter().enumerate() {
+            let seed = 1_000 + fi as u32;
+            for use_bias in [false, true] {
+                for relu in [false, true] {
+                    // separate reference on the naive serial kernel: the
+                    // same `apply_format` call the backend's quant_buf
+                    // performs for a 2-D activation/error tensor
+                    let mut want = vec![0.0f32; m * n];
+                    kernels::matmul_serial(&a, &b, m, k, n, &mut want);
+                    if use_bias {
+                        kernels::add_bias(&mut want, &bias);
+                    }
+                    if relu {
+                        kernels::relu(&mut want);
+                    }
+                    let t = Tensor::new(vec![m, n], want).unwrap();
+                    let want = quant::apply_format(fmt, &t, seed, Role::Act, false).data;
+
+                    let ep = gemm::Epilogue {
+                        bias: use_bias.then_some(&bias[..]),
+                        relu,
+                        quant: Some(gemm::FusedQuant { fmt, seed, rng_base: 0 }),
+                    };
+                    let mut got = vec![0.0f32; m * n];
+                    gemm::matmul_into_quant(&a, &b, m, k, n, &mut got, &ep);
+                    let what = format!("fused[{fi}] bias={use_bias} relu={relu}");
+                    assert_bits(&got, &want, &what, m, k, n);
+                }
+            }
+
+            // A·Bᵀ orientation (conv / backprop sites), quant-only
+            let mut want = vec![0.0f32; m * n];
+            kernels::matmul_a_bt_serial(&a, &bt, m, k, n, &mut want);
+            let t = Tensor::new(vec![m, n], want).unwrap();
+            let want = quant::apply_format(fmt, &t, seed, Role::Err, false).data;
+            let ep = gemm::Epilogue {
+                bias: None,
+                relu: false,
+                quant: Some(gemm::FusedQuant { fmt, seed, rng_base: 0 }),
+            };
+            let mut got = vec![0.0f32; m * n];
+            gemm::matmul_a_bt_into_quant(&a, &bt, m, k, n, &mut got, &ep);
+            assert_bits(&got, &want, &format!("fused_a_bt[{fi}]"), m, k, n);
+        }
+    }
+}
+
+#[test]
+fn parity_holds_at_pinned_thread_counts() {
+    // child processes run only the two sweeps above (RAYON_NUM_THREADS
+    // is latched at first pool use, hence one process per count)
+    if std::env::var_os("SWALP_GEMM_PARITY_CHILD").is_some() {
+        return;
+    }
+    let exe = std::env::current_exe().expect("test binary path");
+    for threads in ["1", "2", "8"] {
+        let out = Command::new(&exe)
+            .args([
+                "blocked_matmuls_bit_match_naive_across_shapes",
+                "fused_epilogue_bit_matches_separate_pipeline",
+                "--exact",
+                "--test-threads",
+                "1",
+            ])
+            .env("RAYON_NUM_THREADS", threads)
+            .env("SWALP_GEMM_PARITY_CHILD", "1")
+            .output()
+            .expect("spawn parity child");
+        assert!(
+            out.status.success(),
+            "GEMM parity failed at RAYON_NUM_THREADS={threads}\nstdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
