@@ -13,7 +13,10 @@
 # commits / new branches pass trivially.
 set -euo pipefail
 
-GOLDEN="rust/tests/data/golden_quant.json"
+GOLDENS=(
+  "rust/tests/data/golden_quant.json"
+  "rust/tests/data/golden_report_fingerprints.json"
+)
 README="rust/README.md"
 
 ZERO_SHA="0000000000000000000000000000000000000000"
@@ -32,28 +35,36 @@ fi
 
 changed="$(git diff --name-only "$range")"
 
-if ! grep -qx "$GOLDEN" <<<"$changed"; then
-  echo "golden-drift: $GOLDEN unchanged in $range — ok"
+touched=""
+for golden in "${GOLDENS[@]}"; do
+  if grep -qx "$golden" <<<"$changed"; then
+    touched="$golden"
+    break
+  fi
+done
+
+if [[ -z "$touched" ]]; then
+  echo "golden-drift: no golden file changed in $range — ok"
   exit 0
 fi
 
 if ! grep -qx "$README" <<<"$changed"; then
   echo "golden-drift: FAIL"
-  echo "  $GOLDEN changed in $range but $README did not."
-  echo "  Regenerating the golden vectors must be documented: update the"
+  echo "  $touched changed in $range but $README did not."
+  echo "  Regenerating goldens must be documented: update the"
   echo "  'Golden vector regeneration' section of $README (why the"
-  echo "  quantization semantics changed, and with which reference) in"
+  echo "  pinned semantics changed, and with which reference) in"
   echo "  the same change."
   exit 1
 fi
 
 if ! git diff "$range" -- "$README" | grep -qi "golden"; then
   echo "golden-drift: FAIL"
-  echo "  $GOLDEN changed and $README was edited, but the edit does not"
-  echo "  touch the golden-vector regeneration documentation (no diff"
+  echo "  $touched changed and $README was edited, but the edit does not"
+  echo "  touch the golden regeneration documentation (no diff"
   echo "  line mentions 'golden'). Document the regeneration in the"
   echo "  'Golden vector regeneration' section."
   exit 1
 fi
 
-echo "golden-drift: $GOLDEN changed together with its $README docs — ok"
+echo "golden-drift: $touched changed together with its $README docs — ok"

@@ -88,6 +88,7 @@ fn main() {
             bias: None,
             relu: false,
             quant: Some(gemm::FusedQuant { fmt: &fmt, seed: 42, rng_base: 0 }),
+            b_cache: None,
         };
         let r = bench("gemm/fused fixed-W8F6 256^3", gw, gi, gs, || {
             gemm::matmul_into_quant(&a, &bm, m, k, n, &mut out, &ep);

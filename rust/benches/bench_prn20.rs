@@ -1,0 +1,7 @@
+//! §prn20 — PreResNet-20 (BatchNorm) on CIFAR10-like through the grid
+//! runner: SGD-LP vs SWALP on the deep QLayer-graph model, real native
+//! Algorithm-2 steps. Flags: `--full`, `--seeds N`, `--threads 1`.
+
+fn main() {
+    swalp::coordinator::runner::bench_main("prn20");
+}

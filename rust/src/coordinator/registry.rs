@@ -208,7 +208,7 @@ pub fn find(id: &str) -> Option<&'static ExperimentSpec> {
     SPECS.iter().find(|s| s.id == id)
 }
 
-static SPECS: [ExperimentSpec; 9] = [
+static SPECS: [ExperimentSpec; 10] = [
     ExperimentSpec {
         id: "fig2-linreg",
         title: "Fig 2 (left): linear regression, fixed point W8F6",
@@ -270,6 +270,13 @@ static SPECS: [ExperimentSpec; 9] = [
         notes: "expected: ratio_sgd = E[w²]/(σδ) ≳ constant (lower bound, Thm 3); the SWALP \
                 column sits orders below and shrinks faster than δ",
         kind: ExpKind::Analytic(thm3_cells),
+    },
+    ExperimentSpec {
+        id: "prn20",
+        title: "PreResNet-20 (BatchNorm) on CIFAR10-like: SWALP on a deep native model",
+        notes: "expected: SWALP < SGD-LP on the BatchNorm-equipped PreResNet-20; SWA evals \
+                renormalize BN statistics from the eval batch (the paper's BN-recompute note)",
+        kind: ExpKind::Grid { cells: prn20_cells, extras: None },
     },
 ];
 
@@ -584,6 +591,37 @@ fn fig3_precision_cells(ctx: &Ctx) -> Result<Vec<Cell>> {
         cells.push(Cell::analytic(label, &[("w_swa", label.as_str())], &[("err", err)]));
     }
     Ok(cells)
+}
+
+// ---------------------------------------------------------------------
+// PreResNet-20 (BatchNorm): the QLayer-graph deep model, end to end
+// ---------------------------------------------------------------------
+
+fn prn20_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    let scale = ctx.scale(0.5, 0.1);
+    let warmup = ctx.pick(8, 2);
+    let avg = ctx.pick(4, 1);
+    [
+        ("SGD-LP", "cifar10_prn20_bfp8small", false),
+        ("SWALP", "cifar10_prn20_bfp8small", true),
+    ]
+    .into_iter()
+    .map(|(label, model, swa)| {
+        RunSpec::new(
+            label,
+            model,
+            DataSpec::Model { seed: 71, scale },
+            Sizing::Epochs { warmup, avg },
+            SchedSpec::SwalpPaper { alpha1: 0.1, swa_lr: 0.01 },
+            EvalKind::TestErr,
+        )
+        .labels(&[("run", label)])
+        // average once per epoch (paper default)
+        .cycle(CyclePolicy::PerEpoch(1))
+        .swa(swa)
+        .seeds(ctx.seeds())
+    })
+    .collect()
 }
 
 // ---------------------------------------------------------------------

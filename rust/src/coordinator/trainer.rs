@@ -125,12 +125,15 @@ impl<'a> Trainer<'a> {
         let mut has_g = false;
         let mut batches = 0usize;
         let mut samples = 0usize;
+        // One weight set against every eval batch: this loop owns an
+        // EvalCache so the backend can reuse packed weight GEMM panels
+        // across batches. `trainable` and `state` are borrowed for the
+        // cache's whole lifetime (the stability contract); reuse is
+        // bit-identical to repacking.
+        let cache = crate::runtime::EvalCache::default();
         while Loader::eval_batch(ds, be, &mut cursor, &mut xb, &mut yb) {
-            let out = if batch_stats {
-                self.model.eval_batch_stats(trainable, state, &xb, &yb)?
-            } else {
-                self.model.eval(trainable, state, &xb, &yb)?
-            };
+            let out =
+                self.model.eval_batch_cached(&cache, trainable, state, &xb, &yb, batch_stats)?;
             loss += out.loss;
             metric += out.metric;
             if let Some(g) = out.grad_norm_sq {

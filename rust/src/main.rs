@@ -345,7 +345,7 @@ USAGE: swalp <command> [options]
   reproduce --exp <id> | --all  run registered paper experiments through
         the grid runner (cells x seed replicas over the thread pool):
         fig2-linreg fig2-logreg fig2-bits table1 table2 table3
-        fig3-frequency fig3-precision thm3
+        fig3-frequency fig3-precision thm3 prn20
         [--quick --seeds N --threads 1 (serial reference; pool size is
          fixed at startup by RAYON_NUM_THREADS)]
         [--json [path] --out-dir <dir>]

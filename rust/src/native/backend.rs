@@ -1,12 +1,18 @@
-//! `NativeBackend` — Algorithm 2 executed entirely in rust.
+//! `NativeBackend` — Algorithm 2 executed entirely in rust, generically
+//! over a [`GraphModel`].
 //!
-//! One backend = one (architecture, quantization-config) pair described by
-//! a [`ModelSpec`]. The step follows qtrain.py / graphs.py exactly:
+//! One backend = one (layer graph, quantization-config) pair described
+//! by a [`ModelSpec`]. The step follows qtrain.py / graphs.py exactly:
 //!
 //!   1. forward: activations pass Q_A at named sites,
 //!   2. backward: the cotangent passes Q_E at the same sites, produced
 //!      weight gradients pass Q_G,
 //!   3. update: v' = ρ·Q_M(v) + g ;  w' = Q_W(w − lr·v').
+//!
+//! The architecture-specific forward/backward logic lives entirely in
+//! the layer graph ([`super::layers`]); this file owns only the generic
+//! Algorithm-2 update, the Q_W init discipline and the eval plumbing —
+//! there is no per-architecture `match` anywhere anymore.
 //!
 //! Every quantization event derives its seed from (step, site, role) via
 //! the shared counter-hash RNG, so a step is a pure function of
@@ -22,95 +28,27 @@ use crate::quant::{
     spec::{is_per_tensor, Role},
     QuantFormat,
 };
-use crate::rng::{self, StreamRng};
-use crate::runtime::{EvalOut, ModelBackend, ModelSpec, ModelState};
+use crate::rng::StreamRng;
+use crate::runtime::{EvalCache, EvalOut, ModelBackend, ModelSpec, ModelState};
 use crate::tensor::{NamedTensors, Tensor};
 
-use super::gemm::{self, Epilogue, FusedQuant};
-use super::kernels;
-
-/// Role tags folded into quantization seeds (mirror of qtrain.TAG_*).
-const TAG_W: u32 = 1;
-pub(crate) const TAG_A: u32 = 2;
-const TAG_G: u32 = 3;
-pub(crate) const TAG_E: u32 = 4;
-const TAG_M: u32 = 5;
-
-/// Stable 32-bit id for a named quantization site (FNV-1a).
-pub fn site_id(name: &str) -> u32 {
-    let mut h: u32 = 0x811C_9DC5;
-    for b in name.bytes() {
-        h ^= b as u32;
-        h = h.wrapping_mul(0x0100_0193);
-    }
-    h
-}
-
-pub(crate) fn seed_for(step: u64, site: u32, tag: u32) -> u32 {
-    rng::derive_seed(&[step as u32, site, tag])
-}
-
-/// The architectures the native engine implements.
-pub(super) enum Arch {
-    /// f(w) = mean (w·x − y)²; single weight vector (paper §4.3 / App. G).
-    LinReg { d: usize },
-    /// Softmax CE + (λ/2)‖w‖², the strongly-convex App. H objective. Eval
-    /// also reports ‖∇f‖² of the full-precision objective (Fig. 2 middle).
-    LogReg { d: usize, classes: usize, lam: f32 },
-    /// Two dense layers with a ReLU + Q_A/Q_E site between them.
-    Mlp { d_in: usize, hidden: usize, classes: usize },
-    /// A small CNN (VGG/PreResNet/WAGE minis) on the im2col conv stack.
-    Conv(crate::native::conv::ConvNet),
-}
+use super::gemm::PanelCache;
+use super::layers::{seed_for, site_id, GraphModel, Mode, QCtx, TAG_G, TAG_M, TAG_W};
 
 pub struct NativeBackend {
     spec: ModelSpec,
-    arch: Arch,
-}
-
-/// Quantize a flat activation/error buffer, reusing the owned storage
-/// where the format allows (fixed point quantizes in place; BFP needs
-/// the tensor shape for its block-axis policy).
-pub(crate) fn quant_buf(
-    fmt: &QuantFormat,
-    mut data: Vec<f32>,
-    shape: &[usize],
-    seed: u32,
-    role: Role,
-) -> Vec<f32> {
-    match fmt {
-        QuantFormat::None => data,
-        QuantFormat::Fixed { wl, fl, stochastic } => {
-            crate::quant::fixed::quantize_fixed_slice(&mut data, *wl, *fl, seed, *stochastic);
-            data
-        }
-        QuantFormat::Bfp { .. } => {
-            let t = Tensor { shape: shape.to_vec(), data };
-            quant::apply_format(fmt, &t, seed, role, false).data
-        }
-    }
-}
-
-pub(crate) fn col_sums(x: &[f32], cols: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; cols];
-    for row in x.chunks(cols) {
-        for (o, &v) in out.iter_mut().zip(row) {
-            *o += v;
-        }
-    }
-    out
-}
-
-pub(crate) fn get<'a>(ts: &'a NamedTensors, name: &str) -> Result<&'a Tensor> {
-    ts.iter()
-        .find(|(n, _)| n == name)
-        .map(|(_, t)| t)
-        .ok_or_else(|| anyhow::anyhow!("missing tensor {name:?}"))
+    model: GraphModel,
 }
 
 impl NativeBackend {
-    pub(super) fn new(spec: ModelSpec, arch: Arch) -> Self {
-        NativeBackend { spec, arch }
+    pub(super) fn new(spec: ModelSpec, model: GraphModel) -> Self {
+        NativeBackend { spec, model }
+    }
+
+    /// The layer graph this backend executes (tests and tools may walk
+    /// it; training state still lives in [`ModelState`]).
+    pub fn graph(&self) -> &GraphModel {
+        &self.model
     }
 
     fn batch_of(&self, x: &[f32], y: &[f32]) -> Result<usize> {
@@ -126,265 +64,35 @@ impl NativeBackend {
         Ok(b)
     }
 
-    /// Loss + gradients (in trainable order) under the given activation /
-    /// error formats. Pass `QuantFormat::None` for both to differentiate
-    /// the full-precision objective (the grad-norm eval path).
-    fn grads(
+    /// Eval forward with an explicit activation format and statistics
+    /// mode — shared by the plain eval (the spec's Q_A, nearest-rounded),
+    /// the SWA batch-stats eval, and `eval_flex` (Fig. 3 right).
+    #[allow(clippy::too_many_arguments)]
+    fn eval_with(
         &self,
-        tr: &NamedTensors,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
         x: &[f32],
         y: &[f32],
-        b: usize,
         a_fmt: &QuantFormat,
-        e_fmt: &QuantFormat,
-        step: u64,
-    ) -> Result<(f64, NamedTensors)> {
-        match self.arch {
-            Arch::LinReg { d } => {
-                let w = get(tr, "w")?;
-                // residuals r_i = w·x_i − y_i
-                let mut r = vec![0.0f32; b];
-                gemm::matmul(x, &w.data, b, d, 1, &mut r);
-                let mut loss = 0.0f64;
-                for (ri, &yi) in r.iter_mut().zip(y) {
-                    *ri -= yi;
-                    loss += (*ri as f64) * (*ri as f64);
-                }
-                loss /= b as f64;
-                // g = (2/B)·Xᵀr
-                let mut g = vec![0.0f32; d];
-                gemm::matmul_at_b(x, &r, b, d, 1, &mut g);
-                let c = 2.0 / b as f32;
-                for v in g.iter_mut() {
-                    *v *= c;
-                }
-                Ok((loss, vec![("w".to_string(), Tensor::new(vec![d], g)?)]))
-            }
-            Arch::LogReg { d, classes, lam } => {
-                let w = get(tr, "w")?;
-                let bias = get(tr, "b")?;
-                let site = site_id("logits");
-                // logits = Q_A(x·w + b): bias and quantizer fused into
-                // the GEMM epilogue (bit-identical to the separate pass)
-                let mut z = vec![0.0f32; b * classes];
-                gemm::matmul_into_quant(
-                    x,
-                    &w.data,
-                    b,
-                    d,
-                    classes,
-                    &mut z,
-                    &Epilogue {
-                        bias: Some(&bias.data),
-                        relu: false,
-                        quant: Some(FusedQuant {
-                            fmt: a_fmt,
-                            seed: seed_for(step, site, TAG_A),
-                            rng_base: 0,
-                        }),
-                    },
-                );
-                let ce = kernels::softmax_ce(&z, y, b, classes, 1.0 / b as f32);
-                let reg: f64 = 0.5 * lam as f64 * w.sq_norm();
-                let loss = ce.loss_sum / b as f64 + reg;
-                let e = quant_buf(
-                    e_fmt,
-                    ce.dlogits,
-                    &[b, classes],
-                    seed_for(step, site, TAG_E),
-                    Role::Err,
-                );
-                let mut gw = vec![0.0f32; d * classes];
-                gemm::matmul_at_b(x, &e, b, d, classes, &mut gw);
-                for (g, &wv) in gw.iter_mut().zip(&w.data) {
-                    *g += lam * wv;
-                }
-                let gb = col_sums(&e, classes);
-                Ok((
-                    loss,
-                    vec![
-                        ("b".to_string(), Tensor::new(vec![classes], gb)?),
-                        ("w".to_string(), Tensor::new(vec![d, classes], gw)?),
-                    ],
-                ))
-            }
-            Arch::Mlp { d_in, hidden, classes } => {
-                let w1 = get(tr, "fc1.w")?;
-                let b1 = get(tr, "fc1.b")?;
-                let w2 = get(tr, "fc2.w")?;
-                let b2 = get(tr, "fc2.b")?;
-                let site = site_id("fc1.act");
-                // forward: the bias rides the GEMM epilogue; the ReLU +
-                // Q_A stay separate because the backward pass needs the
-                // pre-activation z1
-                let mut z1 = vec![0.0f32; b * hidden];
-                gemm::matmul_into_quant(
-                    x,
-                    &w1.data,
-                    b,
-                    d_in,
-                    hidden,
-                    &mut z1,
-                    &Epilogue { bias: Some(&b1.data), relu: false, quant: None },
-                );
-                let mut a1 = z1.clone();
-                kernels::relu(&mut a1);
-                let a1 = quant_buf(
-                    a_fmt,
-                    a1,
-                    &[b, hidden],
-                    seed_for(step, site, TAG_A),
-                    Role::Act,
-                );
-                let mut z2 = vec![0.0f32; b * classes];
-                gemm::matmul_into_quant(
-                    &a1,
-                    &w2.data,
-                    b,
-                    hidden,
-                    classes,
-                    &mut z2,
-                    &Epilogue { bias: Some(&b2.data), relu: false, quant: None },
-                );
-                let ce = kernels::softmax_ce(&z2, y, b, classes, 1.0 / b as f32);
-                let loss = ce.loss_sum / b as f64;
-                // backward: Q_E fuses into the E·Wᵀ backprop GEMM
-                let gb2 = col_sums(&ce.dlogits, classes);
-                let mut gw2 = vec![0.0f32; hidden * classes];
-                gemm::matmul_at_b(&a1, &ce.dlogits, b, hidden, classes, &mut gw2);
-                let mut e = vec![0.0f32; b * hidden];
-                gemm::matmul_a_bt_into_quant(
-                    &ce.dlogits,
-                    &w2.data,
-                    b,
-                    classes,
-                    hidden,
-                    &mut e,
-                    &Epilogue {
-                        bias: None,
-                        relu: false,
-                        quant: Some(FusedQuant {
-                            fmt: e_fmt,
-                            seed: seed_for(step, site, TAG_E),
-                            rng_base: 0,
-                        }),
-                    },
-                );
-                kernels::relu_backward(&mut e, &z1);
-                let gb1 = col_sums(&e, hidden);
-                let mut gw1 = vec![0.0f32; d_in * hidden];
-                gemm::matmul_at_b(x, &e, b, d_in, hidden, &mut gw1);
-                Ok((
-                    loss,
-                    vec![
-                        ("fc1.b".to_string(), Tensor::new(vec![hidden], gb1)?),
-                        ("fc1.w".to_string(), Tensor::new(vec![d_in, hidden], gw1)?),
-                        ("fc2.b".to_string(), Tensor::new(vec![classes], gb2)?),
-                        ("fc2.w".to_string(), Tensor::new(vec![hidden, classes], gw2)?),
-                    ],
-                ))
-            }
-            Arch::Conv(ref net) => {
-                let (logits, caches) = net.forward(tr, x, b, a_fmt, step, true)?;
-                let ce = kernels::softmax_ce(&logits, y, b, net.classes, 1.0 / b as f32);
-                let loss = ce.loss_sum / b as f64;
-                let grads = net.backward(tr, caches, ce.dlogits, b, e_fmt, step)?;
-                Ok((loss, grads))
-            }
-        }
-    }
-
-    /// Forward pass + (loss, metric) with eval-time activation
-    /// quantization (nearest rounding, step 0 — graphs.py eval_cfg).
-    fn eval_forward(&self, tr: &NamedTensors, x: &[f32], y: &[f32], b: usize) -> Result<(f64, f64)> {
-        self.eval_forward_with(tr, x, y, b, &self.spec.quant.a.nearest())
-    }
-
-    /// Eval forward with an explicit activation format — shared by the
-    /// plain eval (the spec's Q_A, nearest-rounded) and `eval_flex`
-    /// (Fig. 3 right: W_SWA-bit Small-block BFP on activations).
-    fn eval_forward_with(
-        &self,
-        tr: &NamedTensors,
-        x: &[f32],
-        y: &[f32],
-        b: usize,
-        a_fmt: &QuantFormat,
-    ) -> Result<(f64, f64)> {
-        match self.arch {
-            Arch::LinReg { d } => {
-                let w = get(tr, "w")?;
-                let mut r = vec![0.0f32; b];
-                gemm::matmul(x, &w.data, b, d, 1, &mut r);
-                let mut sq = 0.0f64;
-                for (ri, &yi) in r.iter_mut().zip(y) {
-                    *ri -= yi;
-                    sq += (*ri as f64) * (*ri as f64);
-                }
-                // loss = mean squared error, metric = squared-error sum
-                Ok((sq / b as f64, sq))
-            }
-            Arch::LogReg { d, classes, lam } => {
-                let w = get(tr, "w")?;
-                let bias = get(tr, "b")?;
-                let mut z = vec![0.0f32; b * classes];
-                gemm::matmul_into_quant(
-                    x,
-                    &w.data,
-                    b,
-                    d,
-                    classes,
-                    &mut z,
-                    &Epilogue {
-                        bias: Some(&bias.data),
-                        relu: false,
-                        quant: Some(FusedQuant { fmt: a_fmt, seed: 0, rng_base: 0 }),
-                    },
-                );
-                let ce = kernels::softmax_ce(&z, y, b, classes, 1.0);
-                let loss = ce.loss_sum / b as f64 + 0.5 * lam as f64 * w.sq_norm();
-                Ok((loss, ce.errors))
-            }
-            Arch::Mlp { d_in, hidden, classes } => {
-                let w1 = get(tr, "fc1.w")?;
-                let b1 = get(tr, "fc1.b")?;
-                let w2 = get(tr, "fc2.w")?;
-                let b2 = get(tr, "fc2.b")?;
-                // eval keeps no caches, so bias + ReLU + Q_A all fuse
-                // into the fc1 GEMM epilogue
-                let mut a1 = vec![0.0f32; b * hidden];
-                gemm::matmul_into_quant(
-                    x,
-                    &w1.data,
-                    b,
-                    d_in,
-                    hidden,
-                    &mut a1,
-                    &Epilogue {
-                        bias: Some(&b1.data),
-                        relu: true,
-                        quant: Some(FusedQuant { fmt: a_fmt, seed: 0, rng_base: 0 }),
-                    },
-                );
-                let mut z2 = vec![0.0f32; b * classes];
-                gemm::matmul_into_quant(
-                    &a1,
-                    &w2.data,
-                    b,
-                    hidden,
-                    classes,
-                    &mut z2,
-                    &Epilogue { bias: Some(&b2.data), relu: false, quant: None },
-                );
-                let ce = kernels::softmax_ce(&z2, y, b, classes, 1.0);
-                Ok((ce.loss_sum / b as f64, ce.errors))
-            }
-            Arch::Conv(ref net) => {
-                let (logits, _) = net.forward(tr, x, b, a_fmt, 0, false)?;
-                let ce = kernels::softmax_ce(&logits, y, b, net.classes, 1.0);
-                Ok((ce.loss_sum / b as f64, ce.errors))
-            }
-        }
+        mode: Mode,
+        want_grad_norm: bool,
+        panel_cache: Option<&PanelCache>,
+    ) -> Result<EvalOut> {
+        let b = self.batch_of(x, y)?;
+        let none = QuantFormat::None;
+        let q = QCtx { a_fmt, e_fmt: &none, step: 0, mode, panel_cache };
+        let (loss, metric) = self.model.eval_batch(&q, trainable, state, x, y, b)?;
+        // Fig. 2 (middle): logreg eval also reports ‖∇f‖² of the
+        // FULL-PRECISION objective at this iterate
+        let grad_norm_sq = if want_grad_norm && self.model.track_grad_norm {
+            let q = QCtx { a_fmt: &none, e_fmt: &none, step: 0, mode: Mode::Train, panel_cache };
+            let tg = self.model.train_grads(&q, trainable, state, x, y, b)?;
+            Some(tg.grads.iter().map(|(_, t)| t.sq_norm()).sum())
+        } else {
+            None
+        };
+        Ok(EvalOut { loss, metric, grad_norm_sq })
     }
 }
 
@@ -394,34 +102,9 @@ impl ModelBackend for NativeBackend {
     }
 
     fn init(&self, seed: u64) -> Result<ModelState> {
-        let mut trainable: NamedTensors = match self.arch {
-            Arch::LinReg { d } => vec![("w".to_string(), Tensor::zeros(&[d]))],
-            Arch::LogReg { d, classes, .. } => vec![
-                ("b".to_string(), Tensor::zeros(&[classes])),
-                ("w".to_string(), Tensor::zeros(&[d, classes])),
-            ],
-            Arch::Mlp { d_in, hidden, classes } => {
-                // He-normal dense init: every u64 seed is its own stream
-                let mut rng = StreamRng::new(seed);
-                let mut he = |fan_in: usize, fan_out: usize| -> Tensor {
-                    let std = (2.0 / fan_in as f32).sqrt();
-                    let data = (0..fan_in * fan_out).map(|_| rng.normal() * std).collect();
-                    Tensor { shape: vec![fan_in, fan_out], data }
-                };
-                let w1 = he(d_in, hidden);
-                let w2 = he(hidden, classes);
-                vec![
-                    ("fc1.b".to_string(), Tensor::zeros(&[hidden])),
-                    ("fc1.w".to_string(), w1),
-                    ("fc2.b".to_string(), Tensor::zeros(&[classes])),
-                    ("fc2.w".to_string(), w2),
-                ]
-            }
-            Arch::Conv(ref net) => {
-                let mut rng = StreamRng::new(seed);
-                net.init(&mut rng)
-            }
-        };
+        // every u64 seed is its own stream; zero-init layers draw nothing
+        let mut rng = StreamRng::new(seed);
+        let mut trainable = self.model.init_params(&mut rng);
         // w_0 starts on the low-precision grid (quantize_params, step 0)
         let qw = &self.spec.quant.w;
         if !qw.is_none() {
@@ -434,7 +117,7 @@ impl ModelBackend for NativeBackend {
             .iter()
             .map(|(n, t)| (n.clone(), Tensor::zeros(&t.shape)))
             .collect();
-        Ok(ModelState { trainable, state: vec![], momentum })
+        Ok(ModelState { trainable, state: self.model.init_state(), momentum })
     }
 
     fn train_step(
@@ -447,7 +130,9 @@ impl ModelBackend for NativeBackend {
     ) -> Result<f64> {
         let b = self.batch_of(x, y)?;
         let q = &self.spec.quant;
-        let (loss, mut grads) = self.grads(&ms.trainable, x, y, b, &q.a, &q.e, step)?;
+        let qctx = QCtx::new(&q.a, &q.e, step, Mode::Train);
+        let out = self.model.train_grads(&qctx, &ms.trainable, &ms.state, x, y, b)?;
+        let (loss, mut grads) = (out.loss, out.grads);
         // weight decay folded into the gradient before Q_G (classic SGD-WD)
         let wd = self.spec.weight_decay as f32;
         if wd > 0.0 {
@@ -497,35 +182,83 @@ impl ModelBackend for NativeBackend {
                 *v = vn;
             }
         }
+        // fold the BatchNorm running-statistics updates into the state
+        for (name, t) in out.state_updates {
+            match ms.state.binary_search_by(|(n, _)| n.as_str().cmp(&name)) {
+                Ok(i) => ms.state[i].1 = t,
+                Err(_) => bail!("state update for unknown tensor {name:?}"),
+            }
+        }
         Ok(loss)
     }
 
     fn eval(
         &self,
         trainable: &NamedTensors,
-        _state: &NamedTensors,
+        state: &NamedTensors,
         x: &[f32],
         y: &[f32],
     ) -> Result<EvalOut> {
-        let b = self.batch_of(x, y)?;
-        let (loss, metric) = self.eval_forward(trainable, x, y, b)?;
-        // Fig. 2 (middle): logreg eval also reports ‖∇f‖² of the
-        // FULL-PRECISION objective at this iterate
-        let grad_norm_sq = if matches!(self.arch, Arch::LogReg { .. }) {
-            let (_, g) = self.grads(
-                trainable,
-                x,
-                y,
-                b,
-                &QuantFormat::None,
-                &QuantFormat::None,
-                0,
-            )?;
-            Some(g.iter().map(|(_, t)| t.sq_norm()).sum())
-        } else {
-            None
-        };
-        Ok(EvalOut { loss, metric, grad_norm_sq })
+        // eval-time activation quantization: nearest rounding, step 0
+        // (graphs.py eval_cfg)
+        self.eval_with(
+            trainable,
+            state,
+            x,
+            y,
+            &self.spec.quant.a.nearest(),
+            Mode::Eval,
+            true,
+            None,
+        )
+    }
+
+    /// Batch-statistics eval: BatchNorm layers renormalize from the eval
+    /// batch (Izmailov et al.'s bn_update equivalent) — required for SWA
+    /// weight averages whose running stats were collected under
+    /// different weights. Identical to [`Self::eval`] for BN-free models.
+    fn eval_batch_stats(
+        &self,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<EvalOut> {
+        self.eval_with(
+            trainable,
+            state,
+            x,
+            y,
+            &self.spec.quant.a.nearest(),
+            Mode::EvalBatchStats,
+            true,
+            None,
+        )
+    }
+
+    /// Cached eval-set entry: packed weight GEMM panels are reused
+    /// across the batches sharing `cache` (the trainer's eval loops).
+    fn eval_batch_cached(
+        &self,
+        cache: &EvalCache,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+        batch_stats: bool,
+    ) -> Result<EvalOut> {
+        let pc: &PanelCache = cache.get_or_init(PanelCache::new);
+        let mode = if batch_stats { Mode::EvalBatchStats } else { Mode::Eval };
+        self.eval_with(
+            trainable,
+            state,
+            x,
+            y,
+            &self.spec.quant.a.nearest(),
+            mode,
+            true,
+            Some(pc),
+        )
     }
 
     /// Fig. 3 (right): evaluate with activations quantized to `act_wl`-bit
@@ -535,12 +268,11 @@ impl ModelBackend for NativeBackend {
     fn eval_flex(
         &self,
         trainable: &NamedTensors,
-        _state: &NamedTensors,
+        state: &NamedTensors,
         x: &[f32],
         y: &[f32],
         act_wl: f32,
     ) -> Result<EvalOut> {
-        let b = self.batch_of(x, y)?;
         let fmt = if act_wl >= 1.0 {
             QuantFormat::Bfp {
                 wl: act_wl as u32,
@@ -551,7 +283,6 @@ impl ModelBackend for NativeBackend {
         } else {
             QuantFormat::None
         };
-        let (loss, metric) = self.eval_forward_with(trainable, x, y, b, &fmt)?;
-        Ok(EvalOut { loss, metric, grad_norm_sq: None })
+        self.eval_with(trainable, state, x, y, &fmt, Mode::Eval, false, None)
     }
 }

@@ -53,11 +53,16 @@
 //!     bias: None,
 //!     relu: false,
 //!     quant: Some(FusedQuant { fmt: &fmt, seed: 7, rng_base: 0 }),
+//!     b_cache: None,
 //! };
 //! gemm::matmul_into_quant(&a, &b, m, k, n, &mut out, &ep);
 //! // 0.5 · 0.25 · 3 = 0.375 sits on the 2⁻⁶ grid already
 //! assert!(out.iter().all(|&v| v == 0.375));
 //! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::quant::{bfp, fixed, QuantFormat};
 
@@ -88,7 +93,7 @@ const GEMM_MIN_MACS: usize = 64 * 1024;
 /// shares one exponent per output row (`block_axes_for(Act|Err, 2) =
 /// [0]`), Big-block BFP one exponent for the whole tensor. Counters are
 /// `rng_base + flat index`, matching a separate quantization pass over
-/// the full buffer (callers mirroring `quant_buf` pass `rng_base: 0`).
+/// the full buffer (callers mirroring a separate `apply_format_owned` pass use `rng_base: 0`).
 pub struct FusedQuant<'a> {
     pub fmt: &'a QuantFormat,
     pub seed: u32,
@@ -105,6 +110,90 @@ pub struct Epilogue<'a> {
     /// `max(x, 0)` with the same `< 0` test as [`kernels::relu`].
     pub relu: bool,
     pub quant: Option<FusedQuant<'a>>,
+    /// Memoize B's packed panels in this caller-owned [`PanelCache`].
+    /// Only pass a cache when the B buffer is **cache-stable**: alive
+    /// and unmodified for the cache's entire lifetime (model weights
+    /// during one eval set). `None` (the default) packs fresh panels.
+    pub b_cache: Option<&'a PanelCache>,
+}
+
+// ---------------------------------------------------------------------
+// packed-B panel cache
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct PanelKey {
+    ptr: usize,
+    len: usize,
+    rs: usize,
+    cs: usize,
+    k: usize,
+    n: usize,
+}
+
+/// A caller-owned memo of packed B panels, keyed by the B buffer's
+/// identity (pointer, length, strides, k, n).
+///
+/// Weights used to be repacked into B panels on every GEMM call. Within
+/// a training step each weight is contracted once per orientation, so
+/// there is nothing to reuse — but an eval pass runs the same weights
+/// against every batch of the eval set. The trainer owns one
+/// `PanelCache` per eval set (through `runtime::EvalCache`) and threads
+/// it down to the weight GEMMs.
+///
+/// The cache is deliberately **an explicit object owned by one logical
+/// task**, not thread-local state: the vendored pool's help-first wait
+/// runs *other tasks'* jobs on a waiting thread, so anything keyed to
+/// the thread could be polluted by a stolen task whose buffers are then
+/// freed (a pointer-key ABA). With an owned cache, only call sites that
+/// were handed the object can touch it.
+///
+/// Safety/ABA: the key includes a raw pointer, so every cached B must
+/// outlive the cache — that is the `b_cache` contract (the layers pass
+/// a cache only for weight tensors, and the trainer drops the cache
+/// with the eval set while the weight borrows are still held).
+/// Temporaries (im2col buffers, cotangents) are never cached, so a
+/// freed-and-reallocated buffer can never alias a cached key. Reuse
+/// returns the identical packed bytes the packing routine would
+/// produce, so cached and uncached runs are bit-identical by
+/// construction.
+#[derive(Default)]
+pub struct PanelCache {
+    map: Mutex<HashMap<PanelKey, Arc<Vec<Panel>>>>,
+    hits: AtomicU64,
+}
+
+impl PanelCache {
+    pub fn new() -> PanelCache {
+        PanelCache::default()
+    }
+
+    /// Panel reuses served by this cache (test observability).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+}
+
+/// Pack (or fetch) the B panels for this contraction.
+fn panels_for(b: View, k: usize, n: usize, cache: Option<&PanelCache>) -> Arc<Vec<Panel>> {
+    let Some(pc) = cache else {
+        return Arc::new(pack_b_panels(b, k, n));
+    };
+    let key = PanelKey {
+        ptr: b.data.as_ptr() as usize,
+        len: b.data.len(),
+        rs: b.rs,
+        cs: b.cs,
+        k,
+        n,
+    };
+    if let Some(p) = pc.map.lock().unwrap().get(&key).cloned() {
+        pc.hits.fetch_add(1, Ordering::Relaxed);
+        return p;
+    }
+    let packed = Arc::new(pack_b_panels(b, k, n));
+    pc.map.lock().unwrap().insert(key, packed.clone());
+    packed
 }
 
 /// out[m,n] = a[m,k] @ b[k,n], blocked + pool-parallel. Bit-identical to
@@ -390,16 +479,16 @@ fn blocked(
         finish_small(out, n, ep);
         return;
     }
-    let panels = pack_b_panels(b, k, n);
+    let panels_arc = panels_for(b, k, n, ep.b_cache);
+    let panels: &[Panel] = &panels_arc;
     if force_serial || rayon::current_num_threads() <= 1 || m < 2 {
-        gemm_rows(a, &panels, n, 0, m, out, ep);
+        gemm_rows(a, panels, n, 0, m, out, ep);
     } else {
         // Row-only split via the shared partition helper, rounded up to
         // whole MR strips. Any row split yields the same bits (each row
         // is computed whole by one thread); the alignment merely avoids
         // half-empty edge strips at chunk seams.
         let chunk = kernels::rows_per_chunk(m).next_multiple_of(MR);
-        let panels = &panels;
         rayon::scope(|s| {
             for (ci, oc) in out.chunks_mut(chunk * n).enumerate() {
                 s.spawn(move |_| {
@@ -549,6 +638,7 @@ mod tests {
             bias: Some(&bias),
             relu: true,
             quant: Some(FusedQuant { fmt: &fmt, seed: 99, rng_base: 0 }),
+            b_cache: None,
         };
         matmul_into_quant(&a, &b, m, k, n, &mut got, &ep);
         assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
@@ -574,6 +664,7 @@ mod tests {
                 bias: None,
                 relu: false,
                 quant: Some(FusedQuant { fmt: &fmt, seed: 7, rng_base: base }),
+                b_cache: None,
             };
             matmul_into_quant(&a, &b, m, k, n, &mut got, &ep);
             assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
@@ -588,9 +679,43 @@ mod tests {
             bias: None,
             relu: false,
             quant: Some(FusedQuant { fmt: &fmt, seed: 1, rng_base: 1 }),
+            b_cache: None,
         };
         let mut out = [0.0f32; 2];
         matmul_into_quant(&[1.0, 2.0], &[3.0, 4.0, 5.0, 6.0], 1, 2, 2, &mut out, &ep);
+    }
+
+    #[test]
+    fn panel_cache_reuses_panels_bit_identically() {
+        // above GEMM_MIN_MACS so the blocked path (and packing) runs
+        let (m, k, n) = (65, 65, 33);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i % 19) as f32 - 9.0) * 0.11).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i % 23) as f32 - 11.0) * 0.07).collect();
+
+        // uncached reference
+        let mut want = vec![0.0f32; m * n];
+        matmul_into_quant(&a, &b, m, k, n, &mut want, &Epilogue::default());
+
+        let cache = PanelCache::new();
+        let ep = Epilogue { bias: None, relu: false, quant: None, b_cache: Some(&cache) };
+        let mut g1 = vec![0.0f32; m * n];
+        matmul_into_quant(&a, &b, m, k, n, &mut g1, &ep);
+        assert_eq!(cache.hits(), 0, "first call packs fresh panels");
+        let mut g2 = vec![0.0f32; m * n];
+        matmul_into_quant(&a, &b, m, k, n, &mut g2, &ep);
+        assert_eq!(cache.hits(), 1, "second call must reuse the cached panels");
+        assert!(g1.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(g2.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        // a different orientation of the same buffer is a different key
+        let bt: Vec<f32> = (0..n * k).map(|i| ((i % 29) as f32 - 14.0) * 0.05).collect();
+        let mut want_bt = vec![0.0f32; m * n];
+        matmul_a_bt_into_quant(&a, &bt, m, k, n, &mut want_bt, &Epilogue::default());
+        let ep_bt = Epilogue { bias: None, relu: false, quant: None, b_cache: Some(&cache) };
+        let mut got_bt = vec![0.0f32; m * n];
+        matmul_a_bt_into_quant(&a, &bt, m, k, n, &mut got_bt, &ep_bt);
+        assert_eq!(cache.hits(), 1, "new operand must not hit");
+        assert!(got_bt.iter().zip(&want_bt).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! The flat layers: [`Dense`] (fully connected, bias fused into the
+//! GEMM epilogue), [`Relu`] (ReLU + Q_A/Q_E site) and [`QuantSite`] (a
+//! bare Q_A/Q_E site, e.g. logreg's `"logits"`).
+//!
+//! Bit-compatibility notes: a `Dense` GEMM runs on the blocked engine
+//! with the bias fused ([`gemm::matmul_into_quant`]); Q_A/Q_E at the
+//! sites apply as a separate positional-counter pass, which the GEMM
+//! parity tests pin bit-identical to the fused epilogue the old
+//! monolith used on the dense models.
+
+use anyhow::{bail, Result};
+
+use crate::quant::{self, spec::Role};
+use crate::rng::StreamRng;
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::super::gemm::{self, Epilogue};
+use super::super::kernels;
+use super::{col_sums, expect_flat, idx_of, Act, LayerCache, LayerCtx, QLayer, Tape};
+
+/// Fully connected layer `z = x·W (+ b)`.
+///
+/// Parameter names follow the registry convention: `{name}.w` /
+/// `{name}.b`, or bare `w` / `b` when the name is empty (the linreg and
+/// logreg single-layer models).
+pub struct Dense {
+    w_name: String,
+    b_name: String,
+    d_in: usize,
+    d_out: usize,
+    bias: bool,
+    /// Weight stored rank-1 `[d_in]` (linreg's vector weight) instead of
+    /// `[d_in, d_out]`; the data layout is identical.
+    vec_w: bool,
+    he_init: bool,
+    l2: f32,
+    w_idx: usize,
+    b_idx: usize,
+}
+
+impl Dense {
+    fn named(name: &str, d_in: usize, d_out: usize, bias: bool, he_init: bool) -> Dense {
+        let (w_name, b_name) = if name.is_empty() {
+            ("w".to_string(), "b".to_string())
+        } else {
+            (format!("{name}.w"), format!("{name}.b"))
+        };
+        Dense {
+            w_name,
+            b_name,
+            d_in,
+            d_out,
+            bias,
+            vec_w: false,
+            he_init,
+            l2: 0.0,
+            w_idx: usize::MAX,
+            b_idx: usize::MAX,
+        }
+    }
+
+    /// He-normal weights, zero bias (the MLP / conv-head layers).
+    pub fn he(name: &str, d_in: usize, d_out: usize) -> Dense {
+        Dense::named(name, d_in, d_out, true, true)
+    }
+
+    /// Zero-initialized weights and bias (the convex models).
+    pub fn zeros(name: &str, d_in: usize, d_out: usize) -> Dense {
+        Dense::named(name, d_in, d_out, true, false)
+    }
+
+    /// Linreg's weight: a bare `w` vector `[d_in]`, no bias, zero init.
+    pub fn vector(d_in: usize) -> Dense {
+        let mut d = Dense::named("", d_in, 1, false, false);
+        d.vec_w = true;
+        d
+    }
+
+    /// Attach an L2 term `0.5·λ·‖W‖²` (weights only, like the logreg
+    /// objective): added to the loss and as `λ·W` to the weight gradient
+    /// before Q_G.
+    pub fn l2(mut self, lam: f32) -> Dense {
+        self.l2 = lam;
+        self
+    }
+
+    fn w_shape(&self) -> Vec<usize> {
+        if self.vec_w {
+            vec![self.d_in]
+        } else {
+            vec![self.d_in, self.d_out]
+        }
+    }
+}
+
+impl QLayer for Dense {
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        if self.bias {
+            out.push((self.b_name.clone(), vec![self.d_out]));
+        }
+        out.push((self.w_name.clone(), self.w_shape()));
+    }
+
+    fn init(&self, rng: &mut StreamRng, out: &mut NamedTensors) {
+        if self.bias {
+            out.push((self.b_name.clone(), Tensor::zeros(&[self.d_out])));
+        }
+        let w = if self.he_init {
+            // He-normal: std = sqrt(2 / fan_in), draws in declaration order
+            let std = (2.0 / self.d_in as f32).sqrt();
+            let data = (0..self.d_in * self.d_out).map(|_| rng.normal() * std).collect();
+            Tensor { shape: self.w_shape(), data }
+        } else {
+            Tensor::zeros(&self.w_shape())
+        };
+        out.push((self.w_name.clone(), w));
+    }
+
+    fn resolve(&mut self, tr_names: &[String], _state_names: &[String]) {
+        self.w_idx = idx_of(tr_names, &self.w_name);
+        self.b_idx = idx_of(tr_names, &self.b_name);
+    }
+
+    fn reg_loss(&self, tr: &super::Params) -> Result<Option<f64>> {
+        if self.l2 == 0.0 {
+            return Ok(None);
+        }
+        let w = tr.at(self.w_idx, &self.w_name)?;
+        Ok(Some(0.5 * self.l2 as f64 * w.sq_norm()))
+    }
+
+    fn has_reg(&self) -> bool {
+        self.l2 != 0.0
+    }
+
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        expect_flat(&act, self.d_in, &self.w_name)?;
+        let w = cx.tr.at(self.w_idx, &self.w_name)?;
+        let bias_t = if self.bias { Some(cx.tr.at(self.b_idx, &self.b_name)?) } else { None };
+        let mut z = vec![0.0f32; act.b * self.d_out];
+        gemm::matmul_into_quant(
+            &act.data,
+            &w.data,
+            act.b,
+            self.d_in,
+            self.d_out,
+            &mut z,
+            &Epilogue {
+                bias: bias_t.map(|t| t.data.as_slice()),
+                relu: false,
+                quant: None,
+                // weight panels reuse the caller's eval cache, if any
+                b_cache: cx.q.panel_cache,
+            },
+        );
+        if cx.q.train() {
+            tape.caches.push(LayerCache::Dense { input: act.data });
+        }
+        Ok(Act::flat(act.b, self.d_out, z))
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Dense { input } = cache else {
+            bail!("{}: forward/backward cache mismatch", self.w_name);
+        };
+        let w = cx.tr.at(self.w_idx, &self.w_name)?;
+        let b = d.b;
+        let mut gw = vec![0.0f32; self.d_in * self.d_out];
+        gemm::matmul_at_b(&input, &d.data, b, self.d_in, self.d_out, &mut gw);
+        if self.l2 != 0.0 {
+            for (g, &wv) in gw.iter_mut().zip(&w.data) {
+                *g += self.l2 * wv;
+            }
+        }
+        grads.push((self.w_name.clone(), Tensor::new(self.w_shape(), gw)?));
+        if self.bias {
+            let gb = col_sums(&d.data, self.d_out);
+            grads.push((self.b_name.clone(), Tensor::new(vec![self.d_out], gb)?));
+        }
+        if !need_dx {
+            return Ok(Act::flat(b, self.d_in, Vec::new()));
+        }
+        let mut dx = vec![0.0f32; b * self.d_in];
+        gemm::matmul_a_bt(&d.data, &w.data, b, self.d_out, self.d_in, &mut dx);
+        Ok(Act::flat(b, self.d_in, dx))
+    }
+}
+
+/// ReLU followed by the named Q_A (forward) / Q_E (backward) site.
+pub struct Relu {
+    site: String,
+}
+
+impl Relu {
+    pub fn site(site: &str) -> Relu {
+        Relu { site: site.into() }
+    }
+}
+
+impl QLayer for Relu {
+    fn forward(&self, cx: &LayerCtx, mut act: Act, tape: &mut Tape) -> Result<Act> {
+        let pre = if cx.q.train() { act.data.clone() } else { Vec::new() };
+        kernels::relu(&mut act.data);
+        let rows = act.rows();
+        act.data = quant::apply_format_owned(
+            cx.q.a_fmt,
+            act.data,
+            &[rows, act.ch],
+            cx.q.act_seed(&self.site),
+            Role::Act,
+            false,
+        );
+        if cx.q.train() {
+            tape.caches.push(LayerCache::Relu { pre });
+        }
+        Ok(act)
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        mut d: Act,
+        cache: LayerCache,
+        _grads: &mut NamedTensors,
+        _need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Relu { pre } = cache else {
+            bail!("relu {}: forward/backward cache mismatch", self.site);
+        };
+        // Q_E on the arriving cotangent, then the ReLU mask — the same
+        // order the monolith used (fused or separate, same bits)
+        let rows = d.rows();
+        d.data = quant::apply_format_owned(
+            cx.q.e_fmt,
+            d.data,
+            &[rows, d.ch],
+            cx.q.err_seed(&self.site),
+            Role::Err,
+            false,
+        );
+        kernels::relu_backward(&mut d.data, &pre);
+        Ok(d)
+    }
+}
+
+/// A bare quantization site: Q_A on the forward activation, Q_E on the
+/// backward cotangent — logreg's `"logits"` site, where the quantizer
+/// sits directly on a layer output with no nonlinearity.
+pub struct QuantSite {
+    site: String,
+}
+
+impl QuantSite {
+    pub fn new(site: &str) -> QuantSite {
+        QuantSite { site: site.into() }
+    }
+}
+
+impl QLayer for QuantSite {
+    fn forward(&self, cx: &LayerCtx, mut act: Act, tape: &mut Tape) -> Result<Act> {
+        let rows = act.rows();
+        act.data = quant::apply_format_owned(
+            cx.q.a_fmt,
+            act.data,
+            &[rows, act.ch],
+            cx.q.act_seed(&self.site),
+            Role::Act,
+            false,
+        );
+        if cx.q.train() {
+            tape.caches.push(LayerCache::None);
+        }
+        Ok(act)
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        mut d: Act,
+        cache: LayerCache,
+        _grads: &mut NamedTensors,
+        _need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::None = cache else {
+            bail!("site {}: forward/backward cache mismatch", self.site);
+        };
+        let rows = d.rows();
+        d.data = quant::apply_format_owned(
+            cx.q.e_fmt,
+            d.data,
+            &[rows, d.ch],
+            cx.q.err_seed(&self.site),
+            Role::Err,
+            false,
+        );
+        Ok(d)
+    }
+}

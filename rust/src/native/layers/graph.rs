@@ -1,0 +1,310 @@
+//! [`GraphModel`] — a complete model as data: an input adapter, a
+//! sequential stack of [`QLayer`]s and a loss [`Head`]. This is what the
+//! native registry (`native::models` / `native::load`) builds and what
+//! `NativeBackend` executes; the old per-architecture `match` blocks are
+//! gone.
+
+use anyhow::{bail, Result};
+
+use crate::rng::StreamRng;
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::super::kernels;
+use super::spatial::nchw_to_nhwc;
+use super::{backward_stack, forward_stack, Act, LayerCtx, Params, QCtx, QLayer, Tape};
+
+/// How a dataset batch becomes the entry [`Act`].
+pub enum InputKind {
+    /// A flat `[b, d]` feature batch.
+    Flat { d: usize },
+    /// A `[b, ch, hw, hw]` image batch, transposed once to channels-last.
+    Image { ch: usize, hw: usize },
+}
+
+/// The loss head closing the graph.
+pub enum Head {
+    /// Softmax cross-entropy over `classes` logits; eval metric is the
+    /// batch error count.
+    SoftmaxCe { classes: usize },
+    /// Squared error against a scalar target (linear regression):
+    /// loss = Σr²/b, eval metric = Σr², gradient post-scaled by 2/b (the
+    /// mean-squared-error gradient, applied after the backward walk so
+    /// the per-element arithmetic matches the classic Xᵀr·(2/B) order).
+    SumSquares,
+}
+
+/// What one training step's differentiation produces.
+pub struct TrainGrads {
+    pub loss: f64,
+    /// Parameter gradients in sorted-name order (aligned with the
+    /// trainable set).
+    pub grads: NamedTensors,
+    /// BatchNorm running-statistics updates to fold into the model state.
+    pub state_updates: NamedTensors,
+}
+
+pub struct GraphModel {
+    layers: Vec<Box<dyn QLayer>>,
+    pub input: InputKind,
+    pub head: Head,
+    /// Report ‖∇f‖² of the full-precision objective at eval (the logreg
+    /// Fig. 2 middle metric).
+    pub track_grad_norm: bool,
+}
+
+impl GraphModel {
+    /// Build a model and resolve every layer's parameter indices against
+    /// the sorted name lists. Panics on duplicate parameter/state names
+    /// (two layers aliasing one tensor would silently corrupt training)
+    /// and on an L2 term under the SumSquares head (see below).
+    pub fn new(input: InputKind, head: Head, mut layers: Vec<Box<dyn QLayer>>) -> GraphModel {
+        fn sorted_unique_names(specs: Vec<(String, Vec<usize>)>, what: &str) -> Vec<String> {
+            let mut names: Vec<String> = specs.into_iter().map(|(n, _)| n).collect();
+            names.sort();
+            for pair in names.windows(2) {
+                assert!(
+                    pair[0] != pair[1],
+                    "duplicate {what} name {:?}: two layers would alias one tensor",
+                    pair[0]
+                );
+            }
+            names
+        }
+        let tr_names: Vec<String> = {
+            let mut specs = Vec::new();
+            for l in &layers {
+                l.param_specs(&mut specs);
+            }
+            sorted_unique_names(specs, "parameter")
+        };
+        let st_names: Vec<String> = {
+            let mut specs = Vec::new();
+            for l in &layers {
+                l.state_specs(&mut specs);
+            }
+            sorted_unique_names(specs, "state")
+        };
+        for l in layers.iter_mut() {
+            l.resolve(&tr_names, &st_names);
+        }
+        // the SumSquares head scales ALL gradients by 2/b after the
+        // backward walk (the classic Xᵀr·(2/B) order), which would also
+        // scale a λ·w regularization contribution — reject the
+        // combination instead of silently computing (2λ/b)·w
+        if matches!(head, Head::SumSquares) {
+            assert!(
+                !layers.iter().any(|l| l.has_reg()),
+                "Head::SumSquares does not support layers with L2 terms: \
+                 the 2/b gradient post-scale would corrupt λ·w"
+            );
+        }
+        GraphModel { layers, input, head, track_grad_norm: false }
+    }
+
+    pub fn track_grad_norm(mut self) -> GraphModel {
+        self.track_grad_norm = true;
+        self
+    }
+
+    /// Trainable (name, shape) pairs in sorted-name order — the artifact
+    /// calling convention the registry's `ModelSpec` uses.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            l.param_specs(&mut out);
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Non-trainable state (name, shape) pairs in sorted-name order.
+    pub fn state_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            l.state_specs(&mut out);
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Fresh trainables: rng draws happen in layer-declaration order
+    /// (deterministic for a given rng state), the returned set is in
+    /// sorted-name order.
+    pub fn init_params(&self, rng: &mut StreamRng) -> NamedTensors {
+        let mut out = NamedTensors::new();
+        for l in &self.layers {
+            l.init(rng, &mut out);
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Fresh state tensors (BatchNorm running statistics) in sorted-name
+    /// order.
+    pub fn init_state(&self) -> NamedTensors {
+        let mut out = NamedTensors::new();
+        for l in &self.layers {
+            l.init_state(&mut out);
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    fn entry(&self, x: &[f32], b: usize) -> Result<Act> {
+        match self.input {
+            InputKind::Flat { d } => {
+                if x.len() != b * d {
+                    bail!("input length {} != batch {b} × d {d}", x.len());
+                }
+                Ok(Act::flat(b, d, x.to_vec()))
+            }
+            InputKind::Image { ch, hw } => {
+                if x.len() != b * ch * hw * hw {
+                    bail!("input length {} != batch {b} × [{ch},{hw},{hw}]", x.len());
+                }
+                Ok(Act { data: nchw_to_nhwc(x, b, ch, hw, hw), b, h: hw, w: hw, ch })
+            }
+        }
+    }
+
+    /// Forward pass to the head input, validating the output shape.
+    fn forward(
+        &self,
+        q: &QCtx,
+        tr: &[(String, Tensor)],
+        state: &[(String, Tensor)],
+        x: &[f32],
+        b: usize,
+    ) -> Result<(Act, Tape)> {
+        let cx = LayerCtx { q, tr: Params::new(tr), state: Params::new(state) };
+        let mut tape = Tape::default();
+        let act = self.entry(x, b)?;
+        let out = forward_stack(&self.layers, &cx, act, &mut tape)?;
+        match self.head {
+            Head::SoftmaxCe { classes } => {
+                if out.h != 1 || out.w != 1 || out.ch != classes {
+                    bail!(
+                        "model output is [{}x{}x{}], expected logits [{b}, {classes}]",
+                        out.h,
+                        out.w,
+                        out.ch
+                    );
+                }
+            }
+            Head::SumSquares => {
+                if out.h != 1 || out.w != 1 || out.ch != 1 {
+                    bail!(
+                        "model output is [{}x{}x{}], expected a scalar prediction",
+                        out.h,
+                        out.w,
+                        out.ch
+                    );
+                }
+            }
+        }
+        Ok((out, tape))
+    }
+
+    /// Structural L2 sum: `None` when no layer carries a term, so
+    /// regularization-free losses skip the `+ 0.0`.
+    fn reg_sum(&self, tr: Params) -> Result<Option<f64>> {
+        let mut sum: Option<f64> = None;
+        for l in &self.layers {
+            if let Some(r) = l.reg_loss(&tr)? {
+                sum = Some(sum.unwrap_or(0.0) + r);
+            }
+        }
+        Ok(sum)
+    }
+
+    /// Loss + parameter gradients (sorted-name order) + state updates
+    /// under the formats in `q` (pass `QuantFormat::None` in both slots
+    /// to differentiate the full-precision objective — the grad-norm
+    /// eval path). `q.mode` must be [`super::Mode::Train`].
+    pub fn train_grads(
+        &self,
+        q: &QCtx,
+        tr: &[(String, Tensor)],
+        state: &[(String, Tensor)],
+        x: &[f32],
+        y: &[f32],
+        b: usize,
+    ) -> Result<TrainGrads> {
+        let (out, mut tape) = self.forward(q, tr, state, x, b)?;
+        let cx = LayerCtx { q, tr: Params::new(tr), state: Params::new(state) };
+        let mut grads = NamedTensors::new();
+        let loss = match self.head {
+            Head::SoftmaxCe { classes } => {
+                let ce = kernels::softmax_ce(&out.data, y, b, classes, 1.0 / b as f32);
+                let mut loss = ce.loss_sum / b as f64;
+                if let Some(reg) = self.reg_sum(Params::new(tr))? {
+                    loss += reg;
+                }
+                let d = Act::flat(b, classes, ce.dlogits);
+                backward_stack(&self.layers, &cx, d, &mut tape.caches, &mut grads, false)?;
+                loss
+            }
+            Head::SumSquares => {
+                // residuals r = out − y; loss = Σr²/b; cotangent r, with
+                // the 2/b mean-gradient factor applied after the walk
+                let mut r = out.data;
+                let mut loss = 0.0f64;
+                for (ri, &yi) in r.iter_mut().zip(y) {
+                    *ri -= yi;
+                    loss += (*ri as f64) * (*ri as f64);
+                }
+                loss /= b as f64;
+                let d = Act::flat(b, 1, r);
+                backward_stack(&self.layers, &cx, d, &mut tape.caches, &mut grads, false)?;
+                let c = 2.0 / b as f32;
+                for (_, g) in grads.iter_mut() {
+                    for v in g.data.iter_mut() {
+                        *v *= c;
+                    }
+                }
+                loss
+            }
+        };
+        if !tape.caches.is_empty() {
+            bail!(
+                "backward consumed {} fewer caches than forward produced",
+                tape.caches.len()
+            );
+        }
+        grads.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(TrainGrads { loss, grads, state_updates: tape.state_updates })
+    }
+
+    /// One eval batch: (mean loss, metric) — error count for
+    /// classification heads, squared-error sum for regression.
+    pub fn eval_batch(
+        &self,
+        q: &QCtx,
+        tr: &[(String, Tensor)],
+        state: &[(String, Tensor)],
+        x: &[f32],
+        y: &[f32],
+        b: usize,
+    ) -> Result<(f64, f64)> {
+        let (out, _tape) = self.forward(q, tr, state, x, b)?;
+        match self.head {
+            Head::SoftmaxCe { classes } => {
+                let ce = kernels::softmax_ce(&out.data, y, b, classes, 1.0);
+                let mut loss = ce.loss_sum / b as f64;
+                if let Some(reg) = self.reg_sum(Params::new(tr))? {
+                    loss += reg;
+                }
+                Ok((loss, ce.errors))
+            }
+            Head::SumSquares => {
+                let mut r = out.data;
+                let mut sq = 0.0f64;
+                for (ri, &yi) in r.iter_mut().zip(y) {
+                    *ri -= yi;
+                    sq += (*ri as f64) * (*ri as f64);
+                }
+                Ok((sq / b as f64, sq))
+            }
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! The composable quantized-layer API: [`QLayer`] + the sequential /
+//! residual graph walkers that replaced the closed `Arch` enum and the
+//! hand-wired `ConvNet` interpreter.
+//!
+//! A model is a [`graph::GraphModel`]: an input adapter, a stack of
+//! boxed [`QLayer`]s and a loss [`graph::Head`] — all **data**, declared
+//! in `native::models`. SWALP's Algorithm 2 is architecture-generic: it
+//! quantizes activations (Q_A), errors (Q_E), gradients (Q_G), weights
+//! (Q_W) and momentum (Q_M) at named *sites*, independent of what the
+//! layers compute. The layer contract mirrors that:
+//!
+//! * **Sites, not layers, own randomness.** Every stochastic
+//!   quantization event derives its seed from `(step, site_id, tag)`
+//!   through [`seed_for`]; a layer that hosts a Q_A/Q_E site carries the
+//!   site *name* and asks the shared [`QCtx`] for the seed. Two models
+//!   that use the same site names produce the same rounding streams.
+//! * **Forward writes a tape, backward consumes it.** `forward` pushes
+//!   exactly one [`LayerCache`] per layer in train mode (and any
+//!   BatchNorm running-statistics updates); `backward` pops its cache
+//!   and pushes its parameter gradients. The graph sorts gradients into
+//!   the sorted-name artifact convention at the end.
+//! * **Parameters resolve by index.** Layer parameter names are resolved
+//!   once against the sorted parameter list ([`QLayer::resolve`]); the
+//!   per-step lookup is an O(1) indexed access with a name check
+//!   ([`Params::at`]), not a linear scan — deep stacks no longer pay
+//!   quadratic name resolution.
+//!
+//! Adding a layer means implementing `param_specs`/`init`/`forward`/
+//! `backward` (~50 lines for a typical elementwise or single-GEMM layer
+//! — see `docs/ARCHITECTURE.md` for a walkthrough); the quantization
+//! sites, seeding, fused-GEMM engine and SWA plumbing come for free.
+//!
+//! ```
+//! use swalp::native::layers::{Dense, GraphModel, Head, InputKind, Mode, QCtx, Relu};
+//! use swalp::quant::QuantFormat;
+//! use swalp::rng::StreamRng;
+//!
+//! // a small Sequential model: Dense -> ReLU (Q_A/Q_E site) -> Dense
+//! let model = GraphModel::new(
+//!     InputKind::Flat { d: 8 },
+//!     Head::SoftmaxCe { classes: 3 },
+//!     vec![
+//!         Box::new(Dense::he("fc1", 8, 16)),
+//!         Box::new(Relu::site("fc1.act")),
+//!         Box::new(Dense::he("fc2", 16, 3)),
+//!     ],
+//! );
+//! // parameters come out in sorted-name order (the artifact convention)
+//! let names: Vec<_> = model.param_specs().into_iter().map(|(n, _)| n).collect();
+//! assert_eq!(names, ["fc1.b", "fc1.w", "fc2.b", "fc2.w"]);
+//!
+//! // run one full-precision forward/backward through the graph
+//! let tr = model.init_params(&mut StreamRng::new(1));
+//! let q = QCtx::new(&QuantFormat::None, &QuantFormat::None, 0, Mode::Train);
+//! let x = vec![0.1f32; 2 * 8];
+//! let y = vec![0.0f32, 2.0];
+//! let out = model.train_grads(&q, &tr, &[], &x, &y, 2).unwrap();
+//! assert!(out.loss.is_finite());
+//! assert_eq!(out.grads.len(), tr.len()); // one gradient per trainable
+//! ```
+
+pub mod dense;
+pub mod graph;
+pub mod norm;
+pub mod spatial;
+
+pub use dense::{Dense, QuantSite, Relu};
+pub use graph::{GraphModel, Head, InputKind, TrainGrads};
+pub use norm::BatchNorm2d;
+pub use spatial::{Conv, Flatten, GlobalAvgPool, MaxPool2, Residual};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::quant::QuantFormat;
+use crate::rng::{self, StreamRng};
+use crate::tensor::{NamedTensors, Tensor};
+
+/// Role tags folded into quantization seeds (mirror of qtrain.TAG_*).
+pub(crate) const TAG_W: u32 = 1;
+pub(crate) const TAG_A: u32 = 2;
+pub(crate) const TAG_G: u32 = 3;
+pub(crate) const TAG_E: u32 = 4;
+pub(crate) const TAG_M: u32 = 5;
+
+/// Stable 32-bit id for a named quantization site (FNV-1a).
+pub fn site_id(name: &str) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for b in name.bytes() {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// The `(step, site, role)` seed derivation every quantization event
+/// uses — a step is a pure function of (params, batch, lr, step).
+pub fn seed_for(step: u64, site: u32, tag: u32) -> u32 {
+    rng::derive_seed(&[step as u32, site, tag])
+}
+
+/// What a pass is computing; decides caching, BatchNorm statistics and
+/// running-stat updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Forward caches the backward tape; BatchNorm uses batch statistics
+    /// and emits running-stat updates.
+    Train,
+    /// No caches; BatchNorm uses its running statistics.
+    Eval,
+    /// No caches; BatchNorm uses batch statistics (Izmailov et al.'s
+    /// bn_update equivalent for SWA weight averages) without touching
+    /// the running stats.
+    EvalBatchStats,
+}
+
+/// The quantization context a pass threads through every layer: the
+/// activation/error formats, the step (for seed derivation), the
+/// execution [`Mode`], and (for eval loops) the caller-owned packed-B
+/// panel cache of the fused-GEMM engine ([`super::gemm`]) — layers hand
+/// it to their weight GEMMs via `Epilogue::b_cache`.
+pub struct QCtx<'a> {
+    pub a_fmt: &'a QuantFormat,
+    pub e_fmt: &'a QuantFormat,
+    pub step: u64,
+    pub mode: Mode,
+    /// Weight-panel cache for this pass (`None` = pack fresh). The
+    /// caller guarantees every weight tensor of the pass outlives the
+    /// cache — the [`super::gemm::PanelCache`] ABA contract.
+    pub panel_cache: Option<&'a super::gemm::PanelCache>,
+}
+
+impl<'a> QCtx<'a> {
+    /// A context without a panel cache (training steps, one-off evals).
+    pub fn new(a_fmt: &'a QuantFormat, e_fmt: &'a QuantFormat, step: u64, mode: Mode) -> QCtx<'a> {
+        QCtx { a_fmt, e_fmt, step, mode, panel_cache: None }
+    }
+
+    pub fn train(&self) -> bool {
+        self.mode == Mode::Train
+    }
+
+    /// BatchNorm statistics source: batch stats in train and
+    /// batch-stats-eval mode, running stats otherwise.
+    pub fn batch_stats(&self) -> bool {
+        matches!(self.mode, Mode::Train | Mode::EvalBatchStats)
+    }
+
+    /// Q_A seed for a named site at this step.
+    pub fn act_seed(&self, site: &str) -> u32 {
+        seed_for(self.step, site_id(site), TAG_A)
+    }
+
+    /// Q_E seed for a named site at this step.
+    pub fn err_seed(&self, site: &str) -> u32 {
+        seed_for(self.step, site_id(site), TAG_E)
+    }
+}
+
+/// An activation in flight: `[b·h·w, ch]` row-major, channels-last (a
+/// flat dense activation is `h = w = 1`). Convolution is `im2col · Wᵀ`
+/// on row-parallel matmuls and bias/ReLU/quantization reuse the dense
+/// kernels unchanged.
+pub struct Act {
+    pub data: Vec<f32>,
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub ch: usize,
+}
+
+impl Act {
+    pub fn rows(&self) -> usize {
+        self.b * self.h * self.w
+    }
+
+    /// A flat (non-spatial) activation: `[b, ch]`.
+    pub fn flat(b: usize, ch: usize, data: Vec<f32>) -> Act {
+        Act { data, b, h: 1, w: 1, ch }
+    }
+}
+
+/// Forward-pass caches consumed by the backward walk (one entry per
+/// layer, in traversal order; `Residual` nests its branches' caches).
+/// Produced by [`QLayer::forward`] in train mode, consumed by
+/// [`QLayer::backward`].
+pub enum LayerCache {
+    /// Layers with nothing to remember still push one entry, keeping the
+    /// pop-per-layer invariant of the backward walk.
+    None,
+    Conv { cols: Vec<f32> },
+    Relu { pre: Vec<f32> },
+    MaxPool { arg: Vec<u32>, in_h: usize, in_w: usize },
+    Gap { in_h: usize, in_w: usize },
+    Flatten { h: usize, w: usize, ch: usize },
+    Dense { input: Vec<f32> },
+    Residual { body: Vec<LayerCache>, proj: Vec<LayerCache> },
+    BatchNorm { xhat: Vec<f32>, ivar: Vec<f32> },
+}
+
+/// What one forward pass records: the backward caches (train mode) and
+/// any state updates (BatchNorm running statistics) to fold into
+/// `ModelState.state` after the step.
+#[derive(Default)]
+pub struct Tape {
+    pub caches: Vec<LayerCache>,
+    pub state_updates: NamedTensors,
+}
+
+/// Indexed, name-checked access into a sorted parameter set. Layers
+/// resolve their indices once ([`QLayer::resolve`]); `at` verifies the
+/// name and falls back to [`crate::tensor::lookup`] for callers holding
+/// an unsorted or foreign set, so correctness never depends on the
+/// resolution having happened.
+#[derive(Clone, Copy)]
+pub struct Params<'a> {
+    ts: &'a [(String, Tensor)],
+}
+
+impl<'a> Params<'a> {
+    pub fn new(ts: &'a [(String, Tensor)]) -> Params<'a> {
+        Params { ts }
+    }
+
+    pub fn at(&self, idx: usize, name: &str) -> Result<&'a Tensor> {
+        if let Some((n, t)) = self.ts.get(idx) {
+            if n == name {
+                return Ok(t);
+            }
+        }
+        crate::tensor::lookup(self.ts, name)
+    }
+}
+
+/// Position of `name` in a sorted name list (`usize::MAX` when absent —
+/// [`Params::at`] then falls back to search).
+pub(crate) fn idx_of(names: &[String], name: &str) -> usize {
+    names
+        .binary_search_by(|n| n.as_str().cmp(name))
+        .unwrap_or(usize::MAX)
+}
+
+/// Everything a layer pass needs besides the activation: the quant
+/// context plus indexed views of the trainables and the (BatchNorm)
+/// state.
+pub struct LayerCtx<'a> {
+    pub q: &'a QCtx<'a>,
+    pub tr: Params<'a>,
+    pub state: Params<'a>,
+}
+
+/// One composable quantized layer. Implementations must be pure
+/// functions of `(params, input, ctx)` — bit-reproducible at any thread
+/// count — which they inherit for free by building on the shared GEMM
+/// engine and position-keyed quantizers.
+pub trait QLayer: Send + Sync {
+    /// Push trainable (name, shape) pairs, in declaration order (the
+    /// graph sorts the collected set).
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        let _ = out;
+    }
+
+    /// Push non-trainable state (name, shape) pairs (BatchNorm running
+    /// statistics).
+    fn state_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        let _ = out;
+    }
+
+    /// Push freshly initialized trainables. RNG draws happen in
+    /// declaration order — part of the init-determinism contract.
+    fn init(&self, rng: &mut StreamRng, out: &mut NamedTensors) {
+        let _ = (rng, out);
+    }
+
+    /// Push freshly initialized state tensors.
+    fn init_state(&self, out: &mut NamedTensors) {
+        let _ = out;
+    }
+
+    /// Resolve parameter/state names to indices in the sorted lists.
+    fn resolve(&mut self, tr_names: &[String], state_names: &[String]) {
+        let _ = (tr_names, state_names);
+    }
+
+    /// Structural L2 term: `Some(0.5·λ·‖w‖²)` only for layers that carry
+    /// one (`None` keeps regularization-free losses bit-identical).
+    fn reg_loss(&self, tr: &Params) -> Result<Option<f64>> {
+        let _ = tr;
+        Ok(None)
+    }
+
+    /// Does this layer (or any nested layer) carry an L2 term? Mirrors
+    /// [`QLayer::reg_loss`] structurally — used by graph construction to
+    /// reject head/regularizer combinations whose gradient plumbing
+    /// would be wrong.
+    fn has_reg(&self) -> bool {
+        false
+    }
+
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act>;
+
+    /// Consume this layer's cache, push parameter gradients, return the
+    /// input cotangent. `need_dx = false` (the outermost first layer)
+    /// lets GEMM layers skip the input-gradient contraction.
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        need_dx: bool,
+    ) -> Result<Act>;
+}
+
+/// Run `act` through a layer stack in order.
+pub fn forward_stack(
+    layers: &[Box<dyn QLayer>],
+    cx: &LayerCtx,
+    mut act: Act,
+    tape: &mut Tape,
+) -> Result<Act> {
+    for layer in layers {
+        act = layer.forward(cx, act, tape)?;
+    }
+    Ok(act)
+}
+
+/// Walk a layer stack backwards, popping one cache per layer.
+/// `first_needs_dx` is false only for the outermost stack (the model
+/// input needs no gradient); residual branches always propagate.
+pub fn backward_stack(
+    layers: &[Box<dyn QLayer>],
+    cx: &LayerCtx,
+    mut d: Act,
+    caches: &mut Vec<LayerCache>,
+    grads: &mut NamedTensors,
+    first_needs_dx: bool,
+) -> Result<Act> {
+    for (i, layer) in layers.iter().enumerate().rev() {
+        let cache = caches.pop().ok_or_else(|| anyhow!("cache underrun"))?;
+        let need_dx = first_needs_dx || i > 0;
+        d = layer.backward(cx, d, cache, grads, need_dx)?;
+    }
+    Ok(d)
+}
+
+/// Per-column sums of a `[rows, cols]` buffer — the bias gradient.
+pub(crate) fn col_sums(x: &[f32], cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; cols];
+    for row in x.chunks(cols) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Shape guard shared by the flat layers (Dense and friends).
+pub(crate) fn expect_flat(act: &Act, d_in: usize, what: &str) -> Result<()> {
+    if act.h != 1 || act.w != 1 || act.ch != d_in {
+        bail!(
+            "{what}: input is [{}x{}x{}], want a flat [{d_in}]",
+            act.h,
+            act.w,
+            act.ch
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,344 @@
+//! [`BatchNorm2d`] — per-channel batch normalization over channels-last
+//! activations, the layer the closed `Arch`/`ConvNet` monolith could not
+//! express (it has state, two statistics modes, and an SWA interaction).
+//!
+//! Semantics (PyTorch conventions, matching the SWALP reference code):
+//!
+//! * **Train** (`Mode::Train`): normalize with the batch mean and the
+//!   *biased* (1/N) batch variance; update the running statistics as
+//!   `r ← (1−m)·r + m·stat` with momentum `m = 0.1` (running variance
+//!   uses the unbiased N/(N−1) estimate). The updates are emitted on the
+//!   tape — a layer pass stays a pure function; the backend folds them
+//!   into `ModelState.state` after the step.
+//! * **Eval** (`Mode::Eval`): normalize with the running statistics.
+//! * **SWA eval** (`Mode::EvalBatchStats`): normalize with the *batch*
+//!   statistics and leave the running stats untouched — the stateless
+//!   equivalent of Izmailov et al.'s `bn_update`. An SWA weight average
+//!   pairs with running stats collected under different weights, so
+//!   evaluating it through this mode is what makes SWALP's averaged
+//!   model meaningful on BN networks (the paper's BN-recompute note).
+//!
+//! `gamma`/`beta` are ordinary trainables: they are folded into the SWA
+//! average, carried through momentum, and pass Q_W/Q_G/Q_M with a
+//! per-tensor shared exponent (`is_per_tensor` matches the
+//! `gamma`/`beta` leaf names — the §5 Small-block policy for norm
+//! scale/shift). The running statistics are state, not trainables, and
+//! are never quantized.
+//!
+//! Statistics and gradient reductions accumulate in f64 serially —
+//! deterministic at any thread count by construction. The backward
+//! formulas are the standard batch-norm gradients; the per-layer
+//! finite-difference tests pin them.
+
+use anyhow::{bail, Result};
+
+use crate::rng::StreamRng;
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::{idx_of, Act, LayerCache, LayerCtx, QLayer, Tape};
+
+pub struct BatchNorm2d {
+    name: String,
+    g_name: String,
+    b_name: String,
+    m_name: String,
+    v_name: String,
+    pub ch: usize,
+    pub eps: f32,
+    /// Running-statistics update rate (PyTorch's `momentum`).
+    pub momentum: f32,
+    g_idx: usize,
+    b_idx: usize,
+    m_idx: usize,
+    v_idx: usize,
+}
+
+impl BatchNorm2d {
+    pub fn new(name: &str, ch: usize) -> BatchNorm2d {
+        BatchNorm2d {
+            name: name.to_string(),
+            g_name: format!("{name}.gamma"),
+            b_name: format!("{name}.beta"),
+            m_name: format!("{name}.running_mean"),
+            v_name: format!("{name}.running_var"),
+            ch,
+            eps: 1e-5,
+            momentum: 0.1,
+            g_idx: usize::MAX,
+            b_idx: usize::MAX,
+            m_idx: usize::MAX,
+            v_idx: usize::MAX,
+        }
+    }
+
+    /// Per-channel batch mean and biased variance over `[rows, ch]`.
+    fn batch_stats(&self, data: &[f32], rows: usize) -> (Vec<f32>, Vec<f64>) {
+        let n = rows as f64;
+        let mut mean = vec![0.0f64; self.ch];
+        for row in data.chunks(self.ch) {
+            for (m, &v) in mean.iter_mut().zip(row) {
+                *m += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n;
+        }
+        let mut var = vec![0.0f64; self.ch];
+        for row in data.chunks(self.ch) {
+            for ((s, &v), &m) in var.iter_mut().zip(row).zip(&mean) {
+                let d = v as f64 - m;
+                *s += d * d;
+            }
+        }
+        for s in var.iter_mut() {
+            *s /= n;
+        }
+        (mean.iter().map(|&m| m as f32).collect(), var)
+    }
+}
+
+impl QLayer for BatchNorm2d {
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        out.push((self.b_name.clone(), vec![self.ch]));
+        out.push((self.g_name.clone(), vec![self.ch]));
+    }
+
+    fn state_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        out.push((self.m_name.clone(), vec![self.ch]));
+        out.push((self.v_name.clone(), vec![self.ch]));
+    }
+
+    fn init(&self, _rng: &mut StreamRng, out: &mut NamedTensors) {
+        out.push((self.b_name.clone(), Tensor::zeros(&[self.ch])));
+        out.push((
+            self.g_name.clone(),
+            Tensor { shape: vec![self.ch], data: vec![1.0; self.ch] },
+        ));
+    }
+
+    fn init_state(&self, out: &mut NamedTensors) {
+        out.push((self.m_name.clone(), Tensor::zeros(&[self.ch])));
+        out.push((
+            self.v_name.clone(),
+            Tensor { shape: vec![self.ch], data: vec![1.0; self.ch] },
+        ));
+    }
+
+    fn resolve(&mut self, tr_names: &[String], state_names: &[String]) {
+        self.g_idx = idx_of(tr_names, &self.g_name);
+        self.b_idx = idx_of(tr_names, &self.b_name);
+        self.m_idx = idx_of(state_names, &self.m_name);
+        self.v_idx = idx_of(state_names, &self.v_name);
+    }
+
+    fn forward(&self, cx: &LayerCtx, mut act: Act, tape: &mut Tape) -> Result<Act> {
+        if act.ch != self.ch {
+            bail!("{}: input has {} channels, want {}", self.name, act.ch, self.ch);
+        }
+        let gamma = cx.tr.at(self.g_idx, &self.g_name)?;
+        let beta = cx.tr.at(self.b_idx, &self.b_name)?;
+        let rows = act.rows();
+        if rows == 0 {
+            bail!("{}: empty activation", self.name);
+        }
+        if cx.q.batch_stats() {
+            let (mean, var) = self.batch_stats(&act.data, rows);
+            let ivar: Vec<f32> =
+                var.iter().map(|&v| 1.0 / ((v as f32) + self.eps).sqrt()).collect();
+            if cx.q.train() {
+                // y = gamma·xhat + beta, keeping xhat for the backward walk
+                let mut xhat = vec![0.0f32; act.data.len()];
+                for (row, xrow) in act.data.chunks_mut(self.ch).zip(xhat.chunks_mut(self.ch)) {
+                    for c in 0..self.ch {
+                        let xh = (row[c] - mean[c]) * ivar[c];
+                        xrow[c] = xh;
+                        row[c] = gamma.data[c] * xh + beta.data[c];
+                    }
+                }
+                // running statistics: r ← (1−m)·r + m·batch (var unbiased)
+                let rm = cx.state.at(self.m_idx, &self.m_name)?;
+                let rv = cx.state.at(self.v_idx, &self.v_name)?;
+                let m = self.momentum;
+                let n = rows as f64;
+                let bessel = if rows > 1 { n / (n - 1.0) } else { 1.0 };
+                let new_m: Vec<f32> = rm
+                    .data
+                    .iter()
+                    .zip(&mean)
+                    .map(|(&r, &b)| (1.0 - m) * r + m * b)
+                    .collect();
+                let new_v: Vec<f32> = rv
+                    .data
+                    .iter()
+                    .zip(&var)
+                    .map(|(&r, &b)| (1.0 - m) * r + m * ((b * bessel) as f32))
+                    .collect();
+                tape.state_updates
+                    .push((self.m_name.clone(), Tensor::new(vec![self.ch], new_m)?));
+                tape.state_updates
+                    .push((self.v_name.clone(), Tensor::new(vec![self.ch], new_v)?));
+                tape.caches.push(LayerCache::BatchNorm { xhat, ivar });
+            } else {
+                // EvalBatchStats: batch statistics, no tape, no updates
+                for row in act.data.chunks_mut(self.ch) {
+                    for c in 0..self.ch {
+                        let xh = (row[c] - mean[c]) * ivar[c];
+                        row[c] = gamma.data[c] * xh + beta.data[c];
+                    }
+                }
+            }
+        } else {
+            // Eval: running statistics
+            let rm = cx.state.at(self.m_idx, &self.m_name)?;
+            let rv = cx.state.at(self.v_idx, &self.v_name)?;
+            let ivar: Vec<f32> = rv.data.iter().map(|&v| 1.0 / (v + self.eps).sqrt()).collect();
+            for row in act.data.chunks_mut(self.ch) {
+                for c in 0..self.ch {
+                    let xh = (row[c] - rm.data[c]) * ivar[c];
+                    row[c] = gamma.data[c] * xh + beta.data[c];
+                }
+            }
+        }
+        Ok(act)
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        mut d: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::BatchNorm { xhat, ivar } = cache else {
+            bail!("{}: forward/backward cache mismatch", self.name);
+        };
+        let gamma = cx.tr.at(self.g_idx, &self.g_name)?;
+        let rows = d.rows();
+        let n = rows as f64;
+        // channel reductions in f64: dbeta, dgamma, and the two means of
+        // the standard BN input-gradient formula
+        let mut dbeta = vec![0.0f64; self.ch];
+        let mut dgamma = vec![0.0f64; self.ch];
+        let mut m1 = vec![0.0f64; self.ch];
+        let mut m2 = vec![0.0f64; self.ch];
+        for (drow, xrow) in d.data.chunks(self.ch).zip(xhat.chunks(self.ch)) {
+            for c in 0..self.ch {
+                let dv = drow[c] as f64;
+                let xh = xrow[c] as f64;
+                dbeta[c] += dv;
+                dgamma[c] += dv * xh;
+                let dxh = dv * gamma.data[c] as f64;
+                m1[c] += dxh;
+                m2[c] += dxh * xh;
+            }
+        }
+        for c in 0..self.ch {
+            m1[c] /= n;
+            m2[c] /= n;
+        }
+        if need_dx {
+            // dx = ivar · (dxhat − mean(dxhat) − xhat·mean(dxhat·xhat))
+            let m1f: Vec<f32> = m1.iter().map(|&v| v as f32).collect();
+            let m2f: Vec<f32> = m2.iter().map(|&v| v as f32).collect();
+            for (drow, xrow) in d.data.chunks_mut(self.ch).zip(xhat.chunks(self.ch)) {
+                for c in 0..self.ch {
+                    let dxh = drow[c] * gamma.data[c];
+                    drow[c] = ivar[c] * (dxh - m1f[c] - xrow[c] * m2f[c]);
+                }
+            }
+        }
+        grads.push((
+            self.g_name.clone(),
+            Tensor::new(vec![self.ch], dgamma.iter().map(|&v| v as f32).collect())?,
+        ));
+        grads.push((
+            self.b_name.clone(),
+            Tensor::new(vec![self.ch], dbeta.iter().map(|&v| v as f32).collect())?,
+        ));
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Mode, Params, QCtx};
+    use super::*;
+    use crate::quant::QuantFormat;
+
+    fn ctx_parts(mode: Mode) -> QCtx<'static> {
+        QCtx::new(&QuantFormat::None, &QuantFormat::None, 0, mode)
+    }
+
+    fn bn_fixture() -> (BatchNorm2d, NamedTensors, NamedTensors) {
+        let mut bn = BatchNorm2d::new("n", 2);
+        let mut tr = NamedTensors::new();
+        bn.init(&mut StreamRng::new(1), &mut tr);
+        tr.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut st = NamedTensors::new();
+        bn.init_state(&mut st);
+        st.sort_by(|a, b| a.0.cmp(&b.0));
+        let tr_names: Vec<String> = tr.iter().map(|(n, _)| n.clone()).collect();
+        let st_names: Vec<String> = st.iter().map(|(n, _)| n.clone()).collect();
+        bn.resolve(&tr_names, &st_names);
+        (bn, tr, st)
+    }
+
+    #[test]
+    fn train_mode_normalizes_and_updates_running_stats() {
+        let (bn, tr, st) = bn_fixture();
+        let q = ctx_parts(Mode::Train);
+        let cx = LayerCtx { q: &q, tr: Params::new(&tr), state: Params::new(&st) };
+        // channel 0: values 0,2,4,6 (mean 3); channel 1: constant 5
+        let act = Act::flat(4, 2, vec![0.0, 5.0, 2.0, 5.0, 4.0, 5.0, 6.0, 5.0]);
+        let mut tape = Tape::default();
+        let out = bn.forward(&cx, act, &mut tape).unwrap();
+        // normalized channel 0: mean 0, unit variance (gamma=1, beta=0)
+        let c0: Vec<f32> = out.data.iter().step_by(2).copied().collect();
+        let mean: f32 = c0.iter().sum::<f32>() / 4.0;
+        let var: f32 = c0.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        // constant channel 1 normalizes to ~0 (variance eps-floored)
+        assert!(out.data[1].abs() < 1e-2);
+        // running stats moved toward the batch stats by momentum 0.1
+        assert_eq!(tape.state_updates.len(), 2);
+        let (mname, rm) = &tape.state_updates[0];
+        assert_eq!(mname, "n.running_mean");
+        assert!((rm.data[0] - 0.1 * 3.0).abs() < 1e-6, "running mean {}", rm.data[0]);
+        let (vname, rv) = &tape.state_updates[1];
+        assert_eq!(vname, "n.running_var");
+        // unbiased var of ch0 = 5·4/3/... : biased 5, bessel 4/3 -> 20/3
+        let want = 0.9 * 1.0 + 0.1 * (5.0 * 4.0 / 3.0);
+        assert!((rv.data[0] - want).abs() < 1e-4, "running var {}", rv.data[0]);
+        // one cache entry pushed (the backward tape invariant)
+        assert_eq!(tape.caches.len(), 1);
+    }
+
+    #[test]
+    fn eval_mode_uses_running_stats_and_batch_stats_mode_ignores_them() {
+        let (bn, tr, mut st) = bn_fixture();
+        // running stats far from the batch stats
+        st[0].1.data = vec![10.0, 10.0]; // running_mean
+        st[1].1.data = vec![4.0, 4.0]; // running_var
+        let data = vec![0.0, 5.0, 2.0, 5.0, 4.0, 5.0, 6.0, 5.0];
+
+        let q = ctx_parts(Mode::Eval);
+        let cx = LayerCtx { q: &q, tr: Params::new(&tr), state: Params::new(&st) };
+        let mut tape = Tape::default();
+        let out = bn.forward(&cx, Act::flat(4, 2, data.clone()), &mut tape).unwrap();
+        // (0 - 10)/sqrt(4 + eps) ≈ -5
+        assert!((out.data[0] + 5.0).abs() < 1e-3, "{}", out.data[0]);
+        assert!(tape.state_updates.is_empty() && tape.caches.is_empty());
+
+        // EvalBatchStats normalizes with the batch, not the running stats
+        let q = ctx_parts(Mode::EvalBatchStats);
+        let cx = LayerCtx { q: &q, tr: Params::new(&tr), state: Params::new(&st) };
+        let mut tape = Tape::default();
+        let out = bn.forward(&cx, Act::flat(4, 2, data), &mut tape).unwrap();
+        let c0: Vec<f32> = out.data.iter().step_by(2).copied().collect();
+        let mean: f32 = c0.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5, "batch-stats eval must renormalize: {mean}");
+        assert!(tape.state_updates.is_empty() && tape.caches.is_empty());
+    }
+}

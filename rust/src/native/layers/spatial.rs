@@ -1,0 +1,667 @@
+//! The spatial layers — im2col convolution, pooling, flatten and the
+//! residual combinator — plus their data-movement kernels.
+//!
+//! Layout: activations flow **channels-last** — a spatial activation is
+//! a `[b·h·w, ch]` matrix (row = pixel, column = channel) so that
+//! convolution is exactly `im2col · Wᵀ` on the row-parallel matmuls and
+//! bias/ReLU/quantization reuse the dense kernels unchanged. Conv
+//! weights are stored `[oc, k, k, ic]` — 4-D, so the §5 Small-block BFP
+//! policy gives one shared exponent per output filter
+//! (`block_axes_for(Weight, ndim 4) = [0]`), matching the paper.
+
+use anyhow::{bail, Result};
+
+use crate::rng::StreamRng;
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::super::gemm::{self, Epilogue};
+use super::{
+    backward_stack, col_sums, forward_stack, idx_of, Act, LayerCache, LayerCtx, QLayer, Tape,
+};
+
+/// Below this many output elements, im2col/col2im stay serial.
+const PAR_MIN_ELEMS: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------
+// data-movement kernels
+// ---------------------------------------------------------------------
+
+/// `[b, c, h, w]` (dataset layout) -> `[b·h·w, c]` (channels-last).
+pub fn nchw_to_nhwc(x: &[f32], b: usize, ch: usize, h: usize, w: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * ch * h * w);
+    let mut out = vec![0.0f32; x.len()];
+    for bi in 0..b {
+        for c in 0..ch {
+            let src = (bi * ch + c) * h * w;
+            for p in 0..h * w {
+                out[(bi * h * w + p) * ch + c] = x[src + p];
+            }
+        }
+    }
+    out
+}
+
+/// Lower a channels-last image batch to patch-rows: output row
+/// `(bi·oh + oy)·ow + ox` holds the k×k×ch receptive field at (oy, ox),
+/// column-major as `(ky·k + kx)·ch + c`. Out-of-bounds taps stay zero
+/// (zero padding). Parallel over batch samples — rows of distinct
+/// samples are disjoint, so chunking cannot change any output.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    k: usize,
+    pad: usize,
+    cols: &mut Vec<f32>,
+) -> (usize, usize) {
+    let oh = h + 2 * pad + 1 - k;
+    let ow = w + 2 * pad + 1 - k;
+    let kkc = k * k * ch;
+    cols.clear();
+    cols.resize(b * oh * ow * kkc, 0.0);
+    let sample_in = h * w * ch;
+    let sample_out = oh * ow * kkc;
+    let fill = |xs: &[f32], cs: &mut [f32]| {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (oy * ow + ox) * kkc;
+                for ky in 0..k {
+                    let iy = (oy + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = (iy as usize * w + ix as usize) * ch;
+                        let dst = row + (ky * k + kx) * ch;
+                        cs[dst..dst + ch].copy_from_slice(&xs[src..src + ch]);
+                    }
+                }
+            }
+        }
+    };
+    if cols.len() >= PAR_MIN_ELEMS && b >= 2 && rayon::current_num_threads() > 1 {
+        rayon::scope(|s| {
+            for (cs, xs) in cols.chunks_mut(sample_out).zip(x.chunks(sample_in)) {
+                let fill = &fill;
+                s.spawn(move |_| fill(xs, cs));
+            }
+        });
+    } else {
+        for (cs, xs) in cols.chunks_mut(sample_out).zip(x.chunks(sample_in)) {
+            fill(xs, cs);
+        }
+    }
+    (b * oh * ow, kkc)
+}
+
+/// Transpose of [`im2col`]: scatter-add patch-row gradients back onto the
+/// `[b·h·w, ch]` input gradient. Parallel over batch samples (each
+/// sample's scatter targets are disjoint).
+pub fn col2im(
+    dcols: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    k: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let oh = h + 2 * pad + 1 - k;
+    let ow = w + 2 * pad + 1 - k;
+    let kkc = k * k * ch;
+    debug_assert_eq!(dcols.len(), b * oh * ow * kkc);
+    let mut dx = vec![0.0f32; b * h * w * ch];
+    let sample_in = h * w * ch;
+    let sample_out = oh * ow * kkc;
+    let fold = |cs: &[f32], xs: &mut [f32]| {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (oy * ow + ox) * kkc;
+                for ky in 0..k {
+                    let iy = (oy + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = (iy as usize * w + ix as usize) * ch;
+                        let src = row + (ky * k + kx) * ch;
+                        for (o, &v) in xs[dst..dst + ch].iter_mut().zip(&cs[src..src + ch]) {
+                            *o += v;
+                        }
+                    }
+                }
+            }
+        }
+    };
+    if dx.len().max(dcols.len()) >= PAR_MIN_ELEMS && b >= 2 && rayon::current_num_threads() > 1 {
+        rayon::scope(|s| {
+            for (xs, cs) in dx.chunks_mut(sample_in).zip(dcols.chunks(sample_out)) {
+                let fold = &fold;
+                s.spawn(move |_| fold(cs, xs));
+            }
+        });
+    } else {
+        for (xs, cs) in dx.chunks_mut(sample_in).zip(dcols.chunks(sample_out)) {
+            fold(cs, xs);
+        }
+    }
+    dx
+}
+
+/// 2×2/stride-2 max pooling over a channels-last batch. Returns the
+/// pooled activations and the flat input index of each winner (strict
+/// `>`, scan order (0,0),(0,1),(1,0),(1,1) — first max wins, so routing
+/// is deterministic).
+pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, ch: usize) -> (Vec<f32>, Vec<u32>) {
+    debug_assert!(h % 2 == 0 && w % 2 == 0);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; b * oh * ow * ch];
+    let mut arg = vec![0u32; out.len()];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let orow = ((bi * oh + oy) * ow + ox) * ch;
+                for c in 0..ch {
+                    let first = ((bi * h + 2 * oy) * w + 2 * ox) * ch + c;
+                    let mut best = x[first];
+                    let mut best_i = first as u32;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            if dy == 0 && dx == 0 {
+                                continue;
+                            }
+                            let idx = ((bi * h + 2 * oy + dy) * w + 2 * ox + dx) * ch + c;
+                            if x[idx] > best {
+                                best = x[idx];
+                                best_i = idx as u32;
+                            }
+                        }
+                    }
+                    out[orow + c] = best;
+                    arg[orow + c] = best_i;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Route pooled gradients back to the argmax positions.
+pub fn maxpool2_backward(dout: &[f32], arg: &[u32], in_len: usize) -> Vec<f32> {
+    debug_assert_eq!(dout.len(), arg.len());
+    let mut dx = vec![0.0f32; in_len];
+    for (&g, &a) in dout.iter().zip(arg) {
+        dx[a as usize] += g;
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------
+// the layers
+// ---------------------------------------------------------------------
+
+/// One convolution (stride 1, square kernel; pooling layers downsample).
+/// Weight `[oc, k, k, ic]`, bias `[oc]` fused into the GEMM epilogue.
+pub struct Conv {
+    name: String,
+    w_name: String,
+    b_name: String,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub k: usize,
+    pub pad: usize,
+    w_idx: usize,
+    b_idx: usize,
+}
+
+impl Conv {
+    pub fn new(name: &str, in_ch: usize, out_ch: usize, k: usize, pad: usize) -> Conv {
+        Conv {
+            name: name.to_string(),
+            w_name: format!("{name}.w"),
+            b_name: format!("{name}.b"),
+            in_ch,
+            out_ch,
+            k,
+            pad,
+            w_idx: usize::MAX,
+            b_idx: usize::MAX,
+        }
+    }
+}
+
+impl QLayer for Conv {
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        out.push((self.b_name.clone(), vec![self.out_ch]));
+        out.push((self.w_name.clone(), vec![self.out_ch, self.k, self.k, self.in_ch]));
+    }
+
+    fn init(&self, rng: &mut StreamRng, out: &mut NamedTensors) {
+        let fan_in = self.k * self.k * self.in_ch;
+        let std = (2.0 / fan_in as f32).sqrt();
+        let data = (0..self.out_ch * fan_in).map(|_| rng.normal() * std).collect();
+        out.push((self.b_name.clone(), Tensor::zeros(&[self.out_ch])));
+        out.push((
+            self.w_name.clone(),
+            Tensor { shape: vec![self.out_ch, self.k, self.k, self.in_ch], data },
+        ));
+    }
+
+    fn resolve(&mut self, tr_names: &[String], _state_names: &[String]) {
+        self.w_idx = idx_of(tr_names, &self.w_name);
+        self.b_idx = idx_of(tr_names, &self.b_name);
+    }
+
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        if act.ch != self.in_ch {
+            bail!("{}: input has {} channels, want {}", self.name, act.ch, self.in_ch);
+        }
+        if self.k > act.h + 2 * self.pad || self.k > act.w + 2 * self.pad {
+            bail!("{}: kernel {} exceeds padded input", self.name, self.k);
+        }
+        let w = cx.tr.at(self.w_idx, &self.w_name)?;
+        let bias = cx.tr.at(self.b_idx, &self.b_name)?;
+        let mut cols = Vec::new();
+        let (rows, kkc) =
+            im2col(&act.data, act.b, act.h, act.w, act.ch, self.k, self.pad, &mut cols);
+        let mut z = vec![0.0f32; rows * self.out_ch];
+        // conv = im2col · Wᵀ on the blocked engine, bias in the epilogue
+        // (Q_A follows at the ReLU site); eval loops reuse the weight
+        // panels through the caller's cache
+        gemm::matmul_a_bt_into_quant(
+            &cols,
+            &w.data,
+            rows,
+            kkc,
+            self.out_ch,
+            &mut z,
+            &Epilogue {
+                bias: Some(&bias.data),
+                relu: false,
+                quant: None,
+                b_cache: cx.q.panel_cache,
+            },
+        );
+        if cx.q.train() {
+            tape.caches.push(LayerCache::Conv { cols });
+        }
+        let oh = act.h + 2 * self.pad + 1 - self.k;
+        let ow = act.w + 2 * self.pad + 1 - self.k;
+        Ok(Act { data: z, b: act.b, h: oh, w: ow, ch: self.out_ch })
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Conv { cols } = cache else {
+            bail!("{}: forward/backward cache mismatch", self.name);
+        };
+        let w = cx.tr.at(self.w_idx, &self.w_name)?;
+        let rows = d.rows();
+        let kkc = self.k * self.k * self.in_ch;
+        // gw[oc, kkc] = doutᵀ · cols — same layout as w
+        let mut gw = vec![0.0f32; self.out_ch * kkc];
+        gemm::matmul_at_b(&d.data, &cols, rows, self.out_ch, kkc, &mut gw);
+        let gb = col_sums(&d.data, self.out_ch);
+        grads.push((
+            self.w_name.clone(),
+            Tensor::new(vec![self.out_ch, self.k, self.k, self.in_ch], gw)?,
+        ));
+        grads.push((self.b_name.clone(), Tensor::new(vec![self.out_ch], gb)?));
+        let in_h = d.h + self.k - 1 - 2 * self.pad;
+        let in_w = d.w + self.k - 1 - 2 * self.pad;
+        if !need_dx {
+            return Ok(Act { data: Vec::new(), b: d.b, h: in_h, w: in_w, ch: self.in_ch });
+        }
+        // dinput = col2im(dout · W)
+        let mut dcols = vec![0.0f32; rows * kkc];
+        gemm::matmul(&d.data, &w.data, rows, self.out_ch, kkc, &mut dcols);
+        let dx = col2im(&dcols, d.b, in_h, in_w, self.in_ch, self.k, self.pad);
+        Ok(Act { data: dx, b: d.b, h: in_h, w: in_w, ch: self.in_ch })
+    }
+}
+
+/// 2×2 max pooling, stride 2 (spatial dims must be even).
+pub struct MaxPool2;
+
+impl QLayer for MaxPool2 {
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        if act.h % 2 != 0 || act.w % 2 != 0 {
+            bail!("maxpool2 on odd spatial dims {}x{}", act.h, act.w);
+        }
+        let (data, arg) = maxpool2(&act.data, act.b, act.h, act.w, act.ch);
+        if cx.q.train() {
+            tape.caches.push(LayerCache::MaxPool { arg, in_h: act.h, in_w: act.w });
+        }
+        Ok(Act { data, b: act.b, h: act.h / 2, w: act.w / 2, ch: act.ch })
+    }
+
+    fn backward(
+        &self,
+        _cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        _grads: &mut NamedTensors,
+        _need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::MaxPool { arg, in_h, in_w } = cache else {
+            bail!("maxpool2: forward/backward cache mismatch");
+        };
+        let dx = maxpool2_backward(&d.data, &arg, d.b * in_h * in_w * d.ch);
+        Ok(Act { data: dx, b: d.b, h: in_h, w: in_w, ch: d.ch })
+    }
+}
+
+/// Mean over the spatial dims: `[b·h·w, ch] -> [b, ch]`.
+pub struct GlobalAvgPool;
+
+impl QLayer for GlobalAvgPool {
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        let hw = act.h * act.w;
+        let inv = 1.0 / hw as f32;
+        let mut data = vec![0.0f32; act.b * act.ch];
+        for bi in 0..act.b {
+            let o = &mut data[bi * act.ch..(bi + 1) * act.ch];
+            for row in act.data[bi * hw * act.ch..(bi + 1) * hw * act.ch].chunks(act.ch) {
+                for (ov, &v) in o.iter_mut().zip(row) {
+                    *ov += v;
+                }
+            }
+            for ov in o.iter_mut() {
+                *ov *= inv;
+            }
+        }
+        if cx.q.train() {
+            tape.caches.push(LayerCache::Gap { in_h: act.h, in_w: act.w });
+        }
+        Ok(Act { data, b: act.b, h: 1, w: 1, ch: act.ch })
+    }
+
+    fn backward(
+        &self,
+        _cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        _grads: &mut NamedTensors,
+        _need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Gap { in_h, in_w } = cache else {
+            bail!("gap: forward/backward cache mismatch");
+        };
+        let hw = in_h * in_w;
+        let inv = 1.0 / hw as f32;
+        let mut dx = vec![0.0f32; d.b * hw * d.ch];
+        for bi in 0..d.b {
+            let grow = &d.data[bi * d.ch..(bi + 1) * d.ch];
+            for row in dx[bi * hw * d.ch..(bi + 1) * hw * d.ch].chunks_mut(d.ch) {
+                for (o, &g) in row.iter_mut().zip(grow) {
+                    *o = g * inv;
+                }
+            }
+        }
+        Ok(Act { data: dx, b: d.b, h: in_h, w: in_w, ch: d.ch })
+    }
+}
+
+/// Reinterpret `[b·h·w, ch]` as `[b, h·w·ch]` (no data movement).
+pub struct Flatten;
+
+impl QLayer for Flatten {
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        if cx.q.train() {
+            tape.caches.push(LayerCache::Flatten { h: act.h, w: act.w, ch: act.ch });
+        }
+        let ch = act.h * act.w * act.ch;
+        Ok(Act { data: act.data, b: act.b, h: 1, w: 1, ch })
+    }
+
+    fn backward(
+        &self,
+        _cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        _grads: &mut NamedTensors,
+        _need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Flatten { h, w, ch } = cache else {
+            bail!("flatten: forward/backward cache mismatch");
+        };
+        Ok(Act { data: d.data, b: d.b, h, w, ch })
+    }
+}
+
+/// `out = body(x) + proj(x)` — the residual combinator. An empty `proj`
+/// is the identity skip (the body must then preserve the shape); a
+/// non-empty `proj` (e.g. pool + 1×1 conv) lets a block change channels
+/// and resolution, which is what the deeper PreResNets need.
+pub struct Residual {
+    body: Vec<Box<dyn QLayer>>,
+    proj: Vec<Box<dyn QLayer>>,
+}
+
+impl Residual {
+    /// Identity skip.
+    pub fn new(body: Vec<Box<dyn QLayer>>) -> Residual {
+        Residual { body, proj: Vec::new() }
+    }
+
+    /// Projection skip (downsampling / channel-change blocks).
+    pub fn with_proj(body: Vec<Box<dyn QLayer>>, proj: Vec<Box<dyn QLayer>>) -> Residual {
+        Residual { body, proj }
+    }
+}
+
+impl QLayer for Residual {
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        for l in self.body.iter().chain(&self.proj) {
+            l.param_specs(out);
+        }
+    }
+
+    fn state_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        for l in self.body.iter().chain(&self.proj) {
+            l.state_specs(out);
+        }
+    }
+
+    fn init(&self, rng: &mut StreamRng, out: &mut NamedTensors) {
+        for l in self.body.iter().chain(&self.proj) {
+            l.init(rng, out);
+        }
+    }
+
+    fn init_state(&self, out: &mut NamedTensors) {
+        for l in self.body.iter().chain(&self.proj) {
+            l.init_state(out);
+        }
+    }
+
+    fn resolve(&mut self, tr_names: &[String], state_names: &[String]) {
+        for l in self.body.iter_mut().chain(self.proj.iter_mut()) {
+            l.resolve(tr_names, state_names);
+        }
+    }
+
+    fn reg_loss(&self, tr: &super::Params) -> Result<Option<f64>> {
+        let mut sum: Option<f64> = None;
+        for l in self.body.iter().chain(&self.proj) {
+            if let Some(r) = l.reg_loss(tr)? {
+                sum = Some(sum.unwrap_or(0.0) + r);
+            }
+        }
+        Ok(sum)
+    }
+
+    fn has_reg(&self) -> bool {
+        self.body.iter().chain(&self.proj).any(|l| l.has_reg())
+    }
+
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        let (h, w, ch) = (act.h, act.w, act.ch);
+        let mut body_tape = Tape::default();
+        if self.proj.is_empty() {
+            let skip = act.data.clone();
+            let mut out = forward_stack(&self.body, cx, act, &mut body_tape)?;
+            if out.h != h || out.w != w || out.ch != ch {
+                bail!("residual stack changed shape");
+            }
+            for (o, &s) in out.data.iter_mut().zip(&skip) {
+                *o += s;
+            }
+            tape.state_updates.append(&mut body_tape.state_updates);
+            if cx.q.train() {
+                tape.caches
+                    .push(LayerCache::Residual { body: body_tape.caches, proj: Vec::new() });
+            }
+            Ok(out)
+        } else {
+            let skip_in = Act { data: act.data.clone(), b: act.b, h, w, ch };
+            let mut out = forward_stack(&self.body, cx, act, &mut body_tape)?;
+            let mut proj_tape = Tape::default();
+            let sk = forward_stack(&self.proj, cx, skip_in, &mut proj_tape)?;
+            if out.h != sk.h || out.w != sk.w || out.ch != sk.ch {
+                bail!(
+                    "residual branches disagree: body [{}x{}x{}] vs proj [{}x{}x{}]",
+                    out.h, out.w, out.ch, sk.h, sk.w, sk.ch
+                );
+            }
+            for (o, &s) in out.data.iter_mut().zip(&sk.data) {
+                *o += s;
+            }
+            tape.state_updates.append(&mut body_tape.state_updates);
+            tape.state_updates.append(&mut proj_tape.state_updates);
+            if cx.q.train() {
+                tape.caches
+                    .push(LayerCache::Residual { body: body_tape.caches, proj: proj_tape.caches });
+            }
+            Ok(out)
+        }
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        _need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Residual { body, proj } = cache else {
+            bail!("residual: forward/backward cache mismatch");
+        };
+        let mut body_caches = body;
+        if self.proj.is_empty() {
+            let skip = d.data.clone();
+            let mut dx = backward_stack(&self.body, cx, d, &mut body_caches, grads, true)?;
+            if !body_caches.is_empty() {
+                bail!("residual backward cache underrun");
+            }
+            for (o, &s) in dx.data.iter_mut().zip(&skip) {
+                *o += s;
+            }
+            Ok(dx)
+        } else {
+            let d_proj = Act { data: d.data.clone(), b: d.b, h: d.h, w: d.w, ch: d.ch };
+            let mut dx = backward_stack(&self.body, cx, d, &mut body_caches, grads, true)?;
+            let mut proj_caches = proj;
+            let dp = backward_stack(&self.proj, cx, d_proj, &mut proj_caches, grads, true)?;
+            if !body_caches.is_empty() || !proj_caches.is_empty() {
+                bail!("residual backward cache underrun");
+            }
+            if dx.data.len() != dp.data.len() {
+                bail!("residual branch gradients disagree in shape");
+            }
+            for (o, &s) in dx.data.iter_mut().zip(&dp.data) {
+                *o += s;
+            }
+            Ok(dx)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nchw_nhwc_roundtrip_layout() {
+        // b=1, c=2, 2x2: x[c][y][x] -> out[(y*2+x)*2 + c]
+        let x = [1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let out = nchw_to_nhwc(&x, 1, 2, 2, 2);
+        assert_eq!(out, vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0]);
+    }
+
+    #[test]
+    fn im2col_identity_for_1x1_kernel() {
+        // k=1, pad=0: cols == input
+        let x: Vec<f32> = (0..2 * 3 * 3 * 2).map(|i| i as f32).collect();
+        let mut cols = Vec::new();
+        let (rows, kkc) = im2col(&x, 2, 3, 3, 2, 1, 0, &mut cols);
+        assert_eq!((rows, kkc), (18, 2));
+        assert_eq!(cols, x);
+    }
+
+    #[test]
+    fn im2col_pads_with_zeros() {
+        // 1 sample, 1 channel, 2x2 input, k=3 pad=1: output 2x2 patches
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut cols = Vec::new();
+        let (rows, kkc) = im2col(&x, 1, 2, 2, 1, 3, 1, &mut cols);
+        assert_eq!((rows, kkc), (4, 9));
+        // patch at (0,0): rows of the 3x3 window centered there
+        assert_eq!(&cols[..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        // patch at (1,1)
+        assert_eq!(&cols[27..36], &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_is_im2col_transpose() {
+        // <im2col(x), c> == <x, col2im(c)> for random-ish x, c — the
+        // adjoint identity that makes the conv backward correct
+        let (b, h, w, ch, k, pad) = (2, 4, 4, 3, 3, 1);
+        let x: Vec<f32> = (0..b * h * w * ch).map(|i| ((i % 13) as f32 - 6.0) * 0.31).collect();
+        let mut cols = Vec::new();
+        let (rows, kkc) = im2col(&x, b, h, w, ch, k, pad, &mut cols);
+        let c: Vec<f32> = (0..rows * kkc).map(|i| ((i % 7) as f32 - 3.0) * 0.17).collect();
+        let lhs: f64 = cols.iter().zip(&c).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+        let folded = col2im(&c, b, h, w, ch, k, pad);
+        let rhs: f64 = x.iter().zip(&folded).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        // 1 sample, 1 channel, 4x4 with known maxima
+        #[rustfmt::skip]
+        let x = [
+            1.0, 5.0,  2.0, 1.0,
+            0.0, 3.0,  8.0, 1.0,
+            1.0, 1.0,  0.0, 2.0,
+            9.0, 1.0,  2.0, 4.0,
+        ];
+        let (out, arg) = maxpool2(&x, 1, 4, 4, 1);
+        assert_eq!(out, vec![5.0, 8.0, 9.0, 4.0]);
+        let dx = maxpool2_backward(&[1.0, 2.0, 3.0, 4.0], &arg, 16);
+        assert_eq!(dx[1], 1.0); // 5.0 at flat idx 1
+        assert_eq!(dx[6], 2.0); // 8.0 at flat idx 6
+        assert_eq!(dx[12], 3.0); // 9.0 at flat idx 12
+        assert_eq!(dx[15], 4.0); // 4.0 at flat idx 15
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+}

@@ -1,17 +1,18 @@
 //! Pure-rust execution engine — the default [`crate::runtime::ModelBackend`].
 //!
 //! No Python, no artifacts, no XLA: dense forward/backward kernels
-//! ([`kernels`]) composed into the paper's theory-scale models
-//! ([`backend`]), with the full Algorithm-2 quantized step (Q_W/Q_A/Q_G/
-//! Q_E/Q_M via [`crate::quant`]) executed natively. This is what makes
-//! `cargo test` hermetic and what the trainer integration tests run
-//! against unconditionally.
+//! ([`kernels`]) composed through the composable quantized-layer API
+//! ([`layers`]) into the paper's models ([`models`]), with the full
+//! Algorithm-2 quantized step (Q_W/Q_A/Q_G/Q_E/Q_M via [`crate::quant`])
+//! executed natively by [`backend`]. This is what makes `cargo test`
+//! hermetic and what the trainer integration tests run against
+//! unconditionally.
 //!
 //! The registry mirrors the AOT registry names (python/compile/aot.py)
 //! for the architectures implemented here, so CLI invocations and
 //! experiments are drop-in compatible with the artifact backend:
 //!
-//! | name               | arch               | quantization             |
+//! | name               | model graph        | quantization             |
 //! |--------------------|--------------------|--------------------------|
 //! | `linreg_fp32`      | linear regression  | none                     |
 //! | `linreg_fx86`      | linear regression  | Q_W fixed W8F6           |
@@ -21,25 +22,30 @@
 //! | `mlp_qmm_fx86`     | 256-128-10 MLP     | all five roles W8F6, ρ=0.9|
 //! | `mlp_bfp8small`    | 256-128-10 MLP     | all five roles 8-bit Small-block BFP, ρ=0.9|
 //! | `{cifar10,cifar100}_{vgg,prn}_{fp32,bfp8big,bfp8small}` | VGG-mini / PreResNet-mini CNN | none or all five roles 8-bit BFP, ρ=0.9 |
+//! | `cifar10_prn20_{fp32,bfp8big,bfp8small}` | BatchNorm PreResNet-20 | as above |
 //! | `imagenet_rn_{fp32,bfp8big,bfp8small}` | PreResNet-mini CNN | as above |
 //! | `wage_cnn`         | WAGE-style CNN     | W fixed W2F0; A/G/E fixed W8F5 |
 //!
-//! The CNN rows run on the native im2col conv stack ([`conv`]) — the
-//! table1/table3/fig3 experiment workloads no longer need XLA artifacts.
+//! Every row is a [`layers::GraphModel`] — layer stacks declared as data
+//! in [`models`]; there is no per-architecture execution code. The
+//! `prn20` rows carry BatchNorm layers (running statistics in
+//! `ModelState.state`, SWA evals renormalize from the eval batch).
 //!
 //! All dense and im2col contractions execute on the cache-blocked,
 //! register-tiled GEMM engine ([`gemm`]), which also fuses the
-//! Algorithm-2 quantize/bias/ReLU epilogues into the tile loop where a
-//! quantizer directly follows a matmul; the naive loops in [`kernels`]
-//! remain the bit-exact reference. See `docs/ARCHITECTURE.md` and
-//! `docs/PERF.md` at the repo root.
+//! Algorithm-2 bias/ReLU/quantize epilogues into the tile loop and
+//! caches packed weight panels across eval batches; the naive loops in
+//! [`kernels`] remain the bit-exact reference. See `docs/ARCHITECTURE.md`
+//! and `docs/PERF.md` at the repo root.
 
 pub mod backend;
-pub mod conv;
 pub mod gemm;
 pub mod kernels;
+pub mod layers;
+pub mod models;
 
-pub use backend::{site_id, NativeBackend};
+pub use backend::NativeBackend;
+pub use layers::site_id;
 
 use std::collections::BTreeMap;
 
@@ -48,7 +54,7 @@ use anyhow::{bail, Result};
 use crate::quant::QuantFormat;
 use crate::runtime::{IoSpec, ModelSpec, QuantSet};
 
-use backend::Arch;
+use layers::GraphModel;
 
 /// Fractional-bit sweep mirrored from the AOT registry (Fig. 2 right).
 pub const LOGREG_FRACTIONAL_BITS: [i32; 7] = [2, 4, 6, 8, 10, 12, 14];
@@ -74,6 +80,9 @@ pub fn model_names() -> Vec<String> {
         }
     }
     for fmt in CNN_FORMATS {
+        names.push(format!("cifar10_prn20_{fmt}"));
+    }
+    for fmt in CNN_FORMATS {
         names.push(format!("imagenet_rn_{fmt}"));
     }
     names.push("wage_cnn".to_string());
@@ -82,7 +91,7 @@ pub fn model_names() -> Vec<String> {
 
 /// Parse a deep-learning spec name `{ds}_{arch}_{fmt}` into
 /// (dataset, classes, arch, fmt). Mirrors the AOT registry pairings:
-/// cifar10/cifar100 × vgg/prn, imagenet × rn.
+/// cifar10/cifar100 × vgg/prn, cifar10 × prn20, imagenet × rn.
 fn parse_cnn(name: &str) -> Option<(&'static str, usize, &'static str, &'static str)> {
     let (rest, fmt) = name.rsplit_once('_')?;
     let fmt = *CNN_FORMATS.iter().find(|&&f| f == fmt)?;
@@ -96,6 +105,7 @@ fn parse_cnn(name: &str) -> Option<(&'static str, usize, &'static str, &'static 
     let arch = match (ds, arch) {
         ("cifar10" | "cifar100", "vgg") => "vgg",
         ("cifar10" | "cifar100", "prn") => "prn",
+        ("cifar10", "prn20") => "prn20",
         ("imagenet", "rn") => "rn",
         _ => return None,
     };
@@ -186,6 +196,7 @@ fn spec(
     batch_eval: usize,
     x_shape: Vec<usize>,
     trainable: Vec<IoSpec>,
+    state: Vec<IoSpec>,
 ) -> ModelSpec {
     ModelSpec {
         name: name.to_string(),
@@ -200,7 +211,7 @@ fn spec(
         x_shape,
         y_shape: vec![],
         trainable,
-        state: vec![],
+        state,
         entries: BTreeMap::new(),
     }
 }
@@ -225,8 +236,9 @@ fn linreg(name: &str, quant: QuantSet) -> NativeBackend {
         256,
         vec![LINREG_D],
         vec![io("w", &[LINREG_D])],
+        vec![],
     );
-    NativeBackend::new(s, Arch::LinReg { d: LINREG_D })
+    NativeBackend::new(s, models::linreg(LINREG_D))
 }
 
 fn logreg(name: &str, quant: QuantSet) -> NativeBackend {
@@ -242,8 +254,9 @@ fn logreg(name: &str, quant: QuantSet) -> NativeBackend {
         vec![LOGREG_D],
         // sorted-name order, the artifact calling convention
         vec![io("b", &[LOGREG_K]), io("w", &[LOGREG_D, LOGREG_K])],
+        vec![],
     );
-    NativeBackend::new(s, Arch::LogReg { d: LOGREG_D, classes: LOGREG_K, lam: LOGREG_LAM })
+    NativeBackend::new(s, models::logreg(LOGREG_D, LOGREG_K, LOGREG_LAM))
 }
 
 /// WAGE-style quantization (App. F / Table 3): weights live on a coarse
@@ -263,18 +276,23 @@ fn wage_quant() -> QuantSet {
     )
 }
 
-/// Build a conv-stack backend: spec shapes come from the net's parameter
-/// list (sorted-name order, the artifact calling convention).
+/// Build a CNN backend: spec shapes come from the graph's parameter and
+/// state lists (sorted-name order, the artifact calling convention).
 fn cnn(
     name: &str,
     family: &str,
     dataset: &str,
     classes: usize,
-    net: conv::ConvNet,
+    net: GraphModel,
     quant: QuantSet,
 ) -> NativeBackend {
     let trainable = net
         .param_specs()
+        .into_iter()
+        .map(|(n, shape)| IoSpec { name: n, shape })
+        .collect();
+    let state = net
+        .state_specs()
         .into_iter()
         .map(|(n, shape)| IoSpec { name: n, shape })
         .collect();
@@ -289,8 +307,9 @@ fn cnn(
         256,
         vec![3, 16, 16],
         trainable,
+        state,
     );
-    NativeBackend::new(s, Arch::Conv(net))
+    NativeBackend::new(s, net)
 }
 
 fn mlp(name: &str, quant: QuantSet) -> NativeBackend {
@@ -310,8 +329,9 @@ fn mlp(name: &str, quant: QuantSet) -> NativeBackend {
             io("fc2.b", &[MLP_K]),
             io("fc2.w", &[MLP_H, MLP_K]),
         ],
+        vec![],
     );
-    NativeBackend::new(s, Arch::Mlp { d_in: MLP_D, hidden: MLP_H, classes: MLP_K })
+    NativeBackend::new(s, models::mlp(MLP_D, MLP_H, MLP_K))
 }
 
 /// Build the named native model. Unknown names report the available set.
@@ -332,8 +352,9 @@ pub fn load(name: &str) -> Result<NativeBackend> {
             _ => bfp8(true, 0.9),
         };
         let net = match arch {
-            "vgg" => conv::vgg_mini(classes),
-            _ => conv::prn_mini(classes), // "prn" and the imagenet "rn"
+            "vgg" => models::vgg_mini(classes),
+            "prn20" => models::prn20(classes),
+            _ => models::prn_mini(classes), // "prn" and the imagenet "rn"
         };
         return Ok(cnn(name, arch, dataset, classes, net, quant));
     }
@@ -349,7 +370,7 @@ pub fn load(name: &str) -> Result<NativeBackend> {
             "wage",
             "cifar10_like",
             10,
-            conv::wage_mini(10),
+            models::wage_mini(10),
             wage_quant(),
         ),
         other => bail!(
@@ -389,6 +410,9 @@ mod tests {
                 "logreg_fx_f",
                 "logreg_fx_fx",
                 "cifar10_vgg_bfp8small",
+                "cifar10_prn20_bfp8small",
+                "cifar100_prn20_bfp8small",
+                "imagenet_prn20_fp32",
                 "wage_cnn",
                 "mlp",
                 "nope",
@@ -432,5 +456,23 @@ mod tests {
         // momentum starts at zero, state is empty
         assert!(a.momentum.iter().all(|(_, t)| t.data.iter().all(|&v| v == 0.0)));
         assert!(a.state.is_empty());
+    }
+
+    #[test]
+    fn prn20_spec_carries_batchnorm_state() {
+        let m = load("cifar10_prn20_bfp8small").unwrap();
+        let spec = m.spec();
+        assert_eq!(spec.state.len(), 2 * 19, "two running stats per BN layer");
+        assert!(spec.state.iter().all(|s| s.shape.len() == 1));
+        let ms = m.init(1).unwrap();
+        assert_eq!(ms.state.len(), spec.state.len());
+        // running variance starts at one, mean at zero
+        let (_, var) = ms.state.iter().find(|(n, _)| n == "head.n.running_var").unwrap();
+        assert!(var.data.iter().all(|&v| v == 1.0));
+        let (_, mean) = ms.state.iter().find(|(n, _)| n == "head.n.running_mean").unwrap();
+        assert!(mean.data.iter().all(|&v| v == 0.0));
+        // gamma passed Q_W per-tensor at init and stays near one
+        let (_, gamma) = ms.trainable.iter().find(|(n, _)| n == "head.n.gamma").unwrap();
+        assert!(gamma.data.iter().all(|&v| (v - 1.0).abs() < 0.1), "{:?}", &gamma.data[..4]);
     }
 }

@@ -1,0 +1,245 @@
+//! The registered model *definitions*: every native architecture as a
+//! [`GraphModel`] — layer stacks declared as data, closing over nothing.
+//! `native::load` (the registry) attaches the quantization config and
+//! the dataset metadata; nothing here knows about formats.
+//!
+//! Inputs are 16×16×3 images for the CNNs (DESIGN.md §5 scale) and flat
+//! feature vectors for the convex/dense models.
+
+use super::layers::{
+    BatchNorm2d, Conv, Dense, Flatten, GlobalAvgPool, GraphModel, Head, InputKind, MaxPool2,
+    QLayer, QuantSite, Relu, Residual,
+};
+
+fn conv3(name: &str, in_ch: usize, out_ch: usize) -> Box<dyn QLayer> {
+    Box::new(Conv::new(name, in_ch, out_ch, 3, 1))
+}
+
+fn conv1(name: &str, in_ch: usize, out_ch: usize) -> Box<dyn QLayer> {
+    Box::new(Conv::new(name, in_ch, out_ch, 1, 0))
+}
+
+fn relu(site: &str) -> Box<dyn QLayer> {
+    Box::new(Relu::site(site))
+}
+
+fn bn(name: &str, ch: usize) -> Box<dyn QLayer> {
+    Box::new(BatchNorm2d::new(name, ch))
+}
+
+/// f(w) = mean (w·x − y)²; single weight vector (paper §4.3 / App. G).
+pub fn linreg(d: usize) -> GraphModel {
+    GraphModel::new(
+        InputKind::Flat { d },
+        Head::SumSquares,
+        vec![Box::new(Dense::vector(d))],
+    )
+}
+
+/// Softmax CE + (λ/2)‖w‖², the strongly-convex App. H objective, with
+/// the `"logits"` Q_A/Q_E site on the dense output. Eval also reports
+/// ‖∇f‖² of the full-precision objective (Fig. 2 middle).
+pub fn logreg(d: usize, classes: usize, lam: f32) -> GraphModel {
+    GraphModel::new(
+        InputKind::Flat { d },
+        Head::SoftmaxCe { classes },
+        vec![
+            Box::new(Dense::zeros("", d, classes).l2(lam)),
+            Box::new(QuantSite::new("logits")),
+        ],
+    )
+    .track_grad_norm()
+}
+
+/// Two dense layers with a ReLU + Q_A/Q_E site between them.
+pub fn mlp(d_in: usize, hidden: usize, classes: usize) -> GraphModel {
+    GraphModel::new(
+        InputKind::Flat { d: d_in },
+        Head::SoftmaxCe { classes },
+        vec![
+            Box::new(Dense::he("fc1", d_in, hidden)),
+            relu("fc1.act"),
+            Box::new(Dense::he("fc2", hidden, classes)),
+        ],
+    )
+}
+
+/// VGG-mini: two 3×3 conv pairs with 2×2 pools, then a dense classifier.
+/// 16×16 -> 8×8 -> 4×4, flatten 512 features.
+pub fn vgg_mini(classes: usize) -> GraphModel {
+    GraphModel::new(
+        InputKind::Image { ch: 3, hw: 16 },
+        Head::SoftmaxCe { classes },
+        vec![
+            conv3("c1", 3, 16),
+            relu("c1.act"),
+            conv3("c2", 16, 16),
+            relu("c2.act"),
+            Box::new(MaxPool2),
+            conv3("c3", 16, 32),
+            relu("c3.act"),
+            conv3("c4", 32, 32),
+            relu("c4.act"),
+            Box::new(MaxPool2),
+            Box::new(Flatten),
+            Box::new(Dense::he("fc", 4 * 4 * 32, classes)),
+        ],
+    )
+}
+
+/// PreResNet-mini: a conv stem, two pre-activation residual blocks,
+/// global average pooling, dense head.
+pub fn prn_mini(classes: usize) -> GraphModel {
+    GraphModel::new(
+        InputKind::Image { ch: 3, hw: 16 },
+        Head::SoftmaxCe { classes },
+        vec![
+            conv3("c1", 3, 16),
+            Box::new(Residual::new(vec![
+                relu("r1a.act"),
+                conv3("r1a", 16, 16),
+                relu("r1b.act"),
+                conv3("r1b", 16, 16),
+            ])),
+            Box::new(Residual::new(vec![
+                relu("r2a.act"),
+                conv3("r2a", 16, 16),
+                relu("r2b.act"),
+                conv3("r2b", 16, 16),
+            ])),
+            relu("head.act"),
+            Box::new(GlobalAvgPool),
+            Box::new(Dense::he("fc", 16, classes)),
+        ],
+    )
+}
+
+/// WAGE-style CNN (App. F): a small VGG-ish stack trained on a coarse
+/// fixed-point weight grid with 8-bit activations/errors/gradients.
+pub fn wage_mini(classes: usize) -> GraphModel {
+    GraphModel::new(
+        InputKind::Image { ch: 3, hw: 16 },
+        Head::SoftmaxCe { classes },
+        vec![
+            conv3("c1", 3, 16),
+            relu("c1.act"),
+            Box::new(MaxPool2),
+            conv3("c2", 16, 32),
+            relu("c2.act"),
+            Box::new(MaxPool2),
+            Box::new(Flatten),
+            Box::new(Dense::he("fc", 4 * 4 * 32, classes)),
+        ],
+    )
+}
+
+/// One pre-activation residual block `BN → ReLU → conv → BN → ReLU →
+/// conv` with an identity skip (`ch` unchanged).
+fn prn_block(tag: &str, ch: usize) -> Box<dyn QLayer> {
+    Box::new(Residual::new(vec![
+        bn(&format!("{tag}.n1"), ch),
+        relu(&format!("{tag}.r1")),
+        conv3(&format!("{tag}.c1"), ch, ch),
+        bn(&format!("{tag}.n2"), ch),
+        relu(&format!("{tag}.r2")),
+        conv3(&format!("{tag}.c2"), ch, ch),
+    ]))
+}
+
+/// The transition block opening a stage: the body downsamples (2×2 max
+/// pool) and doubles the channels; the skip matches it through a pooled
+/// 1×1 projection conv.
+fn prn_transition(tag: &str, in_ch: usize, out_ch: usize) -> Box<dyn QLayer> {
+    Box::new(Residual::with_proj(
+        vec![
+            bn(&format!("{tag}.n1"), in_ch),
+            relu(&format!("{tag}.r1")),
+            Box::new(MaxPool2),
+            conv3(&format!("{tag}.c1"), in_ch, out_ch),
+            bn(&format!("{tag}.n2"), out_ch),
+            relu(&format!("{tag}.r2")),
+            conv3(&format!("{tag}.c2"), out_ch, out_ch),
+        ],
+        vec![Box::new(MaxPool2), conv1(&format!("{tag}.p"), in_ch, out_ch)],
+    ))
+}
+
+/// PreResNet-20-style deep CNN with BatchNorm — the model the closed
+/// `Arch` enum could not express. Three stages of three pre-activation
+/// blocks (16 → 32 → 64 channels, 16×16 → 8×8 → 4×4), a BN-ReLU head,
+/// global average pooling and a dense classifier: 21 convolutions + fc,
+/// the scaled-down shape of the paper's CIFAR PreResNet.
+pub fn prn20(classes: usize) -> GraphModel {
+    let mut layers: Vec<Box<dyn QLayer>> = vec![conv3("c1", 3, 16)];
+    // stage 1: 16 channels at 16×16, identity skips throughout
+    for b in 1..=3 {
+        layers.push(prn_block(&format!("s1b{b}"), 16));
+    }
+    // stage 2: downsample to 8×8, widen to 32
+    layers.push(prn_transition("s2b1", 16, 32));
+    for b in 2..=3 {
+        layers.push(prn_block(&format!("s2b{b}"), 32));
+    }
+    // stage 3: downsample to 4×4, widen to 64
+    layers.push(prn_transition("s3b1", 32, 64));
+    for b in 2..=3 {
+        layers.push(prn_block(&format!("s3b{b}"), 64));
+    }
+    // pre-activation head: BN → ReLU → GAP → fc
+    layers.push(bn("head.n", 64));
+    layers.push(relu("head.act"));
+    layers.push(Box::new(GlobalAvgPool));
+    layers.push(Box::new(Dense::he("fc", 64, classes)));
+    GraphModel::new(InputKind::Image { ch: 3, hw: 16 }, Head::SoftmaxCe { classes }, layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StreamRng;
+
+    #[test]
+    fn registered_architectures_have_sorted_specs() {
+        for net in [vgg_mini(10), prn_mini(100), wage_mini(10), prn20(10)] {
+            let specs = net.param_specs();
+            let names: Vec<&String> = specs.iter().map(|(n, _)| n).collect();
+            let mut sorted = names.clone();
+            sorted.sort();
+            assert_eq!(names, sorted);
+            let mut rng = StreamRng::new(3);
+            let tr = net.init_params(&mut rng);
+            assert_eq!(tr.len(), specs.len());
+            for ((n1, shape), (n2, t)) in specs.iter().zip(&tr) {
+                assert_eq!(n1, n2);
+                assert_eq!(shape, &t.shape);
+            }
+            // state mirrors its specs the same way
+            let st_specs = net.state_specs();
+            let st = net.init_state();
+            assert_eq!(st.len(), st_specs.len());
+            for ((n1, shape), (n2, t)) in st_specs.iter().zip(&st) {
+                assert_eq!(n1, n2);
+                assert_eq!(shape, &t.shape);
+            }
+        }
+    }
+
+    #[test]
+    fn prn20_has_batchnorm_state_and_depth() {
+        let net = prn20(10);
+        // 21 convolutions (each w+b) + fc (w+b) + 19 BN layers (γ+β)
+        let n_bn = net.state_specs().len() / 2;
+        assert_eq!(n_bn, 19, "9 blocks × 2 BN + head BN");
+        let params = net.param_specs();
+        let n_conv_w = params
+            .iter()
+            .filter(|(n, shape)| n.ends_with(".w") && shape.len() == 4)
+            .count();
+        assert_eq!(n_conv_w, 21, "stem + 9 blocks × 2 + 2 projections");
+        // running stats exist for every BN layer, var initialized to one
+        let st = net.init_state();
+        assert!(st.iter().any(|(n, _)| n == "s2b1.n1.running_mean"));
+        let (_, var) = st.iter().find(|(n, _)| n == "head.n.running_var").unwrap();
+        assert!(var.data.iter().all(|&v| v == 1.0));
+    }
+}

@@ -48,7 +48,8 @@ use crate::tensor::Tensor;
 /// Quantize a tensor with `fmt`, deriving roles/blocks per `spec`.
 ///
 /// `role` follows qconfig.block_axes_for; `per_tensor` forces one shared
-/// exponent (biases / norm scale-shift).
+/// exponent (biases / norm scale-shift). Thin wrapper over
+/// [`apply_format_owned`] — fixed point and BFP share one code path.
 pub fn apply_format(
     fmt: &QuantFormat,
     t: &Tensor,
@@ -56,16 +57,37 @@ pub fn apply_format(
     role: spec::Role,
     per_tensor: bool,
 ) -> Tensor {
+    Tensor {
+        shape: t.shape.clone(),
+        data: apply_format_owned(fmt, t.data.clone(), &t.shape, seed, role, per_tensor),
+    }
+}
+
+/// Quantize an owned flat buffer under the same role/block policy as
+/// [`apply_format`], reusing the storage where the format allows: fixed
+/// point quantizes in place (no allocation), BFP derives its block axes
+/// from `shape` and routes through the tensor quantizer (which picks the
+/// contiguous fast path internally). This is the one entry the execution
+/// backends use for activation/error buffers, so the in-place fast path
+/// is selected here rather than at every call site.
+pub fn apply_format_owned(
+    fmt: &QuantFormat,
+    mut data: Vec<f32>,
+    shape: &[usize],
+    seed: u32,
+    role: spec::Role,
+    per_tensor: bool,
+) -> Vec<f32> {
     match fmt {
-        QuantFormat::None => t.clone(),
+        QuantFormat::None => data,
         QuantFormat::Fixed { wl, fl, stochastic } => {
-            let mut out = t.clone();
-            fixed::quantize_fixed_slice(&mut out.data, *wl, *fl, seed, *stochastic);
-            out
+            fixed::quantize_fixed_slice(&mut data, *wl, *fl, seed, *stochastic);
+            data
         }
         QuantFormat::Bfp { wl, ebits, small_block, stochastic } => {
-            let axes = spec::block_axes_for(*small_block, role, t.rank(), per_tensor);
-            quantize_bfp_tensor(t, *wl, *ebits, seed, &axes, *stochastic)
+            let axes = spec::block_axes_for(*small_block, role, shape.len(), per_tensor);
+            let t = Tensor { shape: shape.to_vec(), data };
+            quantize_bfp_tensor(&t, *wl, *ebits, seed, &axes, *stochastic).data
         }
     }
 }

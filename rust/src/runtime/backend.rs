@@ -37,6 +37,32 @@ pub struct EvalOut {
     pub grad_norm_sq: Option<f64>,
 }
 
+/// Reusable cross-batch evaluation scratch, owned by the CALLER — one
+/// per eval set (a loop of [`ModelBackend::eval_batch_cached`] calls
+/// over fixed weights). Backends lazily install their own concrete
+/// cache into the slot; stateless backends ignore it.
+///
+/// Ownership is the point: the cache belongs to one logical eval loop,
+/// not to a thread — the work-stealing pool can interleave unrelated
+/// tasks on any thread, so thread-local caching would be unsound. The
+/// caller must keep the `trainable`/`state` borrows it evaluates with
+/// alive and unmodified for the cache's whole lifetime (pointer-keyed
+/// caches rely on this), which a `let cache = EvalCache::default()`
+/// scoped to the eval loop gives for free.
+#[derive(Default)]
+pub struct EvalCache(std::sync::OnceLock<Box<dyn std::any::Any + Send + Sync>>);
+
+impl EvalCache {
+    /// The backend-specific cache living in this slot, created on first
+    /// use. One `EvalCache` holds exactly one concrete cache type.
+    pub fn get_or_init<T: Send + Sync + 'static>(&self, init: impl FnOnce() -> T) -> &T {
+        self.0
+            .get_or_init(|| Box::new(init()))
+            .downcast_ref::<T>()
+            .expect("EvalCache reused with a different cache type")
+    }
+}
+
 /// One loaded (model, quantization-config) pair on some execution engine.
 ///
 /// `Send + Sync` because the coordinator runs multi-seed experiment
@@ -91,6 +117,29 @@ pub trait ModelBackend: Send + Sync {
         y: &[f32],
     ) -> Result<EvalOut> {
         self.eval(trainable, state, x, y)
+    }
+
+    /// Evaluate one batch with a caller-owned [`EvalCache`] shared
+    /// across the batches of one eval set (`batch_stats` selects the
+    /// [`Self::eval_batch_stats`] semantics). The native backend reuses
+    /// packed weight GEMM panels through the cache; the default simply
+    /// forwards, so stateless backends need not care. Callers must
+    /// uphold the [`EvalCache`] stability contract.
+    fn eval_batch_cached(
+        &self,
+        cache: &EvalCache,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+        y: &[f32],
+        batch_stats: bool,
+    ) -> Result<EvalOut> {
+        let _ = cache;
+        if batch_stats {
+            self.eval_batch_stats(trainable, state, x, y)
+        } else {
+            self.eval(trainable, state, x, y)
+        }
     }
 
     /// Fig. 3 (right): evaluate with activations quantized to `act_wl`-bit

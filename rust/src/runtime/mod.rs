@@ -18,7 +18,7 @@ pub mod backend;
 pub mod model;
 
 pub use artifact::{EntrySpec, IoSpec, Manifest, ModelSpec, QuantSet};
-pub use backend::{EvalOut, ModelBackend, ModelState};
+pub use backend::{EvalCache, EvalOut, ModelBackend, ModelState};
 #[cfg(feature = "xla-runtime")]
 pub use model::{LoadedModel, Runtime};
 

@@ -90,8 +90,23 @@ impl Tensor {
 }
 
 /// A named collection of tensors (a model's parameter set) in a fixed
-/// order — the artifact calling convention.
+/// order — the artifact calling convention. Model parameter sets are
+/// kept in **sorted-name order** end to end (init, grads, checkpoints,
+/// SWA averages), which is what lets [`lookup`] binary-search.
 pub type NamedTensors = Vec<(String, Tensor)>;
+
+/// Find `name` in a parameter set: binary search over the sorted-name
+/// convention, with a linear-scan fallback so unsorted callers (hand-
+/// built test fixtures, foreign checkpoints) still resolve correctly.
+pub fn lookup<'a>(ts: &'a [(String, Tensor)], name: &str) -> Result<&'a Tensor> {
+    if let Ok(i) = ts.binary_search_by(|(n, _)| n.as_str().cmp(name)) {
+        return Ok(&ts[i].1);
+    }
+    ts.iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, t)| t)
+        .ok_or_else(|| anyhow::anyhow!("missing tensor {name:?}"))
+}
 
 /// Total element count across a parameter set.
 pub fn total_elements(params: &NamedTensors) -> usize {

@@ -108,7 +108,7 @@ fn fused_epilogue_bit_matches_separate_pipeline() {
             for use_bias in [false, true] {
                 for relu in [false, true] {
                     // separate reference on the naive serial kernel: the
-                    // same `apply_format` call the backend's quant_buf
+                    // same `apply_format` call the layers' separate quantize pass
                     // performs for a 2-D activation/error tensor
                     let mut want = vec![0.0f32; m * n];
                     kernels::matmul_serial(&a, &b, m, k, n, &mut want);
@@ -125,6 +125,7 @@ fn fused_epilogue_bit_matches_separate_pipeline() {
                         bias: use_bias.then_some(&bias[..]),
                         relu,
                         quant: Some(gemm::FusedQuant { fmt, seed, rng_base: 0 }),
+                        b_cache: None,
                     };
                     let mut got = vec![0.0f32; m * n];
                     gemm::matmul_into_quant(&a, &b, m, k, n, &mut got, &ep);
@@ -142,6 +143,7 @@ fn fused_epilogue_bit_matches_separate_pipeline() {
                 bias: None,
                 relu: false,
                 quant: Some(gemm::FusedQuant { fmt, seed, rng_base: 0 }),
+                b_cache: None,
             };
             let mut got = vec![0.0f32; m * n];
             gemm::matmul_a_bt_into_quant(&a, &bt, m, k, n, &mut got, &ep);

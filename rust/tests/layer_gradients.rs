@@ -1,0 +1,349 @@
+//! The QLayer graph, end to end: finite-difference gradient checks for
+//! every layer kind (Dense, Conv, ReLU/QuantSite, MaxPool-free FD nets,
+//! GlobalAvgPool, Flatten, identity and projection Residuals, and
+//! BatchNorm in train mode), BatchNorm semantics through the backend
+//! (running statistics, SWA batch-stats eval), the deep `cifar10_prn20`
+//! model training real native Algorithm-2 steps, and the packed-B panel
+//! cache staying bit-identical through the trainer's eval loop.
+
+use swalp::coordinator::{Schedule, TrainConfig, Trainer};
+use swalp::data;
+use swalp::native::layers::{
+    BatchNorm2d, Conv, Dense, Flatten, GlobalAvgPool, GraphModel, Head, InputKind, Mode, QCtx,
+    QLayer, QuantSite, Relu, Residual,
+};
+use swalp::native::{self, gemm};
+use swalp::quant::QuantFormat;
+use swalp::rng::StreamRng;
+use swalp::runtime::{EvalCache, ModelBackend};
+use swalp::tensor::NamedTensors;
+
+fn conv3(name: &str, i: usize, o: usize) -> Box<dyn QLayer> {
+    Box::new(Conv::new(name, i, o, 3, 1))
+}
+
+fn conv1(name: &str, i: usize, o: usize) -> Box<dyn QLayer> {
+    Box::new(Conv::new(name, i, o, 1, 0))
+}
+
+fn train_ctx() -> QCtx<'static> {
+    QCtx::new(&QuantFormat::None, &QuantFormat::None, 0, Mode::Train)
+}
+
+fn fd_loss(
+    gm: &GraphModel,
+    tr: &NamedTensors,
+    st: &NamedTensors,
+    x: &[f32],
+    y: &[f32],
+    b: usize,
+) -> f64 {
+    gm.train_grads(&train_ctx(), tr, st, x, y, b).unwrap().loss
+}
+
+/// Finite-difference check of every trainable of a graph model against
+/// its analytic gradients (full precision, train mode).
+fn fd_check(gm: &GraphModel, in_elems: usize, n_y: usize, seed: u64) {
+    let b = 2;
+    let mut rng = StreamRng::new(seed);
+    let x: Vec<f32> = (0..b * in_elems).map(|_| rng.normal()).collect();
+    let y: Vec<f32> = match gm.head {
+        Head::SoftmaxCe { classes } => (0..b).map(|_| rng.below(classes) as f32).collect(),
+        Head::SumSquares => (0..n_y).map(|_| rng.normal()).collect(),
+    };
+    let tr = gm.init_params(&mut rng);
+    let st = gm.init_state();
+
+    let out = gm.train_grads(&train_ctx(), &tr, &st, &x, &y, b).unwrap();
+    assert_eq!(
+        out.grads.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+        tr.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+        "gradient order must match trainable order"
+    );
+
+    // small eps keeps the odds of a ReLU kink inside the probe window
+    // negligible; the tolerance still catches transposes, missing
+    // terms and scale factors on any non-vanishing gradient
+    let eps = 2e-3f32;
+    for (ti, (name, t)) in tr.iter().enumerate() {
+        // probe a few spread-out elements of every tensor
+        let probes = [0, t.len() / 2, t.len() - 1];
+        for &pi in &probes {
+            let mut plus = tr.clone();
+            plus[ti].1.data[pi] += eps;
+            let lp = fd_loss(gm, &plus, &st, &x, &y, b);
+            let mut minus = tr.clone();
+            minus[ti].1.data[pi] -= eps;
+            let lm = fd_loss(gm, &minus, &st, &x, &y, b);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let an = out.grads[ti].1.data[pi];
+            assert!(
+                (fd - an).abs() < 2e-2 * an.abs().max(0.05) + 2e-3,
+                "{name}[{pi}]: finite-diff {fd} vs analytic {an}"
+            );
+        }
+    }
+}
+
+#[test]
+fn conv_dense_gradients_match_finite_differences() {
+    // conv→relu→conv→relu→flatten→dense on a 4x4 input (no pooling:
+    // max argmax flips under finite perturbation; pooling has its own
+    // routing test in the spatial module)
+    let gm = GraphModel::new(
+        InputKind::Image { ch: 1, hw: 4 },
+        Head::SoftmaxCe { classes: 3 },
+        vec![
+            conv3("c1", 1, 2),
+            Box::new(Relu::site("c1.act")),
+            conv3("c2", 2, 2),
+            Box::new(Relu::site("c2.act")),
+            Box::new(Flatten),
+            Box::new(Dense::he("fc", 4 * 4 * 2, 3)),
+        ],
+    );
+    fd_check(&gm, 16, 0, 11);
+}
+
+#[test]
+fn residual_gap_gradients_match_finite_differences() {
+    let gm = GraphModel::new(
+        InputKind::Image { ch: 1, hw: 4 },
+        Head::SoftmaxCe { classes: 3 },
+        vec![
+            conv3("c1", 1, 2),
+            Box::new(Residual::new(vec![Box::new(Relu::site("r1.act")), conv3("r1", 2, 2)])),
+            Box::new(Relu::site("head.act")),
+            Box::new(GlobalAvgPool),
+            Box::new(Dense::he("fc", 2, 3)),
+        ],
+    );
+    fd_check(&gm, 16, 0, 23);
+}
+
+#[test]
+fn batchnorm_train_gradients_match_finite_differences() {
+    // conv→BN→relu→gap→dense: BatchNorm differentiates through the
+    // batch statistics (the x-dependence of mean/var), which is exactly
+    // what the closed-form backward must reproduce
+    let gm = GraphModel::new(
+        InputKind::Image { ch: 1, hw: 4 },
+        Head::SoftmaxCe { classes: 3 },
+        vec![
+            conv3("c1", 1, 2),
+            Box::new(BatchNorm2d::new("n1", 2)),
+            Box::new(Relu::site("n1.act")),
+            Box::new(GlobalAvgPool),
+            Box::new(Dense::he("fc", 2, 3)),
+        ],
+    );
+    fd_check(&gm, 16, 0, 31);
+}
+
+#[test]
+fn projection_residual_gradients_match_finite_differences() {
+    // a channel-changing block: body BN→ReLU→conv(2→4), skip 1×1 conv —
+    // the transition-block shape minus the (FD-hostile) max pool
+    let gm = GraphModel::new(
+        InputKind::Image { ch: 1, hw: 4 },
+        Head::SoftmaxCe { classes: 3 },
+        vec![
+            conv3("c1", 1, 2),
+            Box::new(Residual::with_proj(
+                vec![
+                    Box::new(BatchNorm2d::new("t.n1", 2)),
+                    Box::new(Relu::site("t.r1")),
+                    conv3("t.c1", 2, 4),
+                ],
+                vec![conv1("t.p", 2, 4)],
+            )),
+            Box::new(Relu::site("head.act")),
+            Box::new(GlobalAvgPool),
+            Box::new(Dense::he("fc", 4, 3)),
+        ],
+    );
+    fd_check(&gm, 16, 0, 47);
+}
+
+#[test]
+fn dense_heads_gradients_match_finite_differences() {
+    // the MLP graph (Dense→ReLU→Dense)…
+    let mlp = GraphModel::new(
+        InputKind::Flat { d: 6 },
+        Head::SoftmaxCe { classes: 3 },
+        vec![
+            Box::new(Dense::he("fc1", 6, 5)),
+            Box::new(Relu::site("fc1.act")),
+            Box::new(Dense::he("fc2", 5, 3)),
+        ],
+    );
+    fd_check(&mlp, 6, 0, 7);
+
+    // …the logreg graph (zero init + L2 + a bare QuantSite): perturb
+    // around a non-zero point so the L2 term has a visible gradient
+    let logreg = GraphModel::new(
+        InputKind::Flat { d: 6 },
+        Head::SoftmaxCe { classes: 3 },
+        vec![
+            Box::new(Dense::zeros("", 6, 3).l2(0.1)),
+            Box::new(QuantSite::new("logits")),
+        ],
+    )
+    .track_grad_norm();
+    let b = 2;
+    let mut rng = StreamRng::new(13);
+    let x: Vec<f32> = (0..b * 6).map(|_| rng.normal()).collect();
+    let y = vec![1.0f32, 2.0];
+    let mut tr = logreg.init_params(&mut rng);
+    for (_, t) in tr.iter_mut() {
+        for v in t.data.iter_mut() {
+            *v = rng.normal() * 0.3;
+        }
+    }
+    let st = logreg.init_state();
+    let out = logreg.train_grads(&train_ctx(), &tr, &st, &x, &y, b).unwrap();
+    let eps = 1e-3f32;
+    for (ti, (name, t)) in tr.iter().enumerate() {
+        for pi in [0, t.len() - 1] {
+            let mut plus = tr.clone();
+            plus[ti].1.data[pi] += eps;
+            let lp = fd_loss(&logreg, &plus, &st, &x, &y, b);
+            let mut minus = tr.clone();
+            minus[ti].1.data[pi] -= eps;
+            let lm = fd_loss(&logreg, &minus, &st, &x, &y, b);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let an = out.grads[ti].1.data[pi];
+            assert!(
+                (fd - an).abs() < 1e-2 * an.abs().max(0.05) + 1e-3,
+                "logreg {name}[{pi}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    // …and the linreg graph (SumSquares head, 2/b-scaled gradient)
+    let linreg = GraphModel::new(
+        InputKind::Flat { d: 5 },
+        Head::SumSquares,
+        vec![Box::new(Dense::vector(5))],
+    );
+    let mut tr = linreg.init_params(&mut rng);
+    for v in tr[0].1.data.iter_mut() {
+        *v = rng.normal() * 0.5;
+    }
+    let x: Vec<f32> = (0..2 * 5).map(|_| rng.normal()).collect();
+    let y = vec![0.7f32, -0.3];
+    let st = linreg.init_state();
+    let out = linreg.train_grads(&train_ctx(), &tr, &st, &x, &y, 2).unwrap();
+    let eps = 1e-3f32;
+    for pi in [0, 4] {
+        let mut plus = tr.clone();
+        plus[0].1.data[pi] += eps;
+        let lp = fd_loss(&linreg, &plus, &st, &x, &y, 2);
+        let mut minus = tr.clone();
+        minus[0].1.data[pi] -= eps;
+        let lm = fd_loss(&linreg, &minus, &st, &x, &y, 2);
+        let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+        let an = out.grads[0].1.data[pi];
+        assert!(
+            (fd - an).abs() < 1e-2 * an.abs().max(0.05) + 1e-3,
+            "linreg w[{pi}]: fd {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[test]
+fn prn20_trains_native_quantized_steps_with_batchnorm() {
+    // the deep BatchNorm model under the full 8-bit Small-block BFP
+    // Algorithm-2 step: losses stay finite, running statistics move,
+    // averaging folds run, and two runs are bit-identical
+    let model = native::load("cifar10_prn20_bfp8small").unwrap();
+    assert_eq!(model.spec().x_shape, vec![3, 16, 16]);
+    let split = data::build(&model.spec().dataset, 5, 0.05).unwrap();
+    let run = || {
+        let trainer = Trainer::new(&model, &split);
+        let cfg = TrainConfig::new(8, 4, 1, Schedule::Constant(0.05));
+        trainer.run(&cfg).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.sgd_eval.loss.is_finite(), "loss diverged: {}", a.sgd_eval.loss);
+    assert_eq!(a.swa.as_ref().unwrap().m, 4, "averaging phase must fold");
+    for ((n1, t1), (n2, t2)) in a.final_state.trainable.iter().zip(&b.final_state.trainable) {
+        assert_eq!(n1, n2);
+        let bits = |t: &swalp::tensor::Tensor| -> Vec<u32> {
+            t.data.iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits(t1), bits(t2), "{n1}: prn20 step must be bit-reproducible");
+    }
+    // BatchNorm running statistics were updated by the steps
+    let (name, rm) = a
+        .final_state
+        .state
+        .iter()
+        .find(|(n, _)| n.ends_with("running_mean"))
+        .unwrap();
+    assert!(rm.data.iter().any(|&v| v != 0.0), "{name} never updated");
+    // and the two runs agree on them bit-for-bit too
+    for ((n1, t1), (_, t2)) in a.final_state.state.iter().zip(&b.final_state.state) {
+        assert_eq!(t1.data, t2.data, "{n1}: running stats must be reproducible");
+    }
+    // SWA eval renormalizes from the eval batch (bn_update): it must
+    // differ from the running-stats eval of the same weights
+    let trainer = Trainer::new(&model, &split);
+    let avg = a.swa.as_ref().unwrap().average().unwrap();
+    let ev_run = trainer.eval_set(&avg, &a.final_state.state, true).unwrap();
+    let ev_bs = trainer.eval_swa(&avg, &a.final_state.state, true).unwrap();
+    assert!(ev_bs.loss.is_finite() && ev_run.loss.is_finite());
+    assert_ne!(
+        ev_bs.loss.to_bits(),
+        ev_run.loss.to_bits(),
+        "batch-stats eval must actually renormalize BN layers"
+    );
+}
+
+#[test]
+fn eval_panel_cache_is_bit_identical_to_uncached_evals() {
+    // the caller-owned eval cache must reuse packed weight panels and
+    // stay bit-identical to uncached per-batch evaluation
+    let model = native::load("mlp_bfp8small").unwrap();
+    let split = data::build(&model.spec().dataset, 3, 0.25).unwrap();
+    let ms = model.init(1).unwrap();
+    let be = model.spec().batch_eval;
+
+    // cached pass over the eval set (what Trainer::eval_set does)
+    let cache = EvalCache::default();
+    let mut cursor = 0usize;
+    let (mut xb, mut yb) = (Vec::new(), Vec::new());
+    let mut cached_out = Vec::new();
+    while swalp::data::loader::Loader::eval_batch(&split.test, be, &mut cursor, &mut xb, &mut yb) {
+        let o = model
+            .eval_batch_cached(&cache, &ms.trainable, &ms.state, &xb, &yb, false)
+            .unwrap();
+        cached_out.push((o.loss, o.metric));
+    }
+    let pc: &gemm::PanelCache = cache.get_or_init(gemm::PanelCache::new);
+    assert!(pc.hits() > 0, "eval loop must reuse packed weight panels");
+
+    // uncached reference: same batches through the plain eval entry
+    let mut cursor = 0usize;
+    let mut plain_out = Vec::new();
+    while swalp::data::loader::Loader::eval_batch(&split.test, be, &mut cursor, &mut xb, &mut yb) {
+        let o = model.eval(&ms.trainable, &ms.state, &xb, &yb).unwrap();
+        plain_out.push((o.loss, o.metric));
+    }
+    assert_eq!(cached_out.len(), plain_out.len());
+    for ((cl, cm), (pl, pm)) in cached_out.iter().zip(&plain_out) {
+        assert_eq!(cl.to_bits(), pl.to_bits());
+        assert_eq!(cm.to_bits(), pm.to_bits());
+    }
+
+    // and the trainer's aggregate (which owns its cache internally)
+    // agrees with the manual aggregation bit for bit
+    let trainer = Trainer::new(&model, &split);
+    let agg = trainer.eval_set(&ms.trainable, &ms.state, true).unwrap();
+    let loss: f64 = plain_out.iter().map(|(l, _)| l).sum::<f64>() / plain_out.len().max(1) as f64;
+    let metric: f64 =
+        plain_out.iter().map(|(_, m)| m).sum::<f64>() / (plain_out.len() * be).max(1) as f64;
+    assert_eq!(agg.loss.to_bits(), loss.to_bits());
+    assert_eq!(agg.metric.to_bits(), metric.to_bits());
+}

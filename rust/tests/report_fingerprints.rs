@@ -1,0 +1,183 @@
+//! Report-fingerprint parity for the nine pre-QLayer-refactor
+//! experiments: the registry → runner → report pipeline must produce
+//! **bit-identical** `swalp-report-v1` fingerprints
+//!
+//! * across runner thread policies (pool vs `--threads 1`, in-process),
+//! * at pinned pool sizes (subprocess re-runs at RAYON_NUM_THREADS=1
+//!   and 8 — the pool size is latched at first use, hence one process
+//!   per count), and
+//! * against the committed goldens in
+//!   `tests/data/golden_report_fingerprints.json`, which pin the
+//!   pre-refactor numerical behavior of every registered experiment.
+//!
+//! Golden management: if the golden file is absent the test writes it
+//! (bootstrap) and reports that it did; regenerate deliberately with
+//! `SWALP_WRITE_GOLDEN_REPORTS=1 cargo test --test report_fingerprints`.
+//! Per the golden-drift CI guard, the file may only change together
+//! with its regeneration recipe (rust/README.md).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::process::Command;
+
+use swalp::coordinator::experiment::CtxConfig;
+use swalp::coordinator::{registry, Runner};
+use swalp::util::json::{self, Value};
+
+const GOLDEN_PATH: &str = "tests/data/golden_report_fingerprints.json";
+const GOLDEN_SCHEMA: &str = "swalp-report-goldens-v1";
+
+/// The experiments whose smoke-tier reports are pinned (paper order —
+/// the registry set as of the pre-refactor goldens; newer experiments
+/// get coverage through the registry smoke test instead).
+const PINNED: [&str; 9] = [
+    "fig2-linreg",
+    "fig2-logreg",
+    "fig2-bits",
+    "table1",
+    "table2",
+    "table3",
+    "fig3-frequency",
+    "fig3-precision",
+    "thm3",
+];
+
+/// Smoke-tier fingerprints of every pinned experiment, through ONE
+/// `run_many` work list (the production path).
+fn fingerprints(serial: bool) -> Vec<(String, String)> {
+    let mut cfg = CtxConfig::new().smoke(true);
+    if serial {
+        cfg = cfg.threads(1);
+    }
+    let ctx = cfg.build().unwrap();
+    let specs: Vec<_> = PINNED
+        .iter()
+        .map(|id| registry::find(id).expect("pinned id must stay registered"))
+        .collect();
+    Runner::new(&ctx)
+        .run_many(&specs)
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.experiment.clone(), r.fingerprint()))
+        .collect()
+}
+
+/// Stable 64-bit FNV-1a over a fingerprint string — process-independent
+/// (unlike `DefaultHasher`), so parent and child runs can compare.
+fn fnv64(s: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    format!("{h:016x}")
+}
+
+fn write_goldens(fps: &[(String, String)]) {
+    let pairs: Vec<(&str, Value)> = vec![
+        ("schema", Value::str(GOLDEN_SCHEMA)),
+        ("mode", Value::str("smoke")),
+        (
+            "fingerprints",
+            Value::obj(fps.iter().map(|(id, fp)| (id.as_str(), Value::str(fp))).collect()),
+        ),
+    ];
+    json::write_file(Path::new(GOLDEN_PATH), &Value::obj(pairs)).unwrap();
+}
+
+#[test]
+fn reports_bit_identical_across_thread_policies_and_goldens() {
+    // child mode: recompute under this process's RAYON_NUM_THREADS and
+    // print stable hashes for the parent to compare
+    if std::env::var_os("SWALP_FP_CHILD").is_some() {
+        for (id, fp) in fingerprints(false) {
+            println!("FP {id} {}", fnv64(&fp));
+        }
+        return;
+    }
+
+    let pool = fingerprints(false);
+    let serial = fingerprints(true);
+    assert_eq!(pool.len(), PINNED.len());
+    for ((id_p, fp_p), (id_s, fp_s)) in pool.iter().zip(&serial) {
+        assert_eq!(id_p, id_s);
+        assert_eq!(
+            fp_p, fp_s,
+            "{id_p}: report differs between pool and --threads 1 execution"
+        );
+    }
+
+    // pinned pool sizes: 1 and 8 (RAYON_NUM_THREADS is latched at first
+    // pool use, hence one subprocess per count)
+    let want: BTreeMap<&str, String> =
+        pool.iter().map(|(id, fp)| (id.as_str(), fnv64(fp))).collect();
+    let exe = std::env::current_exe().expect("test binary path");
+    for threads in ["1", "8"] {
+        let out = Command::new(&exe)
+            .args([
+                "reports_bit_identical_across_thread_policies_and_goldens",
+                "--exact",
+                "--test-threads",
+                "1",
+                "--nocapture",
+            ])
+            .env("RAYON_NUM_THREADS", threads)
+            .env("SWALP_FP_CHILD", "1")
+            .output()
+            .expect("spawn fingerprint child");
+        assert!(
+            out.status.success(),
+            "fingerprint child failed at RAYON_NUM_THREADS={threads}\nstdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let mut seen = 0;
+        for line in stdout.lines() {
+            let mut it = line.split_whitespace();
+            if it.next() != Some("FP") {
+                continue;
+            }
+            let (id, hash) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            let expect = want.get(id).unwrap_or_else(|| panic!("unknown id {id:?} from child"));
+            assert_eq!(
+                expect, hash,
+                "{id}: report at RAYON_NUM_THREADS={threads} differs from the parent's"
+            );
+            seen += 1;
+        }
+        assert_eq!(seen, PINNED.len(), "child at {threads} threads reported {seen} ids");
+    }
+
+    // goldens: bootstrap when absent, compare otherwise
+    let regen = std::env::var_os("SWALP_WRITE_GOLDEN_REPORTS").is_some();
+    if regen || !Path::new(GOLDEN_PATH).exists() {
+        write_goldens(&pool);
+        eprintln!(
+            "wrote {} fingerprints to {GOLDEN_PATH} ({}) — commit it to pin the current behavior",
+            pool.len(),
+            if regen { "regeneration requested" } else { "bootstrap: file was absent" }
+        );
+        return;
+    }
+    let golden = json::parse_file(Path::new(GOLDEN_PATH)).unwrap();
+    assert_eq!(golden.get("schema").unwrap().as_str().unwrap(), GOLDEN_SCHEMA);
+    assert_eq!(golden.get("mode").unwrap().as_str().unwrap(), "smoke");
+    let gfps = golden.get("fingerprints").unwrap().as_obj().unwrap();
+    assert_eq!(gfps.len(), PINNED.len(), "golden file must cover every pinned id");
+    for (id, fp) in &pool {
+        let gold = gfps
+            .get(id)
+            .unwrap_or_else(|| panic!("{id}: missing from {GOLDEN_PATH}"))
+            .as_str()
+            .unwrap();
+        assert_eq!(
+            gold, fp,
+            "{id}: report fingerprint drifted from the committed golden \
+             (golden fnv {}, got fnv {}); if the change is intentional, regenerate \
+             with SWALP_WRITE_GOLDEN_REPORTS=1 and follow the golden-drift recipe",
+            fnv64(gold),
+            fnv64(fp)
+        );
+    }
+}
