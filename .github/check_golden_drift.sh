@@ -16,6 +16,7 @@ set -euo pipefail
 GOLDENS=(
   "rust/tests/data/golden_quant.json"
   "rust/tests/data/golden_report_fingerprints.json"
+  "rust/tests/data/golden_ledger_v1.jsonl"
 )
 README="rust/README.md"
 

@@ -18,13 +18,24 @@ use crate::util::json::{self, Value};
 
 const MAGIC: &[u8; 8] = b"SWALPCK1";
 
+/// The raw f64 SWA accumulator payload: (name, values, shape) triples +
+/// fold count, exactly as [`super::swa::SwaAccumulator::raw`] holds it.
+pub type Swa64 = (Vec<(String, Vec<f64>, Vec<usize>)>, usize);
+
 pub struct Checkpoint {
     pub step: u64,
     pub trainable: NamedTensors,
     pub state: NamedTensors,
     pub momentum: NamedTensors,
-    /// SWA accumulator payload (f64) + fold count, if averaging started.
+    /// SWA average squeezed to f32 + fold count, if averaging started.
+    /// Kept for export/eval and for checkpoints written before `swa64`
+    /// existed; restoring the accumulator from it is lossy.
     pub swa: Option<(NamedTensors, usize)>,
+    /// The accumulator's exact f64 payload (optional section, absent in
+    /// older files). When present, resume continues the running mean
+    /// bit-for-bit — required for mid-averaging checkpoint-resume to
+    /// reproduce an uninterrupted run exactly.
+    pub swa64: Option<Swa64>,
 }
 
 fn section_json(ts: &NamedTensors) -> Value {
@@ -50,6 +61,51 @@ fn write_f32s(out: &mut impl Write, ts: &NamedTensors) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn section64_json(avg: &[(String, Vec<f64>, Vec<usize>)]) -> Value {
+    Value::Arr(
+        avg.iter()
+            .map(|(n, _, shape)| {
+                Value::obj(vec![
+                    ("name", Value::str(n)),
+                    (
+                        "shape",
+                        Value::Arr(shape.iter().map(|&d| Value::Num(d as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn write_f64s(out: &mut impl Write, avg: &[(String, Vec<f64>, Vec<usize>)]) -> Result<()> {
+    for (_, data, _) in avg {
+        for v in data {
+            out.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_section64(
+    inp: &mut impl Read,
+    spec: &Value,
+) -> Result<Vec<(String, Vec<f64>, Vec<usize>)>> {
+    let mut out = Vec::new();
+    for item in spec.as_arr()? {
+        let name = item.get("name")?.as_str()?.to_string();
+        let shape = item.get("shape")?.as_shape()?;
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f64; n];
+        let mut buf = [0u8; 8];
+        for v in data.iter_mut() {
+            inp.read_exact(&mut buf)?;
+            *v = f64::from_le_bytes(buf);
+        }
+        out.push((name, data, shape));
+    }
+    Ok(out)
 }
 
 fn read_section(inp: &mut impl Read, spec: &Value) -> Result<NamedTensors> {
@@ -89,6 +145,16 @@ impl Checkpoint {
                     ]),
                 },
             ),
+            (
+                "swa64",
+                match &self.swa64 {
+                    None => Value::Null,
+                    Some((avg, m)) => Value::obj(vec![
+                        ("m", Value::Num(*m as f64)),
+                        ("tensors", section64_json(avg)),
+                    ]),
+                },
+            ),
         ])
         .to_string();
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -100,6 +166,9 @@ impl Checkpoint {
         write_f32s(&mut f, &self.momentum)?;
         if let Some((ts, _)) = &self.swa {
             write_f32s(&mut f, ts)?;
+        }
+        if let Some((avg, _)) = &self.swa64 {
+            write_f64s(&mut f, avg)?;
         }
         Ok(())
     }
@@ -128,12 +197,22 @@ impl Checkpoint {
                 Some((read_section(&mut f, v.get("tensors")?)?, m))
             }
         };
+        // optional section: checkpoints written before swa64 existed
+        // load fine (and resume through the lossy f32 path)
+        let swa64 = match h.opt("swa64") {
+            None | Some(Value::Null) => None,
+            Some(v) => {
+                let m = v.get("m")?.as_usize()?;
+                Some((read_section64(&mut f, v.get("tensors")?)?, m))
+            }
+        };
         Ok(Checkpoint {
             step: h.get("step")?.as_usize()? as u64,
             trainable,
             state,
             momentum,
             swa,
+            swa64,
         })
     }
 
@@ -144,6 +223,7 @@ impl Checkpoint {
             state: ms.state.clone(),
             momentum: ms.momentum.clone(),
             swa,
+            swa64: None,
         }
     }
 
@@ -176,6 +256,7 @@ mod tests {
             state: vec![named("bn.mean", vec![4], 0.0)],
             momentum: vec![named("a.w", vec![2, 3], 9.0), named("b", vec![4], 2.0)],
             swa: Some((vec![named("a.w", vec![2, 3], 7.0), named("b", vec![4], 3.0)], 17)),
+            swa64: None,
         };
         let dir = std::env::temp_dir().join("swalp_ck_test");
         let path = dir.join("ck.bin");
@@ -188,6 +269,40 @@ mod tests {
         let (ts, m) = back.swa.unwrap();
         assert_eq!(m, 17);
         assert_eq!(ts, ck.swa.unwrap().0);
+        assert!(back.swa64.is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn swa64_section_roundtrips_bit_for_bit() {
+        // values deliberately NOT f32-representable: the f32 `swa`
+        // section cannot carry them, the f64 section must
+        let exact = vec![
+            ("a.w".to_string(), vec![0.1f64, 1.0 + 1e-12, -3.7e-300], vec![3usize]),
+            ("b".to_string(), vec![std::f64::consts::PI], vec![1usize]),
+        ];
+        let ck = Checkpoint {
+            step: 80,
+            trainable: vec![named("a.w", vec![3], 0.5)],
+            state: vec![],
+            momentum: vec![named("a.w", vec![3], 0.0)],
+            swa: Some((vec![named("a.w", vec![3], 0.1)], 4)),
+            swa64: Some((exact.clone(), 4)),
+        };
+        let dir = std::env::temp_dir().join("swalp_ck_test_swa64");
+        let path = dir.join("ck.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let (avg, m) = back.swa64.unwrap();
+        assert_eq!(m, 4);
+        assert_eq!(avg.len(), exact.len());
+        for ((n_a, d_a, s_a), (n_b, d_b, s_b)) in avg.iter().zip(&exact) {
+            assert_eq!(n_a, n_b);
+            assert_eq!(s_a, s_b);
+            for (x, y) in d_a.iter().zip(d_b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "f64 payload must be bit-exact");
+            }
+        }
         std::fs::remove_file(&path).ok();
     }
 

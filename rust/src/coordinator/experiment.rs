@@ -36,11 +36,19 @@ pub struct CtxConfig {
     seeds: u64,
     threads: Option<usize>,
     out_dir: Option<PathBuf>,
+    ledger: Option<PathBuf>,
 }
 
 impl Default for CtxConfig {
     fn default() -> Self {
-        CtxConfig { quick: false, smoke: false, seeds: 1, threads: None, out_dir: None }
+        CtxConfig {
+            quick: false,
+            smoke: false,
+            seeds: 1,
+            threads: None,
+            out_dir: None,
+            ledger: None,
+        }
     }
 }
 
@@ -82,6 +90,14 @@ impl CtxConfig {
     /// `results/`).
     pub fn out_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.out_dir = Some(dir.into());
+        self
+    }
+
+    /// Persistent run-ledger directory ([`crate::ledger`]): the runner
+    /// records every cell replica there and skips ones already
+    /// `Completed`, making sweeps resumable after a kill.
+    pub fn ledger(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.ledger = Some(dir.into());
         self
     }
 
@@ -127,6 +143,7 @@ impl CtxConfig {
             seeds: self.seeds,
             threads: self.threads,
             out_dir: self.out_dir,
+            ledger: self.ledger,
             #[cfg(feature = "xla-runtime")]
             xla,
         })
@@ -139,6 +156,7 @@ pub struct Ctx {
     seeds: u64,
     threads: Option<usize>,
     out_dir: Option<PathBuf>,
+    ledger: Option<PathBuf>,
     /// PJRT client + manifest, when the feature is on and artifacts exist.
     #[cfg(feature = "xla-runtime")]
     xla: Option<(Runtime, Manifest)>,
@@ -194,6 +212,11 @@ impl Ctx {
     /// Where this context persists its reports.
     pub fn results_dir(&self) -> PathBuf {
         self.out_dir.clone().unwrap_or_else(report::results_dir)
+    }
+
+    /// Run-ledger directory, when `--ledger` was given.
+    pub fn ledger_dir(&self) -> Option<&std::path::Path> {
+        self.ledger.as_deref()
     }
 
     /// Execution-backend id recorded in reports.

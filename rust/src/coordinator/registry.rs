@@ -192,6 +192,88 @@ impl RunSpec {
         self.seeds = n.max(1);
         self
     }
+
+    /// Canonical JSON identity of this cell for ledger `CellKey`s: every
+    /// field that shapes the training outcome is included, the replica
+    /// count (`seeds`) is not — the per-item replica index is hashed in
+    /// separately by [`crate::ledger::CellKey::new`], so raising
+    /// `--seeds` later reuses the replicas a ledger already holds.
+    pub fn key_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let data = match self.data {
+            DataSpec::Model { seed, scale } => Value::obj(vec![
+                ("kind", Value::str("model")),
+                ("seed", Value::Num(seed as f64)),
+                ("scale", Value::Num(scale)),
+            ]),
+            DataSpec::LinregWstar { d, n, seed } => Value::obj(vec![
+                ("kind", Value::str("linreg_wstar")),
+                ("d", Value::Num(d as f64)),
+                ("n", Value::Num(n as f64)),
+                ("seed", Value::Num(seed as f64)),
+            ]),
+        };
+        let sizing = match self.sizing {
+            Sizing::Steps { steps, warmup } => Value::obj(vec![
+                ("kind", Value::str("steps")),
+                ("steps", Value::Num(steps as f64)),
+                ("warmup", Value::Num(warmup as f64)),
+            ]),
+            Sizing::Epochs { warmup, avg } => Value::obj(vec![
+                ("kind", Value::str("epochs")),
+                ("warmup", Value::Num(warmup as f64)),
+                ("avg", Value::Num(avg as f64)),
+            ]),
+        };
+        let sched = match self.sched {
+            SchedSpec::Const(a) => {
+                Value::obj(vec![("kind", Value::str("const")), ("alpha", Value::Num(a))])
+            }
+            SchedSpec::SwalpPaper { alpha1, swa_lr } => Value::obj(vec![
+                ("kind", Value::str("swalp_paper")),
+                ("alpha1", Value::Num(alpha1)),
+                ("swa_lr", Value::Num(swa_lr)),
+            ]),
+            SchedSpec::SwalpStep { alpha1, factor, every_div, swa_lr } => Value::obj(vec![
+                ("kind", Value::str("swalp_step")),
+                ("alpha1", Value::Num(alpha1)),
+                ("factor", Value::Num(factor)),
+                ("every_div", Value::Num(every_div as f64)),
+                ("swa_lr", Value::Num(swa_lr)),
+            ]),
+        };
+        let cycle = match self.cycle {
+            CyclePolicy::Steps(c) => Value::obj(vec![
+                ("kind", Value::str("steps")),
+                ("c", Value::Num(c as f64)),
+            ]),
+            CyclePolicy::PerEpoch(f) => Value::obj(vec![
+                ("kind", Value::str("per_epoch")),
+                ("f", Value::Num(f as f64)),
+            ]),
+        };
+        Value::obj(vec![
+            ("id", Value::str(&self.id)),
+            (
+                "labels",
+                Value::Arr(
+                    self.labels
+                        .iter()
+                        .map(|(k, v)| Value::Arr(vec![Value::str(k), Value::str(v)]))
+                        .collect(),
+                ),
+            ),
+            ("model", Value::str(&self.model)),
+            ("data", data),
+            ("sizing", sizing),
+            ("sched", sched),
+            ("cycle", cycle),
+            ("enable_swa", Value::Bool(self.enable_swa)),
+            ("init_seed", Value::Num(self.init_seed as f64)),
+            ("data_seed", Value::Num(self.data_seed as f64)),
+            ("eval", Value::str(&format!("{:?}", self.eval))),
+        ])
+    }
 }
 
 /// All registered experiments, in paper order.

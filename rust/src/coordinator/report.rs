@@ -145,6 +145,100 @@ pub struct Cell {
 }
 
 impl Cell {
+    /// Serialize one cell; `with_timing = false` zeroes `wall_s` (the
+    /// only non-deterministic field). Shared between reports and the
+    /// run-ledger's `Completed` records (`crate::ledger`), so both
+    /// artifacts speak one cell grammar.
+    pub fn to_json(&self, with_timing: bool) -> Value {
+        Value::obj(vec![
+            ("id", Value::str(&self.id)),
+            ("labels", pairs_str(&self.labels)),
+            ("quant", Value::str(&self.quant)),
+            ("seeds", Value::Num(self.seeds as f64)),
+            ("wall_s", Value::Num(if with_timing { self.wall_s } else { 0.0 })),
+            (
+                "metrics",
+                Value::Arr(
+                    self.metrics
+                        .iter()
+                        .map(|(k, m)| {
+                            Value::Arr(vec![
+                                Value::str(k),
+                                Value::obj(vec![
+                                    ("mean", Value::Num(m.mean)),
+                                    ("std", Value::Num(m.std)),
+                                    ("n", Value::Num(m.n as f64)),
+                                ]),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "series",
+                Value::Arr(
+                    self.series
+                        .iter()
+                        .map(|(k, pts)| {
+                            Value::Arr(vec![
+                                Value::str(k),
+                                Value::Arr(
+                                    pts.iter()
+                                        .filter(|(_, v)| v.is_finite())
+                                        .map(|&(s, v)| Value::arr_f64(&[s as f64, v]))
+                                        .collect(),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse one cell value back (inverse of [`Cell::to_json`]).
+    pub fn parse(c: &Value) -> Result<Cell> {
+        let mut labels = Vec::new();
+        for (k, val) in parse_pairs(c.get("labels")?)? {
+            labels.push((k.as_str()?.to_string(), val.as_str()?.to_string()));
+        }
+        let mut metrics = Vec::new();
+        for (k, m) in parse_pairs(c.get("metrics")?)? {
+            metrics.push((
+                k.as_str()?.to_string(),
+                MetricStat {
+                    mean: m.get("mean")?.as_f64()?,
+                    std: m.get("std")?.as_f64()?,
+                    n: m.get("n")?.as_u64()?,
+                },
+            ));
+        }
+        let mut series = Vec::new();
+        for (k, pts) in parse_pairs(c.get("series")?)? {
+            let pts = pts
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr()?;
+                    if p.len() != 2 {
+                        bail!("series point must be [step, value]");
+                    }
+                    Ok((p[0].as_u64()?, p[1].as_f64()?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            series.push((k.as_str()?.to_string(), pts));
+        }
+        Ok(Cell {
+            id: c.get("id")?.as_str()?.to_string(),
+            labels,
+            quant: c.get("quant")?.as_str()?.to_string(),
+            seeds: c.get("seeds")?.as_u64()?,
+            wall_s: c.get("wall_s")?.as_f64()?,
+            metrics,
+            series,
+        })
+    }
+
     /// A finished single-sample row for analytic experiments; non-finite
     /// values are dropped (JSON has no NaN/inf).
     pub fn analytic(id: &str, labels: &[(&str, &str)], metrics: &[(&str, f64)]) -> Cell {
@@ -221,56 +315,7 @@ impl Report {
     /// which is what makes reports comparable across thread counts.
     pub fn to_json(&self, with_timing: bool) -> Value {
         let wall = |w: f64| if with_timing { w } else { 0.0 };
-        let cells = self
-            .cells
-            .iter()
-            .map(|c| {
-                Value::obj(vec![
-                    ("id", Value::str(&c.id)),
-                    ("labels", pairs_str(&c.labels)),
-                    ("quant", Value::str(&c.quant)),
-                    ("seeds", Value::Num(c.seeds as f64)),
-                    ("wall_s", Value::Num(wall(c.wall_s))),
-                    (
-                        "metrics",
-                        Value::Arr(
-                            c.metrics
-                                .iter()
-                                .map(|(k, m)| {
-                                    Value::Arr(vec![
-                                        Value::str(k),
-                                        Value::obj(vec![
-                                            ("mean", Value::Num(m.mean)),
-                                            ("std", Value::Num(m.std)),
-                                            ("n", Value::Num(m.n as f64)),
-                                        ]),
-                                    ])
-                                })
-                                .collect(),
-                        ),
-                    ),
-                    (
-                        "series",
-                        Value::Arr(
-                            c.series
-                                .iter()
-                                .map(|(k, pts)| {
-                                    Value::Arr(vec![
-                                        Value::str(k),
-                                        Value::Arr(
-                                            pts.iter()
-                                                .filter(|(_, v)| v.is_finite())
-                                                .map(|&(s, v)| Value::arr_f64(&[s as f64, v]))
-                                                .collect(),
-                                        ),
-                                    ])
-                                })
-                                .collect(),
-                        ),
-                    ),
-                ])
-            })
-            .collect();
+        let cells = self.cells.iter().map(|c| c.to_json(with_timing)).collect();
         Value::obj(vec![
             ("schema", Value::str(REPORT_SCHEMA)),
             ("experiment", Value::str(&self.experiment)),
@@ -293,45 +338,7 @@ impl Report {
         }
         let mut cells = Vec::new();
         for c in v.get("cells")?.as_arr()? {
-            let mut labels = Vec::new();
-            for (k, val) in parse_pairs(c.get("labels")?)? {
-                labels.push((k.as_str()?.to_string(), val.as_str()?.to_string()));
-            }
-            let mut metrics = Vec::new();
-            for (k, m) in parse_pairs(c.get("metrics")?)? {
-                metrics.push((
-                    k.as_str()?.to_string(),
-                    MetricStat {
-                        mean: m.get("mean")?.as_f64()?,
-                        std: m.get("std")?.as_f64()?,
-                        n: m.get("n")?.as_u64()?,
-                    },
-                ));
-            }
-            let mut series = Vec::new();
-            for (k, pts) in parse_pairs(c.get("series")?)? {
-                let pts = pts
-                    .as_arr()?
-                    .iter()
-                    .map(|p| {
-                        let p = p.as_arr()?;
-                        if p.len() != 2 {
-                            bail!("series point must be [step, value]");
-                        }
-                        Ok((p[0].as_u64()?, p[1].as_f64()?))
-                    })
-                    .collect::<Result<Vec<_>>>()?;
-                series.push((k.as_str()?.to_string(), pts));
-            }
-            cells.push(Cell {
-                id: c.get("id")?.as_str()?.to_string(),
-                labels,
-                quant: c.get("quant")?.as_str()?.to_string(),
-                seeds: c.get("seeds")?.as_u64()?,
-                wall_s: c.get("wall_s")?.as_f64()?,
-                metrics,
-                series,
-            });
+            cells.push(Cell::parse(c)?);
         }
         let mut extras = Vec::new();
         for (k, val) in parse_pairs(v.get("extras")?)? {

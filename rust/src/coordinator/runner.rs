@@ -28,10 +28,13 @@
 //! println!("{} cells from backend {}", report.cells.len(), report.backend);
 //! ```
 
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
 use crate::coordinator::{TrainConfig, Trainer};
 use crate::data::{self, Split};
+use crate::ledger::{record::now_ts, CellKey, Ledger, Record};
 use crate::runtime::ModelBackend;
 use crate::util::Timer;
 
@@ -39,7 +42,7 @@ use super::experiment::{Ctx, CtxConfig};
 use super::registry::{
     self, CyclePolicy, DataSpec, EvalKind, ExpKind, ExperimentSpec, RunSpec, Sizing,
 };
-use super::report::{Cell, Report, SeedAgg};
+use super::report::{Cell, MetricStat, Report, SeedAgg};
 
 /// Executes registry experiments against a [`Ctx`].
 pub struct Runner<'a> {
@@ -145,19 +148,91 @@ impl<'a> Runner<'a> {
             }
         }
 
-        // execute: rayon pool by default, serial when threads = 1
+        // resumable execution: with `--ledger`, every item has a stable
+        // CellKey; Completed records prefill their slot bit-identically
+        // (f64 metric/series values survive the JSON round-trip exactly),
+        // everything else is Submitted before any work starts
         let mut slots: Vec<Option<Result<SeedOut>>> = Vec::new();
         slots.resize_with(items.len(), || None);
+        let ledger: Option<Mutex<Ledger>> = match ctx.ledger_dir() {
+            Some(dir) => Some(Mutex::new(Ledger::open(dir)?)),
+            None => None,
+        };
+        let backend = ctx.backend_id();
+        let keys: Vec<Option<CellKey>> = items
+            .iter()
+            .map(|it| {
+                ledger
+                    .as_ref()
+                    .map(|_| CellKey::new(specs[it.spec_i].id, it.rs, it.seed, &backend))
+            })
+            .collect();
+        if let Some(led) = &ledger {
+            let mut l = led.lock().unwrap();
+            for ((item, key), slot) in items.iter().zip(&keys).zip(slots.iter_mut()) {
+                let key = key.as_ref().expect("keys exist when ledger active");
+                if let Some(cell) = l.completed(key) {
+                    *slot = Some(Ok(seed_out_from_cell(cell)));
+                } else if !l.knows(key) {
+                    l.append(&Record::Submitted {
+                        key: key.clone(),
+                        experiment: specs[item.spec_i].id.to_string(),
+                        cell: item.rs.id.clone(),
+                        seed: item.seed,
+                    })?;
+                }
+            }
+        }
+
+        // execute: rayon pool by default, serial when threads = 1; each
+        // ledgered item appends Started, then Completed (with its full
+        // Cell payload) or Failed — fsync'd before the result is used
+        let quants = &quants;
+        let exec = |item: &WorkItem, key: Option<&CellKey>| -> Result<SeedOut> {
+            let Some(led) = &ledger else {
+                return run_item(item);
+            };
+            let key = key.expect("key computed when ledger active");
+            let attempt = {
+                let mut l = led.lock().unwrap();
+                let attempt = l.next_attempt(key);
+                l.append(&Record::Started { key: key.clone(), attempt, ts: now_ts() })?;
+                attempt
+            };
+            match run_item(item) {
+                Ok(out) => {
+                    let cell = item_cell(item, &out, &quants[item.spec_i][item.cell_i]);
+                    led.lock()
+                        .unwrap()
+                        .append(&Record::Completed { key: key.clone(), cell, ts: now_ts() })?;
+                    Ok(out)
+                }
+                Err(e) => {
+                    led.lock().unwrap().append(&Record::Failed {
+                        key: key.clone(),
+                        attempt,
+                        error: format!("{e:#}"),
+                        ts: now_ts(),
+                    })?;
+                    Err(e)
+                }
+            }
+        };
+        let exec = &exec;
         if ctx.threads() == Some(1) {
-            for (item, slot) in items.iter().zip(slots.iter_mut()) {
-                *slot = Some(run_item(item));
+            for ((item, key), slot) in items.iter().zip(&keys).zip(slots.iter_mut()) {
+                if slot.is_none() {
+                    *slot = Some(exec(item, key.as_ref()));
+                }
             }
         } else {
             rayon::scope(|s| {
-                for (item, slot) in items.iter().zip(slots.iter_mut()) {
-                    s.spawn(move |_| {
-                        *slot = Some(run_item(item));
-                    });
+                for ((item, key), slot) in items.iter().zip(&keys).zip(slots.iter_mut()) {
+                    if slot.is_none() {
+                        s.spawn(move |_| {
+                            *slot = Some(exec(item, key.as_ref()));
+                        });
+                    }
                 }
             });
         }
@@ -231,6 +306,37 @@ impl<'a> Runner<'a> {
             });
         }
         Ok(reports)
+    }
+}
+
+/// The ledger payload of one finished replica: a one-seed [`Cell`].
+/// Non-finite metrics are dropped here (JSON cannot carry them), which
+/// matches the aggregation loop skipping them — so a resumed aggregate
+/// equals a live one.
+fn item_cell(item: &WorkItem, out: &SeedOut, quant: &str) -> Cell {
+    Cell {
+        id: item.rs.id.clone(),
+        labels: item.rs.labels.clone(),
+        quant: quant.to_string(),
+        seeds: 1,
+        wall_s: out.wall_s,
+        metrics: out
+            .metrics
+            .iter()
+            .filter(|(_, v)| v.is_finite())
+            .map(|(k, v)| (k.clone(), MetricStat { mean: *v, std: 0.0, n: 1 }))
+            .collect(),
+        series: out.series.clone(),
+    }
+}
+
+/// Reconstruct a replica contribution from its stored ledger payload
+/// (inverse of [`item_cell`]; single-seed stats carry mean = value).
+fn seed_out_from_cell(cell: &Cell) -> SeedOut {
+    SeedOut {
+        metrics: cell.metrics.iter().map(|(k, m)| (k.clone(), m.mean)).collect(),
+        series: cell.series.clone(),
+        wall_s: cell.wall_s,
     }
 }
 
@@ -377,8 +483,14 @@ pub fn bench_main(exp: &str) {
 
 fn bench_run(exp: &str, full: bool, args: &crate::util::cli::Args) -> Result<()> {
     let mut cfg = CtxConfig::new().quick(!full).seeds(args.u64_or("seeds", 1)?);
+    if args.flag("smoke") {
+        cfg = cfg.smoke(true);
+    }
     if let Some(t) = args.opt("threads") {
         cfg = cfg.threads(t.parse()?);
+    }
+    if let Some(dir) = args.opt("ledger") {
+        cfg = cfg.ledger(dir);
     }
     let ctx = cfg.build()?;
     let Some(spec) = registry::find(exp) else {

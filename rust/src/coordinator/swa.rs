@@ -25,7 +25,10 @@ impl SwaAccumulator {
         SwaAccumulator { avg: vec![], m: 0, q_swa }
     }
 
-    /// Restore from a checkpointed average (checkpoint.rs).
+    /// Restore from a checkpointed f32 average (checkpoint.rs). Lossy —
+    /// the f64 accumulator is squeezed through f32 — so resuming
+    /// mid-averaging through this path drifts; prefer [`Self::restore_raw`]
+    /// with the checkpoint's `swa64` payload when present.
     pub fn restore(tensors: &NamedTensors, m: usize, q_swa: Option<QuantFormat>) -> Self {
         SwaAccumulator {
             avg: tensors
@@ -37,6 +40,21 @@ impl SwaAccumulator {
             m,
             q_swa,
         }
+    }
+
+    /// The accumulator's exact f64 payload, for lossless checkpointing.
+    pub fn raw(&self) -> &[(String, Vec<f64>, Vec<usize>)] {
+        &self.avg
+    }
+
+    /// Restore from the exact f64 payload ([`Self::raw`]): a resumed run
+    /// continues the running mean bit-for-bit where it left off.
+    pub fn restore_raw(
+        avg: Vec<(String, Vec<f64>, Vec<usize>)>,
+        m: usize,
+        q_swa: Option<QuantFormat>,
+    ) -> Self {
+        SwaAccumulator { avg, m, q_swa }
     }
 
     /// Fold the current low-precision weights into the running average:
@@ -221,6 +239,27 @@ mod tests {
         assert!((b[0].1.data[0] - 3.0).abs() < 1e-6);
         assert!((b[0].1.data[1] - 6.0).abs() < 1e-6);
         assert_eq!(direct.m, resumed.m);
+    }
+
+    #[test]
+    fn restore_raw_resumes_bit_for_bit() {
+        let mut direct = SwaAccumulator::new(None);
+        // 0.1/0.7 are not exactly representable: their f64 running mean
+        // is NOT an f32 value, so the raw path is strictly stronger than
+        // the lossy f32 restore
+        direct.fold(&named(&[0.1, 0.3])).unwrap();
+        direct.fold(&named(&[0.7, 0.9])).unwrap();
+        let mut resumed = SwaAccumulator::restore_raw(direct.raw().to_vec(), direct.m, None);
+        let lossy = SwaAccumulator::restore(&direct.average().unwrap(), direct.m, None);
+        assert_ne!(lossy.raw()[0].1[0].to_bits(), direct.raw()[0].1[0].to_bits());
+        direct.fold(&named(&[0.2, 0.4])).unwrap();
+        resumed.fold(&named(&[0.2, 0.4])).unwrap();
+        assert_eq!(direct.m, resumed.m);
+        for ((_, a, _), (_, b, _)) in direct.raw().iter().zip(resumed.raw()) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

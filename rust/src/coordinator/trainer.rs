@@ -176,9 +176,16 @@ impl<'a> Trainer<'a> {
             ),
             Some(ck) => {
                 let step = ck.step;
-                let swa = match &ck.swa {
-                    Some((ts, m)) => SwaAccumulator::restore(ts, *m, cfg.swa_quant.clone()),
-                    None => SwaAccumulator::new(cfg.swa_quant.clone()),
+                // prefer the exact f64 accumulator payload; the f32 `swa`
+                // section is a lossy fallback for pre-swa64 checkpoints
+                let swa = match (&ck.swa64, &ck.swa) {
+                    (Some((avg, m)), _) => {
+                        SwaAccumulator::restore_raw(avg.clone(), *m, cfg.swa_quant.clone())
+                    }
+                    (None, Some((ts, m))) => {
+                        SwaAccumulator::restore(ts, *m, cfg.swa_quant.clone())
+                    }
+                    (None, None) => SwaAccumulator::new(cfg.swa_quant.clone()),
                 };
                 (ck.into_model_state(), swa, step)
             }

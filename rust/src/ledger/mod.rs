@@ -1,0 +1,135 @@
+//! The persistent run ledger (`swalp-ledger-v1`) and the `swalp serve`
+//! job daemon.
+//!
+//! A [`Ledger`] is an append-only, versioned, on-disk record of every
+//! grid-cell replica a sweep executes: one CRC'd JSON record per line,
+//! fsync'd on append, keyed by [`CellKey`] — a stable fingerprint of
+//! (experiment id, cell [`RunSpec`], replica seed, backend id). The
+//! [`crate::coordinator::runner::Runner`] consults it when
+//! `reproduce --ledger <dir>` is given: cells already `Completed` are
+//! skipped and their stored [`Cell`](crate::coordinator::report::Cell)
+//! payloads re-enter aggregation
+//! bit-identically, so a killed sweep resumes losslessly — the resumed
+//! report's `fingerprint()` equals an uninterrupted run's.
+//!
+//! On top of the ledger, [`serve`](mod@serve) implements a long-running
+//! job daemon:
+//! a spool directory of `swalp-job-v1` files executed on the rayon pool
+//! with the runner's deterministic sharding, with bounded
+//! retry-with-backoff and `swalp jobs <dir>` status queries.
+//!
+//! Durability model (what each piece protects against):
+//!
+//! * **fsync'd appends** — a record is only acted on after it is on
+//!   disk, so a crash can lose at most the record being written.
+//! * **truncated-tail recovery** — a torn final line (partial write, no
+//!   trailing newline, bad CRC) is dropped on open and the file
+//!   truncated back to the last good record; the dropped cell simply
+//!   re-runs.
+//! * **CRC + canonical-form check** — every non-final line must be the
+//!   exact canonical serialization of its record and carry a matching
+//!   FNV-1a checksum; any single-byte corruption is detected and
+//!   reported as a hard error (never silently skipped).
+//! * **schema-version header** — the first record names the schema and
+//!   version; newer-versioned files are refused, older ones pass through
+//!   the forward-migration hook ([`store::migrate_record`]).
+//!
+//! Record grammar and recovery rules are documented in docs/PERF.md
+//! (§ "Artifact schemas").
+
+pub mod record;
+pub mod serve;
+pub mod store;
+
+use crate::coordinator::registry::RunSpec;
+use crate::util::json::Value;
+
+pub use record::Record;
+pub use serve::{jobs_status, serve, ServeOpts};
+pub use store::{CellState, Ledger, FAULT_EXIT_CODE};
+
+/// Schema id carried by every ledger header record.
+pub const LEDGER_SCHEMA: &str = "swalp-ledger-v1";
+/// Current on-disk version (the migration hook upgrades older files).
+pub const LEDGER_VERSION: u64 = 1;
+
+/// Stable identity of one grid-cell replica: the 16-hex-digit FNV-1a of
+/// the canonical JSON of (experiment id, cell spec, replica seed,
+/// backend id). Two runs of the same cell on the same backend share a
+/// key regardless of thread count, sizing-tier flags order, or which
+/// sweep (`--exp` vs `--all` vs a serve job) scheduled it.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellKey(String);
+
+impl CellKey {
+    pub fn new(experiment: &str, rs: &RunSpec, seed: u64, backend: &str) -> CellKey {
+        let v = Value::obj(vec![
+            ("experiment", Value::str(experiment)),
+            ("cell", rs.key_json()),
+            ("seed", Value::Num(seed as f64)),
+            ("backend", Value::str(backend)),
+        ]);
+        CellKey(format!("{:016x}", crate::util::fnv64(v.to_string().as_bytes())))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+
+    /// Parse a key back from its on-disk form (16 lowercase hex digits).
+    pub fn from_hex(s: &str) -> anyhow::Result<CellKey> {
+        if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase()) {
+            anyhow::bail!("malformed cell key {s:?} (want 16 lowercase hex digits)");
+        }
+        Ok(CellKey(s.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::{DataSpec, EvalKind, RunSpec, SchedSpec, Sizing};
+
+    fn rs(id: &str) -> RunSpec {
+        RunSpec::new(
+            id,
+            "linreg_fx86",
+            DataSpec::LinregWstar { d: 16, n: 64, seed: 3 },
+            Sizing::Steps { steps: 100, warmup: 50 },
+            SchedSpec::Const(0.01),
+            EvalKind::DistSq,
+        )
+    }
+
+    #[test]
+    fn keys_separate_cells_seeds_and_backends() {
+        let a = CellKey::new("fig2-linreg", &rs("SWALP"), 0, "native");
+        assert_eq!(a, CellKey::new("fig2-linreg", &rs("SWALP"), 0, "native"));
+        assert_ne!(a, CellKey::new("fig2-linreg", &rs("SWALP"), 1, "native"));
+        assert_ne!(a, CellKey::new("fig2-linreg", &rs("SGD-LP"), 0, "native"));
+        assert_ne!(a, CellKey::new("fig2-logreg", &rs("SWALP"), 0, "native"));
+        assert_ne!(a, CellKey::new("fig2-linreg", &rs("SWALP"), 0, "native+xla-artifact"));
+    }
+
+    #[test]
+    fn keys_ignore_replica_count_but_not_config() {
+        let base = rs("SWALP");
+        let more_seeds = rs("SWALP").seeds(5);
+        assert_eq!(
+            CellKey::new("e", &base, 2, "native"),
+            CellKey::new("e", &more_seeds, 2, "native"),
+            "raising --seeds must reuse existing replica records"
+        );
+        let mut other = rs("SWALP");
+        other.init_seed = 99;
+        assert_ne!(CellKey::new("e", &base, 2, "native"), CellKey::new("e", &other, 2, "native"));
+    }
+
+    #[test]
+    fn key_hex_roundtrip_and_validation() {
+        let k = CellKey::new("e", &rs("c"), 0, "native");
+        assert_eq!(CellKey::from_hex(k.as_str()).unwrap(), k);
+        assert!(CellKey::from_hex("xyz").is_err());
+        assert!(CellKey::from_hex("ABCDEF0123456789").is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! Ledger record grammar: the typed records and their one-line on-disk
+//! envelope.
+//!
+//! Every line of a ledger file is
+//!
+//! ```json
+//! {"crc":"<16 hex>","rec":{"kind":"completed","key":"...", ...}}
+//! ```
+//!
+//! where `crc` is the FNV-1a 64 of the canonical serialization of `rec`.
+//! Decoding verifies BOTH that the checksum matches and that the whole
+//! line is byte-identical to the canonical serialization of what it
+//! parses to — so a single-byte change that still parses (e.g. `0.5` →
+//! `00.5`) is caught by the canonical-form check, and one that alters
+//! the parsed value is caught by the checksum. Timing fields (`ts`,
+//! cell `wall_s`) are real wall-clock data on disk; fingerprinting goes
+//! through [`Record::to_json`]`(false)`, which zeroes them — the ledger
+//! analogue of `Report::fingerprint`.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::report::Cell;
+use crate::util::json::Value;
+
+use super::{CellKey, LEDGER_SCHEMA, LEDGER_VERSION};
+
+/// One ledger record. `Submitted` announces a work item (carrying the
+/// human-readable cell id + replica seed for `jobs`-style queries),
+/// `Started` marks an execution attempt, `Completed` carries the
+/// replica's [`Cell`] payload, `Failed` the attempt's error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    Header { version: u64 },
+    Submitted { key: CellKey, experiment: String, cell: String, seed: u64 },
+    Started { key: CellKey, attempt: u64, ts: f64 },
+    Completed { key: CellKey, cell: Cell, ts: f64 },
+    Failed { key: CellKey, attempt: u64, error: String, ts: f64 },
+}
+
+/// Unix seconds, for the records' `ts` fields.
+pub fn now_ts() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+impl Record {
+    pub fn header() -> Record {
+        Record::Header { version: LEDGER_VERSION }
+    }
+
+    pub fn key(&self) -> Option<&CellKey> {
+        match self {
+            Record::Header { .. } => None,
+            Record::Submitted { key, .. }
+            | Record::Started { key, .. }
+            | Record::Completed { key, .. }
+            | Record::Failed { key, .. } => Some(key),
+        }
+    }
+
+    /// Serialize; `with_timing = false` zeroes `ts` and the completed
+    /// cell's `wall_s` (fingerprint form).
+    pub fn to_json(&self, with_timing: bool) -> Value {
+        let t = |ts: f64| if with_timing { ts } else { 0.0 };
+        match self {
+            Record::Header { version } => Value::obj(vec![
+                ("kind", Value::str("header")),
+                ("schema", Value::str(LEDGER_SCHEMA)),
+                ("version", Value::Num(*version as f64)),
+            ]),
+            Record::Submitted { key, experiment, cell, seed } => Value::obj(vec![
+                ("kind", Value::str("submitted")),
+                ("key", Value::str(key.as_str())),
+                ("experiment", Value::str(experiment)),
+                ("cell", Value::str(cell)),
+                ("seed", Value::Num(*seed as f64)),
+            ]),
+            Record::Started { key, attempt, ts } => Value::obj(vec![
+                ("kind", Value::str("started")),
+                ("key", Value::str(key.as_str())),
+                ("attempt", Value::Num(*attempt as f64)),
+                ("ts", Value::Num(t(*ts))),
+            ]),
+            Record::Completed { key, cell, ts } => Value::obj(vec![
+                ("kind", Value::str("completed")),
+                ("key", Value::str(key.as_str())),
+                ("cell", cell.to_json(with_timing)),
+                ("ts", Value::Num(t(*ts))),
+            ]),
+            Record::Failed { key, attempt, error, ts } => Value::obj(vec![
+                ("kind", Value::str("failed")),
+                ("key", Value::str(key.as_str())),
+                ("attempt", Value::Num(*attempt as f64)),
+                ("error", Value::str(error)),
+                ("ts", Value::Num(t(*ts))),
+            ]),
+        }
+    }
+
+    /// Parse a record value (inverse of [`Record::to_json`]`(true)`).
+    pub fn parse(v: &Value) -> Result<Record> {
+        let kind = v.get("kind")?.as_str()?;
+        let key = || CellKey::from_hex(v.get("key")?.as_str()?);
+        Ok(match kind {
+            "header" => {
+                let schema = v.get("schema")?.as_str()?;
+                if schema != LEDGER_SCHEMA {
+                    bail!("unsupported ledger schema {schema:?} (want {LEDGER_SCHEMA})");
+                }
+                Record::Header { version: v.get("version")?.as_u64()? }
+            }
+            "submitted" => Record::Submitted {
+                key: key()?,
+                experiment: v.get("experiment")?.as_str()?.to_string(),
+                cell: v.get("cell")?.as_str()?.to_string(),
+                seed: v.get("seed")?.as_u64()?,
+            },
+            "started" => Record::Started {
+                key: key()?,
+                attempt: v.get("attempt")?.as_u64()?,
+                ts: v.get("ts")?.as_f64()?,
+            },
+            "completed" => Record::Completed {
+                key: key()?,
+                cell: Cell::parse(v.get("cell")?)?,
+                ts: v.get("ts")?.as_f64()?,
+            },
+            "failed" => Record::Failed {
+                key: key()?,
+                attempt: v.get("attempt")?.as_u64()?,
+                error: v.get("error")?.as_str()?.to_string(),
+                ts: v.get("ts")?.as_f64()?,
+            },
+            other => bail!("unknown ledger record kind {other:?}"),
+        })
+    }
+}
+
+/// Encode one record as its on-disk line (envelope + trailing newline).
+pub fn encode_line(rec: &Record) -> String {
+    let body = rec.to_json(true).to_string();
+    let crc = format!("{:016x}", crate::util::fnv64(body.as_bytes()));
+    let mut line = Value::obj(vec![("crc", Value::str(&crc)), ("rec", Value::str(""))]).to_string();
+    // splice the already-serialized body in place of the "" placeholder
+    // so the envelope is built from the exact bytes the crc covers
+    let needle = "\"rec\":\"\"";
+    let at = line.rfind(needle).expect("placeholder present");
+    line.replace_range(at..at + needle.len(), &format!("\"rec\":{body}"));
+    line.push('\n');
+    line
+}
+
+/// Decode one line (without its trailing newline): checksum + canonical
+/// form + typed parse. Every failure names the reason.
+pub fn decode_line(line: &str) -> Result<Record> {
+    let v = crate::util::json::parse(line)?;
+    let obj = v.as_obj()?;
+    if obj.len() != 2 {
+        bail!("envelope must have exactly crc + rec ({} keys found)", obj.len());
+    }
+    let crc = v.get("crc")?.as_str()?;
+    let body = v.get("rec")?;
+    let body_str = body.to_string();
+    let want = format!("{:016x}", crate::util::fnv64(body_str.as_bytes()));
+    if crc != want {
+        bail!("checksum mismatch (line says {crc}, record hashes to {want})");
+    }
+    // canonical-form check: corruption that re-parses to the same value
+    // (whitespace, number spelling, duplicate keys) is still corruption
+    let canonical = {
+        let mut s = Value::obj(vec![("crc", Value::str(crc)), ("rec", Value::str(""))]).to_string();
+        let needle = "\"rec\":\"\"";
+        let at = s.rfind(needle).expect("placeholder present");
+        s.replace_range(at..at + needle.len(), &format!("\"rec\":{body_str}"));
+        s
+    };
+    if line != canonical {
+        bail!("line is not the canonical serialization of its record");
+    }
+    Record::parse(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::report::MetricStat;
+
+    fn cell() -> Cell {
+        Cell {
+            id: "SWALP".into(),
+            labels: vec![("run".into(), "SWALP".into())],
+            quant: "fx_w8f6".into(),
+            seeds: 1,
+            wall_s: 1.25,
+            metrics: vec![("final_dist_sq".into(), MetricStat { mean: 0.125, std: 0.0, n: 1 })],
+            series: vec![("swa_dist_sq".into(), vec![(0, 1.0), (64, 0.5)])],
+        }
+    }
+
+    fn key() -> CellKey {
+        CellKey::from_hex("00112233aabbccdd").unwrap()
+    }
+
+    #[test]
+    fn all_record_kinds_roundtrip() {
+        let records = [
+            Record::header(),
+            Record::Submitted {
+                key: key(),
+                experiment: "fig2-linreg".into(),
+                cell: "SWALP".into(),
+                seed: 3,
+            },
+            Record::Started { key: key(), attempt: 2, ts: 123.5 },
+            Record::Completed { key: key(), cell: cell(), ts: 124.0 },
+            Record::Failed { key: key(), attempt: 2, error: "boom".into(), ts: 125.0 },
+        ];
+        for rec in &records {
+            let line = encode_line(rec);
+            assert!(line.ends_with('\n'));
+            let back = decode_line(line.trim_end_matches('\n')).unwrap();
+            assert_eq!(&back, rec, "record did not round-trip: {rec:?}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_form_zeroes_timing_only() {
+        let a = Record::Completed { key: key(), cell: cell(), ts: 111.0 };
+        let mut other_cell = cell();
+        other_cell.wall_s = 99.0;
+        let b = Record::Completed { key: key(), cell: other_cell, ts: 222.0 };
+        assert_ne!(a.to_json(true).to_string(), b.to_json(true).to_string());
+        assert_eq!(a.to_json(false).to_string(), b.to_json(false).to_string());
+    }
+
+    #[test]
+    fn decode_rejects_tampering() {
+        let line = encode_line(&Record::Started { key: key(), attempt: 1, ts: 2.0 });
+        let line = line.trim_end_matches('\n');
+        // flip one byte inside the record body
+        let tampered = line.replace("\"attempt\":1", "\"attempt\":7");
+        assert!(decode_line(&tampered).unwrap_err().to_string().contains("checksum"));
+        // non-canonical spelling of the same value
+        let respaced = line.replace("\"attempt\":1", "\"attempt\": 1");
+        assert!(decode_line(&respaced).is_err());
+        // envelope with extra keys
+        let extra = line.replacen('{', "{\"x\":0,", 1);
+        assert!(decode_line(&extra).is_err());
+    }
+
+    #[test]
+    fn header_schema_is_enforced() {
+        let line = encode_line(&Record::header()).replace("swalp-ledger-v1", "swalp-ledger-v9");
+        // checksum was computed over the v1 body, so this fails early;
+        // re-encode properly to hit the schema check
+        assert!(decode_line(line.trim_end_matches('\n')).is_err());
+        let v = Value::obj(vec![
+            ("kind", Value::str("header")),
+            ("schema", Value::str("swalp-ledger-v9")),
+            ("version", Value::Num(9.0)),
+        ]);
+        assert!(Record::parse(&v).unwrap_err().to_string().contains("schema"));
+    }
+}

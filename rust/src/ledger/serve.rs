@@ -1,0 +1,314 @@
+//! `swalp serve` — a long-running job daemon over the run ledger.
+//!
+//! Layout under the serve directory:
+//!
+//! ```text
+//! <dir>/spool/    incoming job files (swalp-job-v1), scanned in name order
+//! <dir>/done/     job files that produced a report
+//! <dir>/failed/   job files whose retry budget ran out (or never parsed)
+//! <dir>/status/   one swalp-job-status-v1 file per job seen
+//! <dir>/reports/  the swalp-report-v1 artifacts jobs produce
+//! <dir>/ledger/   the shared swalp-ledger-v1 run ledger
+//! ```
+//!
+//! A job file is
+//!
+//! ```json
+//! {"schema": "swalp-job-v1", "experiment": "fig2-linreg",
+//!  "seeds": 2, "mode": "smoke"}
+//! ```
+//!
+//! (`seeds` and `mode` optional; mode one of full/quick/smoke, default
+//! quick). Execution goes through the ordinary [`Runner`] on the shared
+//! rayon pool with its deterministic sharding, ledgered in
+//! `<dir>/ledger` — so a crashed or killed daemon restarts losslessly:
+//! the interrupted job is still in the spool, and its already-completed
+//! cells replay from the ledger instead of re-running. Failed attempts
+//! retry with exponential backoff up to [`ServeOpts::retries`] times;
+//! because retries also go through the ledger, only the cells that
+//! actually failed re-execute. `swalp jobs <dir>` renders
+//! [`jobs_status`] (`swalp-jobs-v1`).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::experiment::CtxConfig;
+use crate::coordinator::registry::{self, ExperimentSpec};
+use crate::coordinator::runner::Runner;
+use crate::util::json::{self, Value};
+
+use super::Ledger;
+
+pub const JOB_SCHEMA: &str = "swalp-job-v1";
+pub const JOB_STATUS_SCHEMA: &str = "swalp-job-status-v1";
+pub const JOBS_SCHEMA: &str = "swalp-jobs-v1";
+
+/// Daemon policy knobs (`swalp serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Spool scan interval when idle.
+    pub poll_ms: u64,
+    /// Re-executions granted to a failing job beyond its first attempt.
+    pub retries: u64,
+    /// First retry delay; doubles per further attempt.
+    pub backoff_ms: u64,
+    /// Exit after this many jobs (0 = run forever).
+    pub max_jobs: u64,
+    /// Drain the spool once, then exit (instead of polling forever).
+    pub once: bool,
+    /// Runner thread policy (1 = serial reference execution).
+    pub threads: Option<usize>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            poll_ms: 500,
+            retries: 2,
+            backoff_ms: 250,
+            max_jobs: 0,
+            once: false,
+            threads: None,
+        }
+    }
+}
+
+fn sub(dir: &Path, name: &str) -> PathBuf {
+    dir.join(name)
+}
+
+/// Job files currently in the spool, in name order (deterministic
+/// processing order).
+fn scan_spool(spool: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(spool)? {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn write_status(dir: &Path, job: &str, state: &str, extra: Vec<(&str, Value)>) -> Result<()> {
+    let mut pairs = vec![
+        ("schema", Value::str(JOB_STATUS_SCHEMA)),
+        ("job", Value::str(job)),
+        ("state", Value::str(state)),
+    ];
+    pairs.extend(extra);
+    json::write_file(&sub(dir, "status").join(format!("{job}.json")), &Value::obj(pairs))
+}
+
+/// Run the daemon loop over `dir` until stopped (ctrl-C / kill), the
+/// spool drains with `--once`, or `--max-jobs` is reached.
+pub fn serve(dir: &Path, opts: &ServeOpts) -> Result<()> {
+    for d in ["spool", "done", "failed", "status", "reports", "ledger"] {
+        std::fs::create_dir_all(sub(dir, d))?;
+    }
+    let spool = sub(dir, "spool");
+    eprintln!(
+        "swalp serve: watching {} (poll {}ms, retries {}, backoff {}ms)",
+        spool.display(),
+        opts.poll_ms,
+        opts.retries,
+        opts.backoff_ms
+    );
+    let mut processed = 0u64;
+    loop {
+        let jobs = scan_spool(&spool)?;
+        if jobs.is_empty() {
+            if opts.once {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(opts.poll_ms));
+            continue;
+        }
+        for path in jobs {
+            process_job(dir, &path, opts)?;
+            processed += 1;
+            if opts.max_jobs > 0 && processed >= opts.max_jobs {
+                eprintln!("swalp serve: --max-jobs {} reached, exiting", opts.max_jobs);
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Execute one spool file end to end and move it to done/ or failed/.
+/// Only I/O on the serve directory itself escalates to the caller —
+/// a bad or failing job is recorded, never fatal to the daemon.
+fn process_job(dir: &Path, path: &Path, opts: &ServeOpts) -> Result<()> {
+    let file_name = path.file_name().and_then(|s| s.to_str()).unwrap_or("job.json").to_string();
+    let job = file_name.trim_end_matches(".json").to_string();
+    match run_job(dir, path, &job, opts) {
+        Ok(report) => {
+            std::fs::rename(path, sub(dir, "done").join(&file_name))?;
+            write_status(
+                dir,
+                &job,
+                "done",
+                vec![("report", Value::str(&report.display().to_string()))],
+            )?;
+            eprintln!("swalp serve: job {job} done ({})", report.display());
+        }
+        Err(e) => {
+            std::fs::rename(path, sub(dir, "failed").join(&file_name))?;
+            write_status(dir, &job, "failed", vec![("error", Value::str(&format!("{e:#}")))])?;
+            eprintln!("swalp serve: job {job} failed: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+fn run_job(dir: &Path, path: &Path, job: &str, opts: &ServeOpts) -> Result<PathBuf> {
+    let v = json::parse_file(path)?;
+    let schema = v.get("schema")?.as_str()?;
+    if schema != JOB_SCHEMA {
+        bail!("unsupported job schema {schema:?} (want {JOB_SCHEMA})");
+    }
+    let exp = v.get("experiment")?.as_str()?;
+    let spec = registry::find(exp).ok_or_else(|| {
+        anyhow!("unknown experiment {exp:?}; registered: {}", registry::ids().join(" "))
+    })?;
+    let seeds = match v.opt("seeds") {
+        Some(s) => s.as_u64()?,
+        None => 1,
+    };
+    let mode = match v.opt("mode") {
+        Some(m) => m.as_str()?.to_string(),
+        None => "quick".to_string(),
+    };
+    if !matches!(mode.as_str(), "full" | "quick" | "smoke") {
+        bail!("unknown mode {mode:?} (want full, quick or smoke)");
+    }
+    write_status(dir, job, "running", vec![("experiment", Value::str(exp))])?;
+    let attempts = opts.retries + 1;
+    let mut last_err = None;
+    for attempt in 1..=attempts {
+        if attempt > 1 {
+            // exponential backoff before each retry; the retry shares the
+            // ledger, so only the cells that actually failed re-execute
+            let backoff = opts.backoff_ms.saturating_mul(1u64 << (attempt - 2).min(16));
+            eprintln!("swalp serve: job {job} retry {attempt}/{attempts} in {backoff}ms");
+            std::thread::sleep(Duration::from_millis(backoff));
+        }
+        match attempt_job(dir, spec, seeds, &mode, opts) {
+            Ok(p) => return Ok(p),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.expect("at least one attempt ran"))
+}
+
+fn attempt_job(
+    dir: &Path,
+    spec: &ExperimentSpec,
+    seeds: u64,
+    mode: &str,
+    opts: &ServeOpts,
+) -> Result<PathBuf> {
+    let mut cfg = CtxConfig::new()
+        .quick(mode == "quick")
+        .smoke(mode == "smoke")
+        .seeds(seeds)
+        .out_dir(sub(dir, "reports"))
+        .ledger(sub(dir, "ledger"));
+    if let Some(t) = opts.threads {
+        cfg = cfg.threads(t);
+    }
+    let ctx = cfg.build()?;
+    let report = Runner::new(&ctx).run(spec)?;
+    report.save(&ctx.results_dir())
+}
+
+/// The `swalp jobs <dir>` snapshot (`swalp-jobs-v1`): spool backlog,
+/// per-job status records, and the ledger's cell-state counts.
+pub fn jobs_status(dir: &Path) -> Result<Value> {
+    let mut pending = Vec::new();
+    if let Ok(paths) = scan_spool(&sub(dir, "spool")) {
+        for p in paths {
+            if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
+                pending.push(Value::str(name.trim_end_matches(".json")));
+            }
+        }
+    }
+    let mut jobs = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(sub(dir, "status")) {
+        let mut paths: Vec<PathBuf> = rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        paths.sort();
+        for p in paths {
+            jobs.push(json::parse_file(&p)?);
+        }
+    }
+    let (lp, lc, lf) = if sub(dir, "ledger").join("ledger.jsonl").exists() {
+        Ledger::open(&sub(dir, "ledger"))?.counts()
+    } else {
+        (0, 0, 0)
+    };
+    Ok(Value::obj(vec![
+        ("schema", Value::str(JOBS_SCHEMA)),
+        ("pending", Value::Arr(pending)),
+        ("jobs", Value::Arr(jobs)),
+        (
+            "ledger",
+            Value::obj(vec![
+                ("pending", Value::Num(lp as f64)),
+                ("completed", Value::Num(lc as f64)),
+                ("failed", Value::Num(lf as f64)),
+            ]),
+        ),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("swalp_serve_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn once_on_empty_spool_exits_and_reports_empty_status() {
+        let dir = tmp("empty");
+        serve(&dir, &ServeOpts { once: true, ..ServeOpts::default() }).unwrap();
+        let v = jobs_status(&dir).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str().unwrap(), JOBS_SCHEMA);
+        assert!(v.get("pending").unwrap().as_arr().unwrap().is_empty());
+        assert!(v.get("jobs").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(v.get("ledger").unwrap().get("completed").unwrap().as_u64().unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_jobs_move_to_failed_without_killing_the_daemon() {
+        let dir = tmp("bad");
+        std::fs::create_dir_all(dir.join("spool")).unwrap();
+        std::fs::write(dir.join("spool/garbage.json"), "{not json").unwrap();
+        std::fs::write(
+            dir.join("spool/unknown.json"),
+            r#"{"schema":"swalp-job-v1","experiment":"no-such-experiment"}"#,
+        )
+        .unwrap();
+        // no backoff: both jobs fail on parse/lookup before any attempt
+        let opts = ServeOpts { once: true, retries: 0, backoff_ms: 0, ..ServeOpts::default() };
+        serve(&dir, &opts).unwrap();
+        assert!(dir.join("failed/garbage.json").exists());
+        assert!(dir.join("failed/unknown.json").exists());
+        assert!(!dir.join("spool/garbage.json").exists());
+        let v = jobs_status(&dir).unwrap();
+        let jobs = v.get("jobs").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(jobs.len(), 2);
+        for j in &jobs {
+            assert_eq!(j.get("state").unwrap().as_str().unwrap(), "failed");
+            assert!(!j.get("error").unwrap().as_str().unwrap().is_empty());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

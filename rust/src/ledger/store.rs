@@ -1,0 +1,437 @@
+//! The on-disk ledger store: append-only file of [`Record`] lines with
+//! fsync'd appends, truncated-tail recovery, and hard errors on interior
+//! corruption.
+//!
+//! File layout: `<dir>/ledger.jsonl`, first line a `header` record, then
+//! one record per completed append. [`Ledger::open`] replays the file
+//! into an in-memory [`CellState`] map; [`Ledger::append`] writes a
+//! line, `sync_data`s it, then applies it to the map — so the in-memory
+//! view never runs ahead of the disk.
+//!
+//! Fault injection (tests only): when `SWALP_FAULT_AFTER_CELLS=N` is
+//! set, the process exits with [`FAULT_EXIT_CODE`] after the N-th
+//! `Completed` record has been durably appended — simulating a kill at
+//! an arbitrary cell boundary mid-sweep.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::report::Cell;
+use crate::util::json::Value;
+
+use super::record::{decode_line, encode_line};
+use super::{CellKey, Record, LEDGER_SCHEMA, LEDGER_VERSION};
+
+/// Exit code of a fault-injected kill (`SWALP_FAULT_AFTER_CELLS`).
+pub const FAULT_EXIT_CODE: i32 = 86;
+
+/// Terminal per-cell view after replaying the record stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellState {
+    /// Submitted (and possibly started) but no terminal record yet.
+    Pending { attempts: u64 },
+    /// Finished; carries the replica's full result payload.
+    Completed(Cell),
+    /// Last attempt errored and the retry budget was exhausted.
+    Failed { attempts: u64, error: String },
+}
+
+pub struct Ledger {
+    path: PathBuf,
+    file: File,
+    state: BTreeMap<String, CellState>,
+}
+
+/// Forward-migration hook: rewrite a record read from an older on-disk
+/// version into the current in-memory form. v1 is the first and only
+/// version, so today this is the identity; when a v2 lands, older
+/// versions get their rewrite arms here and `open` keeps working on old
+/// files. Newer-than-supported files are refused by `open` before this
+/// is ever called.
+pub fn migrate_record(rec: Record, version: u64) -> Result<Record> {
+    match version {
+        LEDGER_VERSION => Ok(rec),
+        v => bail!("no migration path from ledger version {v} to {LEDGER_VERSION}"),
+    }
+}
+
+fn fault_limit() -> Option<u64> {
+    static LIMIT: OnceLock<Option<u64>> = OnceLock::new();
+    *LIMIT.get_or_init(|| {
+        std::env::var("SWALP_FAULT_AFTER_CELLS").ok().and_then(|v| v.parse().ok())
+    })
+}
+
+static COMPLETED_APPENDS: AtomicU64 = AtomicU64::new(0);
+
+fn fault_hook_on_completed() {
+    if let Some(limit) = fault_limit() {
+        let n = COMPLETED_APPENDS.fetch_add(1, Ordering::SeqCst) + 1;
+        if n >= limit {
+            eprintln!("swalp: fault injection: exiting after {n} completed-cell appends");
+            std::process::exit(FAULT_EXIT_CODE);
+        }
+    }
+}
+
+fn apply(state: &mut BTreeMap<String, CellState>, rec: &Record) {
+    match rec {
+        Record::Header { .. } => {}
+        Record::Submitted { key, .. } => {
+            state
+                .entry(key.as_str().to_string())
+                .or_insert(CellState::Pending { attempts: 0 });
+        }
+        Record::Started { key, attempt, .. } => {
+            let e = state
+                .entry(key.as_str().to_string())
+                .or_insert(CellState::Pending { attempts: 0 });
+            if !matches!(e, CellState::Completed(_)) {
+                *e = CellState::Pending { attempts: *attempt };
+            }
+        }
+        Record::Completed { key, cell, .. } => {
+            state.insert(key.as_str().to_string(), CellState::Completed(cell.clone()));
+        }
+        Record::Failed { key, attempt, error, .. } => {
+            let e = state.entry(key.as_str().to_string());
+            let e = e.or_insert(CellState::Pending { attempts: 0 });
+            if !matches!(e, CellState::Completed(_)) {
+                *e = CellState::Failed { attempts: *attempt, error: error.clone() };
+            }
+        }
+    }
+}
+
+impl Ledger {
+    /// Open (or create) the ledger under `dir`, replaying existing
+    /// records. A torn final line — unterminated, unparseable or failing
+    /// its checksum — is dropped with a warning and the file truncated
+    /// back to the last good record; the affected cell simply re-runs.
+    /// A corrupt line anywhere *before* the tail is a hard error naming
+    /// the line number: interior damage means history is untrustworthy
+    /// and must not be silently skipped.
+    pub fn open(dir: &Path) -> Result<Ledger> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("creating ledger dir {}: {e}", dir.display()))?;
+        let path = dir.join("ledger.jsonl");
+        let existing = match std::fs::read(&path) {
+            Ok(bytes) => bytes,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => bail!("reading {}: {e}", path.display()),
+        };
+
+        let mut state = BTreeMap::new();
+        let mut version: Option<u64> = None;
+        let mut good_end = 0usize; // byte offset just past the last good line
+        let mut torn: Option<String> = None;
+        let mut line_no = 0usize;
+        let mut pos = 0usize;
+        while pos < existing.len() {
+            let (line_bytes, consumed, terminated) =
+                match existing[pos..].iter().position(|&b| b == b'\n') {
+                    Some(i) => (&existing[pos..pos + i], i + 1, true),
+                    None => (&existing[pos..], existing.len() - pos, false),
+                };
+            line_no += 1;
+            let is_final = pos + consumed >= existing.len();
+            let parsed: Result<Record> = std::str::from_utf8(line_bytes)
+                .map_err(|e| anyhow!("invalid utf-8: {e}"))
+                .and_then(decode_line);
+            match parsed {
+                Ok(_) if !terminated => {
+                    torn = Some(format!("line {line_no} has no trailing newline"));
+                }
+                Ok(rec) => {
+                    if line_no == 1 {
+                        let Record::Header { version: v } = rec else {
+                            bail!("{}: first record is not a ledger header", path.display());
+                        };
+                        if v > LEDGER_VERSION {
+                            bail!(
+                                "{}: ledger version {v} is newer than this binary supports ({LEDGER_VERSION})",
+                                path.display()
+                            );
+                        }
+                        version = Some(v);
+                    } else {
+                        let v = version.expect("header seen before records");
+                        apply(&mut state, &migrate_record(rec, v)?);
+                    }
+                    good_end = pos + consumed;
+                }
+                Err(e) if is_final => {
+                    torn = Some(format!("line {line_no}: {e}"));
+                }
+                Err(e) => {
+                    bail!(
+                        "{}: corrupt ledger record at line {line_no}: {e} \
+                         (interior corruption; refusing to skip history)",
+                        path.display()
+                    );
+                }
+            }
+            pos += consumed;
+        }
+        if let Some(reason) = torn {
+            eprintln!(
+                "swalp: warning: ledger {}: dropping torn tail ({reason}); \
+                 the affected cell will re-run",
+                path.display()
+            );
+        }
+
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+        file.set_len(good_end as u64)?;
+        file.seek(SeekFrom::End(0))?;
+        let mut ledger = Ledger { path, file, state };
+        if good_end == 0 {
+            ledger.append(&Record::header())?;
+        }
+        Ok(ledger)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Durably append one record: write the line, `sync_data`, then
+    /// update the in-memory state (disk is always at least as current
+    /// as memory).
+    pub fn append(&mut self, rec: &Record) -> Result<()> {
+        let line = encode_line(rec);
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()?;
+        apply(&mut self.state, rec);
+        if matches!(rec, Record::Completed { .. }) {
+            fault_hook_on_completed();
+        }
+        Ok(())
+    }
+
+    /// The stored result payload, if this key already completed.
+    pub fn completed(&self, key: &CellKey) -> Option<&Cell> {
+        match self.state.get(key.as_str()) {
+            Some(CellState::Completed(c)) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Has this key ever been recorded (any state)?
+    pub fn knows(&self, key: &CellKey) -> bool {
+        self.state.contains_key(key.as_str())
+    }
+
+    /// 1-based attempt number the next `Started` record should carry.
+    pub fn next_attempt(&self, key: &CellKey) -> u64 {
+        match self.state.get(key.as_str()) {
+            Some(CellState::Pending { attempts }) | Some(CellState::Failed { attempts, .. }) => {
+                attempts + 1
+            }
+            _ => 1,
+        }
+    }
+
+    /// All keys and their terminal states, sorted by key.
+    pub fn cells(&self) -> impl Iterator<Item = (&str, &CellState)> {
+        self.state.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// (pending, completed, failed) counts.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        let mut c = (0, 0, 0);
+        for st in self.state.values() {
+            match st {
+                CellState::Pending { .. } => c.0 += 1,
+                CellState::Completed(_) => c.1 += 1,
+                CellState::Failed { .. } => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Canonical serialization of the terminal state per key, timing
+    /// zeroed and attempt counts excluded — both vary with thread count
+    /// and kill points, while the converged results must not. Two sweeps
+    /// of the same grid agree on this string no matter how many times
+    /// they were killed and resumed or how many threads ran them.
+    pub fn fingerprint(&self) -> String {
+        let cells: Vec<Value> = self
+            .state
+            .iter()
+            .map(|(k, st)| {
+                let (status, payload) = match st {
+                    CellState::Pending { .. } => ("pending", Value::Null),
+                    CellState::Completed(c) => ("completed", c.to_json(false)),
+                    CellState::Failed { error, .. } => ("failed", Value::str(error)),
+                };
+                Value::obj(vec![
+                    ("key", Value::str(k)),
+                    ("status", Value::str(status)),
+                    ("payload", payload),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("schema", Value::str(LEDGER_SCHEMA)),
+            ("cells", Value::Arr(cells)),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::report::MetricStat;
+
+    fn key(n: u8) -> CellKey {
+        CellKey::from_hex(&format!("{:016x}", n as u64 + 1)).unwrap()
+    }
+
+    fn cell(id: &str) -> Cell {
+        Cell {
+            id: id.into(),
+            labels: vec![],
+            quant: "fx_w8f6".into(),
+            seeds: 1,
+            wall_s: 0.5,
+            metrics: vec![("m".into(), MetricStat { mean: 0.25, std: 0.0, n: 1 })],
+            series: vec![],
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("swalp_ledger_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn roundtrip_and_state_transitions() {
+        let dir = tmp("roundtrip");
+        {
+            let mut l = Ledger::open(&dir).unwrap();
+            l.append(&Record::Submitted {
+                key: key(0),
+                experiment: "e".into(),
+                cell: "c".into(),
+                seed: 0,
+            })
+            .unwrap();
+            assert!(l.knows(&key(0)));
+            assert_eq!(l.next_attempt(&key(0)), 1);
+            l.append(&Record::Started { key: key(0), attempt: 1, ts: 1.0 }).unwrap();
+            assert_eq!(l.next_attempt(&key(0)), 2);
+            l.append(&Record::Failed { key: key(0), attempt: 1, error: "x".into(), ts: 2.0 })
+                .unwrap();
+            assert_eq!(l.next_attempt(&key(0)), 2);
+            l.append(&Record::Started { key: key(0), attempt: 2, ts: 3.0 }).unwrap();
+            l.append(&Record::Completed { key: key(0), cell: cell("c"), ts: 4.0 }).unwrap();
+            assert_eq!(l.completed(&key(0)).unwrap().id, "c");
+            assert_eq!(l.counts(), (0, 1, 0));
+        }
+        // reopen replays to the same state
+        let l = Ledger::open(&dir).unwrap();
+        assert_eq!(l.completed(&key(0)).unwrap(), &cell("c"));
+        assert_eq!(l.counts(), (0, 1, 0));
+        assert!(!l.knows(&key(1)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_file_truncated() {
+        let dir = tmp("torn");
+        let (good_len, fp) = {
+            let mut l = Ledger::open(&dir).unwrap();
+            l.append(&Record::Completed { key: key(0), cell: cell("a"), ts: 1.0 }).unwrap();
+            (std::fs::metadata(l.path()).unwrap().len(), l.fingerprint())
+        };
+        let path = dir.join("ledger.jsonl");
+        // torn write: half a record, no newline
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"crc\":\"0011\",\"rec\":{\"kind\":\"comp");
+        std::fs::write(&path, &bytes).unwrap();
+        let l = Ledger::open(&dir).unwrap();
+        assert_eq!(l.fingerprint(), fp, "torn tail must not change surviving state");
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), good_len, "tail truncated");
+        // a terminated-but-corrupt final line is also recoverable
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"crc\":\"0000000000000000\",\"rec\":{\"kind\":\"x\"}}\n");
+        std::fs::write(&path, &bytes).unwrap();
+        let l = Ledger::open(&dir).unwrap();
+        assert_eq!(l.fingerprint(), fp);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), good_len);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interior_corruption_is_a_hard_error_with_line_number() {
+        let dir = tmp("interior");
+        {
+            let mut l = Ledger::open(&dir).unwrap();
+            l.append(&Record::Completed { key: key(0), cell: cell("a"), ts: 1.0 }).unwrap();
+            l.append(&Record::Completed { key: key(1), cell: cell("b"), ts: 2.0 }).unwrap();
+        }
+        let path = dir.join("ledger.jsonl");
+        let text = std::fs::read_to_string(&path).unwrap();
+        // flip one byte in line 2 (the first completed record)
+        let corrupted = text.replacen("\"wall_s\":0.5", "\"wall_s\":0.7", 1);
+        assert_ne!(corrupted, text);
+        std::fs::write(&path, corrupted).unwrap();
+        let err = Ledger::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "error must name the line: {err}");
+        assert!(err.contains("corrupt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn newer_version_is_refused() {
+        let dir = tmp("version");
+        std::fs::create_dir_all(&dir).unwrap();
+        let header = encode_line(&Record::Header { version: LEDGER_VERSION + 1 });
+        std::fs::write(dir.join("ledger.jsonl"), header).unwrap();
+        let err = Ledger::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("newer"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_ignores_timing_and_attempts() {
+        let (dir_a, dir_b) = (tmp("fp_a"), tmp("fp_b"));
+        let mut a = Ledger::open(&dir_a).unwrap();
+        let mut b = Ledger::open(&dir_b).unwrap();
+        // a: clean first-try completion
+        a.append(&Record::Started { key: key(0), attempt: 1, ts: 1.0 }).unwrap();
+        a.append(&Record::Completed { key: key(0), cell: cell("a"), ts: 2.0 }).unwrap();
+        // b: same result after a failure, a retry and different timings
+        b.append(&Record::Started { key: key(0), attempt: 1, ts: 9.0 }).unwrap();
+        b.append(&Record::Failed { key: key(0), attempt: 1, error: "x".into(), ts: 9.5 })
+            .unwrap();
+        b.append(&Record::Started { key: key(0), attempt: 2, ts: 10.0 }).unwrap();
+        let mut slow = cell("a");
+        slow.wall_s = 77.0;
+        b.append(&Record::Completed { key: key(0), cell: slow, ts: 11.0 }).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // ...but a different result does change it
+        let mut c = Ledger::open(&tmp("fp_c")).unwrap();
+        let mut other = cell("a");
+        other.metrics[0].1.mean = 0.75;
+        c.append(&Record::Completed { key: key(0), cell: other, ts: 2.0 }).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        for d in [dir_a, dir_b] {
+            let _ = std::fs::remove_dir_all(&d);
+        }
+    }
+}

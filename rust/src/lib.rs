@@ -19,12 +19,16 @@
 //! * [`data`] provides the synthetic dataset substrates (DESIGN.md §5),
 //!   [`sim`] the closed-form LP-SGD dynamics used to validate
 //!   Theorems 1–3.
+//! * [`ledger`] is the persistent run ledger (`swalp-ledger-v1`):
+//!   fsync'd append-only cell records that make `reproduce --ledger`
+//!   sweeps resumable after a kill, plus the `swalp serve` job daemon.
 //! * [`util`] carries the offline-image substrates: JSON, CLI parsing,
 //!   a micro-bench harness and a property-testing harness.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod ledger;
 pub mod native;
 pub mod quant;
 pub mod rng;

@@ -7,19 +7,23 @@
 //! info                         backend availability summary
 //! train  --model <name> [...]  run SWALP training (see config.rs opts)
 //! eval   --model <name>        init + one full eval pass (smoke)
-//! reproduce --exp <id>|--all [--quick] [--seeds N] [--threads N]
-//!           [--json [path]] [--out-dir <dir>]
+//! reproduce --exp <id>|--all [--quick|--smoke] [--seeds N] [--threads N]
+//!           [--json [path]] [--out-dir <dir>] [--ledger <dir>]
 //!                              run registered experiments through the
-//!                              grid runner; emits swalp-report-v1 JSON
+//!                              grid runner; emits swalp-report-v1 JSON;
+//!                              --ledger makes the sweep resumable
 //! report <path> [--check]      render (or schema-check) a report file
+//! serve <dir> [--once ...]     job daemon over a spool dir + run ledger
+//! jobs <dir> [--json]          job/ledger status of a serve directory
 //! ```
 //!
 //! Model resolution order: the native rust engine first (hermetic, no
 //! artifacts needed), then — when built with `--features xla-runtime` and
 //! `make artifacts` has run — the AOT artifact runtime.
 //!
-//! Exit codes: 0 success, 1 failure, 2 unknown experiment id (the
-//! registered ids are printed so callers can self-correct).
+//! Exit codes: 0 success, 1 failure, 2 input validation: unknown
+//! experiment id (the registered ids are printed so callers can
+//! self-correct) or a report file that fails parsing / schema checks.
 
 use std::path::PathBuf;
 
@@ -88,6 +92,8 @@ fn run(args: &Args) -> Result<()> {
         }
         "reproduce" => reproduce(args),
         "report" => report_cmd(args),
+        "serve" => serve_cmd(args),
+        "jobs" => jobs_cmd(args),
         "help" | _ => {
             println!("{}", HELP.trim());
             if cmd != "help" {
@@ -187,12 +193,16 @@ fn list(json: bool) -> Result<()> {
 fn reproduce(args: &Args) -> Result<()> {
     let mut cfg = CtxConfig::new()
         .quick(args.flag("quick"))
+        .smoke(args.flag("smoke"))
         .seeds(args.u64_or("seeds", 1)?);
     if let Some(t) = args.opt("threads") {
         cfg = cfg.threads(t.parse().map_err(|e| anyhow::anyhow!("--threads: {e}"))?);
     }
     if let Some(dir) = args.opt("out-dir") {
         cfg = cfg.out_dir(dir);
+    }
+    if let Some(dir) = args.opt("ledger") {
+        cfg = cfg.ledger(dir);
     }
     let ctx = cfg.build()?;
     let specs: Vec<&registry::ExperimentSpec> = if args.flag("all") {
@@ -242,15 +252,30 @@ fn reproduce(args: &Args) -> Result<()> {
 
 /// `swalp report <path> [--check]` — render a saved `swalp-report-v1`
 /// file, or verify it round-trips through the schema (parse →
-/// re-serialize → re-parse → compare).
+/// re-serialize → re-parse → compare). Malformed, truncated or
+/// wrong-schema input is an *input* problem, not a crash: it exits 2
+/// with a diagnostic naming the file (same class as an unknown
+/// experiment id).
 fn report_cmd(args: &Args) -> Result<()> {
+    match report_check(args) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            eprintln!("report validation failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn report_check(args: &Args) -> Result<()> {
     let path = args
         .positional
         .get(1)
         .ok_or_else(|| anyhow::anyhow!("usage: swalp report <path> [--check]"))?;
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
-    let report = Report::parse(&swalp::util::json::parse(&text)?)?;
+    let parsed = swalp::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: not valid JSON: {e}"))?;
+    let report = Report::parse(&parsed).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     if args.flag("check") {
         // round-trip against the FILE's bytes, not the parsed value — a
         // tampered or non-canonically-written report must fail here
@@ -270,6 +295,66 @@ fn report_cmd(args: &Args) -> Result<()> {
     } else {
         report.render();
     }
+    Ok(())
+}
+
+/// `swalp serve <dir>` — run the ledger-backed job daemon (see
+/// `swalp::ledger::serve`).
+fn serve_cmd(args: &Args) -> Result<()> {
+    let dir = args.positional.get(1).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: swalp serve <dir> [--poll-ms N --retries N --backoff-ms N \
+             --max-jobs N --once --threads N]"
+        )
+    })?;
+    let defaults = swalp::ledger::ServeOpts::default();
+    let mut opts = swalp::ledger::ServeOpts {
+        poll_ms: args.u64_or("poll-ms", defaults.poll_ms)?,
+        retries: args.u64_or("retries", defaults.retries)?,
+        backoff_ms: args.u64_or("backoff-ms", defaults.backoff_ms)?,
+        max_jobs: args.u64_or("max-jobs", defaults.max_jobs)?,
+        once: args.flag("once"),
+        threads: None,
+    };
+    if let Some(t) = args.opt("threads") {
+        opts.threads = Some(t.parse().map_err(|e| anyhow::anyhow!("--threads: {e}"))?);
+    }
+    swalp::ledger::serve(std::path::Path::new(dir), &opts)
+}
+
+/// `swalp jobs <dir> [--json]` — status snapshot of a serve directory.
+fn jobs_cmd(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: swalp jobs <dir> [--json]"))?;
+    let v = swalp::ledger::jobs_status(std::path::Path::new(dir))?;
+    if args.flag("json") {
+        println!("{v}");
+        return Ok(());
+    }
+    let pending = v.get("pending")?.as_arr()?;
+    println!("spool: {} pending", pending.len());
+    for p in pending {
+        println!("  {}", p.as_str()?);
+    }
+    for j in v.get("jobs")?.as_arr()? {
+        let mut line = format!("{:<24} {}", j.get("job")?.as_str()?, j.get("state")?.as_str()?);
+        if let Some(err) = j.opt("error") {
+            line.push_str(&format!("  ({})", err.as_str()?));
+        }
+        if let Some(report) = j.opt("report") {
+            line.push_str(&format!("  -> {}", report.as_str()?));
+        }
+        println!("{line}");
+    }
+    let l = v.get("ledger")?;
+    println!(
+        "ledger cells: {} completed, {} failed, {} pending",
+        l.get("completed")?.as_u64()?,
+        l.get("failed")?.as_u64()?,
+        l.get("pending")?.as_u64()?
+    );
     Ok(())
 }
 
@@ -306,12 +391,19 @@ fn train(cfg: &RunConfig) -> Result<()> {
             Some(acc) if acc.m > 0 => Some((acc.average()?, acc.m)),
             _ => None,
         };
-        swalp::coordinator::checkpoint::Checkpoint::from_model_state(
+        let mut ck = swalp::coordinator::checkpoint::Checkpoint::from_model_state(
             cfg.total_steps,
             &out.final_state,
             swa_payload,
-        )
-        .save(std::path::Path::new(p))?;
+        );
+        // also carry the exact f64 accumulator so a mid-averaging resume
+        // continues the running mean bit-for-bit
+        if let Some(acc) = &out.swa {
+            if acc.m > 0 {
+                ck.swa64 = Some((acc.raw().to_vec(), acc.m));
+            }
+        }
+        ck.save(std::path::Path::new(p))?;
         println!("checkpoint -> {p}");
     }
     println!(
@@ -346,12 +438,23 @@ USAGE: swalp <command> [options]
         the grid runner (cells x seed replicas over the thread pool):
         fig2-linreg fig2-logreg fig2-bits table1 table2 table3
         fig3-frequency fig3-precision thm3 prn20
-        [--quick --seeds N --threads 1 (serial reference; pool size is
-         fixed at startup by RAYON_NUM_THREADS)]
+        [--quick | --smoke --seeds N --threads 1 (serial reference; pool
+         size is fixed at startup by RAYON_NUM_THREADS)]
         [--json [path] --out-dir <dir>]
+        [--ledger <dir>] record every cell replica in a persistent
+         swalp-ledger-v1 run ledger and skip cells already completed —
+         a killed sweep resumes losslessly (same final report bytes)
         emits swalp-report-v1 JSON; unknown --exp exits 2 with the
         registered ids
   report <path> [--check]       render / schema-check a report file
+        (malformed or wrong-schema input exits 2 with a diagnostic)
+  serve <dir>                   ledger-backed job daemon: watches
+        <dir>/spool/ for swalp-job-v1 files, executes them on the
+        thread pool with retry + backoff, writes swalp-report-v1 to
+        <dir>/reports/ and every cell to <dir>/ledger/
+        [--poll-ms 500 --retries 2 --backoff-ms 250 --max-jobs 0
+         --once --threads N]
+  jobs <dir> [--json]           status snapshot of a serve directory
 
 Runs hermetically on the native backend (linreg / logreg / mlp / CNN
 models). Other specs need `make artifacts` + --features xla-runtime.

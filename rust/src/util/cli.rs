@@ -17,7 +17,7 @@ pub struct Args {
 /// `--quick positional` unambiguous without a full declarative schema.
 const KNOWN_FLAGS: &[&str] = &[
     "quick", "full", "no-swa", "quiet", "verbose", "with-fp32", "force",
-    "list", "help", "bench", "dump-traj", "all", "check",
+    "list", "help", "bench", "dump-traj", "all", "check", "smoke", "once",
 ];
 
 impl Args {

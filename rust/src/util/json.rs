@@ -327,6 +327,9 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
+                            if self.pos + 5 > self.bytes.len() {
+                                bail!("truncated \\u escape at byte {}", self.pos);
+                            }
                             let hex = std::str::from_utf8(
                                 &self.bytes[self.pos + 1..self.pos + 5],
                             )?;

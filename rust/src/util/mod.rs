@@ -24,6 +24,18 @@ impl Timer {
     }
 }
 
+/// FNV-1a 64-bit hash — stable across processes and platforms (unlike
+/// `DefaultHasher`), so on-disk records (ledger lines, report
+/// fingerprints) can carry checksums that any later process can verify.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

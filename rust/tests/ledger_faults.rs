@@ -1,0 +1,476 @@
+//! Fault-injection proofs for the `swalp-ledger-v1` resume path and the
+//! `swalp serve` daemon.
+//!
+//! The tentpole claim under test: a sweep killed at ARBITRARY cell
+//! boundaries — with its ledger tail additionally corrupted between
+//! kills — resumes to a report whose `fingerprint()` is byte-identical
+//! to an uninterrupted run's, at any thread count. Kills are injected
+//! via `SWALP_FAULT_AFTER_CELLS` (the process exits with code 86 after
+//! the N-th durably-appended `Completed` record); kill points derive
+//! from `SWALP_FAULT_SEED` so the CI matrix can pin several schedules.
+//!
+//! Also here:
+//! * `swalp report --check` on malformed / truncated / wrong-schema
+//!   input exits 2 with a diagnostic (not a panic),
+//! * the serve daemon survives a mid-job kill (job stays spooled, the
+//!   restarted daemon finishes it from the ledger) and `swalp jobs`
+//!   reports the outcome,
+//! * a mid-averaging checkpoint (`swa64` section) resumes the SWA
+//!   running mean bit-for-bit,
+//! * the committed golden ledger pins the on-disk record grammar.
+//!
+//! Set `SWALP_KEEP_LEDGER_DIR=<dir>` to copy the surviving ledgers out
+//! (CI uploads them as artifacts).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use swalp::coordinator::checkpoint::Checkpoint;
+use swalp::coordinator::experiment::CtxConfig;
+use swalp::coordinator::registry::{self, ExpKind};
+use swalp::coordinator::report::{Cell, MetricStat, Report};
+use swalp::coordinator::{Runner, Schedule, TrainConfig, Trainer};
+use swalp::ledger::record::{decode_line, encode_line};
+use swalp::ledger::{CellKey, Ledger, Record, FAULT_EXIT_CODE};
+use swalp::native;
+use swalp::util::json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_swalp");
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("swalp_lf_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------
+// satellite: `swalp report --check` exits 2 on bad input, never panics
+// ---------------------------------------------------------------------
+
+#[test]
+fn report_check_exits_2_with_a_diagnostic_on_bad_input() {
+    let dir = tmp("report_check");
+    let cases: &[(&str, &[u8])] = &[
+        ("empty.json", b""),
+        ("malformed.json", b"{\"experiment\": \"fig2-linreg\", "),
+        // truncated \u escape: the parser must error, not read past the end
+        ("truncated_escape.json", b"{\"title\":\"x\\u00"),
+        ("wrong_schema.json", br#"{"schema":"swalp-report-v9"}"#),
+        ("not_a_report.json", br#"{"schema":"swalp-report-v1"}"#),
+    ];
+    for (name, bytes) in cases {
+        let path = dir.join(name);
+        std::fs::write(&path, bytes).unwrap();
+        let out = Command::new(BIN)
+            .args(["report", path.to_str().unwrap(), "--check"])
+            .output()
+            .expect("spawn swalp report");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert_eq!(
+            out.status.code(),
+            Some(2),
+            "{name}: want exit 2 (input validation), got {:?}; stderr:\n{stderr}",
+            out.status.code()
+        );
+        assert!(
+            stderr.contains("report validation failed"),
+            "{name}: diagnostic must name the failure, got:\n{stderr}"
+        );
+    }
+    // a missing path is the same class of error
+    let out = Command::new(BIN)
+        .args(["report", dir.join("nope.json").to_str().unwrap(), "--check"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// tentpole: killed sweeps resume to bit-identical reports
+// ---------------------------------------------------------------------
+
+/// Flattened work-item count of the fig2-linreg smoke grid at `seeds`
+/// replicas — the denominator for the kill schedule.
+fn fig2_linreg_items(seeds: u64) -> usize {
+    let ctx = CtxConfig::new().smoke(true).seeds(seeds).build().unwrap();
+    let spec = registry::find("fig2-linreg").unwrap();
+    match &spec.kind {
+        ExpKind::Grid { cells, .. } => {
+            cells(&ctx).iter().map(|rs| rs.seeds.max(1) as usize).sum()
+        }
+        ExpKind::Analytic(_) => unreachable!("fig2-linreg is a grid"),
+    }
+}
+
+fn reproduce(
+    threads: &str,
+    out_dir: &Path,
+    json_out: &Path,
+    ledger: Option<&Path>,
+    fault_after: Option<u64>,
+) -> std::process::Output {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "reproduce",
+        "--exp",
+        "fig2-linreg",
+        "--smoke",
+        "--seeds",
+        "2",
+        "--threads",
+        threads,
+        "--out-dir",
+        out_dir.to_str().unwrap(),
+        "--json",
+        json_out.to_str().unwrap(),
+    ]);
+    if let Some(dir) = ledger {
+        cmd.args(["--ledger", dir.to_str().unwrap()]);
+    }
+    cmd.env("RAYON_NUM_THREADS", threads);
+    match fault_after {
+        Some(n) => cmd.env("SWALP_FAULT_AFTER_CELLS", n.to_string()),
+        None => cmd.env_remove("SWALP_FAULT_AFTER_CELLS"),
+    };
+    cmd.output().expect("spawn swalp reproduce")
+}
+
+fn report_fingerprint(path: &Path) -> String {
+    Report::parse(&json::parse_file(path).unwrap()).unwrap().fingerprint()
+}
+
+/// Deterministic kill schedule: splitmix-style stream seeded by
+/// `SWALP_FAULT_SEED` (default 7). Each draw is the number of completed
+/// cells the next run is allowed before its injected kill.
+fn kill_schedule(seed: u64) -> impl FnMut() -> u64 {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    move || {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        1 + ((s >> 33) % 2)
+    }
+}
+
+#[test]
+fn killed_and_corrupted_sweeps_resume_to_the_uninterrupted_report() {
+    let base = tmp("resume");
+    let fault_seed: u64 = std::env::var("SWALP_FAULT_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(7);
+    let items = fig2_linreg_items(2);
+    assert!(items >= 4, "kill points need a multi-item grid, got {items}");
+
+    // uninterrupted golden: serial, no ledger
+    let golden_json = base.join("golden.json");
+    let out = reproduce("1", &base.join("golden_out"), &golden_json, None, None);
+    assert!(
+        out.status.success(),
+        "golden run failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let golden_fp = report_fingerprint(&golden_json);
+
+    let mut ledger_fps = Vec::new();
+    for threads in ["1", "8"] {
+        let ledger_dir = base.join(format!("ledger_t{threads}"));
+        let json_out = base.join(format!("report_t{threads}.json"));
+        let out_dir = base.join(format!("out_t{threads}"));
+        let mut next_kill = kill_schedule(fault_seed);
+        let mut kills = 0usize;
+        // progress ≥ 1 completed cell per faulted run, so 2·items + 2
+        // rounds always suffice
+        for round in 0..(2 * items + 2) {
+            let out =
+                reproduce(threads, &out_dir, &json_out, Some(&ledger_dir), Some(next_kill()));
+            match out.status.code() {
+                Some(0) => break,
+                Some(c) if c == FAULT_EXIT_CODE => kills += 1,
+                c => panic!(
+                    "round {round}: unexpected exit {c:?}\nstderr:\n{}",
+                    String::from_utf8_lossy(&out.stderr)
+                ),
+            }
+            // corrupt the tail between kills: a torn half-record without
+            // a newline must be dropped on the next open, not poison it
+            if round % 2 == 1 {
+                let path = ledger_dir.join("ledger.jsonl");
+                let mut bytes = std::fs::read(&path).unwrap();
+                bytes.extend_from_slice(b"{\"crc\":\"00ab\",\"rec\":{\"kind\":\"comp");
+                std::fs::write(&path, &bytes).unwrap();
+            }
+        }
+        assert!(kills >= 1, "fault injection never fired (items={items})");
+        // final clean resume: fills whatever the kill rounds left pending
+        // (a no-op re-read if the loop already finished)
+        let out = reproduce(threads, &out_dir, &json_out, Some(&ledger_dir), None);
+        assert!(
+            out.status.success(),
+            "clean resume failed after {kills} kills:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert_eq!(
+            report_fingerprint(&json_out),
+            golden_fp,
+            "threads={threads}: resumed report differs from the uninterrupted golden \
+             after {kills} injected kills"
+        );
+        // a redundant run with the fault armed is a no-op: every item
+        // prefills, zero Completed appends, so the trigger never fires
+        let out = reproduce(threads, &out_dir, &json_out, Some(&ledger_dir), Some(1));
+        assert!(out.status.success(), "fully-resumed sweep must not re-execute cells");
+        assert_eq!(report_fingerprint(&json_out), golden_fp);
+
+        let ledger = Ledger::open(&ledger_dir).unwrap();
+        let (pending, completed, failed) = ledger.counts();
+        assert_eq!(completed as usize, items, "every work item must reach Completed");
+        assert_eq!((pending, failed), (0, 0));
+        ledger_fps.push(ledger.fingerprint());
+
+        if let Ok(keep) = std::env::var("SWALP_KEEP_LEDGER_DIR") {
+            let dest = Path::new(&keep);
+            std::fs::create_dir_all(dest).unwrap();
+            std::fs::copy(
+                ledger_dir.join("ledger.jsonl"),
+                dest.join(format!("ledger_seed{fault_seed}_t{threads}.jsonl")),
+            )
+            .unwrap();
+        }
+    }
+    assert_eq!(
+        ledger_fps[0], ledger_fps[1],
+        "ledger fingerprints must agree across thread counts (timing and \
+         attempt counts are excluded from the fingerprint)"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------
+// serve daemon: kill mid-job, restart, status queries
+// ---------------------------------------------------------------------
+
+#[test]
+fn serve_daemon_survives_a_kill_and_jobs_reports_the_outcome() {
+    let dir = tmp("serve");
+    std::fs::create_dir_all(dir.join("spool")).unwrap();
+    std::fs::write(
+        dir.join("spool/job-good.json"),
+        r#"{"schema":"swalp-job-v1","experiment":"fig2-linreg","mode":"smoke","seeds":1}"#,
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("spool/job-unknown.json"),
+        r#"{"schema":"swalp-job-v1","experiment":"no-such-experiment"}"#,
+    )
+    .unwrap();
+
+    // first daemon run is killed mid-job by the fault hook
+    let out = Command::new(BIN)
+        .args(["serve", dir.to_str().unwrap(), "--once", "--retries", "0"])
+        .env("SWALP_FAULT_AFTER_CELLS", "1")
+        .output()
+        .expect("spawn swalp serve");
+    assert_eq!(
+        out.status.code(),
+        Some(FAULT_EXIT_CODE),
+        "stderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        dir.join("spool/job-good.json").exists(),
+        "a killed job must stay in the spool for the restarted daemon"
+    );
+
+    // restarted daemon drains the spool; completed cells replay from the
+    // ledger instead of re-running
+    let out = Command::new(BIN)
+        .args(["serve", dir.to_str().unwrap(), "--once", "--retries", "0"])
+        .env_remove("SWALP_FAULT_AFTER_CELLS")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr:\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("done/job-good.json").exists());
+    assert!(dir.join("failed/job-unknown.json").exists());
+    assert!(!dir.join("spool/job-good.json").exists());
+
+    // `swalp jobs --json` renders the swalp-jobs-v1 snapshot
+    let out = Command::new(BIN)
+        .args(["jobs", dir.to_str().unwrap(), "--json"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let v = json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(v.get("schema").unwrap().as_str().unwrap(), "swalp-jobs-v1");
+    assert!(v.get("pending").unwrap().as_arr().unwrap().is_empty());
+    let jobs = v.get("jobs").unwrap().as_arr().unwrap();
+    assert_eq!(jobs.len(), 2);
+    let mut report_path = None;
+    for j in jobs {
+        match j.get("job").unwrap().as_str().unwrap() {
+            "job-good" => {
+                assert_eq!(j.get("state").unwrap().as_str().unwrap(), "done");
+                report_path = Some(j.get("report").unwrap().as_str().unwrap().to_string());
+            }
+            "job-unknown" => {
+                assert_eq!(j.get("state").unwrap().as_str().unwrap(), "failed");
+                assert!(j
+                    .get("error")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .contains("no-such-experiment"));
+            }
+            other => panic!("unexpected job {other:?}"),
+        }
+    }
+    let led = v.get("ledger").unwrap();
+    assert_eq!(led.get("completed").unwrap().as_u64().unwrap() as usize, fig2_linreg_items(1));
+    assert_eq!(led.get("failed").unwrap().as_u64().unwrap(), 0);
+
+    // the daemon's report equals a direct in-process run of the same job
+    let served_fp = report_fingerprint(Path::new(&report_path.expect("done job has a report")));
+    let ctx = CtxConfig::new().smoke(true).seeds(1).build().unwrap();
+    let direct = Runner::new(&ctx).run(registry::find("fig2-linreg").unwrap()).unwrap();
+    assert_eq!(
+        direct.fingerprint(),
+        served_fp,
+        "a served job must produce the same report as a direct run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// satellite: checkpoint-resume mid-averaging is bit-exact (swa64)
+// ---------------------------------------------------------------------
+
+#[test]
+fn checkpoint_resume_mid_averaging_is_bit_exact() {
+    let model = native::load("linreg_fx86").unwrap();
+    let problem = swalp::data::synth::linreg_problem(256, 1024, 5);
+    let trainer = Trainer::new(&model, &problem.split);
+
+    // uninterrupted reference: averaging from step 40, cycle 1
+    let cfg = TrainConfig::new(160, 40, 1, Schedule::Constant(0.001));
+    let full = trainer.run(&cfg).unwrap();
+
+    // kill DURING the averaging phase (60 folds already accumulated),
+    // checkpoint with the exact f64 payload, resume from disk
+    let cfg_head = TrainConfig::new(100, 40, 1, Schedule::Constant(0.001));
+    let head = trainer.run(&cfg_head).unwrap();
+    let acc = head.swa.as_ref().expect("averaging must be active at the kill point");
+    assert_eq!(acc.m, 60);
+    let mut ck =
+        Checkpoint::from_model_state(100, &head.final_state, Some((acc.average().unwrap(), acc.m)));
+    ck.swa64 = Some((acc.raw().to_vec(), acc.m));
+    let dir = tmp("swa64_resume");
+    let path = dir.join("mid_avg.bin");
+    ck.save(&path).unwrap();
+    let ck = Checkpoint::load(&path).unwrap();
+    assert!(ck.swa64.is_some(), "saved checkpoint must carry the f64 section");
+    let resumed = trainer.run_resumed(&cfg, Some(ck)).unwrap();
+
+    let (a, b) = (full.swa.as_ref().unwrap(), resumed.swa.as_ref().unwrap());
+    assert_eq!(a.m, b.m, "fold counts must match (120 = 60 before + 60 after)");
+    for ((name, xs, _), (_, ys, _)) in a.raw().iter().zip(b.raw()) {
+        for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{name}[{i}]: SWA accumulator diverged across a mid-averaging resume"
+            );
+        }
+    }
+    assert_eq!(full.sgd_eval.loss.to_bits(), resumed.sgd_eval.loss.to_bits());
+    let e_full = full.swa_eval.as_ref().unwrap();
+    let e_res = resumed.swa_eval.as_ref().unwrap();
+    assert_eq!(e_full.loss.to_bits(), e_res.loss.to_bits());
+    assert_eq!(e_full.metric.to_bits(), e_res.metric.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// golden: the on-disk record grammar is pinned byte-for-byte
+// ---------------------------------------------------------------------
+
+const GOLDEN_LEDGER: &str = "tests/data/golden_ledger_v1.jsonl";
+
+/// Fixed records covering every kind; all numeric values are integers or
+/// short dyadic fractions, so their serializations are stable.
+fn golden_records() -> Vec<Record> {
+    let ka = CellKey::from_hex("00000000000000aa").unwrap();
+    let kb = CellKey::from_hex("00000000000000bb").unwrap();
+    let kc = CellKey::from_hex("00000000000000cc").unwrap();
+    let cell = Cell {
+        id: "SWALP".to_string(),
+        labels: vec![("run".to_string(), "SWALP".to_string())],
+        quant: "fx_w8f6".to_string(),
+        seeds: 1,
+        wall_s: 0.5,
+        metrics: vec![(
+            "final_dist_sq".to_string(),
+            MetricStat { mean: 0.125, std: 0.0, n: 1 },
+        )],
+        series: vec![("swa_dist_sq".to_string(), vec![(0, 1.0), (64, 0.25)])],
+    };
+    vec![
+        Record::header(),
+        Record::Submitted {
+            key: ka.clone(),
+            experiment: "fig2-linreg".to_string(),
+            cell: "SWALP".to_string(),
+            seed: 0,
+        },
+        Record::Started { key: ka.clone(), attempt: 1, ts: 100.0 },
+        Record::Completed { key: ka, cell, ts: 101.0 },
+        Record::Submitted {
+            key: kb.clone(),
+            experiment: "fig2-linreg".to_string(),
+            cell: "SGD-LP".to_string(),
+            seed: 1,
+        },
+        Record::Started { key: kb.clone(), attempt: 1, ts: 102.0 },
+        Record::Failed { key: kb, attempt: 1, error: "synthetic failure".to_string(), ts: 103.0 },
+        Record::Submitted {
+            key: kc,
+            experiment: "fig2-linreg".to_string(),
+            cell: "SWA-FL".to_string(),
+            seed: 0,
+        },
+    ]
+}
+
+#[test]
+fn golden_ledger_pins_the_on_disk_grammar() {
+    let text: String = golden_records().iter().map(encode_line).collect();
+    let regen = std::env::var_os("SWALP_WRITE_GOLDEN_LEDGER").is_some();
+    if regen || !Path::new(GOLDEN_LEDGER).exists() {
+        std::fs::write(GOLDEN_LEDGER, &text).unwrap();
+        eprintln!(
+            "wrote {GOLDEN_LEDGER} ({}) — commit it to pin the ledger grammar",
+            if regen { "regeneration requested" } else { "bootstrap: file was absent" }
+        );
+        return;
+    }
+    let committed = std::fs::read_to_string(GOLDEN_LEDGER).unwrap();
+    assert_eq!(
+        committed, text,
+        "swalp-ledger-v1 on-disk grammar drifted from {GOLDEN_LEDGER}; if \
+         intentional, regenerate with SWALP_WRITE_GOLDEN_LEDGER=1 and follow \
+         the golden-drift recipe in rust/README.md"
+    );
+    // every committed line decodes back to its record
+    let records = golden_records();
+    for (line, want) in committed.lines().zip(&records) {
+        assert_eq!(&decode_line(line).unwrap(), want);
+    }
+    assert_eq!(committed.lines().count(), records.len());
+    // and a Ledger replays the file to the expected terminal states
+    let dir = tmp("golden_replay");
+    std::fs::write(dir.join("ledger.jsonl"), &committed).unwrap();
+    let ledger = Ledger::open(&dir).unwrap();
+    assert_eq!(ledger.counts(), (1, 1, 1), "(pending, completed, failed)");
+    let ka = CellKey::from_hex("00000000000000aa").unwrap();
+    assert_eq!(ledger.completed(&ka).unwrap().id, "SWALP");
+    let _ = std::fs::remove_dir_all(&dir);
+}

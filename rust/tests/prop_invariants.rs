@@ -2,8 +2,12 @@
 //! the SWA accumulator, the schedules and the batcher — the coordinator
 //! state machine's load-bearing assumptions.
 
+use swalp::coordinator::report::{Cell, MetricStat};
 use swalp::coordinator::{Schedule, SwaAccumulator};
+use swalp::ledger::record::{decode_line, encode_line};
+use swalp::ledger::{CellKey, Ledger, Record};
 use swalp::quant::{bfp, fixed, QuantFormat};
+use swalp::rng::StreamRng;
 use swalp::tensor::{NamedTensors, Tensor};
 use swalp::util::prop::{check, gen_vec, PropConfig};
 
@@ -342,6 +346,122 @@ fn prop_schedules_are_nonnegative_and_bounded() {
             }
         }
         Ok(())
+    });
+}
+
+/// A random-but-finite [`Cell`] payload for ledger records.
+fn rand_cell(rng: &mut StreamRng) -> Cell {
+    let metrics: Vec<(String, MetricStat)> = (0..1 + rng.below(3))
+        .map(|i| {
+            (
+                format!("m{i}"),
+                MetricStat {
+                    mean: rng.normal() as f64,
+                    std: rng.uniform() as f64,
+                    n: 1 + rng.below(5) as u64,
+                },
+            )
+        })
+        .collect();
+    let series: Vec<(String, Vec<(u64, f64)>)> = (0..rng.below(3))
+        .map(|i| {
+            let pts: Vec<(u64, f64)> =
+                (0..1 + rng.below(6)).map(|s| (s as u64 * 64, rng.normal() as f64)).collect();
+            (format!("s{i}"), pts)
+        })
+        .collect();
+    Cell {
+        id: format!("cell{}", rng.below(100)),
+        labels: vec![("run".to_string(), format!("r{}", rng.below(10)))],
+        quant: "fx_w8f6".to_string(),
+        seeds: 1 + rng.below(4) as u64,
+        wall_s: rng.uniform() as f64,
+        metrics,
+        series,
+    }
+}
+
+#[test]
+fn prop_ledger_record_roundtrip() {
+    // every record kind, with randomized keys/payloads, must encode to a
+    // newline-terminated line that decodes back to an equal record —
+    // including arbitrary f64 metric values (shortest round-trip Display)
+    check("ledger record roundtrip", &cfg(150), |rng, case| {
+        let key = CellKey::from_hex(&format!("{:016x}", rng.next_u64())).unwrap();
+        let ts = rng.below(1 << 20) as f64 + 0.5;
+        let records = [
+            Record::header(),
+            Record::Submitted {
+                key: key.clone(),
+                experiment: format!("exp{}", case % 7),
+                cell: "SWALP".to_string(),
+                seed: rng.below(8) as u64,
+            },
+            Record::Started { key: key.clone(), attempt: 1 + rng.below(4) as u64, ts },
+            Record::Completed { key: key.clone(), cell: rand_cell(rng), ts },
+            Record::Failed {
+                key,
+                attempt: 1 + rng.below(4) as u64,
+                error: format!("err {}", rng.below(1000)),
+                ts,
+            },
+        ];
+        for rec in &records {
+            let line = encode_line(rec);
+            if !line.ends_with('\n') {
+                return Err("encoded line is not newline-terminated".into());
+            }
+            let back =
+                decode_line(line.trim_end_matches('\n')).map_err(|e| format!("decode: {e:#}"))?;
+            if &back != rec {
+                return Err(format!("roundtrip mismatch: {rec:?} vs {back:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ledger_single_byte_corruption_is_detected() {
+    // flipping any single byte of a NON-final line must make Ledger::open
+    // fail hard (naming the corruption) — never silently skip history.
+    // Final-line damage is the separate torn-tail recovery path.
+    check("ledger interior corruption detected", &cfg(60), |rng, case| {
+        let dir =
+            std::env::temp_dir().join(format!("swalp_prop_ledger_{case}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let key = CellKey::from_hex(&format!("{:016x}", rng.next_u64())).unwrap();
+        {
+            let mut l = Ledger::open(&dir).map_err(|e| format!("open: {e:#}"))?;
+            l.append(&Record::Submitted {
+                key: key.clone(),
+                experiment: "e".to_string(),
+                cell: "c".to_string(),
+                seed: 0,
+            })
+            .map_err(|e| format!("append: {e:#}"))?;
+            l.append(&Record::Completed { key, cell: rand_cell(rng), ts: 1.5 })
+                .map_err(|e| format!("append: {e:#}"))?;
+        }
+        let path = dir.join("ledger.jsonl");
+        let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        // corrupt strictly before line 2's terminating newline: hitting
+        // that newline would merge lines 2+3 into the FINAL line, which
+        // is (correctly) the recoverable torn-tail case, not this one
+        let newlines: Vec<usize> =
+            bytes.iter().enumerate().filter(|&(_, &b)| b == b'\n').map(|(i, _)| i).collect();
+        let limit = newlines[newlines.len() - 2];
+        let pos = rng.below(limit);
+        let flip = (1 + rng.below(255)) as u8;
+        bytes[pos] ^= flip;
+        std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+        let res = Ledger::open(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+        match res {
+            Err(e) if format!("{e:#}").contains("corrupt") => Ok(()),
+            Err(e) => Err(format!("detected, but without naming corruption: {e:#}")),
+            Ok(_) => Err(format!("flipping byte {pos} (xor {flip:#04x}) went undetected")),
+        }
     });
 }
 
