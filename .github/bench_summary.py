@@ -44,6 +44,18 @@ def main(path: str) -> int:
     blocked = gflops.get("gemm/blocked 256^3")
     if naive and blocked:
         print(f"\nblocked / naive-serial speedup on 256^3: **{blocked / naive:.1f}x**")
+    # scalar-vs-SIMD delta (rows exist only when a vector kernel was
+    # compiled in and detected — docs/PERF.md § "SIMD micro-kernels")
+    simd = gflops.get("gemm/blocked-simd 256^3")
+    if blocked and simd:
+        print(f"\nblocked-simd / blocked (scalar) speedup on 256^3: **{simd / blocked:.1f}x**")
+    fma = gflops.get("gemm/blocked-fma 256^3")
+    if blocked and fma:
+        print(f"\nblocked-fma / blocked (scalar) speedup on 256^3: **{fma / blocked:.1f}x**")
+    fused = gflops.get("gemm/fused fixed-W8F6 256^3")
+    fused_simd = gflops.get("gemm/fused-simd fixed-W8F6 256^3")
+    if fused and fused_simd:
+        print(f"\nfused-simd / fused (scalar) speedup on 256^3: **{fused_simd / fused:.1f}x**")
     return 0
 
 

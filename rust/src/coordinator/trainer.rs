@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::data::{loader::Loader, Split};
 use crate::quant::QuantFormat;
-use crate::runtime::{EvalOut, ModelBackend, ModelState};
+use crate::runtime::{EvalCache, EvalOut, ModelBackend, ModelState};
 
 use super::metrics::MetricsLog;
 use super::schedule::Schedule;
@@ -92,20 +92,25 @@ impl<'a> Trainer<'a> {
         state: &crate::tensor::NamedTensors,
         test: bool,
     ) -> Result<EvalOut> {
-        self.eval_set_with(trainable, state, test, false)
+        self.eval_set_with(trainable, state, test, false, None)
     }
 
     /// Eval an SWA weight average: BatchNorm statistics are recomputed
     /// from the eval batch (Izmailov et al.'s bn_update equivalent) —
     /// running stats collected under *different* weights would otherwise
     /// wreck the averaged model's accuracy.
+    ///
+    /// Always uses a per-call scoped cache, never the run-long one: the
+    /// averaged weights are temporaries, and a freed-then-reallocated
+    /// buffer at the same address could otherwise alias a stale panel
+    /// (the pointer-ABA hazard the [`EvalCache`] contract names).
     pub fn eval_swa(
         &self,
         trainable: &crate::tensor::NamedTensors,
         state: &crate::tensor::NamedTensors,
         test: bool,
     ) -> Result<EvalOut> {
-        self.eval_set_with(trainable, state, test, true)
+        self.eval_set_with(trainable, state, test, true, None)
     }
 
     fn eval_set_with(
@@ -114,6 +119,7 @@ impl<'a> Trainer<'a> {
         state: &crate::tensor::NamedTensors,
         test: bool,
         batch_stats: bool,
+        shared: Option<&EvalCache>,
     ) -> Result<EvalOut> {
         let ds = if test { &self.split.test } else { &self.split.train };
         let be = self.model.spec().batch_eval;
@@ -125,15 +131,24 @@ impl<'a> Trainer<'a> {
         let mut has_g = false;
         let mut batches = 0usize;
         let mut samples = 0usize;
-        // One weight set against every eval batch: this loop owns an
+        // One weight set against every eval batch: the loop shares an
         // EvalCache so the backend can reuse packed weight GEMM panels
-        // across batches. `trainable` and `state` are borrowed for the
-        // cache's whole lifetime (the stability contract); reuse is
-        // bit-identical to repacking.
-        let cache = crate::runtime::EvalCache::default();
+        // across batches — the run-long cache when the caller passed one
+        // (raw ModelState weights), else a cache scoped to this set.
+        // `trainable` and `state` are borrowed for the cache's whole
+        // lifetime (the stability contract); reuse is bit-identical to
+        // repacking.
+        let scoped;
+        let cache = match shared {
+            Some(c) => c,
+            None => {
+                scoped = EvalCache::default();
+                &scoped
+            }
+        };
         while Loader::eval_batch(ds, be, &mut cursor, &mut xb, &mut yb) {
             let out =
-                self.model.eval_batch_cached(&cache, trainable, state, &xb, &yb, batch_stats)?;
+                self.model.eval_batch_cached(cache, trainable, state, &xb, &yb, batch_stats)?;
             loss += out.loss;
             metric += out.metric;
             if let Some(g) = out.grad_norm_sq {
@@ -201,6 +216,14 @@ impl<'a> Trainer<'a> {
             loader.skip_batch();
         }
 
+        // Run-long GEMM panel cache shared by the train steps and the
+        // raw-weight eval sets: an eval over the current ModelState
+        // weights leaves its packed panels for the next step's forward,
+        // and each cached step bumps the cache generation after its
+        // in-place weight update so stale panels can never hit. SWA
+        // evals (temporary weight averages) keep per-call caches.
+        let run_cache = EvalCache::default();
+
         for step in start_step..cfg.total_steps {
             let lr = cfg.schedule.lr_at(step) as f32;
             let (x, y) = loader.next_batch();
@@ -208,7 +231,7 @@ impl<'a> Trainer<'a> {
             // avoided — train_step reads them before the next next_batch
             let loss = {
                 let (x, y): (&[f32], &[f32]) = (x, y);
-                self.model.train_step(&mut ms, x, y, lr, step)?
+                self.model.train_step_cached(&run_cache, &mut ms, x, y, lr, step)?
             };
             metrics.log(step, "train_loss", loss);
 
@@ -230,7 +253,8 @@ impl<'a> Trainer<'a> {
             }
 
             if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-                let ev = self.eval_set(&ms.trainable, &ms.state, true)?;
+                let ev =
+                    self.eval_set_with(&ms.trainable, &ms.state, true, false, Some(&run_cache))?;
                 metrics.log(step, "test_loss", ev.loss);
                 metrics.log(step, "test_metric", ev.metric);
                 if swa.m > 0 {
@@ -248,7 +272,8 @@ impl<'a> Trainer<'a> {
             }
         }
 
-        let sgd_eval = self.eval_set(&ms.trainable, &ms.state, true)?;
+        let sgd_eval =
+            self.eval_set_with(&ms.trainable, &ms.state, true, false, Some(&run_cache))?;
         let (swa_eval, swa_out) = if cfg.enable_swa && swa.m > 0 {
             let avg = swa.average()?;
             (Some(self.eval_swa(&avg, &ms.state, true)?), Some(swa))

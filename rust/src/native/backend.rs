@@ -94,43 +94,22 @@ impl NativeBackend {
         };
         Ok(EvalOut { loss, metric, grad_norm_sq })
     }
-}
 
-impl ModelBackend for NativeBackend {
-    fn spec(&self) -> &ModelSpec {
-        &self.spec
-    }
-
-    fn init(&self, seed: u64) -> Result<ModelState> {
-        // every u64 seed is its own stream; zero-init layers draw nothing
-        let mut rng = StreamRng::new(seed);
-        let mut trainable = self.model.init_params(&mut rng);
-        // w_0 starts on the low-precision grid (quantize_params, step 0)
-        let qw = &self.spec.quant.w;
-        if !qw.is_none() {
-            for (name, t) in trainable.iter_mut() {
-                let s = seed_for(0, site_id(name), TAG_W);
-                *t = quant::apply_format(qw, t, s, Role::Weight, is_per_tensor(name));
-            }
-        }
-        let momentum = trainable
-            .iter()
-            .map(|(n, t)| (n.clone(), Tensor::zeros(&t.shape)))
-            .collect();
-        Ok(ModelState { trainable, state: self.model.init_state(), momentum })
-    }
-
-    fn train_step(
+    /// The Algorithm-2 step with an optional weight-panel cache threaded
+    /// into the layer GEMMs — shared by [`ModelBackend::train_step`]
+    /// (`None`) and [`ModelBackend::train_step_cached`].
+    fn train_step_with(
         &self,
         ms: &mut ModelState,
         x: &[f32],
         y: &[f32],
         lr: f32,
         step: u64,
+        panel_cache: Option<&PanelCache>,
     ) -> Result<f64> {
         let b = self.batch_of(x, y)?;
         let q = &self.spec.quant;
-        let qctx = QCtx::new(&q.a, &q.e, step, Mode::Train);
+        let qctx = QCtx { a_fmt: &q.a, e_fmt: &q.e, step, mode: Mode::Train, panel_cache };
         let out = self.model.train_grads(&qctx, &ms.trainable, &ms.state, x, y, b)?;
         let (loss, mut grads) = (out.loss, out.grads);
         // weight decay folded into the gradient before Q_G (classic SGD-WD)
@@ -190,6 +169,65 @@ impl ModelBackend for NativeBackend {
             }
         }
         Ok(loss)
+    }
+}
+
+impl ModelBackend for NativeBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn init(&self, seed: u64) -> Result<ModelState> {
+        // every u64 seed is its own stream; zero-init layers draw nothing
+        let mut rng = StreamRng::new(seed);
+        let mut trainable = self.model.init_params(&mut rng);
+        // w_0 starts on the low-precision grid (quantize_params, step 0)
+        let qw = &self.spec.quant.w;
+        if !qw.is_none() {
+            for (name, t) in trainable.iter_mut() {
+                let s = seed_for(0, site_id(name), TAG_W);
+                *t = quant::apply_format(qw, t, s, Role::Weight, is_per_tensor(name));
+            }
+        }
+        let momentum = trainable
+            .iter()
+            .map(|(n, t)| (n.clone(), Tensor::zeros(&t.shape)))
+            .collect();
+        Ok(ModelState { trainable, state: self.model.init_state(), momentum })
+    }
+
+    fn train_step(
+        &self,
+        ms: &mut ModelState,
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Result<f64> {
+        self.train_step_with(ms, x, y, lr, step, None)
+    }
+
+    /// Cached step: the forward GEMMs reuse weight panels already packed
+    /// from the current weight values (an eval set that just ran shares
+    /// the same run-long cache), and the cache generation is advanced
+    /// after the in-place weight update so stale panels can never hit.
+    /// Bit-identical to [`Self::train_step`] — panel packing is pure
+    /// data movement.
+    fn train_step_cached(
+        &self,
+        cache: &EvalCache,
+        ms: &mut ModelState,
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Result<f64> {
+        let pc: &PanelCache = cache.get_or_init(PanelCache::new);
+        let out = self.train_step_with(ms, x, y, lr, step, Some(pc));
+        // the update mutated ms.trainable in place — every panel packed
+        // this step (or by the eval set before it) is now stale
+        pc.advance();
+        out
     }
 
     fn eval(

@@ -8,8 +8,14 @@
 //! serial loops:
 //!
 //! * **Register tiling.** The micro-kernel accumulates an `MR×NR` f32
-//!   tile in local accumulators; the inner loop is written so LLVM keeps
-//!   the tile in vector registers and vectorizes the `NR` lanes.
+//!   tile in local accumulators; the kernel implementations live in
+//!   [`super::kernels::micro`] — the portable scalar loops (LLVM keeps
+//!   the tile in vector registers) plus, under `--features simd`,
+//!   explicit AVX2/NEON kernels picked at runtime. [`Engine`] carries
+//!   the selected [`MicroKernel`]; the free functions below run
+//!   [`MicroKernel::dispatched`], which stays bit-identical to scalar
+//!   unless `SWALP_GEMM_KERNEL=fma` opts into relaxed parity
+//!   (docs/PERF.md § "SIMD micro-kernels").
 //! * **Panel blocking.** A is packed into `MR`-row strips per `MC×KC`
 //!   block, B into `NR`-column strips per `KC`-deep panel, so the
 //!   micro-kernel streams contiguous memory with the B strip L1-hot.
@@ -67,13 +73,7 @@ use std::sync::{Arc, Mutex};
 use crate::quant::{bfp, fixed, QuantFormat};
 
 use super::kernels;
-
-/// Micro-tile rows: accumulator rows held in registers. 4×8 keeps the
-/// tile (8 SSE2 / 4 AVX2 vectors) plus a B strip row and an A broadcast
-/// inside the baseline x86-64 register file without spills.
-pub const MR: usize = 4;
-/// Micro-tile columns: one or two vector registers of f32 lanes.
-pub const NR: usize = 8;
+pub use super::kernels::micro::{MicroKernel, MR, NR};
 /// Rows per packed A block: bounds the per-thread packing buffer and
 /// keeps the block (`MC·KC` floats) L2-resident.
 pub const MC: usize = 128;
@@ -129,6 +129,9 @@ struct PanelKey {
     cs: usize,
     k: usize,
     n: usize,
+    /// The cache generation the panels were packed under — stale panels
+    /// from before an [`PanelCache::advance`] can never be returned.
+    generation: u64,
 }
 
 /// A caller-owned memo of packed B panels, keyed by the B buffer's
@@ -157,10 +160,48 @@ struct PanelKey {
 /// returns the identical packed bytes the packing routine would
 /// produce, so cached and uncached runs are bit-identical by
 /// construction.
+///
+/// **Training-step reuse & generations.** A training step contracts the
+/// same weights in the forward pass, so a run-long cache also pays off
+/// *across* steps — but the weight update mutates the buffers in place.
+/// The cache therefore carries a generation counter baked into every
+/// key: [`advance`](PanelCache::advance) bumps it (and drops the old
+/// entries), so panels packed before a weight update are unreachable
+/// even if the updated tensor keeps its address and length. The native
+/// backend advances its per-run cache once per completed optimizer
+/// step; eval passes between steps see a stable generation and reuse
+/// panels across every batch.
+///
+/// ```
+/// use swalp::native::gemm::{self, Epilogue, PanelCache};
+///
+/// // One weight matrix against many inputs — the eval/training shape.
+/// let (m, k, n) = (64, 32, 32); // big enough for the blocked engine
+/// let x = vec![0.5f32; m * k];
+/// let mut w = vec![0.25f32; k * n];
+/// let mut out = vec![0.0f32; m * n];
+/// let cache = PanelCache::new();
+/// let ep = Epilogue { bias: None, relu: false, quant: None, b_cache: Some(&cache) };
+/// gemm::matmul_into_quant(&x, &w, m, k, n, &mut out, &ep);
+/// assert_eq!(cache.hits(), 0); // first touch packs the panels
+/// gemm::matmul_into_quant(&x, &w, m, k, n, &mut out, &ep);
+/// assert_eq!(cache.hits(), 1); // same weights, same generation: reuse
+///
+/// // A weight update mutates `w` in place; advancing the generation
+/// // makes the stale panels unreachable (same pointer, same length).
+/// for v in w.iter_mut() {
+///     *v += 0.125;
+/// }
+/// cache.advance();
+/// gemm::matmul_into_quant(&x, &w, m, k, n, &mut out, &ep);
+/// assert_eq!(cache.hits(), 1); // repacked under the new generation
+/// assert_eq!(cache.generation(), 1);
+/// ```
 #[derive(Default)]
 pub struct PanelCache {
     map: Mutex<HashMap<PanelKey, Arc<Vec<Panel>>>>,
     hits: AtomicU64,
+    generation: AtomicU64,
 }
 
 impl PanelCache {
@@ -171,6 +212,19 @@ impl PanelCache {
     /// Panel reuses served by this cache (test observability).
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
+    }
+
+    /// The current generation (test observability).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Invalidate every cached panel: bump the generation every future
+    /// key carries, and drop the now-unreachable entries. Call after any
+    /// in-place mutation of a cached B buffer (the weight update).
+    pub fn advance(&self) {
+        self.generation.fetch_add(1, Ordering::AcqRel);
+        self.map.lock().unwrap().clear();
     }
 }
 
@@ -186,6 +240,7 @@ fn panels_for(b: View, k: usize, n: usize, cache: Option<&PanelCache>) -> Arc<Ve
         cs: b.cs,
         k,
         n,
+        generation: pc.generation.load(Ordering::Acquire),
     };
     if let Some(p) = pc.map.lock().unwrap().get(&key).cloned() {
         pc.hits.fetch_add(1, Ordering::Relaxed);
@@ -196,15 +251,198 @@ fn panels_for(b: View, k: usize, n: usize, cache: Option<&PanelCache>) -> Arc<Ve
     packed
 }
 
-/// out[m,n] = a[m,k] @ b[k,n], blocked + pool-parallel. Bit-identical to
-/// [`kernels::matmul_serial`] at every thread count.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    matmul_into_quant(a, b, m, k, n, out, &Epilogue::default());
+// ---------------------------------------------------------------------
+// engine handle + free entry points
+// ---------------------------------------------------------------------
+
+/// The blocked engine bound to one register-tile [`MicroKernel`].
+///
+/// The free functions below run [`Engine::dispatched`] — the right call
+/// for all production code. Pinning a kernel explicitly
+/// ([`Engine::with_kernel`]) exists for the bench rows and the
+/// per-kernel parity sweeps. `Copy`, so the pool spawn closures capture
+/// it by value.
+///
+/// Shapes below the packing threshold run the naive serial kernels
+/// whatever the bound kernel is: for bit-identical kernels the choice is
+/// unobservable, and under the relaxed-parity FMA kernel small shapes
+/// are simply exact — the fallback depends only on the shape, so runs
+/// remain deterministic.
+#[derive(Clone, Copy)]
+pub struct Engine {
+    mk: MicroKernel,
 }
 
-/// [`matmul`] with a fused epilogue: bias/ReLU/quantization applied to
-/// each completed row-panel in cache instead of a second memory pass.
-/// Bit-identical to `matmul → add_bias → relu → quantize`.
+impl Engine {
+    /// The production engine: the runtime-dispatched micro-kernel
+    /// ([`MicroKernel::dispatched`] — best bit-identical kernel unless
+    /// `SWALP_GEMM_KERNEL` overrides).
+    pub fn dispatched() -> Engine {
+        Engine { mk: MicroKernel::dispatched() }
+    }
+
+    /// An engine pinned to one specific kernel.
+    pub fn with_kernel(mk: MicroKernel) -> Engine {
+        Engine { mk }
+    }
+
+    /// The kernel this engine runs (bench-row labels, logs).
+    pub fn kernel(&self) -> MicroKernel {
+        self.mk
+    }
+
+    /// out[m,n] = a[m,k] @ b[k,n], blocked + pool-parallel.
+    /// Bit-identical to [`kernels::matmul_serial`] at every thread count
+    /// (for a bit-identical kernel; FMA engines are deterministic but
+    /// relaxed-parity).
+    pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        self.matmul_into_quant(a, b, m, k, n, out, &Epilogue::default());
+    }
+
+    /// [`Engine::matmul`] with a fused epilogue: bias/ReLU/quantization
+    /// applied to each completed row-panel in cache instead of a second
+    /// memory pass. Bit-identical to `matmul → add_bias → relu →
+    /// quantize`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_into_quant(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        ep: &Epilogue,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        validate_epilogue(ep);
+        if m * k * n < GEMM_MIN_MACS {
+            kernels::matmul_serial(a, b, m, k, n, out);
+            finish_small(out, n, ep);
+            return;
+        }
+        let av = View { data: a, rs: k, cs: 1 };
+        let bv = View { data: b, rs: n, cs: 1 };
+        blocked(self.mk, av, bv, m, k, n, out, ep, false);
+    }
+
+    /// Single-thread blocked [`Engine::matmul`] — the engine with the
+    /// pool fan-out and the small-size naive fallback disabled.
+    /// Reference entry for the parity tests and the `bench_perf_hotpath`
+    /// GEMM table.
+    pub fn matmul_serial(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let av = View { data: a, rs: k, cs: 1 };
+        let bv = View { data: b, rs: n, cs: 1 };
+        blocked(self.mk, av, bv, m, k, n, out, &Epilogue::default(), true);
+    }
+
+    /// out[k,n] = aᵀ @ b with a given as [m,k], b as [m,n] — the
+    /// weight-gradient contraction. Blocked + pool-parallel,
+    /// bit-identical to [`kernels::matmul_at_b_serial`].
+    pub fn matmul_at_b(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(out.len(), k * n);
+        if m * k * n < GEMM_MIN_MACS {
+            kernels::matmul_at_b_serial(a, b, m, k, n, out);
+            return;
+        }
+        // Aᵀ is a strided view of a: element (j, i) lives at a[i·k + j].
+        let av = View { data: a, rs: 1, cs: k };
+        let bv = View { data: b, rs: n, cs: 1 };
+        blocked(self.mk, av, bv, k, m, n, out, &Epilogue::default(), false);
+    }
+
+    /// Single-thread blocked [`Engine::matmul_at_b`] (no fallback) —
+    /// parity/bench reference.
+    pub fn matmul_at_b_serial(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        let av = View { data: a, rs: 1, cs: k };
+        let bv = View { data: b, rs: n, cs: 1 };
+        blocked(self.mk, av, bv, k, m, n, out, &Epilogue::default(), true);
+    }
+
+    /// out[m,n] = a @ bᵀ with b given as [n,k] — the im2col convolution
+    /// and input-error contraction. Blocked + pool-parallel,
+    /// bit-identical to [`kernels::matmul_a_bt_serial`].
+    pub fn matmul_a_bt(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        self.matmul_a_bt_into_quant(a, b, m, k, n, out, &Epilogue::default());
+    }
+
+    /// [`Engine::matmul_a_bt`] with a fused epilogue (see
+    /// [`Engine::matmul_into_quant`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_a_bt_into_quant(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        ep: &Epilogue,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(out.len(), m * n);
+        validate_epilogue(ep);
+        if m * k * n < GEMM_MIN_MACS {
+            kernels::matmul_a_bt_serial(a, b, m, k, n, out);
+            finish_small(out, n, ep);
+            return;
+        }
+        let av = View { data: a, rs: k, cs: 1 };
+        // Bᵀ is a strided view of b: element (p, j) lives at b[j·k + p].
+        let bv = View { data: b, rs: 1, cs: k };
+        blocked(self.mk, av, bv, m, k, n, out, ep, false);
+    }
+
+    /// Single-thread blocked [`Engine::matmul_a_bt`] (no fallback) —
+    /// parity/bench reference.
+    pub fn matmul_a_bt_serial(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let av = View { data: a, rs: k, cs: 1 };
+        let bv = View { data: b, rs: 1, cs: k };
+        blocked(self.mk, av, bv, m, k, n, out, &Epilogue::default(), true);
+    }
+}
+
+/// [`Engine::matmul`] on the dispatched engine.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    Engine::dispatched().matmul(a, b, m, k, n, out);
+}
+
+/// [`Engine::matmul_into_quant`] on the dispatched engine.
 pub fn matmul_into_quant(
     a: &[f32],
     b: &[f32],
@@ -214,66 +452,30 @@ pub fn matmul_into_quant(
     out: &mut [f32],
     ep: &Epilogue,
 ) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    validate_epilogue(ep);
-    if m * k * n < GEMM_MIN_MACS {
-        kernels::matmul_serial(a, b, m, k, n, out);
-        finish_small(out, n, ep);
-        return;
-    }
-    let av = View { data: a, rs: k, cs: 1 };
-    let bv = View { data: b, rs: n, cs: 1 };
-    blocked(av, bv, m, k, n, out, ep, false);
+    Engine::dispatched().matmul_into_quant(a, b, m, k, n, out, ep);
 }
 
-/// Single-thread blocked [`matmul`] — the engine with the pool fan-out
-/// and the small-size naive fallback disabled. Reference entry for the
-/// parity tests and the `bench_perf_hotpath` GEMM table.
+/// [`Engine::matmul_serial`] on the dispatched engine.
 pub fn matmul_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let av = View { data: a, rs: k, cs: 1 };
-    let bv = View { data: b, rs: n, cs: 1 };
-    blocked(av, bv, m, k, n, out, &Epilogue::default(), true);
+    Engine::dispatched().matmul_serial(a, b, m, k, n, out);
 }
 
-/// out[k,n] = aᵀ @ b with a given as [m,k], b as [m,n] — the
-/// weight-gradient contraction. Blocked + pool-parallel, bit-identical
-/// to [`kernels::matmul_at_b_serial`].
+/// [`Engine::matmul_at_b`] on the dispatched engine.
 pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(out.len(), k * n);
-    if m * k * n < GEMM_MIN_MACS {
-        kernels::matmul_at_b_serial(a, b, m, k, n, out);
-        return;
-    }
-    // Aᵀ is a strided view of a: element (j, i) lives at a[i·k + j].
-    let av = View { data: a, rs: 1, cs: k };
-    let bv = View { data: b, rs: n, cs: 1 };
-    blocked(av, bv, k, m, n, out, &Epilogue::default(), false);
+    Engine::dispatched().matmul_at_b(a, b, m, k, n, out);
 }
 
-/// Single-thread blocked [`matmul_at_b`] (no fallback) — parity/bench
-/// reference.
+/// [`Engine::matmul_at_b_serial`] on the dispatched engine.
 pub fn matmul_at_b_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    let av = View { data: a, rs: 1, cs: k };
-    let bv = View { data: b, rs: n, cs: 1 };
-    blocked(av, bv, k, m, n, out, &Epilogue::default(), true);
+    Engine::dispatched().matmul_at_b_serial(a, b, m, k, n, out);
 }
 
-/// out[m,n] = a @ bᵀ with b given as [n,k] — the im2col convolution and
-/// input-error contraction. Blocked + pool-parallel, bit-identical to
-/// [`kernels::matmul_a_bt_serial`].
+/// [`Engine::matmul_a_bt`] on the dispatched engine.
 pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    matmul_a_bt_into_quant(a, b, m, k, n, out, &Epilogue::default());
+    Engine::dispatched().matmul_a_bt(a, b, m, k, n, out);
 }
 
-/// [`matmul_a_bt`] with a fused epilogue (see [`matmul_into_quant`]).
+/// [`Engine::matmul_a_bt_into_quant`] on the dispatched engine.
 pub fn matmul_a_bt_into_quant(
     a: &[f32],
     b: &[f32],
@@ -283,29 +485,12 @@ pub fn matmul_a_bt_into_quant(
     out: &mut [f32],
     ep: &Epilogue,
 ) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(out.len(), m * n);
-    validate_epilogue(ep);
-    if m * k * n < GEMM_MIN_MACS {
-        kernels::matmul_a_bt_serial(a, b, m, k, n, out);
-        finish_small(out, n, ep);
-        return;
-    }
-    let av = View { data: a, rs: k, cs: 1 };
-    // Bᵀ is a strided view of b: element (p, j) lives at b[j·k + p].
-    let bv = View { data: b, rs: 1, cs: k };
-    blocked(av, bv, m, k, n, out, ep, false);
+    Engine::dispatched().matmul_a_bt_into_quant(a, b, m, k, n, out, ep);
 }
 
-/// Single-thread blocked [`matmul_a_bt`] (no fallback) — parity/bench
-/// reference.
+/// [`Engine::matmul_a_bt_serial`] on the dispatched engine.
 pub fn matmul_a_bt_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    let av = View { data: a, rs: k, cs: 1 };
-    let bv = View { data: b, rs: 1, cs: k };
-    blocked(av, bv, m, k, n, out, &Epilogue::default(), true);
+    Engine::dispatched().matmul_a_bt_serial(a, b, m, k, n, out);
 }
 
 // ---------------------------------------------------------------------
@@ -380,25 +565,16 @@ fn pack_a_block(a: View, row0: usize, mc: usize, p0: usize, kc: usize, dst: &mut
     }
 }
 
-/// The register tile: `acc[r][c] += Σ_p ap[p][r] · bp[p][c]`, p ascending
-/// — each element's adds happen in the exact naive-kernel order. `ap` is
-/// one packed A strip (`kc×MR`), `bp` one packed B strip (`kc×NR`).
-#[inline]
-fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
-    for (arow, brow) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
-        for (accr, &av) in acc.iter_mut().zip(arow) {
-            for (o, &bv) in accr.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
 /// Multiply one packed A block against one packed B panel into the
-/// block's output rows. `first` selects zero- vs continue-accumulation
-/// (the accumulator round-trips through `out` between panels; an f32
-/// store/load is exact, so the per-element chain matches the naive one).
+/// block's output rows, running the bound micro-kernel
+/// ([`MicroKernel::run`]: `acc[r][c] += Σ_p ap[p][r] · bp[p][c]`, p
+/// ascending) on each register tile. `first` selects zero- vs
+/// continue-accumulation (the accumulator round-trips through `out`
+/// between panels; an f32 store/load is exact, so the per-element chain
+/// matches the naive one).
+#[allow(clippy::too_many_arguments)]
 fn block_gemm(
+    mk: MicroKernel,
     ap: &[f32],
     mc: usize,
     bpanel: &[f32],
@@ -424,7 +600,7 @@ fn block_gemm(
                     accr[..jw].copy_from_slice(&out[o0..o0 + jw]);
                 }
             }
-            micro_kernel(astrip, bstrip, &mut acc);
+            mk.run(astrip, bstrip, &mut acc);
             for (r, accr) in acc.iter().enumerate().take(iw) {
                 let o0 = (i0 + r) * n + j0;
                 out[o0..o0 + jw].copy_from_slice(&accr[..jw]);
@@ -435,7 +611,9 @@ fn block_gemm(
 
 /// One thread's share: all panels of rows [row0, row0+rows), MC block at
 /// a time, running the row-local epilogue on each block as it completes.
+#[allow(clippy::too_many_arguments)]
 fn gemm_rows(
+    mk: MicroKernel,
     a: View,
     panels: &[Panel],
     n: usize,
@@ -451,7 +629,7 @@ fn gemm_rows(
         let block_out = &mut out_rows[ic * n..(ic + mc) * n];
         for (pi, panel) in panels.iter().enumerate() {
             pack_a_block(a, row0 + ic, mc, panel.p0, panel.kc, &mut apack);
-            block_gemm(&apack, mc, &panel.data, panel.kc, n, pi == 0, block_out);
+            block_gemm(mk, &apack, mc, &panel.data, panel.kc, n, pi == 0, block_out);
         }
         apply_rows(block_out, row0 + ic, n, ep);
         ic += mc;
@@ -461,6 +639,7 @@ fn gemm_rows(
 /// The blocked driver behind every public entry point.
 #[allow(clippy::too_many_arguments)]
 fn blocked(
+    mk: MicroKernel,
     a: View,
     b: View,
     m: usize,
@@ -482,7 +661,7 @@ fn blocked(
     let panels_arc = panels_for(b, k, n, ep.b_cache);
     let panels: &[Panel] = &panels_arc;
     if force_serial || rayon::current_num_threads() <= 1 || m < 2 {
-        gemm_rows(a, panels, n, 0, m, out, ep);
+        gemm_rows(mk, a, panels, n, 0, m, out, ep);
     } else {
         // Row-only split via the shared partition helper, rounded up to
         // whole MR strips. Any row split yields the same bits (each row
@@ -493,7 +672,7 @@ fn blocked(
             for (ci, oc) in out.chunks_mut(chunk * n).enumerate() {
                 s.spawn(move |_| {
                     let rows = kernels::chunk_rows(oc.len(), n);
-                    gemm_rows(a, panels, n, ci * chunk, rows, oc, ep);
+                    gemm_rows(mk, a, panels, n, ci * chunk, rows, oc, ep);
                 });
             }
         });
@@ -716,6 +895,56 @@ mod tests {
         matmul_a_bt_into_quant(&a, &bt, m, k, n, &mut got_bt, &ep_bt);
         assert_eq!(cache.hits(), 1, "new operand must not hit");
         assert!(got_bt.iter().zip(&want_bt).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn advancing_the_cache_generation_forces_repack() {
+        let (m, k, n) = (65, 65, 33);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i % 19) as f32 - 9.0) * 0.11).collect();
+        let mut b: Vec<f32> = (0..k * n).map(|i| ((i % 23) as f32 - 11.0) * 0.07).collect();
+        let cache = PanelCache::new();
+        let ep = Epilogue { bias: None, relu: false, quant: None, b_cache: Some(&cache) };
+        let mut out = vec![0.0f32; m * n];
+        matmul_into_quant(&a, &b, m, k, n, &mut out, &ep);
+        matmul_into_quant(&a, &b, m, k, n, &mut out, &ep);
+        assert_eq!(cache.hits(), 1);
+
+        // in-place mutation keeps the pointer and length — exactly the
+        // ABA shape the generation in the key defends against
+        for v in b.iter_mut() {
+            *v = -*v;
+        }
+        cache.advance();
+        assert_eq!(cache.generation(), 1);
+        let mut got = vec![0.0f32; m * n];
+        matmul_into_quant(&a, &b, m, k, n, &mut got, &ep);
+        assert_eq!(cache.hits(), 1, "post-advance call must repack, not hit");
+        let mut want = vec![0.0f32; m * n];
+        matmul_into_quant(&a, &b, m, k, n, &mut want, &Epilogue::default());
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn every_exact_kernel_drives_the_engine_to_the_same_bits() {
+        // engine-level sweep over the runtime-available kernels; the
+        // full m,k,n sweep lives in tests/gemm_parity.rs
+        let (m, k, n) = (MC + 3, KC + 5, 2 * NR + 1);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i % 41) as f32 - 20.0) * 0.07).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i % 43) as f32 - 21.0) * 0.05).collect();
+        let mut want = vec![0.0f32; m * n];
+        Engine::with_kernel(MicroKernel::Scalar).matmul_serial(&a, &b, m, k, n, &mut want);
+        for mk in MicroKernel::available() {
+            if !mk.bit_identical() {
+                continue;
+            }
+            let mut got = vec![0.0f32; m * n];
+            Engine::with_kernel(mk).matmul_serial(&a, &b, m, k, n, &mut got);
+            assert!(
+                got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "kernel {} diverged from scalar",
+                mk.name()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! The `MR×NR` register-tile micro-kernels the blocked GEMM engine
+//! ([`crate::native::gemm`]) runs at the bottom of its loop nest, plus
+//! the runtime dispatch that picks one.
+//!
+//! Every kernel computes the same update: given a packed `MR`-row A
+//! strip and a packed `NR`-column B strip covering `kc` contraction
+//! steps, accumulate `acc[r][c] += Σ_p a[p·MR + r] · b[p·NR + c]` with
+//! `p` ascending. The scalar kernel is the reference; the SIMD kernels
+//! vectorize across the `NR` **independent output lanes** only, so each
+//! element's f32 chain is still `((acc + a₀b₀) + a₁b₁) + …` in the same
+//! order — separate multiply and add instructions round exactly like
+//! the scalar code, which is why `Avx2`/`Neon` are bit-identical to
+//! `Scalar` (and to the naive serial loops, transitively). The `*Fma`
+//! kernels contract each step with a single rounding instead of two;
+//! that is the one documented departure from bit-parity (docs/PERF.md
+//! § "SIMD micro-kernels") — still deterministic and thread-count
+//! invariant, pinned by tolerance + run-to-run tests rather than
+//! bitwise GEMM parity.
+//!
+//! Dispatch: [`MicroKernel::dispatched`] picks the best **bit-identical**
+//! kernel for the running CPU (scalar unless the `simd` feature is on),
+//! overridable via `SWALP_GEMM_KERNEL` ∈ `scalar` | `simd` | `fma`.
+//! The SIMD kernels only exist under `--features simd`; the scalar
+//! kernel is always compiled, so every build has a valid fallback.
+
+/// Accumulator rows per register tile (see docs/PERF.md for sizing).
+pub const MR: usize = 4;
+/// Accumulator columns per register tile — one AVX2 register, two NEON.
+pub const NR: usize = 8;
+
+// The SIMD kernels below are hand-unrolled for exactly this tile shape.
+const _: () = assert!(MR == 4 && NR == 8, "micro-kernels are written for a 4x8 tile");
+
+/// One register-tile micro-kernel implementation. `Copy` so the blocked
+/// engine can capture it in rayon spawn closures.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MicroKernel {
+    /// Portable reference loops (autovectorized by the compiler).
+    Scalar,
+    /// AVX2, separate `mul`+`add` — bit-identical to `Scalar`.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    Avx2,
+    /// AVX2 with `fmadd` — relaxed parity (one rounding per MAC).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    Avx2Fma,
+    /// NEON, separate `mul`+`add` — bit-identical to `Scalar`.
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    Neon,
+    /// NEON with `vfma` — relaxed parity (one rounding per MAC).
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    NeonFma,
+}
+
+impl MicroKernel {
+    /// Stable display name (bench rows, logs, `SWALP_GEMM_KERNEL` docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            MicroKernel::Scalar => "scalar",
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            MicroKernel::Avx2 => "avx2",
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            MicroKernel::Avx2Fma => "avx2-fma",
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            MicroKernel::Neon => "neon",
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            MicroKernel::NeonFma => "neon-fma",
+        }
+    }
+
+    /// Does this kernel reproduce the scalar reference bit-for-bit?
+    /// `false` only for the FMA variants (single-rounding contraction).
+    pub fn bit_identical(self) -> bool {
+        match self {
+            MicroKernel::Scalar => true,
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            MicroKernel::Avx2 => true,
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            MicroKernel::Avx2Fma => false,
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            MicroKernel::Neon => true,
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            MicroKernel::NeonFma => false,
+        }
+    }
+
+    /// Every kernel the running CPU can execute, scalar first, FMA
+    /// variants after their exact siblings. The parity tests sweep this.
+    pub fn available() -> Vec<MicroKernel> {
+        let mut v = vec![MicroKernel::Scalar];
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                v.push(MicroKernel::Avx2);
+                if std::arch::is_x86_feature_detected!("fma") {
+                    v.push(MicroKernel::Avx2Fma);
+                }
+            }
+        }
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        {
+            // NEON is baseline on aarch64 — no runtime detection needed.
+            v.push(MicroKernel::Neon);
+            v.push(MicroKernel::NeonFma);
+        }
+        v
+    }
+
+    /// The kernel the engine uses by default: the best **bit-identical**
+    /// kernel for this CPU, unless `SWALP_GEMM_KERNEL` overrides it —
+    /// `scalar` forces the reference, `simd` is the default policy
+    /// spelled out, `fma` opts into the relaxed-parity kernel (falls
+    /// back to the best exact kernel, with a note, when no FMA kernel
+    /// is compiled in or the CPU lacks it). Cached after the first call.
+    pub fn dispatched() -> MicroKernel {
+        use std::sync::OnceLock;
+        static CHOICE: OnceLock<MicroKernel> = OnceLock::new();
+        *CHOICE.get_or_init(|| {
+            let avail = MicroKernel::available();
+            let best_exact = *avail
+                .iter()
+                .rev()
+                .find(|k| k.bit_identical())
+                .expect("scalar always present");
+            let best_fma = avail.iter().copied().rev().find(|k| !k.bit_identical());
+            match std::env::var("SWALP_GEMM_KERNEL").as_deref() {
+                Err(_) | Ok("simd") => best_exact,
+                Ok("scalar") => MicroKernel::Scalar,
+                Ok("fma") => best_fma.unwrap_or_else(|| {
+                    eprintln!(
+                        "SWALP_GEMM_KERNEL=fma: no FMA kernel available \
+                         (needs --features simd and CPU support); using {}",
+                        best_exact.name()
+                    );
+                    best_exact
+                }),
+                Ok(other) => panic!("SWALP_GEMM_KERNEL={other:?}: expected scalar|simd|fma"),
+            }
+        })
+    }
+
+    /// Run the tile update: `acc[r][c] += Σ_p ap[p·MR+r] · bp[p·NR+c]`.
+    ///
+    /// `ap`/`bp` are the packed strips (`kc·MR` and `kc·NR` elements for
+    /// the same `kc`). Sound for any variant: the x86 arms re-check CPU
+    /// support before entering the `target_feature` functions (a cached
+    /// atomic load — noise next to the `kc·MR·NR` MACs), and NEON is
+    /// statically guaranteed on aarch64 targets.
+    #[inline]
+    pub fn run(self, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+        match self {
+            MicroKernel::Scalar => scalar(ap, bp, acc),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            MicroKernel::Avx2 => {
+                assert!(std::arch::is_x86_feature_detected!("avx2"), "Avx2 kernel without AVX2");
+                unsafe { avx2(ap, bp, acc) }
+            }
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            MicroKernel::Avx2Fma => {
+                assert!(
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma"),
+                    "Avx2Fma kernel without AVX2+FMA"
+                );
+                unsafe { avx2_fma(ap, bp, acc) }
+            }
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            MicroKernel::Neon => unsafe { neon(ap, bp, acc) },
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            MicroKernel::NeonFma => unsafe { neon_fma(ap, bp, acc) },
+        }
+    }
+}
+
+/// The reference tile update — the loops every other kernel must match
+/// (bitwise for the exact kernels, to tolerance for FMA).
+#[inline]
+pub fn scalar(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (a4, b8) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for (r, &av) in a4.iter().enumerate() {
+            let accr = &mut acc[r];
+            for (c, &bv) in b8.iter().enumerate() {
+                accr[c] += av * bv;
+            }
+        }
+    }
+}
+
+/// Shared preamble for the pointer-walk kernels: the common `kc` both
+/// strips cover, bounded defensively by `min` so a caller-side length
+/// mismatch can at worst truncate the walk, never read out of bounds.
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn packed_kc(ap: &[f32], bp: &[f32]) -> usize {
+    let kc = (ap.len() / MR).min(bp.len() / NR);
+    debug_assert_eq!(ap.len(), kc * MR, "packed A strip must be kc*MR");
+    debug_assert_eq!(bp.len(), kc * NR, "packed B strip must be kc*NR");
+    kc
+}
+
+/// # Safety
+/// Caller must ensure the running CPU supports AVX2.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use core::arch::x86_64::*;
+    let kc = packed_kc(ap, bp);
+    // SAFETY: pointer walk stays inside ap (kc*MR) / bp (kc*NR); the
+    // accumulator rows are [f32; 8], exactly one __m256 each.
+    unsafe {
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kc {
+            let bv = _mm256_loadu_ps(b);
+            // mul then add: two roundings, same as the scalar chain
+            c0 = _mm256_add_ps(c0, _mm256_mul_ps(_mm256_set1_ps(*a), bv));
+            c1 = _mm256_add_ps(c1, _mm256_mul_ps(_mm256_set1_ps(*a.add(1)), bv));
+            c2 = _mm256_add_ps(c2, _mm256_mul_ps(_mm256_set1_ps(*a.add(2)), bv));
+            c3 = _mm256_add_ps(c3, _mm256_mul_ps(_mm256_set1_ps(*a.add(3)), bv));
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+}
+
+/// # Safety
+/// Caller must ensure the running CPU supports AVX2 **and** FMA.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn avx2_fma(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use core::arch::x86_64::*;
+    let kc = packed_kc(ap, bp);
+    // SAFETY: same bounds argument as `avx2`.
+    unsafe {
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kc {
+            let bv = _mm256_loadu_ps(b);
+            // fused multiply-add: one rounding per step — relaxed parity
+            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), bv, c0);
+            c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), bv, c1);
+            c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), bv, c2);
+            c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), bv, c3);
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+}
+
+/// # Safety
+/// NEON is a baseline aarch64 feature; callers only need a standard
+/// aarch64 target (the `target_feature` attribute keeps that explicit).
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[target_feature(enable = "neon")]
+unsafe fn neon(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use core::arch::aarch64::*;
+    let kc = packed_kc(ap, bp);
+    // SAFETY: pointer walk stays inside ap (kc*MR) / bp (kc*NR); each
+    // accumulator row is [f32; 8] = two float32x4_t halves.
+    unsafe {
+        let mut c0l = vld1q_f32(acc[0].as_ptr());
+        let mut c0h = vld1q_f32(acc[0].as_ptr().add(4));
+        let mut c1l = vld1q_f32(acc[1].as_ptr());
+        let mut c1h = vld1q_f32(acc[1].as_ptr().add(4));
+        let mut c2l = vld1q_f32(acc[2].as_ptr());
+        let mut c2h = vld1q_f32(acc[2].as_ptr().add(4));
+        let mut c3l = vld1q_f32(acc[3].as_ptr());
+        let mut c3h = vld1q_f32(acc[3].as_ptr().add(4));
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kc {
+            let bl = vld1q_f32(b);
+            let bh = vld1q_f32(b.add(4));
+            let a0 = vdupq_n_f32(*a);
+            c0l = vaddq_f32(c0l, vmulq_f32(a0, bl));
+            c0h = vaddq_f32(c0h, vmulq_f32(a0, bh));
+            let a1 = vdupq_n_f32(*a.add(1));
+            c1l = vaddq_f32(c1l, vmulq_f32(a1, bl));
+            c1h = vaddq_f32(c1h, vmulq_f32(a1, bh));
+            let a2 = vdupq_n_f32(*a.add(2));
+            c2l = vaddq_f32(c2l, vmulq_f32(a2, bl));
+            c2h = vaddq_f32(c2h, vmulq_f32(a2, bh));
+            let a3 = vdupq_n_f32(*a.add(3));
+            c3l = vaddq_f32(c3l, vmulq_f32(a3, bl));
+            c3h = vaddq_f32(c3h, vmulq_f32(a3, bh));
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        vst1q_f32(acc[0].as_mut_ptr(), c0l);
+        vst1q_f32(acc[0].as_mut_ptr().add(4), c0h);
+        vst1q_f32(acc[1].as_mut_ptr(), c1l);
+        vst1q_f32(acc[1].as_mut_ptr().add(4), c1h);
+        vst1q_f32(acc[2].as_mut_ptr(), c2l);
+        vst1q_f32(acc[2].as_mut_ptr().add(4), c2h);
+        vst1q_f32(acc[3].as_mut_ptr(), c3l);
+        vst1q_f32(acc[3].as_mut_ptr().add(4), c3h);
+    }
+}
+
+/// # Safety
+/// Same as [`neon`].
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[target_feature(enable = "neon")]
+unsafe fn neon_fma(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use core::arch::aarch64::*;
+    let kc = packed_kc(ap, bp);
+    // SAFETY: same bounds argument as `neon`.
+    unsafe {
+        let mut c0l = vld1q_f32(acc[0].as_ptr());
+        let mut c0h = vld1q_f32(acc[0].as_ptr().add(4));
+        let mut c1l = vld1q_f32(acc[1].as_ptr());
+        let mut c1h = vld1q_f32(acc[1].as_ptr().add(4));
+        let mut c2l = vld1q_f32(acc[2].as_ptr());
+        let mut c2h = vld1q_f32(acc[2].as_ptr().add(4));
+        let mut c3l = vld1q_f32(acc[3].as_ptr());
+        let mut c3h = vld1q_f32(acc[3].as_ptr().add(4));
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kc {
+            let bl = vld1q_f32(b);
+            let bh = vld1q_f32(b.add(4));
+            let a0 = vdupq_n_f32(*a);
+            c0l = vfmaq_f32(c0l, a0, bl);
+            c0h = vfmaq_f32(c0h, a0, bh);
+            let a1 = vdupq_n_f32(*a.add(1));
+            c1l = vfmaq_f32(c1l, a1, bl);
+            c1h = vfmaq_f32(c1h, a1, bh);
+            let a2 = vdupq_n_f32(*a.add(2));
+            c2l = vfmaq_f32(c2l, a2, bl);
+            c2h = vfmaq_f32(c2h, a2, bh);
+            let a3 = vdupq_n_f32(*a.add(3));
+            c3l = vfmaq_f32(c3l, a3, bl);
+            c3h = vfmaq_f32(c3h, a3, bh);
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        vst1q_f32(acc[0].as_mut_ptr(), c0l);
+        vst1q_f32(acc[0].as_mut_ptr().add(4), c0h);
+        vst1q_f32(acc[1].as_mut_ptr(), c1l);
+        vst1q_f32(acc[1].as_mut_ptr().add(4), c1h);
+        vst1q_f32(acc[2].as_mut_ptr(), c2l);
+        vst1q_f32(acc[2].as_mut_ptr().add(4), c2h);
+        vst1q_f32(acc[3].as_mut_ptr(), c3l);
+        vst1q_f32(acc[3].as_mut_ptr().add(4), c3h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic packed strips covering `kc` steps, values mixed in
+    /// sign and magnitude so rounding differences would show.
+    fn strips(kc: usize) -> (Vec<f32>, Vec<f32>) {
+        let ap: Vec<f32> = (0..kc * MR).map(|i| ((i % 23) as f32 - 11.0) * 0.173).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| ((i % 19) as f32 - 9.0) * 0.291).collect();
+        (ap, bp)
+    }
+
+    fn seeded_acc() -> [[f32; NR]; MR] {
+        let mut acc = [[0.0f32; NR]; MR];
+        for (r, row) in acc.iter_mut().enumerate() {
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = (r as f32 - 1.5) * 0.25 + c as f32 * 0.0625;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_first() {
+        let avail = MicroKernel::available();
+        assert_eq!(avail[0], MicroKernel::Scalar);
+        assert!(MicroKernel::Scalar.bit_identical());
+    }
+
+    #[test]
+    fn exact_kernels_bit_match_the_scalar_reference() {
+        // spans a full KC panel and odd remainders
+        for kc in [0usize, 1, 3, 37, 256] {
+            let (ap, bp) = strips(kc);
+            let mut want = seeded_acc();
+            scalar(&ap, &bp, &mut want);
+            for mk in MicroKernel::available() {
+                if !mk.bit_identical() {
+                    continue;
+                }
+                let mut got = seeded_acc();
+                mk.run(&ap, &bp, &mut got);
+                for r in 0..MR {
+                    for c in 0..NR {
+                        assert_eq!(
+                            got[r][c].to_bits(),
+                            want[r][c].to_bits(),
+                            "{} kc={kc} acc[{r}][{c}]: {} vs {}",
+                            mk.name(),
+                            got[r][c],
+                            want[r][c]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fma_kernels_are_deterministic_and_close_to_scalar() {
+        for mk in MicroKernel::available() {
+            if mk.bit_identical() {
+                continue;
+            }
+            let (ap, bp) = strips(256);
+            let mut want = seeded_acc();
+            scalar(&ap, &bp, &mut want);
+            let mut got1 = seeded_acc();
+            mk.run(&ap, &bp, &mut got1);
+            let mut got2 = seeded_acc();
+            mk.run(&ap, &bp, &mut got2);
+            for r in 0..MR {
+                for c in 0..NR {
+                    // run-to-run determinism is exact even in relaxed mode
+                    assert_eq!(got1[r][c].to_bits(), got2[r][c].to_bits(), "{}", mk.name());
+                    // and the value stays within FMA-vs-two-roundings slack
+                    let rel = (got1[r][c] - want[r][c]).abs() / want[r][c].abs().max(1.0);
+                    assert!(rel < 1e-5, "{} acc[{r}][{c}] rel err {rel}", mk.name());
+                }
+            }
+        }
+    }
+}

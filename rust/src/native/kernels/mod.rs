@@ -23,6 +23,8 @@
 //! `*_serial` variants stay public as the single-thread reference for
 //! the parity tests.
 
+pub mod micro;
+
 /// Contractions below this many multiply-accumulates run serially — the
 /// pool dispatch (a queue push + wakeup per chunk) costs a few µs.
 const PAR_MIN_MACS: usize = 64 * 1024;
@@ -111,8 +113,10 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
     rayon::scope(|s| {
         for (ci, oc) in out.chunks_mut(rows * n).enumerate() {
             s.spawn(move |_| {
-                debug_assert!(chunk_rows(oc.len(), n) > 0);
-                matmul_at_b_range(a, b, m, k, n, ci * rows, oc);
+                // row count comes from the shared partition helper — the
+                // remainder policy (and its asserts) live there, not here
+                let jr = chunk_rows(oc.len(), n);
+                matmul_at_b_range(a, b, m, k, n, ci * rows, jr, oc);
             });
         }
     });
@@ -120,10 +124,14 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
 
 /// Single-thread `matmul_at_b`.
 pub fn matmul_at_b_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    matmul_at_b_range(a, b, m, k, n, 0, out);
+    if n == 0 {
+        return;
+    }
+    matmul_at_b_range(a, b, m, k, n, 0, chunk_rows(out.len(), n), out);
 }
 
-/// The rows [j0, j0 + out.len()/n) of the aᵀ·b product.
+/// The rows [j0, j0 + jr) of the aᵀ·b product. `jr` must come from
+/// [`chunk_rows`], which owns the flat-slice → row-count derivation.
 #[allow(clippy::too_many_arguments)]
 fn matmul_at_b_range(
     a: &[f32],
@@ -132,12 +140,11 @@ fn matmul_at_b_range(
     k: usize,
     n: usize,
     j0: usize,
+    jr: usize,
     out: &mut [f32],
 ) {
-    if n == 0 {
-        return;
-    }
-    let jr = out.len() / n;
+    debug_assert_eq!(out.len(), jr * n);
+    debug_assert!(j0 + jr <= k, "row range must stay inside the k output rows");
     out.fill(0.0);
     for i in 0..m {
         let arow = &a[i * k + j0..i * k + j0 + jr];
@@ -351,6 +358,42 @@ mod tests {
         matmul_a_bt(&a, &b3, m, k, n, &mut par);
         matmul_a_bt_serial(&a, &b3, m, k, n, &mut ser);
         assert!(par.iter().zip(&ser).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn chunk_row_helpers_handle_degenerate_shapes() {
+        // a whole single-row chunk (the m=1 case): one row, full width
+        assert_eq!(chunk_rows(7, 7), 1);
+        assert_eq!(chunk_rows_with_a(7, 7, 3, 3), 1);
+        // k=1: each output row pairs with exactly one `a` element
+        assert_eq!(chunk_rows_with_a(4, 2, 2, 1), 2);
+        // empty chunk (k=0 contractions produce zero-length outputs)
+        assert_eq!(chunk_rows(0, 5), 0);
+    }
+
+    #[test]
+    fn matmuls_handle_m1_and_k1_degenerate_shapes() {
+        // m=1: a single output row in every orientation
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3x2
+        let mut out = [0.0f32; 2];
+        matmul(&a, &b, 1, 3, 2, &mut out);
+        assert_eq!(out, [4.0, 5.0]);
+        // a_bt, m=1: [1,2] @ [[1,2],[3,4]]ᵀ = [5, 11]
+        let bt = [1.0f32, 2.0, 3.0, 4.0]; // [n=2, k=2]
+        let mut out = [0.0f32; 2];
+        matmul_a_bt(&[1.0, 2.0], &bt, 1, 2, 2, &mut out);
+        assert_eq!(out, [5.0, 11.0]);
+
+        // k=1: rank-1 product, one `a` element per output row
+        let mut out = [0.0f32; 6];
+        matmul(&[1.0, 2.0], &[5.0, 6.0, 7.0], 2, 1, 3, &mut out);
+        assert_eq!(out, [5.0, 6.0, 7.0, 10.0, 12.0, 14.0]);
+        // at_b, k=1: out is the single row aᵀ·b = Σᵢ aᵢ·bᵢ
+        let b2 = [1.0f32, 2.0, 3.0, 4.0]; // [m=2, n=2]
+        let mut out = [0.0f32; 2];
+        matmul_at_b(&[2.0, 3.0], &b2, 2, 1, 2, &mut out);
+        assert_eq!(out, [11.0, 16.0]);
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //! bare Q_A/Q_E site, e.g. logreg's `"logits"`).
 //!
 //! Bit-compatibility notes: a `Dense` GEMM runs on the blocked engine
-//! with the bias fused ([`gemm::matmul_into_quant`]); Q_A/Q_E at the
-//! sites apply as a separate positional-counter pass, which the GEMM
-//! parity tests pin bit-identical to the fused epilogue the old
-//! monolith used on the dense models.
+//! with the bias fused ([`gemm::matmul_into_quant`]); in train mode
+//! Q_A/Q_E at the sites apply as a separate positional-counter pass,
+//! which the GEMM parity tests pin bit-identical to the fused epilogue.
+//! In eval mode the graph-construction peephole ([`super::fuse`])
+//! re-fuses `Dense → Relu/QuantSite` into one epilogue pass.
 
 use anyhow::{bail, Result};
 
@@ -14,8 +15,9 @@ use crate::quant::{self, spec::Role};
 use crate::rng::StreamRng;
 use crate::tensor::{NamedTensors, Tensor};
 
-use super::super::gemm::{self, Epilogue};
+use super::super::gemm::{self, Epilogue, FusedQuant};
 use super::super::kernels;
+use super::fuse::{FuseTail, GemmLayer};
 use super::{col_sums, expect_flat, idx_of, Act, LayerCache, LayerCtx, QLayer, Tape};
 
 /// Fully connected layer `z = x·W (+ b)`.
@@ -133,6 +135,10 @@ impl QLayer for Dense {
         self.l2 != 0.0
     }
 
+    fn as_gemm(&self) -> Option<&dyn GemmLayer> {
+        Some(self)
+    }
+
     fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
         expect_flat(&act, self.d_in, &self.w_name)?;
         let w = cx.tr.at(self.w_idx, &self.w_name)?;
@@ -193,6 +199,36 @@ impl QLayer for Dense {
     }
 }
 
+impl GemmLayer for Dense {
+    fn forward_fused(&self, cx: &LayerCtx, act: Act, tail: &FuseTail) -> Result<Act> {
+        expect_flat(&act, self.d_in, &self.w_name)?;
+        let w = cx.tr.at(self.w_idx, &self.w_name)?;
+        let bias_t = if self.bias { Some(cx.tr.at(self.b_idx, &self.b_name)?) } else { None };
+        let mut z = vec![0.0f32; act.b * self.d_out];
+        gemm::matmul_into_quant(
+            &act.data,
+            &w.data,
+            act.b,
+            self.d_in,
+            self.d_out,
+            &mut z,
+            &Epilogue {
+                bias: bias_t.map(|t| t.data.as_slice()),
+                relu: tail.relu,
+                // same Q_A seed the standalone tail derives; rng_base 0
+                // mirrors its whole-buffer positional counters
+                quant: Some(FusedQuant {
+                    fmt: cx.q.a_fmt,
+                    seed: cx.q.act_seed(&tail.site),
+                    rng_base: 0,
+                }),
+                b_cache: cx.q.panel_cache,
+            },
+        );
+        Ok(Act::flat(act.b, self.d_out, z))
+    }
+}
+
 /// ReLU followed by the named Q_A (forward) / Q_E (backward) site.
 pub struct Relu {
     site: String,
@@ -205,6 +241,10 @@ impl Relu {
 }
 
 impl QLayer for Relu {
+    fn fuse_tail(&self) -> Option<FuseTail> {
+        Some(FuseTail { relu: true, site: self.site.clone() })
+    }
+
     fn forward(&self, cx: &LayerCtx, mut act: Act, tape: &mut Tape) -> Result<Act> {
         let pre = if cx.q.train() { act.data.clone() } else { Vec::new() };
         kernels::relu(&mut act.data);
@@ -264,6 +304,10 @@ impl QuantSite {
 }
 
 impl QLayer for QuantSite {
+    fn fuse_tail(&self) -> Option<FuseTail> {
+        Some(FuseTail { relu: false, site: self.site.clone() })
+    }
+
     fn forward(&self, cx: &LayerCtx, mut act: Act, tape: &mut Tape) -> Result<Act> {
         let rows = act.rows();
         act.data = quant::apply_format_owned(

@@ -1,0 +1,279 @@
+//! The eval-mode epilogue-fusion peephole: `Dense`/`Conv` followed
+//! immediately by `Relu`/`QuantSite` collapses into one [`FusedPair`]
+//! whose eval forward runs the ReLU and the Q_A quantizer inside the
+//! GEMM epilogue ([`Epilogue`](super::super::gemm::Epilogue)) instead of
+//! as a second full-tensor pass.
+//!
+//! The old model monolith hard-coded exactly this fusion for the dense
+//! models; the PR-5 graph refactor lost it because every layer became an
+//! independent node. The peephole restores it *structurally*: graph
+//! construction ([`super::graph::GraphModel::new`] and the
+//! [`super::Residual`] branch constructors) rewrites `[.., gemm, tail, ..]` into
+//! `[.., FusedPair(gemm, tail), ..]` for every model declared as data.
+//!
+//! **Bit-compatibility.** Fusion changes *where* the epilogue runs, not
+//! what it computes:
+//!
+//! * The fused quantizer seed is `cx.q.act_seed(site)` — the same
+//!   `(step, site_id, TAG_A)` derivation the standalone tail layer uses,
+//!   so seed streams are unchanged.
+//! * Counters are position-keyed (`rng_base 0` + flat index), and the
+//!   GEMM output shape `[rows, n]` is exactly the `[rows, ch]` shape the
+//!   tail would quantize — fixed point elementwise, Small-block BFP one
+//!   exponent per row, Big-block BFP one whole-tensor pass.
+//! * `rust/tests/gemm_parity.rs` pins fused == separate bitwise per
+//!   format, and `rust/tests/report_fingerprints.rs` proves all
+//!   registered experiment fingerprints are identical with the peephole
+//!   disabled (`SWALP_NO_FUSE=1`).
+//!
+//! **Train mode is never fused.** The backward pass needs the GEMM
+//! output (the ReLU pre-activation) on the tape, so a fused pair in
+//! train mode simply runs its two layers unfused into a nested
+//! [`LayerCache::Pair`] — the training step's bits are untouched by
+//! construction, and the fused path only has to match the eval forward.
+//!
+//! Set `SWALP_NO_FUSE` (any value) to disable the peephole — the A/B
+//! switch the fingerprint tests use.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::rng::StreamRng;
+use crate::tensor::NamedTensors;
+
+use super::{Act, LayerCache, LayerCtx, Params, QLayer, Tape};
+
+/// What a fusable tail layer contributes to the GEMM epilogue: an
+/// optional ReLU and the named Q_A site (the Q_E side only exists in
+/// train mode, which never fuses).
+pub struct FuseTail {
+    /// Apply `max(x, 0)` before the quantizer ([`super::Relu`]); `false`
+    /// for a bare [`super::QuantSite`].
+    pub relu: bool,
+    /// The Q_A site name — seed derivation identical to the standalone
+    /// tail layer.
+    pub site: String,
+}
+
+/// A GEMM-backed layer ([`super::Dense`], [`super::Conv`]) that can
+/// absorb a [`FuseTail`] into its fused epilogue.
+pub trait GemmLayer {
+    /// Eval-mode forward with the tail folded into the GEMM epilogue.
+    /// Must produce bit-identically what `self.forward` followed by the
+    /// tail layer's forward produces (the
+    /// [`Epilogue`](super::super::gemm::Epilogue) contract, pinned by
+    /// the parity suites).
+    fn forward_fused(&self, cx: &LayerCtx, act: Act, tail: &FuseTail) -> Result<Act>;
+}
+
+/// A `gemm → tail` pair rewritten by the peephole. In eval modes the
+/// forward runs [`GemmLayer::forward_fused`]; in train mode both layers
+/// run unfused (nested caches under [`LayerCache::Pair`]), so backward
+/// and every training bit stay identical to the unfused graph.
+pub struct FusedPair {
+    gemm: Box<dyn QLayer>,
+    tail_layer: Box<dyn QLayer>,
+    tail: FuseTail,
+}
+
+impl QLayer for FusedPair {
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        self.gemm.param_specs(out);
+        self.tail_layer.param_specs(out);
+    }
+
+    fn state_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        self.gemm.state_specs(out);
+        self.tail_layer.state_specs(out);
+    }
+
+    fn init(&self, rng: &mut StreamRng, out: &mut NamedTensors) {
+        self.gemm.init(rng, out);
+        self.tail_layer.init(rng, out);
+    }
+
+    fn init_state(&self, out: &mut NamedTensors) {
+        self.gemm.init_state(out);
+        self.tail_layer.init_state(out);
+    }
+
+    fn resolve(&mut self, tr_names: &[String], state_names: &[String]) {
+        self.gemm.resolve(tr_names, state_names);
+        self.tail_layer.resolve(tr_names, state_names);
+    }
+
+    fn reg_loss(&self, tr: &Params) -> Result<Option<f64>> {
+        let mut sum: Option<f64> = None;
+        for l in [&self.gemm, &self.tail_layer] {
+            if let Some(r) = l.reg_loss(tr)? {
+                sum = Some(sum.unwrap_or(0.0) + r);
+            }
+        }
+        Ok(sum)
+    }
+
+    fn has_reg(&self) -> bool {
+        self.gemm.has_reg() || self.tail_layer.has_reg()
+    }
+
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        if cx.q.train() {
+            // unfused: backward needs the pre-activation on the tape
+            let mut sub = Tape::default();
+            let mid = self.gemm.forward(cx, act, &mut sub)?;
+            let out = self.tail_layer.forward(cx, mid, &mut sub)?;
+            tape.state_updates.append(&mut sub.state_updates);
+            tape.caches.push(LayerCache::Pair(sub.caches));
+            Ok(out)
+        } else {
+            let g = self
+                .gemm
+                .as_gemm()
+                .ok_or_else(|| anyhow!("fused pair head lost its GemmLayer impl"))?;
+            g.forward_fused(cx, act, &self.tail)
+        }
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Pair(mut caches) = cache else {
+            bail!("fused {}: forward/backward cache mismatch", self.tail.site);
+        };
+        let tail_cache =
+            caches.pop().ok_or_else(|| anyhow!("fused {}: cache underrun", self.tail.site))?;
+        let gemm_cache =
+            caches.pop().ok_or_else(|| anyhow!("fused {}: cache underrun", self.tail.site))?;
+        if !caches.is_empty() {
+            bail!("fused {}: cache overrun", self.tail.site);
+        }
+        let d = self.tail_layer.backward(cx, d, tail_cache, grads, true)?;
+        self.gemm.backward(cx, d, gemm_cache, grads, need_dx)
+    }
+}
+
+/// The peephole itself: rewrite every `gemm, tail` adjacency in a layer
+/// stack into a [`FusedPair`]. Pairs never chain (a pair is neither a
+/// GEMM head nor a tail), and `SWALP_NO_FUSE` (any value) returns the
+/// stack untouched. Called by graph construction — models declared as
+/// data get the fusion without opting in.
+pub fn fuse_eval_pairs(layers: Vec<Box<dyn QLayer>>) -> Vec<Box<dyn QLayer>> {
+    if std::env::var_os("SWALP_NO_FUSE").is_some() {
+        return layers;
+    }
+    let mut out: Vec<Box<dyn QLayer>> = Vec::with_capacity(layers.len());
+    for l in layers {
+        let tail = if out.last().is_some_and(|p| p.as_gemm().is_some()) {
+            l.fuse_tail()
+        } else {
+            None
+        };
+        match tail {
+            Some(tail) => {
+                let gemm = out.pop().expect("guarded by out.last()");
+                out.push(Box::new(FusedPair { gemm, tail_layer: l, tail }));
+            }
+            None => out.push(l),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex;
+
+    use super::super::{Dense, GraphModel, Head, InputKind, Mode, QCtx, Relu};
+    use super::*;
+    use crate::quant::QuantFormat;
+    use crate::rng::StreamRng;
+
+    /// Serializes the tests that flip `SWALP_NO_FUSE` process-wide. A
+    /// concurrent `GraphModel::new` elsewhere seeing the variable is
+    /// harmless (fused == unfused is the whole contract) but the A/B
+    /// tests here must not race each other's set/remove.
+    static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+    fn stack() -> Vec<Box<dyn QLayer>> {
+        vec![
+            Box::new(Dense::he("fc1", 8, 16)),
+            Box::new(Relu::site("fc1.act")),
+            Box::new(Dense::he("fc2", 16, 3)),
+        ]
+    }
+
+    fn graph(layers: Vec<Box<dyn QLayer>>) -> GraphModel {
+        GraphModel::new(InputKind::Flat { d: 8 }, Head::SoftmaxCe { classes: 3 }, layers)
+    }
+
+    /// (peephole-disabled, peephole-fused) graphs built under one lock
+    /// so the env flip cannot leak into the fused construction.
+    fn ab_graphs() -> (GraphModel, GraphModel) {
+        let _guard = ENV_LOCK.lock().unwrap();
+        std::env::set_var("SWALP_NO_FUSE", "1");
+        let plain = graph(stack());
+        std::env::remove_var("SWALP_NO_FUSE");
+        let fused = graph(stack());
+        (plain, fused)
+    }
+
+    #[test]
+    fn peephole_rewrites_gemm_tail_adjacency() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let fused = fuse_eval_pairs(stack());
+        // Dense+Relu collapse into one pair; the trailing Dense stays
+        assert_eq!(fused.len(), 2);
+        assert!(fused[0].as_gemm().is_none(), "a pair must not chain as a GEMM head");
+        assert!(fused[0].fuse_tail().is_none(), "a pair must not chain as a tail");
+        assert!(fused[1].as_gemm().is_some());
+        // idempotent: re-running the peephole changes nothing
+        assert_eq!(fuse_eval_pairs(fused).len(), 2);
+    }
+
+    #[test]
+    fn fused_eval_forward_bit_matches_unfused() {
+        // same graph, constructor-fused vs peephole-disabled; quantized
+        // eval path (nearest fixed point exercises the fused quantizer)
+        let fmt = QuantFormat::Fixed { wl: 8, fl: 6, stochastic: false };
+        let b = 4;
+        let x: Vec<f32> = (0..b * 8).map(|i| ((i % 17) as f32 - 8.0) * 0.09).collect();
+
+        let (plain, fused) = ab_graphs();
+        let tr = plain.init_params(&mut StreamRng::new(42));
+        let tr2 = fused.init_params(&mut StreamRng::new(42));
+        assert_eq!(tr.len(), tr2.len());
+
+        let none = QuantFormat::None;
+        let q = QCtx::new(&fmt, &none, 3, Mode::Eval);
+        let y = vec![0.0f32; b];
+        let (l1, m1) = plain.eval_batch(&q, &tr, &[], &x, &y, b).unwrap();
+        let (l2, m2) = fused.eval_batch(&q, &tr2, &[], &x, &y, b).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(m1.to_bits(), m2.to_bits());
+    }
+
+    #[test]
+    fn fused_train_grads_bit_match_unfused() {
+        let fmt = QuantFormat::Fixed { wl: 8, fl: 6, stochastic: true };
+        let b = 4;
+        let x: Vec<f32> = (0..b * 8).map(|i| ((i % 13) as f32 - 6.0) * 0.11).collect();
+        let y = vec![0.0f32, 1.0, 2.0, 0.0];
+
+        let (plain, fused) = ab_graphs();
+
+        let tr = plain.init_params(&mut StreamRng::new(7));
+        let q = QCtx::new(&fmt, &fmt, 5, Mode::Train);
+        let g1 = plain.train_grads(&q, &tr, &[], &x, &y, b).unwrap();
+        let g2 = fused.train_grads(&q, &tr, &[], &x, &y, b).unwrap();
+        assert_eq!(g1.loss.to_bits(), g2.loss.to_bits());
+        assert_eq!(g1.grads.len(), g2.grads.len());
+        for ((n1, t1), (n2, t2)) in g1.grads.iter().zip(g2.grads.iter()) {
+            assert_eq!(n1, n2);
+            assert!(t1.data.iter().zip(&t2.data).all(|(a, b)| a.to_bits() == b.to_bits()), "{n1}");
+        }
+    }
+}

@@ -54,10 +54,14 @@ pub struct GraphModel {
 
 impl GraphModel {
     /// Build a model and resolve every layer's parameter indices against
-    /// the sorted name lists. Panics on duplicate parameter/state names
-    /// (two layers aliasing one tensor would silently corrupt training)
-    /// and on an L2 term under the SumSquares head (see below).
-    pub fn new(input: InputKind, head: Head, mut layers: Vec<Box<dyn QLayer>>) -> GraphModel {
+    /// the sorted name lists. Applies the eval-mode epilogue-fusion
+    /// peephole ([`super::fuse::fuse_eval_pairs`]) before resolution, so
+    /// every model declared as data gets fused `Dense/Conv → Relu/QuantSite`
+    /// eval passes. Panics on duplicate parameter/state names (two
+    /// layers aliasing one tensor would silently corrupt training) and
+    /// on an L2 term under the SumSquares head (see below).
+    pub fn new(input: InputKind, head: Head, layers: Vec<Box<dyn QLayer>>) -> GraphModel {
+        let mut layers = super::fuse::fuse_eval_pairs(layers);
         fn sorted_unique_names(specs: Vec<(String, Vec<usize>)>, what: &str) -> Vec<String> {
             let mut names: Vec<String> = specs.into_iter().map(|(n, _)| n).collect();
             names.sort();

@@ -60,11 +60,13 @@
 //! ```
 
 pub mod dense;
+pub mod fuse;
 pub mod graph;
 pub mod norm;
 pub mod spatial;
 
 pub use dense::{Dense, QuantSite, Relu};
+pub use fuse::{FuseTail, FusedPair, GemmLayer};
 pub use graph::{GraphModel, Head, InputKind, TrainGrads};
 pub use norm::BatchNorm2d;
 pub use spatial::{Conv, Flatten, GlobalAvgPool, MaxPool2, Residual};
@@ -195,6 +197,9 @@ pub enum LayerCache {
     Dense { input: Vec<f32> },
     Residual { body: Vec<LayerCache>, proj: Vec<LayerCache> },
     BatchNorm { xhat: Vec<f32>, ivar: Vec<f32> },
+    /// A [`fuse::FusedPair`]'s train-mode container: the two inner
+    /// layers' caches, in forward order (train mode never fuses).
+    Pair(Vec<LayerCache>),
 }
 
 /// What one forward pass records: the backward caches (train mode) and
@@ -294,6 +299,21 @@ pub trait QLayer: Send + Sync {
     /// would be wrong.
     fn has_reg(&self) -> bool {
         false
+    }
+
+    /// Downcast hook for the epilogue-fusion peephole
+    /// ([`fuse::fuse_eval_pairs`]): GEMM-backed layers (`Dense`, `Conv`)
+    /// return themselves so a following tail can fold into their
+    /// epilogue.
+    fn as_gemm(&self) -> Option<&dyn fuse::GemmLayer> {
+        None
+    }
+
+    /// Tail hook for the fusion peephole: layers that are a pure GEMM
+    /// epilogue (`Relu`, `QuantSite`) describe themselves as a
+    /// [`fuse::FuseTail`].
+    fn fuse_tail(&self) -> Option<fuse::FuseTail> {
+        None
     }
 
     fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act>;

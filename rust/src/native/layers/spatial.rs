@@ -14,7 +14,8 @@ use anyhow::{bail, Result};
 use crate::rng::StreamRng;
 use crate::tensor::{NamedTensors, Tensor};
 
-use super::super::gemm::{self, Epilogue};
+use super::super::gemm::{self, Epilogue, FusedQuant};
+use super::fuse::{self, FuseTail, GemmLayer};
 use super::{
     backward_stack, col_sums, forward_stack, idx_of, Act, LayerCache, LayerCtx, QLayer, Tape,
 };
@@ -263,6 +264,10 @@ impl QLayer for Conv {
         self.b_idx = idx_of(tr_names, &self.b_name);
     }
 
+    fn as_gemm(&self) -> Option<&dyn GemmLayer> {
+        Some(self)
+    }
+
     fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
         if act.ch != self.in_ch {
             bail!("{}: input has {} channels, want {}", self.name, act.ch, self.in_ch);
@@ -334,6 +339,45 @@ impl QLayer for Conv {
         gemm::matmul(&d.data, &w.data, rows, self.out_ch, kkc, &mut dcols);
         let dx = col2im(&dcols, d.b, in_h, in_w, self.in_ch, self.k, self.pad);
         Ok(Act { data: dx, b: d.b, h: in_h, w: in_w, ch: self.in_ch })
+    }
+}
+
+impl GemmLayer for Conv {
+    fn forward_fused(&self, cx: &LayerCtx, act: Act, tail: &FuseTail) -> Result<Act> {
+        if act.ch != self.in_ch {
+            bail!("{}: input has {} channels, want {}", self.name, act.ch, self.in_ch);
+        }
+        if self.k > act.h + 2 * self.pad || self.k > act.w + 2 * self.pad {
+            bail!("{}: kernel {} exceeds padded input", self.name, self.k);
+        }
+        let w = cx.tr.at(self.w_idx, &self.w_name)?;
+        let bias = cx.tr.at(self.b_idx, &self.b_name)?;
+        let mut cols = Vec::new();
+        let (rows, kkc) =
+            im2col(&act.data, act.b, act.h, act.w, act.ch, self.k, self.pad, &mut cols);
+        let mut z = vec![0.0f32; rows * self.out_ch];
+        gemm::matmul_a_bt_into_quant(
+            &cols,
+            &w.data,
+            rows,
+            kkc,
+            self.out_ch,
+            &mut z,
+            &Epilogue {
+                bias: Some(&bias.data),
+                relu: tail.relu,
+                // the tail site's Q_A, whole-buffer positional counters
+                quant: Some(FusedQuant {
+                    fmt: cx.q.a_fmt,
+                    seed: cx.q.act_seed(&tail.site),
+                    rng_base: 0,
+                }),
+                b_cache: cx.q.panel_cache,
+            },
+        );
+        let oh = act.h + 2 * self.pad + 1 - self.k;
+        let ow = act.w + 2 * self.pad + 1 - self.k;
+        Ok(Act { data: z, b: act.b, h: oh, w: ow, ch: self.out_ch })
     }
 }
 
@@ -456,14 +500,15 @@ pub struct Residual {
 }
 
 impl Residual {
-    /// Identity skip.
+    /// Identity skip. Branch stacks get the same epilogue-fusion
+    /// peephole the top-level graph gets ([`fuse::fuse_eval_pairs`]).
     pub fn new(body: Vec<Box<dyn QLayer>>) -> Residual {
-        Residual { body, proj: Vec::new() }
+        Residual { body: fuse::fuse_eval_pairs(body), proj: Vec::new() }
     }
 
     /// Projection skip (downsampling / channel-change blocks).
     pub fn with_proj(body: Vec<Box<dyn QLayer>>, proj: Vec<Box<dyn QLayer>>) -> Residual {
-        Residual { body, proj }
+        Residual { body: fuse::fuse_eval_pairs(body), proj: fuse::fuse_eval_pairs(proj) }
     }
 }
 

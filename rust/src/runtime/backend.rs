@@ -94,6 +94,26 @@ pub trait ModelBackend: Send + Sync {
         step: u64,
     ) -> Result<f64>;
 
+    /// [`Self::train_step`] with a caller-owned run-long [`EvalCache`]:
+    /// backends that pack weight GEMM panels reuse any panels already
+    /// packed from the **current** weight values (e.g. by an eval set
+    /// that just ran over them) and invalidate the cache after the
+    /// in-place weight update, so stale panels are impossible. The
+    /// default forwards to the uncached step; bit-identity between the
+    /// two entries is part of the contract.
+    fn train_step_cached(
+        &self,
+        cache: &EvalCache,
+        ms: &mut ModelState,
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Result<f64> {
+        let _ = cache;
+        self.train_step(ms, x, y, lr, step)
+    }
+
     /// Evaluate one batch: mean loss, error count / sq-err sum, and (for
     /// models that expose it) the squared gradient norm of the
     /// full-precision objective at this iterate.

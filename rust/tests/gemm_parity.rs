@@ -5,6 +5,14 @@
 //! the f32 accumulation order is part of the contract — tiling may only
 //! reorder work across elements, never within one.
 //!
+//! The sweep runs once against the production dispatch and once per
+//! explicitly pinned bit-identical micro-kernel (scalar always; AVX2 /
+//! NEON under `--features simd` — the CI matrix builds both legs, so
+//! the sweep effectively runs with the feature on and off). The FMA
+//! kernels are *relaxed parity*: deterministic and tolerance-checked
+//! here, pinned end-to-end by the report fingerprints instead of
+//! bitwise GEMM parity (docs/PERF.md § "SIMD micro-kernels").
+//!
 //! `RAYON_NUM_THREADS` is read once per process, so the pinned-count
 //! sweep re-runs the same assertions in subprocesses at 1, 2 and 8
 //! threads. The naive serial reference is single-threaded and therefore
@@ -37,8 +45,9 @@ fn assert_bits(got: &[f32], want: &[f32], what: &str, m: usize, k: usize, n: usi
     }
 }
 
-#[test]
-fn blocked_matmuls_bit_match_naive_across_shapes() {
+/// The full m,k,n sweep against the naive serial reference, for one
+/// pinned engine. `what` tags failures with the kernel under test.
+fn sweep_blocked_vs_naive(e: gemm::Engine, what: &str) {
     for &m in &DIMS {
         for &k in &DIMS {
             for &n in &DIMS {
@@ -50,34 +59,90 @@ fn blocked_matmuls_bit_match_naive_across_shapes() {
                 let mut want = vec![0.0f32; m * n];
                 kernels::matmul_serial(&a, &b, m, k, n, &mut want);
                 let mut got = vec![0.0f32; m * n];
-                gemm::matmul(&a, &b, m, k, n, &mut got);
-                assert_bits(&got, &want, "matmul", m, k, n);
+                e.matmul(&a, &b, m, k, n, &mut got);
+                assert_bits(&got, &want, &format!("{what} matmul"), m, k, n);
                 let mut got = vec![0.0f32; m * n];
-                gemm::matmul_serial(&a, &b, m, k, n, &mut got);
-                assert_bits(&got, &want, "matmul_serial", m, k, n);
+                e.matmul_serial(&a, &b, m, k, n, &mut got);
+                assert_bits(&got, &want, &format!("{what} matmul_serial"), m, k, n);
 
                 // Aᵀ·B: a is [m,k], b2 is [m,n] -> out [k,n]
                 let b2 = mat(&mut rng, m * n);
                 let mut want = vec![0.0f32; k * n];
                 kernels::matmul_at_b_serial(&a, &b2, m, k, n, &mut want);
                 let mut got = vec![0.0f32; k * n];
-                gemm::matmul_at_b(&a, &b2, m, k, n, &mut got);
-                assert_bits(&got, &want, "matmul_at_b", m, k, n);
+                e.matmul_at_b(&a, &b2, m, k, n, &mut got);
+                assert_bits(&got, &want, &format!("{what} matmul_at_b"), m, k, n);
                 let mut got = vec![0.0f32; k * n];
-                gemm::matmul_at_b_serial(&a, &b2, m, k, n, &mut got);
-                assert_bits(&got, &want, "matmul_at_b_serial", m, k, n);
+                e.matmul_at_b_serial(&a, &b2, m, k, n, &mut got);
+                assert_bits(&got, &want, &format!("{what} matmul_at_b_serial"), m, k, n);
 
                 // A·Bᵀ: b3 is [n,k] -> out [m,n]
                 let b3 = mat(&mut rng, n * k);
                 let mut want = vec![0.0f32; m * n];
                 kernels::matmul_a_bt_serial(&a, &b3, m, k, n, &mut want);
                 let mut got = vec![0.0f32; m * n];
-                gemm::matmul_a_bt(&a, &b3, m, k, n, &mut got);
-                assert_bits(&got, &want, "matmul_a_bt", m, k, n);
+                e.matmul_a_bt(&a, &b3, m, k, n, &mut got);
+                assert_bits(&got, &want, &format!("{what} matmul_a_bt"), m, k, n);
                 let mut got = vec![0.0f32; m * n];
-                gemm::matmul_a_bt_serial(&a, &b3, m, k, n, &mut got);
-                assert_bits(&got, &want, "matmul_a_bt_serial", m, k, n);
+                e.matmul_a_bt_serial(&a, &b3, m, k, n, &mut got);
+                assert_bits(&got, &want, &format!("{what} matmul_a_bt_serial"), m, k, n);
             }
+        }
+    }
+}
+
+#[test]
+fn blocked_matmuls_bit_match_naive_across_shapes() {
+    // the production dispatch — whatever the build/host/SWALP_GEMM_KERNEL
+    // picked (the free fns all forward to this engine)
+    sweep_blocked_vs_naive(gemm::Engine::dispatched(), "dispatched");
+}
+
+#[test]
+fn every_exact_kernel_bit_matches_naive_across_shapes() {
+    // each bit-identical kernel pinned explicitly: scalar always, plus
+    // AVX2/NEON when `--features simd` compiled them in and the host has
+    // them. The relaxed-parity FMA kernels are tested separately below.
+    for mk in gemm::MicroKernel::available() {
+        if mk.bit_identical() {
+            sweep_blocked_vs_naive(gemm::Engine::with_kernel(mk), mk.name());
+        }
+    }
+}
+
+#[test]
+fn fma_kernels_are_deterministic_and_within_tolerance() {
+    // relaxed parity (docs/PERF.md): FMA contracts mul+add to one
+    // rounding, so bitwise GEMM parity with the scalar chain is off the
+    // table — what remains pinned is run-to-run and serial-vs-pooled
+    // determinism, plus closeness to the exact result
+    for mk in gemm::MicroKernel::available() {
+        if mk.bit_identical() {
+            continue;
+        }
+        let e = gemm::Engine::with_kernel(mk);
+        // above the naive-fallback threshold, with edge tiles
+        let (m, k, n) = (150usize, 300usize, 130usize);
+        let mut rng = StreamRng::new(0xFA);
+        let a = mat(&mut rng, m * k);
+        let b = mat(&mut rng, k * n);
+        let mut x1 = vec![0.0f32; m * n];
+        e.matmul(&a, &b, m, k, n, &mut x1);
+        let mut x2 = vec![0.0f32; m * n];
+        e.matmul(&a, &b, m, k, n, &mut x2);
+        assert_bits(&x1, &x2, &format!("{} run-to-run", mk.name()), m, k, n);
+        let mut xs = vec![0.0f32; m * n];
+        e.matmul_serial(&a, &b, m, k, n, &mut xs);
+        assert_bits(&x1, &xs, &format!("{} pooled-vs-serial", mk.name()), m, k, n);
+        let mut want = vec![0.0f32; m * n];
+        kernels::matmul_serial(&a, &b, m, k, n, &mut want);
+        for (i, (g, w)) in x1.iter().zip(&want).enumerate() {
+            let denom = w.abs().max(1.0);
+            assert!(
+                (g - w).abs() / denom < 1e-4,
+                "{} elem {i}: {g} vs exact {w}",
+                mk.name()
+            );
         }
     }
 }
@@ -164,6 +229,7 @@ fn parity_holds_at_pinned_thread_counts() {
         let out = Command::new(&exe)
             .args([
                 "blocked_matmuls_bit_match_naive_across_shapes",
+                "every_exact_kernel_bit_matches_naive_across_shapes",
                 "fused_epilogue_bit_matches_separate_pipeline",
                 "--exact",
                 "--test-threads",

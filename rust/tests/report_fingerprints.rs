@@ -8,7 +8,10 @@
 //!   per count), and
 //! * against the committed goldens in
 //!   `tests/data/golden_report_fingerprints.json`, which pin the
-//!   pre-refactor numerical behavior of every registered experiment.
+//!   pre-refactor numerical behavior of every registered experiment, and
+//! * between fused and unfused graph construction (the epilogue-fusion
+//!   peephole; subprocess under `SWALP_NO_FUSE=1`, all ten experiments
+//!   including prn20).
 //!
 //! Golden management: if the golden file is absent the test writes it
 //! (bootstrap) and reports that it did; regenerate deliberately with
@@ -41,6 +44,28 @@ const PINNED: [&str; 9] = [
     "fig3-precision",
     "thm3",
 ];
+
+/// Every registered experiment: the nine pinned ids plus the
+/// PreResNet-20 grid added after the goldens were cut. The fusion A/B
+/// test runs the full set so each model family (dense, conv, BatchNorm,
+/// residual) is pinned against the epilogue-fusion peephole.
+fn all_ids() -> Vec<&'static str> {
+    PINNED.iter().copied().chain(std::iter::once("prn20")).collect()
+}
+
+/// Smoke-tier fingerprints for an explicit id list, through ONE
+/// `run_many` work list (the production path).
+fn fingerprints_of(ids: &[&str]) -> Vec<(String, String)> {
+    let ctx = CtxConfig::new().smoke(true).build().unwrap();
+    let specs: Vec<_> =
+        ids.iter().map(|id| registry::find(id).expect("id must stay registered")).collect();
+    Runner::new(&ctx)
+        .run_many(&specs)
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.experiment.clone(), r.fingerprint()))
+        .collect()
+}
 
 /// Smoke-tier fingerprints of every pinned experiment, through ONE
 /// `run_many` work list (the production path).
@@ -180,4 +205,67 @@ fn reports_bit_identical_across_thread_policies_and_goldens() {
             fnv64(fp)
         );
     }
+}
+
+/// The epilogue-fusion peephole (`native::layers::fuse`) must leave
+/// every experiment's report bit-identical: the fused eval forward
+/// derives the same Q_A seed as the separate quantize pass, and
+/// training always runs unfused. The A/B is process-level — the child
+/// rebuilds every graph with the peephole disabled (`SWALP_NO_FUSE=1`,
+/// read once at graph construction) and its fingerprints must hash
+/// equal to this process's fused ones, across all ten experiments.
+#[test]
+fn fusion_peephole_preserves_all_experiment_fingerprints() {
+    let ids = all_ids();
+    if std::env::var_os("SWALP_FP_NOFUSE_CHILD").is_some() {
+        assert!(
+            std::env::var_os("SWALP_NO_FUSE").is_some(),
+            "no-fuse child spawned without SWALP_NO_FUSE"
+        );
+        for (id, fp) in fingerprints_of(&ids) {
+            println!("FP {id} {}", fnv64(&fp));
+        }
+        return;
+    }
+
+    // parent: fused graphs (the default build path)
+    let fused: BTreeMap<String, String> =
+        fingerprints_of(&ids).into_iter().map(|(id, fp)| (id, fnv64(&fp))).collect();
+    assert_eq!(fused.len(), ids.len());
+
+    let exe = std::env::current_exe().expect("test binary path");
+    let out = Command::new(&exe)
+        .args([
+            "fusion_peephole_preserves_all_experiment_fingerprints",
+            "--exact",
+            "--test-threads",
+            "1",
+            "--nocapture",
+        ])
+        .env("SWALP_NO_FUSE", "1")
+        .env("SWALP_FP_NOFUSE_CHILD", "1")
+        .output()
+        .expect("spawn no-fuse child");
+    assert!(
+        out.status.success(),
+        "no-fuse child failed\nstdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let mut seen = 0;
+    for line in stdout.lines() {
+        let mut it = line.split_whitespace();
+        if it.next() != Some("FP") {
+            continue;
+        }
+        let (id, hash) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+        let expect = fused.get(id).unwrap_or_else(|| panic!("unknown id {id:?} from child"));
+        assert_eq!(
+            expect, hash,
+            "{id}: unfused (SWALP_NO_FUSE=1) report differs from the fused parent's"
+        );
+        seen += 1;
+    }
+    assert_eq!(seen, ids.len(), "no-fuse child reported {seen} of {} ids", ids.len());
 }
