@@ -1,9 +1,11 @@
 #!/usr/bin/env python3
-"""Render the gemm/* entries of a swalp-bench-v1 JSON as a markdown table.
+"""Render the gemm/* and infer/* entries of a swalp-bench-v1 JSON as
+markdown tables.
 
 CI's bench-smoke job pipes the output into $GITHUB_STEP_SUMMARY so the
-GEMM GFLOP/s trend is visible on the run page without downloading the
-BENCH_hotpath.json artifact. Schema: docs/PERF.md.
+GEMM GFLOP/s trend — and the inference batching amplification — are
+visible on the run page without downloading the BENCH_hotpath.json
+artifact. Schema: docs/PERF.md.
 """
 import json
 import sys
@@ -56,7 +58,40 @@ def main(path: str) -> int:
     fused_simd = gflops.get("gemm/fused-simd fixed-W8F6 256^3")
     if fused and fused_simd:
         print(f"\nfused-simd / fused (scalar) speedup on 256^3: **{fused_simd / fused:.1f}x**")
+    infer_section(doc)
     return 0
+
+
+def infer_section(doc) -> None:
+    """Inference-serving rows: per-batch predict throughput plus the full
+    batcher path, with the batch-64 / batch-1 amplification the serving
+    design rides on (bench_perf_hotpath "inference serving" section)."""
+    medians = {}
+    sps = {}
+    order = []
+    for r in doc.get("results", []):
+        name = r.get("name", "")
+        if not name.startswith("infer/"):
+            continue
+        if "median_s" in r:
+            medians[name] = r["median_s"]
+        if r.get("unit") == "samples/s":
+            if name not in order:
+                order.append(name)
+            sps[name] = r["value"]
+    if not order:
+        return
+    print("\n### Inference serving (swalp-infer sessions)\n")
+    print("| bench | samples/s | median ms/iter |")
+    print("|---|---:|---:|")
+    for name in order:
+        med = medians.get(name)
+        med_ms = f"{med * 1e3:.2f}" if med is not None else "—"
+        print(f"| `{name}` | {sps[name]:.0f} | {med_ms} |")
+    b1 = sps.get("infer/predict mlp_qmm_fx86 b=1")
+    b64 = sps.get("infer/predict mlp_qmm_fx86 b=64")
+    if b1 and b64:
+        print(f"\nbatch-64 / batch-1 predict throughput on mlp_qmm_fx86: **{b64 / b1:.1f}x**")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@
 
 use swalp::coordinator::SwaAccumulator;
 use swalp::data;
+use swalp::infer::{BatchOpts, Batcher, InferSession, WeightChoice};
 use swalp::native::{self, gemm, kernels};
 use swalp::quant::{bfp, fixed, QuantFormat};
 use swalp::runtime::ModelBackend;
@@ -228,6 +229,65 @@ fn main() {
             },
         );
         report(&mut log, &r2, "samples/ms", be as f64 / (r2.median_s * 1e3));
+    }
+
+    // ---- inference serving (session over init weights, no disk) ----
+    // `infer/predict ... b=N` is the raw per-call path at increasing
+    // batch size — the panel cache plus row-parallel GEMMs are what the
+    // batch-64 ≥ 3× batch-1 acceptance bar rides on. `infer/batcher` adds
+    // the full request path: queueing, coalescing, deadline dispatch.
+    {
+        let model = native::load("mlp_qmm_fx86").unwrap();
+        let split = data::build(&model.spec().dataset, 3, 0.1).unwrap();
+        let t = &split.test;
+        let ms = model.init(1).unwrap();
+        let session = InferSession::from_parts(
+            Box::new(model),
+            ms.trainable.clone(),
+            ms.state.clone(),
+            WeightChoice::Raw,
+        );
+        let xs: Vec<Vec<f32>> = (0..64).map(|i| t.sample_x(i % t.n).to_vec()).collect();
+        for b in [1usize, 8, 64] {
+            let flat: Vec<f32> = xs.iter().take(b).flatten().copied().collect();
+            let r = bench(
+                &format!("infer/predict mlp_qmm_fx86 b={b}"),
+                warm,
+                iters,
+                secs.min(0.5),
+                || {
+                    session.predict(&flat).unwrap();
+                },
+            );
+            report(&mut log, &r, "samples/s", b as f64 / r.median_s);
+        }
+        let batcher = Batcher::start(session, BatchOpts { max_batch: 64, max_wait_us: 200 });
+        let clients = 4usize;
+        let reqs = if quick { 64usize } else { 256 };
+        let r = bench(
+            &format!("infer/batcher mlp_qmm_fx86 {reqs}req {clients}cli"),
+            warm.min(2),
+            iters.min(5),
+            secs.min(0.5),
+            || {
+                std::thread::scope(|s| {
+                    for c in 0..clients {
+                        let batcher = &batcher;
+                        let xs = &xs;
+                        s.spawn(move || {
+                            let rxs: Vec<_> = (c..reqs)
+                                .step_by(clients)
+                                .map(|i| batcher.submit(xs[i % xs.len()].clone()))
+                                .collect();
+                            for rx in rxs {
+                                rx.recv().unwrap().unwrap();
+                            }
+                        });
+                    }
+                });
+            },
+        );
+        report(&mut log, &r, "samples/s", reqs as f64 / r.median_s);
     }
 
     println!("kernel threads: {}", rayon::current_num_threads());

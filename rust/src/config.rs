@@ -25,6 +25,9 @@ pub struct RunConfig {
     pub out_csv: Option<String>,
     pub save_path: Option<String>,
     pub resume_path: Option<String>,
+    /// Attach the SQWA deployment section (SWA average quantized onto
+    /// the model's Q_W grid) to the saved checkpoint.
+    pub export_qswa: bool,
     pub verbose: bool,
 }
 
@@ -47,6 +50,7 @@ impl Default for RunConfig {
             out_csv: None,
             save_path: None,
             resume_path: None,
+            export_qswa: false,
             verbose: true,
         }
     }
@@ -84,6 +88,9 @@ impl RunConfig {
         }
         if let Some(o) = args.opt("resume") {
             cfg.resume_path = Some(o.to_string());
+        }
+        if args.flag("export-qswa") {
+            cfg.export_qswa = true;
         }
         if args.flag("quiet") {
             cfg.verbose = false;

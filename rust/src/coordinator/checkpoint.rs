@@ -12,6 +12,11 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::quant::{
+    self,
+    spec::{is_per_tensor, Role},
+    QuantFormat,
+};
 use crate::runtime::ModelState;
 use crate::tensor::{NamedTensors, Tensor};
 use crate::util::json::{self, Value};
@@ -24,6 +29,10 @@ pub type Swa64 = (Vec<(String, Vec<f64>, Vec<usize>)>, usize);
 
 pub struct Checkpoint {
     pub step: u64,
+    /// Native-registry model id (optional header field, absent in files
+    /// written before inference serving existed). When present,
+    /// `swalp infer` resolves the backend without a `--model` override.
+    pub model: Option<String>,
     pub trainable: NamedTensors,
     pub state: NamedTensors,
     pub momentum: NamedTensors,
@@ -36,6 +45,23 @@ pub struct Checkpoint {
     /// bit-for-bit — required for mid-averaging checkpoint-resume to
     /// reproduce an uninterrupted run exactly.
     pub swa64: Option<Swa64>,
+    /// SQWA-style deployment section (Shin et al., arXiv:2002.00343):
+    /// the SWA average quantized onto the model's Q_W grid at save time
+    /// (`swalp train --export-qswa`), so the low-precision deployment
+    /// weights ship inside the checkpoint and the fp32-SWA vs
+    /// quantized-SWA accuracy gap is measurable at serve time.
+    pub qswa: Option<NamedTensors>,
+}
+
+/// SQWA-style deployment quantization: the SWA average pushed onto the
+/// model's weight grid with nearest (deterministic) rounding — stochastic
+/// rounding is a training-time tool; a deployment artifact must be a
+/// pure function of the average.
+pub fn quantize_swa(avg: &NamedTensors, w_fmt: &QuantFormat) -> NamedTensors {
+    let fmt = w_fmt.nearest();
+    avg.iter()
+        .map(|(n, t)| (n.clone(), quant::apply_format(&fmt, t, 0, Role::Weight, is_per_tensor(n))))
+        .collect()
 }
 
 fn section_json(ts: &NamedTensors) -> Value {
@@ -132,6 +158,13 @@ impl Checkpoint {
         }
         let header = Value::obj(vec![
             ("step", Value::Num(self.step as f64)),
+            (
+                "model",
+                match &self.model {
+                    None => Value::Null,
+                    Some(m) => Value::str(m),
+                },
+            ),
             ("trainable", section_json(&self.trainable)),
             ("state", section_json(&self.state)),
             ("momentum", section_json(&self.momentum)),
@@ -155,6 +188,13 @@ impl Checkpoint {
                     ]),
                 },
             ),
+            (
+                "qswa",
+                match &self.qswa {
+                    None => Value::Null,
+                    Some(ts) => section_json(ts),
+                },
+            ),
         ])
         .to_string();
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -169,6 +209,9 @@ impl Checkpoint {
         }
         if let Some((avg, _)) = &self.swa64 {
             write_f64s(&mut f, avg)?;
+        }
+        if let Some(ts) = &self.qswa {
+            write_f32s(&mut f, ts)?;
         }
         Ok(())
     }
@@ -206,24 +249,54 @@ impl Checkpoint {
                 Some((read_section64(&mut f, v.get("tensors")?)?, m))
             }
         };
+        // optional like swa64: absent in pre-serving checkpoints
+        let qswa = match h.opt("qswa") {
+            None | Some(Value::Null) => None,
+            Some(v) => Some(read_section(&mut f, v)?),
+        };
+        let model = match h.opt("model") {
+            None | Some(Value::Null) => None,
+            Some(v) => Some(v.as_str()?.to_string()),
+        };
         Ok(Checkpoint {
             step: h.get("step")?.as_usize()? as u64,
+            model,
             trainable,
             state,
             momentum,
             swa,
             swa64,
+            qswa,
         })
+    }
+
+    /// The SWA average as f32 tensors, preferring the exact f64 section
+    /// (squeezed per-element, matching `SwaAccumulator::average` without
+    /// a quantized-averaging format) over the lossy f32 one. `None` when
+    /// the checkpoint carries no average at all.
+    pub fn swa_f32(&self) -> Result<Option<NamedTensors>> {
+        if let Some((avg, _)) = &self.swa64 {
+            let ts = avg
+                .iter()
+                .map(|(n, d, s)| {
+                    Ok((n.clone(), Tensor::new(s.clone(), d.iter().map(|&v| v as f32).collect())?))
+                })
+                .collect::<Result<NamedTensors>>()?;
+            return Ok(Some(ts));
+        }
+        Ok(self.swa.as_ref().map(|(ts, _)| ts.clone()))
     }
 
     pub fn from_model_state(step: u64, ms: &ModelState, swa: Option<(NamedTensors, usize)>) -> Self {
         Checkpoint {
             step,
+            model: None,
             trainable: ms.trainable.clone(),
             state: ms.state.clone(),
             momentum: ms.momentum.clone(),
             swa,
             swa64: None,
+            qswa: None,
         }
     }
 
@@ -252,17 +325,20 @@ mod tests {
     fn roundtrip_full_state() {
         let ck = Checkpoint {
             step: 1234,
+            model: Some("mlp_qmm_fx86".into()),
             trainable: vec![named("a.w", vec![2, 3], 0.5), named("b", vec![4], -1.0)],
             state: vec![named("bn.mean", vec![4], 0.0)],
             momentum: vec![named("a.w", vec![2, 3], 9.0), named("b", vec![4], 2.0)],
             swa: Some((vec![named("a.w", vec![2, 3], 7.0), named("b", vec![4], 3.0)], 17)),
             swa64: None,
+            qswa: Some(vec![named("a.w", vec![2, 3], 7.5), named("b", vec![4], 3.5)]),
         };
         let dir = std::env::temp_dir().join("swalp_ck_test");
         let path = dir.join("ck.bin");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.step, 1234);
+        assert_eq!(back.model.as_deref(), Some("mlp_qmm_fx86"));
         assert_eq!(back.trainable, ck.trainable);
         assert_eq!(back.state, ck.state);
         assert_eq!(back.momentum, ck.momentum);
@@ -270,6 +346,7 @@ mod tests {
         assert_eq!(m, 17);
         assert_eq!(ts, ck.swa.unwrap().0);
         assert!(back.swa64.is_none());
+        assert_eq!(back.qswa, ck.qswa);
         std::fs::remove_file(&path).ok();
     }
 
@@ -283,11 +360,13 @@ mod tests {
         ];
         let ck = Checkpoint {
             step: 80,
+            model: None,
             trainable: vec![named("a.w", vec![3], 0.5)],
             state: vec![],
             momentum: vec![named("a.w", vec![3], 0.0)],
             swa: Some((vec![named("a.w", vec![3], 0.1)], 4)),
             swa64: Some((exact.clone(), 4)),
+            qswa: None,
         };
         let dir = std::env::temp_dir().join("swalp_ck_test_swa64");
         let path = dir.join("ck.bin");
@@ -304,6 +383,37 @@ mod tests {
             }
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn swa_f32_prefers_the_exact_f64_section() {
+        let ck = Checkpoint {
+            step: 1,
+            model: None,
+            trainable: vec![named("w", vec![2], 0.0)],
+            state: vec![],
+            momentum: vec![named("w", vec![2], 0.0)],
+            // deliberately different values in the lossy f32 section —
+            // the f64 squeeze must win
+            swa: Some((vec![named("w", vec![2], 100.0)], 2)),
+            swa64: Some((vec![("w".to_string(), vec![0.25f64, 0.5], vec![2usize])], 2)),
+            qswa: None,
+        };
+        let ts = ck.swa_f32().unwrap().unwrap();
+        assert_eq!(ts[0].1.data, vec![0.25f32, 0.5]);
+    }
+
+    #[test]
+    fn quantize_swa_is_deterministic_and_on_grid() {
+        let avg = vec![named("w", vec![8], 0.123)];
+        let fmt = QuantFormat::fixed(8, 6);
+        let a = quantize_swa(&avg, &fmt);
+        assert_eq!(a, quantize_swa(&avg, &fmt), "deployment export must be deterministic");
+        for (_, t) in &a {
+            for &v in &t.data {
+                assert_eq!(v, (v * 64.0).round() / 64.0, "{v} is off the W8F6 grid");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! The request batcher: coalesces concurrent single-sample requests
+//! into GEMM-friendly batches.
+//!
+//! One worker thread owns the [`InferSession`]. Clients enqueue single
+//! samples through [`Batcher::submit`] and block on a private response
+//! channel; the worker drains the queue into batches bounded by
+//! [`BatchOpts::max_batch`] and a deadline of [`BatchOpts::max_wait_us`]
+//! measured from the moment it first sees a non-empty queue — a partial
+//! batch is always served when the deadline expires, never starved.
+//!
+//! **The bit-identity contract.** A response is the same bytes no
+//! matter how requests were batched, interleaved, or how many client
+//! threads submitted them. This is not best-effort: output row `i` of
+//! an eval forward depends only on input row `i` (row-only GEMM splits
+//! with fixed ascending-k accumulation chains, nearest-rounded eval
+//! activation quantization whose Small-block BFP exponents block
+//! per-sample, BatchNorm eval from running statistics, per-sample
+//! pooling/ReLU), so coalescing requests into one batch is invisible in
+//! the responses. `rust/tests/infer_batch.rs` pins the contract across
+//! batch compositions, arrival orders and thread counts.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Value;
+
+use super::metrics::Metrics;
+use super::InferSession;
+
+/// Batching policy: a batch is dispatched as soon as `max_batch`
+/// requests are queued or `max_wait_us` has elapsed since the worker
+/// first saw the queue non-empty, whichever comes first.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOpts {
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchOpts {
+    fn default() -> Self {
+        BatchOpts { max_batch: 64, max_wait_us: 200 }
+    }
+}
+
+/// Per-request outcome: one output row, or a message describing why
+/// this request (not the whole batch) failed.
+pub type Response = std::result::Result<Vec<f32>, String>;
+
+struct Pending {
+    x: Vec<f32>,
+    t0: Instant,
+    tx: mpsc::Sender<Response>,
+}
+
+#[derive(Default)]
+struct Queue {
+    items: VecDeque<Pending>,
+    shutdown: bool,
+}
+
+struct Shared {
+    q: Mutex<Queue>,
+    cv: Condvar,
+    metrics: Mutex<Metrics>,
+    model: String,
+    weights: &'static str,
+    opts: BatchOpts,
+}
+
+pub struct Batcher {
+    shared: Arc<Shared>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the worker thread; it owns `session` until the batcher is
+    /// dropped (drop drains every queued request before joining).
+    pub fn start(session: InferSession, opts: BatchOpts) -> Batcher {
+        let shared = Arc::new(Shared {
+            q: Mutex::new(Queue::default()),
+            cv: Condvar::new(),
+            metrics: Mutex::new(Metrics::new()),
+            model: session.model().to_string(),
+            weights: session.weights().name(),
+            opts,
+        });
+        let worker_shared = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("swalp-infer".into())
+            .spawn(move || worker_loop(session, worker_shared, opts))
+            .expect("spawning the inference worker thread");
+        Batcher { shared, worker: Some(worker) }
+    }
+
+    /// Enqueue one sample and return its response channel immediately
+    /// (submit-all-then-collect is how concurrent requests coalesce).
+    pub fn submit(&self, x: Vec<f32>) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut g = self.shared.q.lock().unwrap();
+            g.items.push_back(Pending { x, t0: Instant::now(), tx });
+        }
+        self.shared.cv.notify_all();
+        rx
+    }
+
+    /// Submit one sample and block for its output row.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        match self.submit(x).recv() {
+            Ok(Ok(row)) => Ok(row),
+            Ok(Err(e)) => bail!("{e}"),
+            Err(_) => bail!("inference worker exited before responding"),
+        }
+    }
+
+    /// Snapshot the session metrics as a `swalp-infer-v1` report.
+    pub fn report(&self) -> Value {
+        self.shared.metrics.lock().unwrap().report(
+            &self.shared.model,
+            self.shared.weights,
+            self.shared.opts.max_batch,
+            self.shared.opts.max_wait_us,
+        )
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shared.q.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(session: InferSession, shared: Arc<Shared>, opts: BatchOpts) {
+    let max_batch = opts.max_batch.max(1);
+    let wait = Duration::from_micros(opts.max_wait_us);
+    loop {
+        let mut g = shared.q.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.shutdown {
+                return;
+            }
+            g = shared.cv.wait(g).unwrap();
+        }
+        // batching window: wait for more requests up to the deadline,
+        // unless the batch is already full or we're draining a shutdown
+        if g.items.len() < max_batch && !wait.is_zero() && !g.shutdown {
+            let deadline = Instant::now() + wait;
+            while g.items.len() < max_batch && !g.shutdown {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (back, timeout) = shared.cv.wait_timeout(g, deadline - now).unwrap();
+                g = back;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        let take = g.items.len().min(max_batch);
+        let batch: Vec<Pending> = g.items.drain(..take).collect();
+        drop(g);
+        serve_batch(&session, &shared, batch);
+    }
+}
+
+/// Run one coalesced batch through the session and fan the rows back
+/// out. A request with the wrong sample size is rejected individually —
+/// it never poisons the batch it happened to land in.
+fn serve_batch(session: &InferSession, shared: &Shared, batch: Vec<Pending>) {
+    let xe = session.x_elems();
+    let oe = session.out_elems();
+    let mut valid = Vec::with_capacity(batch.len());
+    let mut x = Vec::with_capacity(batch.len() * xe);
+    for p in batch {
+        if p.x.len() == xe {
+            x.extend_from_slice(&p.x);
+            valid.push(p);
+        } else {
+            let msg = format!("input length {} != model sample size {xe}", p.x.len());
+            shared.metrics.lock().unwrap().record_error();
+            let _ = p.tx.send(Err(msg));
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let out = session.predict(&x);
+    let mut m = shared.metrics.lock().unwrap();
+    match out {
+        Ok(rows) => {
+            m.record_batch(valid.len());
+            for (i, p) in valid.iter().enumerate() {
+                m.record_response(p.t0.elapsed().as_secs_f64() * 1e3);
+                let _ = p.tx.send(Ok(rows[i * oe..(i + 1) * oe].to_vec()));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in &valid {
+                m.record_error();
+                let _ = p.tx.send(Err(msg.clone()));
+            }
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Per-session serving metrics → the `swalp-infer-v1` report.
+//!
+//! The batcher worker records one entry per served batch (the size
+//! histogram) and one per response (queue + compute latency, measured
+//! from submit to send). [`Metrics::report`] renders the accumulated
+//! counters as a canonical [`Value`]; the schema is documented in
+//! docs/PERF.md next to the other artifact schemas and validated by
+//! [`super::check_report`].
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::json::Value;
+use crate::util::{mean, percentile};
+
+use super::INFER_SCHEMA;
+
+pub struct Metrics {
+    start: Instant,
+    lat_ms: Vec<f64>,
+    hist: BTreeMap<usize, u64>,
+    samples: u64,
+    batches: u64,
+    errors: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            start: Instant::now(),
+            lat_ms: Vec::new(),
+            hist: BTreeMap::new(),
+            samples: 0,
+            batches: 0,
+            errors: 0,
+        }
+    }
+
+    /// One batch of `size` samples went through the model.
+    pub fn record_batch(&mut self, size: usize) {
+        *self.hist.entry(size).or_insert(0) += 1;
+        self.samples += size as u64;
+        self.batches += 1;
+    }
+
+    /// One successful response, `lat_ms` after its request was submitted.
+    pub fn record_response(&mut self, lat_ms: f64) {
+        self.lat_ms.push(lat_ms);
+    }
+
+    /// One rejected or failed request (not counted in the histogram).
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// Render the `swalp-infer-v1` report. `max_batch`/`max_wait_us`
+    /// echo the batching policy the numbers were measured under.
+    pub fn report(
+        &self,
+        model: &str,
+        weights: &str,
+        max_batch: usize,
+        max_wait_us: u64,
+    ) -> Value {
+        let wall_s = self.start.elapsed().as_secs_f64();
+        let hist = self
+            .hist
+            .iter()
+            .map(|(&size, &count)| {
+                Value::Arr(vec![Value::Num(size as f64), Value::Num(count as f64)])
+            })
+            .collect();
+        Value::obj(vec![
+            ("schema", Value::str(INFER_SCHEMA)),
+            ("model", Value::str(model)),
+            ("weights", Value::str(weights)),
+            ("requests", Value::Num(self.lat_ms.len() as f64)),
+            ("errors", Value::Num(self.errors as f64)),
+            ("samples", Value::Num(self.samples as f64)),
+            ("batches", Value::Num(self.batches as f64)),
+            ("batch_hist", Value::Arr(hist)),
+            (
+                "latency_ms",
+                Value::obj(vec![
+                    ("mean", Value::Num(mean(&self.lat_ms))),
+                    ("p50", Value::Num(percentile(&self.lat_ms, 0.5))),
+                    ("p99", Value::Num(percentile(&self.lat_ms, 0.99))),
+                    ("max", Value::Num(percentile(&self.lat_ms, 1.0))),
+                ]),
+            ),
+            ("throughput_sps", Value::Num(self.samples as f64 / wall_s.max(1e-9))),
+            ("wall_s", Value::Num(wall_s)),
+            (
+                "opts",
+                Value::obj(vec![
+                    ("max_batch", Value::Num(max_batch as f64)),
+                    ("max_wait_us", Value::Num(max_wait_us as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_is_schema_valid_and_consistent() {
+        let mut m = Metrics::new();
+        m.record_batch(1);
+        m.record_batch(4);
+        m.record_batch(4);
+        for _ in 0..9 {
+            m.record_response(0.5);
+        }
+        m.record_error();
+        let v = m.report("mlp_qmm_fx86", "swa", 64, 200);
+        super::super::check_report(&v).unwrap();
+        assert_eq!(v.get("samples").unwrap().as_u64().unwrap(), 9);
+        assert_eq!(v.get("batches").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(v.get("errors").unwrap().as_u64().unwrap(), 1);
+        // hist is [[1,1],[4,2]] — sizes ascending, counts summing to samples
+        let hist = v.get("batch_hist").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(hist.len(), 2);
+        assert_eq!(hist[0].as_arr().unwrap()[0].as_u64().unwrap(), 1);
+        assert_eq!(hist[1].as_arr().unwrap()[1].as_u64().unwrap(), 2);
+    }
+}

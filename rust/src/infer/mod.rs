@@ -1,0 +1,258 @@
+//! Batched concurrent inference over trained quantized checkpoints —
+//! the serving half of the daemon story.
+//!
+//! * [`session`] — [`InferSession`]: one checkpoint loaded for serving.
+//!   Resolves the model id through the native registry, materializes
+//!   SWA / raw / SQWA-quantized weights, and owns the run-long packed-
+//!   panel cache.
+//! * [`batcher`] — [`Batcher`]: a worker thread coalescing concurrent
+//!   single-sample requests into size/deadline-bounded batches, with
+//!   the hard contract that responses are **bit-identical regardless of
+//!   batch composition, arrival interleaving and thread count**.
+//! * [`metrics`] — per-session latency/throughput counters rendered as
+//!   a `swalp-infer-v1` report (p50/p99 latency, samples/s, batch-size
+//!   histogram; schema in docs/PERF.md).
+//!
+//! Entry points: `swalp infer <ckpt>` (direct CLI) and the `infer` job
+//! kind in the `swalp serve` spool — both drive [`run`], which fans the
+//! input samples over client threads through one [`Batcher`].
+//!
+//! One deliberate caveat: sessions always evaluate with running
+//! BatchNorm statistics (`Mode::Eval`). Batch statistics would couple
+//! samples and break the batching contract — for SWA averages of BN
+//! models, bake recalibrated running stats into the checkpoint instead.
+
+pub mod batcher;
+pub mod metrics;
+pub mod session;
+
+pub use batcher::{BatchOpts, Batcher};
+pub use metrics::Metrics;
+pub use session::{InferSession, WeightChoice};
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::Trainer;
+use crate::data;
+use crate::native;
+use crate::runtime::ModelSpec;
+use crate::util::json::{self, Value};
+
+pub const INFER_SCHEMA: &str = "swalp-infer-v1";
+
+/// Validate a `swalp-infer-v1` report (the CI schema gate behind
+/// `swalp report <path> --check`). Checks field presence/types and the
+/// internal consistency the schema promises: the batch histogram must
+/// sum to the sample count.
+pub fn check_report(v: &Value) -> Result<()> {
+    let schema = v.get("schema")?.as_str()?;
+    if schema != INFER_SCHEMA {
+        bail!("unexpected schema {schema:?} (want {INFER_SCHEMA})");
+    }
+    v.get("model")?.as_str()?;
+    let weights = v.get("weights")?.as_str()?;
+    WeightChoice::parse(weights)?;
+    for k in ["requests", "errors", "samples", "batches"] {
+        v.get(k)?.as_u64()?;
+    }
+    let lat = v.get("latency_ms")?;
+    for k in ["mean", "p50", "p99", "max"] {
+        lat.get(k)?.as_f64()?;
+    }
+    v.get("throughput_sps")?.as_f64()?;
+    v.get("wall_s")?.as_f64()?;
+    let opts = v.get("opts")?;
+    opts.get("max_batch")?.as_u64()?;
+    opts.get("max_wait_us")?.as_u64()?;
+    let mut total = 0u64;
+    for pair in v.get("batch_hist")?.as_arr()? {
+        let p = pair.as_arr()?;
+        if p.len() != 2 {
+            bail!("batch_hist entries are [size, count] pairs");
+        }
+        let size = p[0].as_u64()?;
+        if size == 0 {
+            bail!("batch_hist records a zero-sized batch");
+        }
+        total += size * p[1].as_u64()?;
+    }
+    if total != v.get("samples")?.as_u64()? {
+        bail!("batch_hist sums to {total} samples, header says {}", v.get("samples")?.as_u64()?);
+    }
+    if let Some(gap) = v.opt("qswa_gap") {
+        for k in ["swa_metric", "qswa_metric", "gap"] {
+            gap.get(k)?.as_f64()?;
+        }
+    }
+    Ok(())
+}
+
+/// One `swalp infer` invocation (CLI or serve-daemon `infer` job).
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub checkpoint: PathBuf,
+    /// Model-id override for checkpoints without a recorded id.
+    pub model: Option<String>,
+    pub weights: WeightChoice,
+    /// Input sample file (see [`load_inputs`] for accepted shapes);
+    /// `None` draws `samples` inputs from the model's own test split.
+    pub input: Option<PathBuf>,
+    pub samples: usize,
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    /// Client threads issuing the requests concurrently.
+    pub clients: usize,
+    /// Also evaluate the fp32-SWA vs quantized-SWA accuracy gap (SQWA
+    /// deployment check) on the model's test split.
+    pub gap: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            checkpoint: PathBuf::new(),
+            model: None,
+            weights: WeightChoice::Swa,
+            input: None,
+            samples: 16,
+            max_batch: 64,
+            max_wait_us: 200,
+            clients: 4,
+            gap: false,
+        }
+    }
+}
+
+/// Serve one batched-inference run end to end: load the checkpoint,
+/// fan the inputs over `clients` submit threads through one batcher,
+/// and return the `swalp-infer-v1` report plus the per-sample output
+/// rows in input order.
+pub fn run(opts: &RunOpts) -> Result<(Value, Vec<Vec<f32>>)> {
+    let ck = Checkpoint::load(&opts.checkpoint)?;
+    let gap = if opts.gap { Some(qswa_gap(&ck, opts.model.as_deref())?) } else { None };
+    let session = InferSession::from_checkpoint(ck, opts.model.as_deref(), opts.weights)?;
+    let xs: Vec<Vec<f32>> = match &opts.input {
+        Some(p) => load_inputs(p, session.x_elems())?,
+        None => dataset_inputs(session.spec(), opts.samples)?,
+    };
+    if xs.is_empty() {
+        bail!("no input samples to serve");
+    }
+    let batcher = Batcher::start(
+        session,
+        BatchOpts { max_batch: opts.max_batch, max_wait_us: opts.max_wait_us },
+    );
+    let clients = opts.clients.max(1).min(xs.len());
+    let results: Mutex<Vec<(usize, batcher::Response)>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let batcher = &batcher;
+            let xs = &xs;
+            let results = &results;
+            s.spawn(move || {
+                // stripe the samples round-robin; submit-all-then-collect
+                // so requests from every client coalesce into shared
+                // batches
+                let rxs: Vec<_> = (c..xs.len())
+                    .step_by(clients)
+                    .map(|i| (i, batcher.submit(xs[i].clone())))
+                    .collect();
+                let mut got = Vec::with_capacity(rxs.len());
+                for (i, rx) in rxs {
+                    let r = rx.recv().unwrap_or(Err("worker exited".to_string()));
+                    got.push((i, r));
+                }
+                results.lock().unwrap().extend(got);
+            });
+        }
+    });
+    let mut report = batcher.report();
+    drop(batcher);
+    let mut preds: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
+    for (i, r) in results.into_inner().unwrap() {
+        preds[i] = r.map_err(|e| anyhow!("sample {i}: {e}"))?;
+    }
+    if let Some(g) = gap {
+        if let Value::Obj(m) = &mut report {
+            m.insert("qswa_gap".to_string(), g);
+        }
+    }
+    Ok((report, preds))
+}
+
+/// Parse an input file into per-sample rows. Accepted shapes:
+/// `{"samples": [[...], ...]}`, a bare array of per-sample arrays, or a
+/// bare flat numeric array holding a multiple of the sample size.
+pub fn load_inputs(path: &Path, xe: usize) -> Result<Vec<Vec<f32>>> {
+    let v = json::parse_file(path)?;
+    let arr = match &v {
+        Value::Obj(_) => v.get("samples")?.as_arr()?,
+        Value::Arr(a) => a,
+        _ => bail!(
+            "{}: expected a JSON array of samples or an object with a \"samples\" array",
+            path.display()
+        ),
+    };
+    if !arr.is_empty() && arr.iter().all(|e| matches!(e, Value::Num(_))) {
+        let flat: Vec<f32> = arr.iter().map(|e| Ok(e.as_f64()? as f32)).collect::<Result<_>>()?;
+        if flat.len() % xe != 0 {
+            bail!("flat input of {} values is not a multiple of the sample size {xe}", flat.len());
+        }
+        return Ok(flat.chunks(xe).map(|c| c.to_vec()).collect());
+    }
+    arr.iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let row = s.as_f32_vec()?;
+            if row.len() != xe {
+                bail!("sample {i} has {} values, model sample size is {xe}", row.len());
+            }
+            Ok(row)
+        })
+        .collect()
+}
+
+/// `n` inputs cycled from the model's own test split (deterministic
+/// seed, small scale — the no-input-file smoke path).
+fn dataset_inputs(spec: &ModelSpec, n: usize) -> Result<Vec<Vec<f32>>> {
+    let split = data::build(&spec.dataset, 7, 0.1)?;
+    let t = &split.test;
+    if t.n == 0 {
+        bail!("dataset {} has an empty test split", spec.dataset);
+    }
+    Ok((0..n).map(|i| t.sample_x(i % t.n).to_vec()).collect())
+}
+
+/// The SQWA deployment check: evaluate the fp32 SWA average and the
+/// checkpoint's quantized `qswa` section on the model's test split and
+/// report the accuracy gap (both through the batch-statistics eval, the
+/// appropriate treatment for averaged weights).
+fn qswa_gap(ck: &Checkpoint, model_override: Option<&str>) -> Result<Value> {
+    let model = match (model_override, &ck.model) {
+        (Some(m), _) => m.to_string(),
+        (None, Some(m)) => m.clone(),
+        (None, None) => bail!("--gap: checkpoint records no model id; pass --model"),
+    };
+    let qswa = ck
+        .qswa
+        .as_ref()
+        .ok_or_else(|| anyhow!("--gap needs a qswa section (save with --export-qswa)"))?;
+    let swa = ck
+        .swa_f32()?
+        .ok_or_else(|| anyhow!("--gap needs an SWA section in the checkpoint"))?;
+    let backend = native::load(&model)?;
+    let split = data::build(&backend.spec().dataset, 7, 0.25)?;
+    let trainer = Trainer::new(&backend, &split);
+    let fp = trainer.eval_swa(&swa, &ck.state, true)?;
+    let q = trainer.eval_swa(qswa, &ck.state, true)?;
+    Ok(Value::obj(vec![
+        ("swa_metric", Value::Num(fp.metric)),
+        ("qswa_metric", Value::Num(q.metric)),
+        ("gap", Value::Num(q.metric - fp.metric)),
+        ("dataset", Value::str(&backend.spec().dataset)),
+    ]))
+}

@@ -1,0 +1,206 @@
+//! `InferSession` — one trained checkpoint loaded for serving.
+//!
+//! A session materializes one weight set out of a checkpoint (raw SGD
+//! iterate, the fp32 SWA average, or the SQWA-quantized deployment
+//! section), resolves the backend through the native model registry,
+//! and owns the run-long [`EvalCache`]: packed weight GEMM panels
+//! persist across every request the session ever serves, so per-request
+//! cost is the eval forward alone. The weights are immutable for the
+//! session's lifetime, which is exactly the [`EvalCache`] stability
+//! contract (pointer-keyed panels must never alias freed buffers).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::native;
+use crate::runtime::{EvalCache, ModelBackend, ModelSpec};
+use crate::tensor::NamedTensors;
+
+/// Which checkpoint section becomes the serving weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightChoice {
+    /// The SWA average (exact `swa64` section squeezed to f32 when
+    /// present, else the stored f32 `swa` section) — the paper's
+    /// deployable artifact. The default.
+    Swa,
+    /// The final SGD iterate (`trainable`) — always present.
+    Raw,
+    /// The SQWA deployment section (`swalp train --export-qswa`): the
+    /// SWA average quantized onto the model's Q_W grid.
+    QSwa,
+}
+
+impl WeightChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "swa" => Ok(WeightChoice::Swa),
+            "raw" => Ok(WeightChoice::Raw),
+            "qswa" => Ok(WeightChoice::QSwa),
+            other => bail!("unknown weight choice {other:?} (want swa, raw or qswa)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WeightChoice::Swa => "swa",
+            WeightChoice::Raw => "raw",
+            WeightChoice::QSwa => "qswa",
+        }
+    }
+}
+
+pub struct InferSession {
+    backend: Box<dyn ModelBackend>,
+    trainable: NamedTensors,
+    state: NamedTensors,
+    cache: EvalCache,
+    model: String,
+    weights: WeightChoice,
+    step: u64,
+}
+
+impl InferSession {
+    /// Load a checkpoint file and materialize `choice` for serving.
+    /// `model_override` substitutes for the checkpoint's recorded model
+    /// id (required for files written before the id existed).
+    pub fn open(
+        path: &std::path::Path,
+        model_override: Option<&str>,
+        choice: WeightChoice,
+    ) -> Result<InferSession> {
+        Self::from_checkpoint(Checkpoint::load(path)?, model_override, choice)
+    }
+
+    pub fn from_checkpoint(
+        ck: Checkpoint,
+        model_override: Option<&str>,
+        choice: WeightChoice,
+    ) -> Result<InferSession> {
+        let model = match (model_override, &ck.model) {
+            (Some(m), _) => m.to_string(),
+            (None, Some(m)) => m.clone(),
+            (None, None) => bail!(
+                "checkpoint records no model id (written before serving existed); \
+                 pass --model <name>"
+            ),
+        };
+        let backend = native::load(&model)
+            .map_err(|e| anyhow!("resolving checkpoint model {model:?}: {e:#}"))?;
+        let trainable = match choice {
+            WeightChoice::Raw => ck.trainable,
+            WeightChoice::Swa => match ck.swa_f32()? {
+                Some(ts) => ts,
+                None => bail!(
+                    "checkpoint has no SWA section (trained with --no-swa or saved before \
+                     averaging started); use --weights raw"
+                ),
+            },
+            WeightChoice::QSwa => match ck.qswa {
+                Some(ts) => ts,
+                None => bail!(
+                    "checkpoint has no qswa deployment section; re-save with \
+                     `swalp train --export-qswa`"
+                ),
+            },
+        };
+        let session = InferSession {
+            backend: Box::new(backend),
+            trainable,
+            state: ck.state,
+            cache: EvalCache::default(),
+            model,
+            weights: choice,
+            step: ck.step,
+        };
+        session.validate()?;
+        Ok(session)
+    }
+
+    /// Wrap an already-loaded backend + weight set (benches, tests, and
+    /// in-process serving that never touched disk).
+    pub fn from_parts(
+        backend: Box<dyn ModelBackend>,
+        trainable: NamedTensors,
+        state: NamedTensors,
+        weights: WeightChoice,
+    ) -> InferSession {
+        let model = backend.spec().name.clone();
+        InferSession {
+            backend,
+            trainable,
+            state,
+            cache: EvalCache::default(),
+            model,
+            weights,
+            step: 0,
+        }
+    }
+
+    /// Cheap structural check: the materialized tensors must match the
+    /// model's own init layout (names + shapes), so a checkpoint served
+    /// under the wrong model id fails here with a diagnostic instead of
+    /// deep inside a GEMM.
+    fn validate(&self) -> Result<()> {
+        let fresh = self.backend.init(0)?;
+        for (section, got, want) in [
+            ("trainable", &self.trainable, &fresh.trainable),
+            ("state", &self.state, &fresh.state),
+        ] {
+            if got.len() != want.len() {
+                bail!(
+                    "checkpoint {section} section has {} tensors, model {} expects {}",
+                    got.len(),
+                    self.model,
+                    want.len()
+                );
+            }
+            for ((gn, gt), (wn, wt)) in got.iter().zip(want.iter()) {
+                if gn != wn || gt.shape != wt.shape {
+                    bail!(
+                        "checkpoint {section} tensor {gn:?} {:?} does not match model {}'s \
+                         {wn:?} {:?}",
+                        gt.shape,
+                        self.model,
+                        wt.shape
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Raw outputs for `x` holding one or more samples (logits for
+    /// classification models, predictions for regression), row-major
+    /// `[b, out_elems]`. Row `i` depends only on sample `i` — see the
+    /// module docs for why that makes batching invisible.
+    pub fn predict(&self, x: &[f32]) -> Result<Vec<f32>> {
+        self.backend.predict_cached(&self.cache, &self.trainable, &self.state, x)
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        self.backend.spec()
+    }
+
+    /// Input elements per sample.
+    pub fn x_elems(&self) -> usize {
+        self.backend.spec().x_shape.iter().product()
+    }
+
+    /// Output elements per sample (classes, or 1 for regression heads).
+    pub fn out_elems(&self) -> usize {
+        self.backend.spec().classes.max(1)
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn weights(&self) -> WeightChoice {
+        self.weights
+    }
+
+    /// The training step the served checkpoint was written at.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+}

@@ -16,7 +16,9 @@
 //! job daemon:
 //! a spool directory of `swalp-job-v1` files executed on the rayon pool
 //! with the runner's deterministic sharding, with bounded
-//! retry-with-backoff and `swalp jobs <dir>` status queries.
+//! retry-with-backoff, graceful SIGTERM drain, `swalp jobs <dir>`
+//! status queries, and — via `"kind": "infer"` jobs — batched
+//! checkpoint inference through [`crate::infer`].
 //!
 //! Durability model (what each piece protects against):
 //!

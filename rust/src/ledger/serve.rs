@@ -28,6 +28,29 @@
 //! because retries also go through the ledger, only the cells that
 //! actually failed re-execute. `swalp jobs <dir>` renders
 //! [`jobs_status`] (`swalp-jobs-v1`).
+//!
+//! An optional `"kind"` field selects the job type. The default
+//! (`"experiment"`) is the grid run above; `"kind": "infer"` instead
+//! serves batched inference over a trained checkpoint through
+//! [`crate::infer::run`]:
+//!
+//! ```json
+//! {"schema": "swalp-job-v1", "kind": "infer", "checkpoint": "ck.bin",
+//!  "weights": "swa", "samples": 32, "max_batch": 16, "clients": 2}
+//! ```
+//!
+//! (`model`, `input`, `max_wait_us` and `gap` also accepted, mirroring
+//! the `swalp infer` flags; relative `checkpoint`/`input` paths resolve
+//! against the serve directory). The `swalp-infer-v1` report lands at
+//! `<dir>/reports/<job>.infer.json`. Infer jobs are deterministic, so
+//! they do not consume the retry budget — a failure moves the job
+//! straight to `failed/`.
+//!
+//! **Graceful shutdown.** On SIGTERM the daemon stops accepting work,
+//! drains the in-flight job, writes a final `_daemon` status record
+//! (`"state": "stopped", "reason": "sigterm"`), and exits 0. Natural
+//! exits (`--once`, `--max-jobs`) write no such record. A killed daemon
+//! restarts losslessly either way — that's the ledger's job.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -79,6 +102,46 @@ fn sub(dir: &Path, name: &str) -> PathBuf {
     dir.join(name)
 }
 
+/// SIGTERM-driven graceful shutdown. The handler only flips an atomic;
+/// the serve loop polls it between jobs and during idle sleeps, so
+/// in-flight work always drains before exit.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        // SIGTERM = 15 on every unix we build for; the image carries no
+        // libc crate, so the raw symbol is the whole dependency surface.
+        // Storing to an atomic is async-signal-safe; nothing else runs
+        // in the handler.
+        unsafe {
+            signal(15, on_term);
+        }
+    }
+
+    pub fn requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
 /// Job files currently in the spool, in name order (deterministic
 /// processing order).
 fn scan_spool(spool: &Path) -> Result<Vec<PathBuf>> {
@@ -117,17 +180,26 @@ pub fn serve(dir: &Path, opts: &ServeOpts) -> Result<()> {
         opts.retries,
         opts.backoff_ms
     );
+    sig::install();
     let mut processed = 0u64;
     loop {
+        if sig::requested() {
+            return finish_sigterm(dir, processed);
+        }
         let jobs = scan_spool(&spool)?;
         if jobs.is_empty() {
             if opts.once {
                 return Ok(());
             }
-            std::thread::sleep(Duration::from_millis(opts.poll_ms));
+            idle_sleep(opts.poll_ms);
             continue;
         }
         for path in jobs {
+            // stop *accepting* jobs on SIGTERM; the one currently inside
+            // process_job always runs to completion first
+            if sig::requested() {
+                return finish_sigterm(dir, processed);
+            }
             process_job(dir, &path, opts)?;
             processed += 1;
             if opts.max_jobs > 0 && processed >= opts.max_jobs {
@@ -136,6 +208,31 @@ pub fn serve(dir: &Path, opts: &ServeOpts) -> Result<()> {
             }
         }
     }
+}
+
+/// Idle sleep in short slices so a SIGTERM during a long poll interval
+/// still turns the daemon around promptly.
+fn idle_sleep(poll_ms: u64) {
+    let mut left = poll_ms;
+    while left > 0 && !sig::requested() {
+        let chunk = left.min(50);
+        std::thread::sleep(Duration::from_millis(chunk));
+        left -= chunk;
+    }
+}
+
+/// The SIGTERM exit path: a final `_daemon` status record so operators
+/// (and the restart test) can tell a graceful drain from a crash. Only
+/// the signal path writes it — natural `--once` / `--max-jobs` exits
+/// leave the status directory to the jobs alone.
+fn finish_sigterm(dir: &Path, processed: u64) -> Result<()> {
+    eprintln!("swalp serve: SIGTERM — in-flight work drained ({processed} jobs this run)");
+    write_status(
+        dir,
+        "_daemon",
+        "stopped",
+        vec![("reason", Value::str("sigterm")), ("processed", Value::Num(processed as f64))],
+    )
 }
 
 /// Execute one spool file end to end and move it to done/ or failed/.
@@ -170,6 +267,19 @@ fn run_job(dir: &Path, path: &Path, job: &str, opts: &ServeOpts) -> Result<PathB
     if schema != JOB_SCHEMA {
         bail!("unsupported job schema {schema:?} (want {JOB_SCHEMA})");
     }
+    let kind = match v.opt("kind") {
+        None => "experiment",
+        Some(k) => k.as_str()?,
+    };
+    if kind == "infer" {
+        // deterministic, no retry budget: a failing infer job would
+        // fail identically on every attempt
+        write_status(dir, job, "running", vec![("kind", Value::str("infer"))])?;
+        return run_infer_job(dir, &v, job);
+    }
+    if kind != "experiment" {
+        bail!("unknown job kind {kind:?} (want experiment or infer)");
+    }
     let exp = v.get("experiment")?.as_str()?;
     let spec = registry::find(exp).ok_or_else(|| {
         anyhow!("unknown experiment {exp:?}; registered: {}", registry::ids().join(" "))
@@ -202,6 +312,60 @@ fn run_job(dir: &Path, path: &Path, job: &str, opts: &ServeOpts) -> Result<PathB
         }
     }
     Err(last_err.expect("at least one attempt ran"))
+}
+
+/// The `"kind": "infer"` job: batched inference over a checkpoint via
+/// [`crate::infer::run`], report to `<dir>/reports/<job>.infer.json`.
+/// Field names mirror the `swalp infer` flags (underscored).
+fn run_infer_job(dir: &Path, v: &Value, job: &str) -> Result<PathBuf> {
+    let d = crate::infer::RunOpts::default();
+    let resolve = |s: &str| {
+        let p = PathBuf::from(s);
+        if p.is_absolute() {
+            p
+        } else {
+            dir.join(p)
+        }
+    };
+    let opts = crate::infer::RunOpts {
+        checkpoint: resolve(v.get("checkpoint")?.as_str()?),
+        model: match v.opt("model") {
+            None | Some(Value::Null) => None,
+            Some(m) => Some(m.as_str()?.to_string()),
+        },
+        weights: match v.opt("weights") {
+            None => d.weights,
+            Some(w) => crate::infer::WeightChoice::parse(w.as_str()?)?,
+        },
+        input: match v.opt("input") {
+            None | Some(Value::Null) => None,
+            Some(i) => Some(resolve(i.as_str()?)),
+        },
+        samples: match v.opt("samples") {
+            Some(s) => s.as_u64()? as usize,
+            None => d.samples,
+        },
+        max_batch: match v.opt("max_batch") {
+            Some(s) => s.as_u64()? as usize,
+            None => d.max_batch,
+        },
+        max_wait_us: match v.opt("max_wait_us") {
+            Some(s) => s.as_u64()?,
+            None => d.max_wait_us,
+        },
+        clients: match v.opt("clients") {
+            Some(s) => s.as_u64()? as usize,
+            None => d.clients,
+        },
+        gap: match v.opt("gap") {
+            Some(g) => g.as_bool()?,
+            None => false,
+        },
+    };
+    let (report, _preds) = crate::infer::run(&opts)?;
+    let out = sub(dir, "reports").join(format!("{job}.infer.json"));
+    json::write_file(&out, &report)?;
+    Ok(out)
 }
 
 fn attempt_job(

@@ -22,12 +22,18 @@
 //! * [`ledger`] is the persistent run ledger (`swalp-ledger-v1`):
 //!   fsync'd append-only cell records that make `reproduce --ledger`
 //!   sweeps resumable after a kill, plus the `swalp serve` job daemon.
+//! * [`infer`] serves trained checkpoints: a checkpoint-backed
+//!   `InferSession` owning a run-long packed-panel cache, plus a
+//!   deadline-bounded request batcher whose responses are bit-identical
+//!   for every batch composition — exposed as `swalp infer` and the
+//!   serve daemon's `infer` job kind (`swalp-infer-v1` reports).
 //! * [`util`] carries the offline-image substrates: JSON, CLI parsing,
 //!   a micro-bench harness and a property-testing harness.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod infer;
 pub mod ledger;
 pub mod native;
 pub mod quant;

@@ -13,8 +13,12 @@
 //!                              grid runner; emits swalp-report-v1 JSON;
 //!                              --ledger makes the sweep resumable
 //! report <path> [--check]      render (or schema-check) a report file
+//!                              (swalp-report-v1 or swalp-infer-v1)
 //! serve <dir> [--once ...]     job daemon over a spool dir + run ledger
 //! jobs <dir> [--json]          job/ledger status of a serve directory
+//! infer <ckpt> [--input f]     batched inference over a checkpoint;
+//!                              emits a swalp-infer-v1 latency report
+//! ckpt <path> [--json]         inspect a checkpoint file's sections
 //! ```
 //!
 //! Model resolution order: the native rust engine first (hermetic, no
@@ -30,11 +34,14 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use swalp::config::RunConfig;
+use swalp::coordinator::checkpoint::Checkpoint;
 use swalp::coordinator::experiment::{Ctx, CtxConfig};
 use swalp::coordinator::{registry, Report, Runner, TrainConfig, Trainer};
 use swalp::data;
+use swalp::infer;
 use swalp::native;
 use swalp::runtime::{artifacts_dir, Manifest, ModelBackend};
+use swalp::tensor::NamedTensors;
 use swalp::util::cli::Args;
 use swalp::util::json::Value;
 
@@ -94,6 +101,8 @@ fn run(args: &Args) -> Result<()> {
         "report" => report_cmd(args),
         "serve" => serve_cmd(args),
         "jobs" => jobs_cmd(args),
+        "infer" => infer_cmd(args),
+        "ckpt" => ckpt_cmd(args),
         "help" | _ => {
             println!("{}", HELP.trim());
             if cmd != "help" {
@@ -275,6 +284,10 @@ fn report_check(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
     let parsed = swalp::util::json::parse(&text)
         .map_err(|e| anyhow::anyhow!("{path}: not valid JSON: {e}"))?;
+    // schema dispatch: infer reports validate through their own checker
+    if let Some(Ok(infer::INFER_SCHEMA)) = parsed.opt("schema").map(|s| s.as_str()) {
+        return infer_report(path, &text, &parsed, args.flag("check"));
+    }
     let report = Report::parse(&parsed).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     if args.flag("check") {
         // round-trip against the FILE's bytes, not the parsed value — a
@@ -358,7 +371,257 @@ fn jobs_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Render or `--check` a `swalp-infer-v1` latency report (the serving
+/// counterpart of the swalp-report-v1 path above; same exit-2 policy,
+/// same canonical-bytes round-trip under `--check`).
+fn infer_report(path: &str, text: &str, parsed: &Value, check: bool) -> Result<()> {
+    infer::check_report(parsed).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    if check {
+        if parsed.to_string() != text.trim_end() {
+            bail!("{path}: file is not the canonical serialization of its report");
+        }
+        println!(
+            "ok: {} requests on {} (schema {})",
+            parsed.get("requests")?.as_u64()?,
+            parsed.get("model")?.as_str()?,
+            infer::INFER_SCHEMA
+        );
+        return Ok(());
+    }
+    let lat = parsed.get("latency_ms")?;
+    println!(
+        "infer report: model {} (weights {})",
+        parsed.get("model")?.as_str()?,
+        parsed.get("weights")?.as_str()?
+    );
+    println!(
+        "  {} requests, {} errors -> {} samples in {} batches",
+        parsed.get("requests")?.as_u64()?,
+        parsed.get("errors")?.as_u64()?,
+        parsed.get("samples")?.as_u64()?,
+        parsed.get("batches")?.as_u64()?
+    );
+    println!(
+        "  latency ms: mean {:.3}  p50 {:.3}  p99 {:.3}  max {:.3}",
+        lat.get("mean")?.as_f64()?,
+        lat.get("p50")?.as_f64()?,
+        lat.get("p99")?.as_f64()?,
+        lat.get("max")?.as_f64()?
+    );
+    println!(
+        "  throughput {:.1} samples/s over {:.3}s",
+        parsed.get("throughput_sps")?.as_f64()?,
+        parsed.get("wall_s")?.as_f64()?
+    );
+    let hist: Vec<String> = parsed
+        .get("batch_hist")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            let p = p.as_arr()?;
+            Ok(format!("{}x b={}", p[1].as_u64()?, p[0].as_u64()?))
+        })
+        .collect::<Result<_>>()?;
+    println!("  batch sizes: {}", hist.join(", "));
+    if let Some(g) = parsed.opt("qswa_gap") {
+        println!(
+            "  qswa gap on {}: swa {:.4} vs qswa {:.4} ({:+.4})",
+            g.opt("dataset").and_then(|d| d.as_str().ok()).unwrap_or("?"),
+            g.get("swa_metric")?.as_f64()?,
+            g.get("qswa_metric")?.as_f64()?,
+            g.get("gap")?.as_f64()?
+        );
+    }
+    Ok(())
+}
+
+/// `swalp infer <ckpt>` — serve batched inference over a trained
+/// checkpoint (through the same batcher the daemon's `infer` job kind
+/// uses) and emit a `swalp-infer-v1` report.
+fn infer_cmd(args: &Args) -> Result<()> {
+    let ckpt = args.positional.get(1).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: swalp infer <checkpoint> [--weights swa|raw|qswa --model <name> \
+             --input <file> --samples N --max-batch N --max-wait-us N --clients N \
+             --gap --json [path]]"
+        )
+    })?;
+    let d = infer::RunOpts::default();
+    let opts = infer::RunOpts {
+        checkpoint: PathBuf::from(ckpt),
+        model: args.opt("model").map(|s| s.to_string()),
+        weights: infer::WeightChoice::parse(&args.opt_or("weights", "swa"))?,
+        input: args.opt("input").map(PathBuf::from),
+        samples: args.u64_or("samples", d.samples as u64)? as usize,
+        max_batch: args.u64_or("max-batch", d.max_batch as u64)? as usize,
+        max_wait_us: args.u64_or("max-wait-us", d.max_wait_us)?,
+        clients: args.u64_or("clients", d.clients as u64)? as usize,
+        gap: args.flag("gap"),
+    };
+    let (report, preds) = infer::run(&opts)?;
+    let show = preds.len().min(16);
+    for (i, row) in preds.iter().take(show).enumerate() {
+        if row.len() > 1 {
+            let (mut arg, mut best) = (0usize, f32::NEG_INFINITY);
+            for (c, &v) in row.iter().enumerate() {
+                if v > best {
+                    best = v;
+                    arg = c;
+                }
+            }
+            println!("  sample {i:>3}: class {arg} (logit {best:.4})");
+        } else {
+            println!("  sample {i:>3}: {:.6}", row[0]);
+        }
+    }
+    if preds.len() > show {
+        println!("  ... {} more samples", preds.len() - show);
+    }
+    let lat = report.get("latency_ms")?;
+    println!(
+        "served {} requests in {} batches: p50 {:.3} ms, p99 {:.3} ms, {:.1} samples/s",
+        report.get("requests")?.as_u64()?,
+        report.get("batches")?.as_u64()?,
+        lat.get("p50")?.as_f64()?,
+        lat.get("p99")?.as_f64()?,
+        report.get("throughput_sps")?.as_f64()?
+    );
+    if let Some(g) = report.opt("qswa_gap") {
+        println!(
+            "qswa deployment gap on {}: swa {:.4} vs qswa {:.4} ({:+.4})",
+            g.opt("dataset").and_then(|x| x.as_str().ok()).unwrap_or("?"),
+            g.get("swa_metric")?.as_f64()?,
+            g.get("qswa_metric")?.as_f64()?,
+            g.get("gap")?.as_f64()?
+        );
+    }
+    let json_out: Option<PathBuf> = args
+        .opt("json")
+        .map(PathBuf::from)
+        .or_else(|| args.flag("json").then(|| PathBuf::from("infer.json")));
+    if let Some(path) = json_out {
+        swalp::util::json::write_file(&path, &report)?;
+        println!("report -> {}", path.display());
+    }
+    Ok(())
+}
+
+fn ckpt_tensor(name: &str, shape: &[usize], bytes: usize) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(name)),
+        ("shape", Value::Arr(shape.iter().map(|&d| Value::Num(d as f64)).collect())),
+        ("bytes", Value::Num(bytes as f64)),
+    ])
+}
+
+/// One `swalp ckpt` section: name, element dtype, optional fold count,
+/// per-tensor shapes/bytes.
+fn ckpt_section(name: &str, dtype: &str, m: Option<usize>, tensors: Vec<Value>) -> Value {
+    let mut fields = vec![
+        ("name", Value::str(name)),
+        ("dtype", Value::str(dtype)),
+        ("tensors", Value::Arr(tensors)),
+    ];
+    if let Some(m) = m {
+        fields.push(("m", Value::Num(m as f64)));
+    }
+    Value::obj(fields)
+}
+
+fn ckpt_f32_section(name: &str, ts: &NamedTensors, m: Option<usize>) -> Value {
+    let tensors = ts.iter().map(|(n, t)| ckpt_tensor(n, &t.shape, t.data.len() * 4)).collect();
+    ckpt_section(name, "f32", m, tensors)
+}
+
+/// `swalp ckpt <path> [--json]` — inspect a checkpoint: model id, step,
+/// sections and their tensor shapes/bytes. A file that fails to parse is
+/// an *input* problem (exit 2 with a diagnostic naming the file), same
+/// policy as `swalp report`.
+fn ckpt_cmd(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: swalp ckpt <path> [--json]"))?;
+    let ck = match Checkpoint::load(std::path::Path::new(path)) {
+        Ok(ck) => ck,
+        Err(e) => {
+            eprintln!("{path}: not a readable checkpoint: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let mut sections = vec![
+        ckpt_f32_section("trainable", &ck.trainable, None),
+        ckpt_f32_section("state", &ck.state, None),
+        ckpt_f32_section("momentum", &ck.momentum, None),
+    ];
+    if let Some((ts, m)) = &ck.swa {
+        sections.push(ckpt_f32_section("swa", ts, Some(*m)));
+    }
+    if let Some((avg, m)) = &ck.swa64 {
+        let tensors = avg.iter().map(|(n, d, s)| ckpt_tensor(n, s, d.len() * 8)).collect();
+        sections.push(ckpt_section("swa64", "f64", Some(*m), tensors));
+    }
+    if let Some(ts) = &ck.qswa {
+        sections.push(ckpt_f32_section("qswa", ts, None));
+    }
+    if args.flag("json") {
+        let v = Value::obj(vec![
+            ("schema", Value::str("swalp-ckpt-v1")),
+            ("path", Value::str(path)),
+            (
+                "model",
+                match &ck.model {
+                    None => Value::Null,
+                    Some(m) => Value::str(m),
+                },
+            ),
+            ("step", Value::Num(ck.step as f64)),
+            ("sections", Value::Arr(sections)),
+        ]);
+        println!("{v}");
+        return Ok(());
+    }
+    println!("checkpoint {path}");
+    println!(
+        "  model {}  step {}",
+        ck.model.as_deref().unwrap_or("(not recorded; `swalp infer` needs --model)"),
+        ck.step
+    );
+    for s in &sections {
+        let tensors = s.get("tensors")?.as_arr()?;
+        let bytes: u64 = tensors
+            .iter()
+            .map(|t| t.get("bytes").and_then(|b| b.as_u64()).unwrap_or(0))
+            .sum();
+        let mut line = format!(
+            "  {:<9} {:>3} tensors {:>12} bytes ({})",
+            s.get("name")?.as_str()?,
+            tensors.len(),
+            bytes,
+            s.get("dtype")?.as_str()?
+        );
+        if let Some(m) = s.opt("m") {
+            line.push_str(&format!("  m={}", m.as_u64()?));
+        }
+        println!("{line}");
+        for t in tensors {
+            let shape: Vec<String> =
+                t.get("shape")?.as_arr()?.iter().map(|v| v.to_string()).collect();
+            println!(
+                "    {:<24} [{}] {} bytes",
+                t.get("name")?.as_str()?,
+                shape.join(", "),
+                t.get("bytes")?.as_u64()?
+            );
+        }
+    }
+    Ok(())
+}
+
 fn train(cfg: &RunConfig) -> Result<()> {
+    if cfg.export_qswa && cfg.save_path.is_none() {
+        bail!("--export-qswa writes a checkpoint section; pass --save <path> too");
+    }
     let (_ctx, model) = load_backend(&cfg.model)?;
     println!(
         "model {} ({} params, quant={}, dataset={})",
@@ -396,11 +659,32 @@ fn train(cfg: &RunConfig) -> Result<()> {
             &out.final_state,
             swa_payload,
         );
+        // record the model id so `swalp infer` / `swalp ckpt` resolve the
+        // backend without a --model override
+        ck.model = Some(cfg.model.clone());
         // also carry the exact f64 accumulator so a mid-averaging resume
         // continues the running mean bit-for-bit
         if let Some(acc) = &out.swa {
             if acc.m > 0 {
                 ck.swa64 = Some((acc.raw().to_vec(), acc.m));
+            }
+        }
+        if cfg.export_qswa {
+            match &out.swa {
+                Some(acc) if acc.m > 0 => {
+                    ck.qswa = Some(swalp::coordinator::checkpoint::quantize_swa(
+                        &acc.average()?,
+                        &model.spec().quant.w,
+                    ));
+                    println!(
+                        "qswa: SWA average quantized onto the {} weight grid",
+                        model.spec().quant.name
+                    );
+                }
+                _ => bail!(
+                    "--export-qswa: no SWA average to quantize (averaging never \
+                     started; check --warmup/--steps, or drop --no-swa)"
+                ),
             }
         }
         ck.save(std::path::Path::new(p))?;
@@ -433,6 +717,9 @@ USAGE: swalp <command> [options]
         [--steps N --warmup N --cycle N --lr X --swa-lr X --seed N]
         [--no-swa --swa-bits W --eval-every N --data-scale X]
         [--config file.json --out-csv file.csv --quiet]
+        [--save ck.bin --resume ck.bin --export-qswa]
+        --export-qswa attaches the SWA average quantized onto the
+        model's weight grid (the SQWA deployment section)
   eval  --model <name>          smoke-eval an initialized model
   reproduce --exp <id> | --all  run registered paper experiments through
         the grid runner (cells x seed replicas over the thread pool):
@@ -446,8 +733,9 @@ USAGE: swalp <command> [options]
          a killed sweep resumes losslessly (same final report bytes)
         emits swalp-report-v1 JSON; unknown --exp exits 2 with the
         registered ids
-  report <path> [--check]       render / schema-check a report file
-        (malformed or wrong-schema input exits 2 with a diagnostic)
+  report <path> [--check]       render / schema-check a report file,
+        swalp-report-v1 or swalp-infer-v1 (malformed or wrong-schema
+        input exits 2 with a diagnostic)
   serve <dir>                   ledger-backed job daemon: watches
         <dir>/spool/ for swalp-job-v1 files, executes them on the
         thread pool with retry + backoff, writes swalp-report-v1 to
@@ -455,6 +743,18 @@ USAGE: swalp <command> [options]
         [--poll-ms 500 --retries 2 --backoff-ms 250 --max-jobs 0
          --once --threads N]
   jobs <dir> [--json]           status snapshot of a serve directory
+  infer <ckpt>                  batched inference over a trained
+        checkpoint: requests from --clients threads coalesce into
+        size/deadline-bounded batches with bit-identical responses;
+        emits a swalp-infer-v1 latency report (p50/p99, samples/s,
+        batch-size histogram). Also available as the serve daemon's
+        "kind": "infer" job.
+        [--weights swa|raw|qswa --model <name> --input samples.json
+         --samples 16 --max-batch 64 --max-wait-us 200 --clients 4
+         --gap --json [path]]
+  ckpt <path> [--json]          inspect a checkpoint file: model id,
+        step, sections (trainable/state/momentum/swa/swa64/qswa) with
+        tensor shapes and bytes; malformed input exits 2
 
 Runs hermetically on the native backend (linreg / logreg / mlp / CNN
 models). Other specs need `make artifacts` + --features xla-runtime.

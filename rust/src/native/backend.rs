@@ -299,6 +299,36 @@ impl ModelBackend for NativeBackend {
         )
     }
 
+    /// Serving entry: raw outputs under the eval-time discipline (the
+    /// spec's Q_A with nearest rounding, `Mode::Eval` running BN stats),
+    /// with packed weight panels persisted across calls through the
+    /// caller's cache. `Mode::Eval` is load-bearing for the batching
+    /// contract — batch statistics would couple samples.
+    fn predict_cached(
+        &self,
+        cache: &EvalCache,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let xe: usize = self.spec.x_shape.iter().product();
+        if xe == 0 || x.is_empty() || x.len() % xe != 0 {
+            bail!("x length {} not a non-empty multiple of sample size {xe}", x.len());
+        }
+        let b = x.len() / xe;
+        let pc: &PanelCache = cache.get_or_init(PanelCache::new);
+        let a_fmt = self.spec.quant.a.nearest();
+        let none = QuantFormat::None;
+        let q = QCtx {
+            a_fmt: &a_fmt,
+            e_fmt: &none,
+            step: 0,
+            mode: Mode::Eval,
+            panel_cache: Some(pc),
+        };
+        self.model.predict_batch(&q, trainable, state, x, b)
+    }
+
     /// Fig. 3 (right): evaluate with activations quantized to `act_wl`-bit
     /// Small-block BFP, nearest rounding (0 = no activation quantization).
     /// Mirrors the artifact backend's `eval_flex` entry so the fig3

@@ -279,6 +279,36 @@ impl GraphModel {
         Ok(TrainGrads { loss, grads, state_updates: tape.state_updates })
     }
 
+    /// Output elements per sample: `classes` for the softmax head, 1
+    /// for the regression head.
+    pub fn out_elems(&self) -> usize {
+        match self.head {
+            Head::SoftmaxCe { classes } => classes,
+            Head::SumSquares => 1,
+        }
+    }
+
+    /// Raw head inputs for one batch — the serving path. Runs the same
+    /// eval forward as [`Self::eval_batch`] (fused peephole included)
+    /// and returns the `[b, out_elems]` output row-major: logits for
+    /// `SoftmaxCe`, scalar predictions for `SumSquares`. Row `i`
+    /// depends only on sample `i` — GEMMs split by rows only, eval
+    /// activation quantization rounds to nearest with per-sample BFP
+    /// exponent blocks, and BatchNorm eval uses running statistics —
+    /// so the output rows are bit-identical for any batch composition
+    /// (the [`crate::infer`] batching contract).
+    pub fn predict_batch(
+        &self,
+        q: &QCtx,
+        tr: &[(String, Tensor)],
+        state: &[(String, Tensor)],
+        x: &[f32],
+        b: usize,
+    ) -> Result<Vec<f32>> {
+        let (out, _tape) = self.forward(q, tr, state, x, b)?;
+        Ok(out.data)
+    }
+
     /// One eval batch: (mean loss, metric) — error count for
     /// classification heads, squared-error sum for regression.
     pub fn eval_batch(

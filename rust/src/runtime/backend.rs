@@ -162,6 +162,27 @@ pub trait ModelBackend: Send + Sync {
         }
     }
 
+    /// Raw model outputs (logits for classification heads, predictions
+    /// for regression) for one input batch under the eval-time
+    /// quantization discipline — the serving entry point
+    /// ([`crate::infer`]). The caller-owned [`EvalCache`] persists
+    /// packed weight panels across requests (the run-long cache an
+    /// inference session owns); the [`EvalCache`] stability contract
+    /// applies. Row `i` of the output must depend only on sample `i`,
+    /// so batching requests together cannot change any response — the
+    /// bit-identical batching contract `infer::Batcher` is built on.
+    /// The default bails for backends without a predict entry.
+    fn predict_cached(
+        &self,
+        cache: &EvalCache,
+        trainable: &NamedTensors,
+        state: &NamedTensors,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let _ = (cache, trainable, state, x);
+        bail!("model {} has no predict entry on this backend", self.spec().name)
+    }
+
     /// Fig. 3 (right): evaluate with activations quantized to `act_wl`-bit
     /// Small-block BFP (0 = no activation quantization). The native and
     /// artifact backends both provide this; the default method bails for

@@ -18,6 +18,7 @@ pub struct Args {
 const KNOWN_FLAGS: &[&str] = &[
     "quick", "full", "no-swa", "quiet", "verbose", "with-fp32", "force",
     "list", "help", "bench", "dump-traj", "all", "check", "smoke", "once",
+    "export-qswa", "gap",
 ];
 
 impl Args {

@@ -59,6 +59,21 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Linearly-interpolated quantile of an unsorted sample, `q` in [0, 1]
+/// (q=0.5 matches [`median`]). Used for the serving latency percentiles
+/// (`swalp-infer-v1` p50/p99).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+}
+
 /// Sample standard deviation.
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
@@ -78,5 +93,17 @@ mod tests {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
         assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_matches_median() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        let xs = [4.0, 1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 0.5), median(&xs));
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        // 0.25 lands exactly on the second order statistic of 4 samples
+        assert_eq!(percentile(&xs, 0.25), 1.75);
     }
 }

@@ -1,0 +1,426 @@
+//! Proofs for the inference subsystem's hard contract: a response is
+//! **bit-identical regardless of batch composition, arrival
+//! interleaving, and client thread count**.
+//!
+//! Structure:
+//! * direct `InferSession::predict` composition invariance (full batch,
+//!   reversed, duplicated, random multisets) across fixed-point, BFP
+//!   and CNN models,
+//! * the batcher under explicit thread/batch/deadline grids plus a
+//!   randomized property sweep over interleavings,
+//! * deadline flush (a partial batch is served, never starved) and
+//!   per-request rejection (a bad request cannot poison its batch),
+//! * checkpoint-backed sessions for every weight choice (swa/raw/qswa)
+//!   incl. the model-id override and layout-validation failure modes,
+//! * the `swalp ckpt` / `swalp infer` / serve-daemon `infer` job CLI
+//!   surface end to end (exit codes, schemas, `report --check`).
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Mutex;
+use std::thread;
+
+use swalp::coordinator::checkpoint::{self, Checkpoint};
+use swalp::data;
+use swalp::infer::{self, BatchOpts, Batcher, InferSession, WeightChoice};
+use swalp::native;
+use swalp::rng::StreamRng;
+use swalp::util::json;
+use swalp::util::prop::{check, PropConfig};
+
+const BIN: &str = env!("CARGO_BIN_EXE_swalp");
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("swalp_infer_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A raw-weights session over a freshly initialized model (deterministic
+/// seed, so twin calls build bit-identical sessions) plus `n` test-split
+/// inputs.
+fn session_and_inputs(model: &str, n: usize) -> (InferSession, Vec<Vec<f32>>) {
+    let backend = native::load(model).unwrap();
+    let ms = backend.init(3).unwrap();
+    let split = data::build(&backend.spec().dataset, 5, 0.1).unwrap();
+    let t = &split.test;
+    assert!(t.n > 0, "{model}: empty test split");
+    let xs: Vec<Vec<f32>> = (0..n).map(|i| t.sample_x(i % t.n).to_vec()).collect();
+    let session =
+        InferSession::from_parts(Box::new(backend), ms.trainable, ms.state, WeightChoice::Raw);
+    (session, xs)
+}
+
+fn assert_bits_eq(ctx: &str, i: usize, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{ctx}: sample {i}: row length");
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{ctx}: sample {i} elem {k}: {g} != {w} (batching changed the bits)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// direct predict: output row i depends only on input row i
+// ---------------------------------------------------------------------
+
+#[test]
+fn predict_rows_are_bit_identical_across_batch_compositions() {
+    for model in ["mlp_qmm_fx86", "mlp_bfp8small", "cifar10_vgg_bfp8small"] {
+        let (session, xs) = session_and_inputs(model, 8);
+        let oe = session.out_elems();
+        let refs: Vec<Vec<f32>> = xs.iter().map(|x| session.predict(x).unwrap()).collect();
+
+        // the full batch, then the same batch reversed
+        for (tag, idx) in [
+            ("full", (0..xs.len()).collect::<Vec<_>>()),
+            ("reversed", (0..xs.len()).rev().collect::<Vec<_>>()),
+        ] {
+            let flat: Vec<f32> = idx.iter().flat_map(|&i| xs[i].iter().copied()).collect();
+            let out = session.predict(&flat).unwrap();
+            assert_eq!(out.len(), idx.len() * oe);
+            for (j, &i) in idx.iter().enumerate() {
+                assert_bits_eq(&format!("{model}/{tag}"), i, &out[j * oe..(j + 1) * oe], &refs[i]);
+            }
+        }
+
+        // random multisets (duplicates included): every occurrence of a
+        // sample must reproduce its singleton row
+        let mut rng = StreamRng::new(0xBA7C);
+        for round in 0..3 {
+            let k = 1 + rng.below(2 * xs.len());
+            let idx: Vec<usize> = (0..k).map(|_| rng.below(xs.len())).collect();
+            let flat: Vec<f32> = idx.iter().flat_map(|&i| xs[i].iter().copied()).collect();
+            let out = session.predict(&flat).unwrap();
+            for (j, &i) in idx.iter().enumerate() {
+                assert_bits_eq(
+                    &format!("{model}/random round {round}"),
+                    i,
+                    &out[j * oe..(j + 1) * oe],
+                    &refs[i],
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the batcher: thread counts, batch sizes, deadlines
+// ---------------------------------------------------------------------
+
+fn run_clients(
+    batcher: &Batcher,
+    xs: &[Vec<f32>],
+    order: &[usize],
+    threads: usize,
+) -> Vec<(usize, Vec<f32>)> {
+    let results: Mutex<Vec<(usize, Vec<f32>)>> = Mutex::new(Vec::new());
+    thread::scope(|s| {
+        for c in 0..threads {
+            let results = &results;
+            s.spawn(move || {
+                // submit-all-then-collect, so requests from every client
+                // actually coalesce into shared batches
+                let rxs: Vec<_> = order
+                    .iter()
+                    .skip(c)
+                    .step_by(threads)
+                    .map(|&i| (i, batcher.submit(xs[i].clone())))
+                    .collect();
+                let mut got = Vec::with_capacity(rxs.len());
+                for (i, rx) in rxs {
+                    got.push((i, rx.recv().unwrap().unwrap()));
+                }
+                results.lock().unwrap().extend(got);
+            });
+        }
+    });
+    results.into_inner().unwrap()
+}
+
+#[test]
+fn batcher_responses_are_bit_identical_across_thread_counts() {
+    let (reference, xs) = session_and_inputs("mlp_qmm_fx86", 24);
+    let refs: Vec<Vec<f32>> = xs.iter().map(|x| reference.predict(x).unwrap()).collect();
+    let order: Vec<usize> = (0..xs.len()).collect();
+    for (threads, max_batch, max_wait_us) in [(1usize, 1usize, 0u64), (2, 8, 500), (8, 64, 2000)] {
+        let ctx = format!("threads={threads} max_batch={max_batch} wait={max_wait_us}us");
+        let (session, _) = session_and_inputs("mlp_qmm_fx86", 0);
+        let batcher = Batcher::start(session, BatchOpts { max_batch, max_wait_us });
+        let results = run_clients(&batcher, &xs, &order, threads);
+        let report = batcher.report();
+        infer::check_report(&report).unwrap();
+        assert_eq!(
+            report.get("requests").unwrap().as_u64().unwrap(),
+            xs.len() as u64,
+            "{ctx}: every request must be answered"
+        );
+        assert_eq!(report.get("errors").unwrap().as_u64().unwrap(), 0, "{ctx}");
+        assert_eq!(results.len(), xs.len(), "{ctx}");
+        for (i, row) in &results {
+            assert_bits_eq(&ctx, *i, row, &refs[*i]);
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_bit_identity_under_random_interleavings() {
+    let (reference, xs) = session_and_inputs("mlp_bfp8small", 10);
+    let refs: Vec<Vec<f32>> = xs.iter().map(|x| reference.predict(x).unwrap()).collect();
+    check("batcher-bit-identity", &PropConfig { cases: 6, seed: 0x5EED }, |rng, _case| {
+        let threads = 1 + rng.below(4);
+        let max_batch = 1 + rng.below(16);
+        let max_wait_us = [0u64, 100, 1000][rng.below(3)];
+        // random submission order (Fisher–Yates off the prop rng)
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.below(i + 1));
+        }
+        let (session, _) = session_and_inputs("mlp_bfp8small", 0);
+        let batcher = Batcher::start(session, BatchOpts { max_batch, max_wait_us });
+        let results = run_clients(&batcher, &xs, &order, threads);
+        infer::check_report(&batcher.report()).map_err(|e| e.to_string())?;
+        for (i, row) in &results {
+            for (k, (g, w)) in row.iter().zip(&refs[*i]).enumerate() {
+                if g.to_bits() != w.to_bits() {
+                    return Err(format!(
+                        "threads={threads} max_batch={max_batch} wait={max_wait_us}us: \
+                         sample {i} elem {k}: {g} != {w}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partial_batches_flush_at_the_deadline() {
+    let (session, xs) = session_and_inputs("mlp_qmm_fx86", 3);
+    // max_batch far above the request count: only the deadline can
+    // dispatch; recv would hang forever if partial batches starved
+    let batcher = Batcher::start(session, BatchOpts { max_batch: 1000, max_wait_us: 50_000 });
+    let rxs: Vec<_> = xs.iter().map(|x| batcher.submit(x.clone())).collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = batcher.report();
+    infer::check_report(&report).unwrap();
+    assert_eq!(report.get("samples").unwrap().as_u64().unwrap(), 3);
+    for pair in report.get("batch_hist").unwrap().as_arr().unwrap() {
+        let size = pair.as_arr().unwrap()[0].as_u64().unwrap();
+        assert!(size <= 3, "served a batch of {size} with only 3 requests queued");
+    }
+}
+
+#[test]
+fn wrong_sized_requests_fail_alone_without_poisoning_their_batch() {
+    let (session, xs) = session_and_inputs("mlp_qmm_fx86", 2);
+    let batcher = Batcher::start(session, BatchOpts { max_batch: 8, max_wait_us: 20_000 });
+    let good: Vec<_> = xs.iter().map(|x| batcher.submit(x.clone())).collect();
+    let bad = batcher.submit(vec![1.0; 3]);
+    let err = bad.recv().unwrap().unwrap_err();
+    assert!(err.contains("sample size"), "diagnostic names the size mismatch: {err}");
+    for rx in good {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = batcher.report();
+    infer::check_report(&report).unwrap();
+    assert_eq!(report.get("errors").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(report.get("samples").unwrap().as_u64().unwrap(), 2);
+}
+
+// ---------------------------------------------------------------------
+// checkpoint-backed sessions: weight choices, overrides, validation
+// ---------------------------------------------------------------------
+
+#[test]
+fn checkpoint_sessions_materialize_each_weight_choice() {
+    let model = "mlp_qmm_fx86";
+    let backend = native::load(model).unwrap();
+    let ms = backend.init(11).unwrap();
+    // a fake f64 accumulator (the raw weights halved, as if averaged):
+    // distinct from `trainable`, so each choice serves different weights
+    let swa64: Vec<(String, Vec<f64>, Vec<usize>)> = ms
+        .trainable
+        .iter()
+        .map(|(n, t)| {
+            let halved: Vec<f64> = t.data.iter().map(|&v| v as f64 * 0.5).collect();
+            (n.clone(), halved, t.shape.clone())
+        })
+        .collect();
+    let mut ck = Checkpoint::from_model_state(7, &ms, Some((ms.trainable.clone(), 4)));
+    ck.model = Some(model.to_string());
+    ck.swa64 = Some((swa64, 4));
+    ck.qswa = Some(checkpoint::quantize_swa(&ms.trainable, &backend.spec().quant.w));
+    let dir = tmp("ck_session");
+    let path = dir.join("ck.bin");
+    ck.save(&path).unwrap();
+
+    for choice in [WeightChoice::Swa, WeightChoice::Raw, WeightChoice::QSwa] {
+        let session = InferSession::open(&path, None, choice).unwrap();
+        assert_eq!(session.model(), model);
+        assert_eq!(session.step(), 7);
+        assert_eq!(session.weights(), choice);
+        let x = vec![0.25f32; session.x_elems()];
+        let out = session.predict(&x).unwrap();
+        assert_eq!(out.len(), session.out_elems(), "{}: one row out", choice.name());
+        assert!(out.iter().all(|v| v.is_finite()), "{}: finite outputs", choice.name());
+    }
+
+    // serving under the wrong model id must fail layout validation with
+    // a diagnostic, not die inside a GEMM
+    let err = InferSession::open(&path, Some("linreg_fx86"), WeightChoice::Raw).unwrap_err();
+    assert!(err.to_string().contains("does not match") || err.to_string().contains("tensors"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sessions_over_minimal_checkpoints_error_usefully() {
+    let model = "mlp_qmm_fx86";
+    let backend = native::load(model).unwrap();
+    let ms = backend.init(2).unwrap();
+    // no model id, no swa, no qswa — the pre-serving checkpoint shape
+    let ck = Checkpoint::from_model_state(1, &ms, None);
+    let dir = tmp("ck_minimal");
+    let path = dir.join("ck.bin");
+    ck.save(&path).unwrap();
+
+    let err = InferSession::open(&path, None, WeightChoice::Raw).unwrap_err();
+    assert!(err.to_string().contains("--model"), "points at the override: {err:#}");
+    let session = InferSession::open(&path, Some(model), WeightChoice::Raw).unwrap();
+    assert_eq!(session.model(), model);
+
+    let err = InferSession::open(&path, Some(model), WeightChoice::Swa).unwrap_err();
+    assert!(err.to_string().contains("raw"), "points at --weights raw: {err:#}");
+    let err = InferSession::open(&path, Some(model), WeightChoice::QSwa).unwrap_err();
+    assert!(err.to_string().contains("export-qswa"), "points at the export flag: {err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// CLI surface: swalp ckpt / swalp infer / serve infer job
+// ---------------------------------------------------------------------
+
+#[test]
+fn ckpt_inspector_renders_and_rejects() {
+    let dir = tmp("ckpt_cli");
+    let junk = dir.join("junk.bin");
+    std::fs::write(&junk, b"not a checkpoint at all").unwrap();
+    for path in [junk.clone(), dir.join("absent.bin")] {
+        let out = Command::new(BIN).args(["ckpt", path.to_str().unwrap()]).output().unwrap();
+        assert_eq!(
+            out.status.code(),
+            Some(2),
+            "{}: malformed/missing checkpoints are input errors; stderr:\n{}",
+            path.display(),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+
+    let backend = native::load("mlp_qmm_fx86").unwrap();
+    let ms = backend.init(1).unwrap();
+    let mut ck = Checkpoint::from_model_state(5, &ms, None);
+    ck.model = Some("mlp_qmm_fx86".to_string());
+    ck.qswa = Some(checkpoint::quantize_swa(&ms.trainable, &backend.spec().quant.w));
+    let path = dir.join("ok.bin");
+    ck.save(&path).unwrap();
+
+    let out = Command::new(BIN).args(["ckpt", path.to_str().unwrap(), "--json"]).output().unwrap();
+    assert!(out.status.success(), "stderr:\n{}", String::from_utf8_lossy(&out.stderr));
+    let v = json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(v.get("schema").unwrap().as_str().unwrap(), "swalp-ckpt-v1");
+    assert_eq!(v.get("model").unwrap().as_str().unwrap(), "mlp_qmm_fx86");
+    assert_eq!(v.get("step").unwrap().as_u64().unwrap(), 5);
+    let sections = v.get("sections").unwrap().as_arr().unwrap();
+    let names: Vec<&str> =
+        sections.iter().map(|s| s.get("name").unwrap().as_str().unwrap()).collect();
+    assert_eq!(names, vec!["trainable", "state", "momentum", "qswa"]);
+    for s in sections {
+        for t in s.get("tensors").unwrap().as_arr().unwrap() {
+            assert!(t.get("bytes").unwrap().as_u64().unwrap() > 0);
+            assert!(!t.get("shape").unwrap().as_arr().unwrap().is_empty());
+        }
+    }
+
+    let out = Command::new(BIN).args(["ckpt", path.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(text.contains("mlp_qmm_fx86") && text.contains("qswa"), "text render:\n{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn infer_cli_and_serve_job_emit_checkable_reports() {
+    let dir = tmp("cli_e2e");
+    let ck = dir.join("ck.bin");
+    let out = Command::new(BIN)
+        .args([
+            "train", "--model", "mlp_qmm_fx86", "--steps", "24", "--warmup", "8", "--cycle", "4",
+            "--eval-every", "24", "--data-scale", "0.1", "--quiet", "--save",
+            ck.to_str().unwrap(), "--export-qswa",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "train failed:\n{}", String::from_utf8_lossy(&out.stderr));
+
+    let report_path = dir.join("latency.json");
+    let out = Command::new(BIN)
+        .args([
+            "infer", ck.to_str().unwrap(), "--samples", "12", "--clients", "3", "--max-batch",
+            "4", "--json", report_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "infer failed:\n{}", String::from_utf8_lossy(&out.stderr));
+    let v = json::parse_file(&report_path).unwrap();
+    infer::check_report(&v).unwrap();
+    assert_eq!(v.get("requests").unwrap().as_u64().unwrap(), 12);
+    assert_eq!(v.get("weights").unwrap().as_str().unwrap(), "swa");
+
+    // `swalp report --check` speaks the infer schema too
+    let out = Command::new(BIN)
+        .args(["report", report_path.to_str().unwrap(), "--check"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr:\n{}", String::from_utf8_lossy(&out.stderr));
+    // ... and still rejects a tampered copy: extra interior whitespace
+    // parses identically but is no longer the canonical bytes (exit 2)
+    let tampered = dir.join("tampered.json");
+    let text = std::fs::read_to_string(&report_path).unwrap();
+    std::fs::write(&tampered, text.replacen('{', "{ ", 1)).unwrap();
+    let out = Command::new(BIN)
+        .args(["report", tampered.to_str().unwrap(), "--check"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+
+    // the serve daemon runs the same thing as a "kind": "infer" job
+    std::fs::create_dir_all(dir.join("serve/spool")).unwrap();
+    std::fs::write(
+        dir.join("serve/spool/job1.json"),
+        format!(
+            r#"{{"schema":"swalp-job-v1","kind":"infer","checkpoint":{},"samples":6,"max_batch":3,"clients":2,"weights":"qswa"}}"#,
+            json::Value::str(ck.to_str().unwrap())
+        ),
+    )
+    .unwrap();
+    let out = Command::new(BIN)
+        .args(["serve", dir.join("serve").to_str().unwrap(), "--once"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "serve failed:\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("serve/done/job1.json").exists());
+    let rp = dir.join("serve/reports/job1.infer.json");
+    let v = json::parse_file(&rp).unwrap();
+    infer::check_report(&v).unwrap();
+    assert_eq!(v.get("weights").unwrap().as_str().unwrap(), "qswa");
+    assert_eq!(v.get("samples").unwrap().as_u64().unwrap(), 6);
+    let st = json::parse_file(&dir.join("serve/status/job1.json")).unwrap();
+    assert_eq!(st.get("state").unwrap().as_str().unwrap(), "done");
+    assert!(st.get("report").unwrap().as_str().unwrap().ends_with("job1.infer.json"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

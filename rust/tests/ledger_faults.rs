@@ -15,6 +15,9 @@
 //! * the serve daemon survives a mid-job kill (job stays spooled, the
 //!   restarted daemon finishes it from the ledger) and `swalp jobs`
 //!   reports the outcome,
+//! * SIGTERM drains the daemon gracefully: in-flight jobs finish, a
+//!   final `_daemon` status record names the cause, the process exits 0,
+//!   and a restarted daemon resumes service,
 //! * a mid-averaging checkpoint (`swa64` section) resumes the SWA
 //!   running mean bit-for-bit,
 //! * the committed golden ledger pins the on-disk record grammar.
@@ -337,6 +340,82 @@ fn serve_daemon_survives_a_kill_and_jobs_reports_the_outcome() {
         served_fp,
         "a served job must produce the same report as a direct run"
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// satellite: SIGTERM drains in-flight work, records a final `_daemon`
+// status, and a restarted daemon resumes service
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn sigterm_drains_the_daemon_and_a_restart_resumes_service() {
+    use std::time::{Duration, Instant};
+
+    let dir = tmp("sigterm");
+    std::fs::create_dir_all(dir.join("spool")).unwrap();
+    for job in ["job-a", "job-b"] {
+        std::fs::write(
+            dir.join(format!("spool/{job}.json")),
+            r#"{"schema":"swalp-job-v1","experiment":"fig2-linreg","mode":"smoke","seeds":1}"#,
+        )
+        .unwrap();
+    }
+
+    // long-running daemon (no --once): it drains the spool, then idles
+    let mut child = Command::new(BIN)
+        .args(["serve", dir.to_str().unwrap(), "--poll-ms", "50", "--retries", "0"])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn swalp serve");
+
+    // wait until both jobs have finished before signalling, so the
+    // `processed` count in the final record is deterministic
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !(dir.join("done/job-a.json").exists() && dir.join("done/job-b.json").exists()) {
+        if let Some(status) = child.try_wait().unwrap() {
+            panic!("daemon exited early with {status:?}");
+        }
+        assert!(Instant::now() < deadline, "daemon never finished the spooled jobs");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // SIGTERM must produce a CLEAN exit (code 0), not a signal death
+    let kill = Command::new("sh")
+        .args(["-c", &format!("kill -TERM {}", child.id())])
+        .status()
+        .expect("spawn kill");
+    assert!(kill.success(), "kill -TERM failed");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let status = loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            break status;
+        }
+        assert!(Instant::now() < deadline, "daemon ignored SIGTERM");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "graceful shutdown must exit 0, got {status:?}");
+
+    // the drain leaves a final `_daemon` record naming the cause
+    let v = json::parse_file(&dir.join("status/_daemon.json")).unwrap();
+    assert_eq!(v.get("state").unwrap().as_str().unwrap(), "stopped");
+    assert_eq!(v.get("reason").unwrap().as_str().unwrap(), "sigterm");
+    assert_eq!(v.get("processed").unwrap().as_u64().unwrap(), 2);
+
+    // a restarted daemon serves new work as if nothing happened
+    std::fs::write(
+        dir.join("spool/job-c.json"),
+        r#"{"schema":"swalp-job-v1","experiment":"fig2-linreg","mode":"smoke","seeds":1}"#,
+    )
+    .unwrap();
+    let out = Command::new(BIN)
+        .args(["serve", dir.to_str().unwrap(), "--once", "--retries", "0"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr:\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("done/job-c.json").exists(), "restarted daemon must drain new jobs");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
