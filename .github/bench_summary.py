@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
-"""Render the gemm/* and infer/* entries of a swalp-bench-v1 JSON as
-markdown tables.
+"""Render the gemm/*, attn/* and infer/* entries of a swalp-bench-v1
+JSON as markdown tables.
 
 CI's bench-smoke job pipes the output into $GITHUB_STEP_SUMMARY so the
 GEMM GFLOP/s trend — and the inference batching amplification — are
@@ -58,8 +58,37 @@ def main(path: str) -> int:
     fused_simd = gflops.get("gemm/fused-simd fixed-W8F6 256^3")
     if fused and fused_simd:
         print(f"\nfused-simd / fused (scalar) speedup on 256^3: **{fused_simd / fused:.1f}x**")
+    attn_section(doc)
     infer_section(doc)
     return 0
+
+
+def attn_section(doc) -> None:
+    """Attention-shape rows: per-head q·kᵀ scores and probs·v context
+    GEMMs at LM sequence lengths (bench_perf_hotpath "attention-shape
+    GEMMs" section)."""
+    medians = {}
+    gflops = {}
+    order = []
+    for r in doc.get("results", []):
+        name = r.get("name", "")
+        if not name.startswith("attn/"):
+            continue
+        if "median_s" in r:
+            medians[name] = r["median_s"]
+        if r.get("unit") == "GFLOP/s":
+            if name not in order:
+                order.append(name)
+            gflops[name] = r["value"]
+    if not order:
+        return
+    print("\n### Attention-shape GEMMs (transformer LM hot path)\n")
+    print("| bench | GFLOP/s | median ms/iter |")
+    print("|---|---:|---:|")
+    for name in order:
+        med = medians.get(name)
+        med_ms = f"{med * 1e3:.2f}" if med is not None else "—"
+        print(f"| `{name}` | {gflops[name]:.2f} | {med_ms} |")
 
 
 def infer_section(doc) -> None:

@@ -8,16 +8,18 @@
 //!   cargo run --release --offline --example train_lm_e2e -- \
 //!       [--steps N] [--warmup N] [--cycle N] [--with-fp32] [--out results/lm_e2e.csv]
 //!
-//! All three layers compose here: the L1 Pallas quantizers are inlined in
-//! the L2 JAX train graph, AOT-lowered to artifacts/lm_bfp8small.*, and
-//! this L3 binary owns batching, the LR schedule, the averaging cycle and
-//! metrics.
+//! Runs entirely on the native backend: the `lm_*` models in
+//! `swalp::native` declare the 3-layer causal transformer as a
+//! [`GraphModel`] (embedding + attention + LayerNorm through the shared
+//! `gemm::Engine`), so there are no artifacts to build and the run is
+//! bit-reproducible at any thread count. This L3 binary owns batching,
+//! the LR schedule, the averaging cycle and metrics.
 
 use anyhow::Result;
 
 use swalp::coordinator::{Schedule, TrainConfig, Trainer};
 use swalp::data;
-use swalp::runtime::{artifacts_dir, Manifest, Runtime};
+use swalp::runtime::ModelBackend;
 use swalp::util::cli::Args;
 use swalp::util::Timer;
 
@@ -28,17 +30,14 @@ fn main() -> Result<()> {
     let cycle = args.u64_or("cycle", 4)?;
     let out_csv = args.opt_or("out", "results/lm_e2e.csv");
 
-    let runtime = Runtime::new()?;
-    let manifest = Manifest::load(&artifacts_dir())?;
-
     let mut rows = vec![];
     let mut run = |model_name: &str| -> Result<(f64, Option<f64>, f64)> {
-        let model = runtime.load_model(&manifest, model_name)?;
-        let split = data::build(&model.spec.dataset, 7, 1.0)?;
+        let model = swalp::native::load(model_name)?;
+        let split = data::build(&model.spec().dataset, 7, 1.0)?;
         println!(
             "\n=== {model_name}: {} params, quant={}, {} train seqs ===",
-            model.spec.param_count(),
-            model.spec.quant.name,
+            model.spec().param_count(),
+            model.spec().quant.name,
             split.train.n
         );
         let trainer = Trainer::new(&model, &split);
@@ -54,14 +53,16 @@ fn main() -> Result<()> {
         let out = trainer.run(&cfg)?;
         let secs = timer.secs();
         println!(
-            "{model_name}: {:.1} steps/s | SGD-LP test loss {:.4} (tok-err {:.1}%)",
+            "{model_name}: {:.1} steps/s | SGD-LP test ppl {:.3} (loss {:.4}, tok-err {:.1}%)",
             steps as f64 / secs,
+            out.sgd_eval.loss.exp(),
             out.sgd_eval.loss,
             out.sgd_eval.metric * 100.0
         );
         if let Some(e) = &out.swa_eval {
             println!(
-                "{model_name}: SWALP test loss {:.4} (tok-err {:.1}%), m={}",
+                "{model_name}: SWALP test ppl {:.3} (loss {:.4}, tok-err {:.1}%), m={}",
+                e.loss.exp(),
                 e.loss,
                 e.metric * 100.0,
                 out.swa.as_ref().unwrap().m
@@ -76,23 +77,22 @@ fn main() -> Result<()> {
         for (s, v) in out.metrics.series("swa_test_loss") {
             rows.push(format!("{model_name},swa_test_loss,{s},{v}"));
         }
-        Ok((
-            out.sgd_eval.loss,
-            out.swa_eval.as_ref().map(|e| e.loss),
-            out.sgd_eval.metric,
-        ))
+        Ok((out.sgd_eval.loss, out.swa_eval.as_ref().map(|e| e.loss), out.sgd_eval.metric))
     };
 
     let (lp_loss, lp_swa_loss, _) = run("lm_bfp8small")?;
     if args.flag("with-fp32") {
         let (fp_loss, fp_swa_loss, _) = run("lm_fp32")?;
-        println!("\n=== summary (test loss) ===");
-        println!("fp32 SGD      {fp_loss:.4}");
-        println!("fp32 SWA      {:.4}", fp_swa_loss.unwrap_or(f64::NAN));
-        println!("bfp8 SGD-LP   {lp_loss:.4}");
-        println!("bfp8 SWALP    {:.4}", lp_swa_loss.unwrap_or(f64::NAN));
+        println!("\n=== summary (test perplexity) ===");
+        println!("fp32 SGD      {:.3}", fp_loss.exp());
+        println!("fp32 SWA      {:.3}", fp_swa_loss.map(f64::exp).unwrap_or(f64::NAN));
+        println!("bfp8 SGD-LP   {:.3}", lp_loss.exp());
+        println!("bfp8 SWALP    {:.3}", lp_swa_loss.map(f64::exp).unwrap_or(f64::NAN));
     } else {
-        println!("\nSWALP improvement over SGD-LP: {:+.4} nats", lp_loss - lp_swa_loss.unwrap_or(lp_loss));
+        println!(
+            "\nSWALP improvement over SGD-LP: {:+.4} nats",
+            lp_loss - lp_swa_loss.unwrap_or(lp_loss)
+        );
     }
 
     let path = std::path::Path::new(&out_csv);

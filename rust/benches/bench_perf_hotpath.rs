@@ -151,6 +151,37 @@ fn main() {
         report(&mut log, &r, "GFLOP/s", gflop / r.median_s);
     }
 
+    // ---- attention-shape GEMMs (the transformer LM hot path) ----
+    // per-head scores q·kᵀ ([t,hd]·[t,hd]ᵀ → [t,t]) and context probs·v
+    // ([t,t]·[t,hd]) at LM sequence lengths; hd = 24 is the lm_* models'
+    // head width (d_model 96 / 4 heads). The probs operand goes through
+    // the real masked softmax so the context rows multiply the dense
+    // small-magnitude distribution the layer actually produces.
+    {
+        let e = gemm::Engine::dispatched();
+        let (gw, gi, gs) = if quick { (1, 2, 0.03) } else { (2, 5, 0.5) };
+        let hd = 24usize;
+        for &t in &[64usize, 256] {
+            let q: Vec<f32> = (0..t * hd).map(|i| ((i % 601) as f32 - 300.0) * 0.003).collect();
+            let k: Vec<f32> = (0..t * hd).map(|i| ((i % 419) as f32 - 209.0) * 0.005).collect();
+            let mut scores = vec![0.0f32; t * t];
+            let gflop = 2.0 * (t * hd * t) as f64 / 1e9;
+            let r = bench(&format!("attn/scores a_bt {t}x{hd}x{t}"), gw, gi, gs, || {
+                e.matmul_a_bt(&q, &k, t, hd, t, &mut scores);
+            });
+            report(&mut log, &r, "GFLOP/s", gflop / r.median_s);
+
+            swalp::native::layers::masked_softmax_rows(&mut scores, t, true);
+            let v = q.clone();
+            let mut ctx = vec![0.0f32; t * hd];
+            let gflop = 2.0 * (t * t * hd) as f64 / 1e9;
+            let r = bench(&format!("attn/context {t}x{t}x{hd}"), gw, gi, gs, || {
+                e.matmul(&scores, &v, t, t, hd, &mut ctx);
+            });
+            report(&mut log, &r, "GFLOP/s", gflop / r.median_s);
+        }
+    }
+
     let n = 1 << 20;
     let xs: Vec<f32> = (0..n).map(|i| ((i % 997) as f32 - 498.0) * 0.01).collect();
 
@@ -190,6 +221,7 @@ fn main() {
         "mlp_qmm_fx86",
         "mlp_bfp8small",
         "cifar10_vgg_bfp8small",
+        "lm_bfp8small",
         "wage_cnn",
     ] {
         let model = native::load(name).unwrap();

@@ -123,6 +123,9 @@ pub enum EvalKind {
     /// SWA test error after one averaging epoch and at the end
     /// (Fig. 3 left / Table 5).
     SwaTrajectory,
+    /// `sgd_ppl` / `swalp_ppl` / `gain` from the final test eval of a
+    /// token-level task: `exp(mean per-token CE)` (the `lm` experiment).
+    Perplexity,
 }
 
 /// One grid cell: a fully-specified training configuration whose seed
@@ -290,7 +293,7 @@ pub fn find(id: &str) -> Option<&'static ExperimentSpec> {
     SPECS.iter().find(|s| s.id == id)
 }
 
-static SPECS: [ExperimentSpec; 10] = [
+static SPECS: [ExperimentSpec; 11] = [
     ExperimentSpec {
         id: "fig2-linreg",
         title: "Fig 2 (left): linear regression, fixed point W8F6",
@@ -359,6 +362,14 @@ static SPECS: [ExperimentSpec; 10] = [
         notes: "expected: SWALP < SGD-LP on the BatchNorm-equipped PreResNet-20; SWA evals \
                 renormalize BN statistics from the eval batch (the paper's BN-recompute note)",
         kind: ExpKind::Grid { cells: prn20_cells, extras: None },
+    },
+    ExperimentSpec {
+        id: "lm",
+        title: "Transformer LM (Zipf bigrams): SWALP beyond the conv stack",
+        notes: "expected: swalp_ppl < sgd_ppl for the BFP8 transformer (averaging washes \
+                out weight-quantization + gradient noise); the fp32-SGD row is the \
+                full-precision reference floor",
+        kind: ExpKind::Grid { cells: lm_cells, extras: None },
     },
 ];
 
@@ -700,6 +711,40 @@ fn prn20_cells(ctx: &Ctx) -> Vec<RunSpec> {
         .labels(&[("run", label)])
         // average once per epoch (paper default)
         .cycle(CyclePolicy::PerEpoch(1))
+        .swa(swa)
+        .seeds(ctx.seeds())
+    })
+    .collect()
+}
+
+// ---------------------------------------------------------------------
+// Transformer LM: SWALP on the attention/LayerNorm/embedding stack
+// ---------------------------------------------------------------------
+
+fn lm_cells(ctx: &Ctx) -> Vec<RunSpec> {
+    // step-sized (not epoch-sized) so the averaging window stays long at
+    // every tier: the SWALP-vs-SGD-LP ordering needs the iterate in its
+    // constant-LR noise ball before folding starts
+    let steps = ctx.pick(6_000, 640);
+    let warmup = ctx.pick(4_000, 384);
+    let scale = ctx.scale(0.5, 0.1);
+    [
+        ("SGD-FL", "lm_fp32", false),
+        ("SGD-LP", "lm_bfp8small", false),
+        ("SWALP", "lm_bfp8small", true),
+    ]
+    .into_iter()
+    .map(|(label, model, swa)| {
+        RunSpec::new(
+            label,
+            model,
+            DataSpec::Model { seed: 81, scale },
+            Sizing::Steps { steps, warmup },
+            SchedSpec::SwalpPaper { alpha1: 0.2, swa_lr: 0.07 },
+            EvalKind::Perplexity,
+        )
+        .labels(&[("run", label)])
+        .cycle(CyclePolicy::Steps(ctx.pick(8, 8)))
         .swa(swa)
         .seeds(ctx.seeds())
     })

@@ -448,6 +448,18 @@ fn run_item(item: &WorkItem) -> Result<SeedOut> {
                 }
             }
         }
+        EvalKind::Perplexity => {
+            // exp(mean per-token test CE): the graph's SoftmaxCe head
+            // normalizes token tasks per row, so `loss` is already the
+            // per-token mean
+            let sgd_ppl = out.sgd_eval.loss.exp();
+            push("sgd_ppl", sgd_ppl);
+            if let Some(e) = &out.swa_eval {
+                let swalp_ppl = e.loss.exp();
+                push("swalp_ppl", swalp_ppl);
+                push("gain", sgd_ppl - swalp_ppl);
+            }
+        }
         EvalKind::SwaTrajectory => {
             let curve = out.metrics.series("swa_test_metric");
             let after1 = curve

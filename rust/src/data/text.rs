@@ -8,6 +8,13 @@ use crate::rng::StreamRng;
 
 use super::{Dataset, Split};
 
+/// Per-split stream tags: each split draws from its own `StreamRng`, so
+/// the test corpus is a function of `(seed, n_test)` alone — resizing
+/// the train split (e.g. `--quick` scaling) can never shift the test
+/// tokens (pinned by `tests/prop_invariants.rs`).
+const TRAIN_STREAM: u64 = 0x217F;
+const TEST_STREAM: u64 = 0x7E57_217F;
+
 pub fn zipf_lm_split(
     vocab: usize,
     seq_len: usize,
@@ -15,13 +22,19 @@ pub fn zipf_lm_split(
     n_test: usize,
     seed: u64,
 ) -> Split {
-    let mut rng = StreamRng::new(seed ^ 0x217F);
+    // degenerate-size guards: a 0-length sequence has no (x, y) pair to
+    // emit and an empty vocabulary has no tokens to draw — floor both so
+    // every call returns a well-formed split (n = 0 is fine: it is just
+    // an empty dataset with valid shapes)
+    let vocab = vocab.max(1);
+    let seq_len = seq_len.max(1);
     // Zipf unigram weights
     let weights: Vec<f64> = (0..vocab).map(|i| 1.0 / (i as f64 + 1.0)).collect();
     // deterministic "preferred successor" permutation-ish map
     let succ: Vec<usize> = (0..vocab).map(|t| (t * 7 + 3) % vocab).collect();
 
-    let make = |rng: &mut StreamRng, n: usize, name: &str| {
+    let make = |n: usize, name: &str, stream: u64| {
+        let mut rng = StreamRng::new(seed ^ stream);
         let mut x = Vec::with_capacity(n * seq_len);
         let mut y = Vec::with_capacity(n * seq_len);
         for _ in 0..n {
@@ -51,8 +64,8 @@ pub fn zipf_lm_split(
             classes: vocab,
         }
     };
-    let train = make(&mut rng, n_train, "zipf_train");
-    let test = make(&mut rng, n_test, "zipf_test");
+    let train = make(n_train, "zipf_train", TRAIN_STREAM);
+    let test = make(n_test, "zipf_test", TEST_STREAM);
     Split { train, test }
 }
 

@@ -1,0 +1,517 @@
+//! The transformer layers: [`Embedding`] (token + positional table
+//! gather with a scatter-add backward) and causal [`MultiHeadAttention`]
+//! — the long-sequence workload the conv stack never exercises.
+//!
+//! Both follow the SWALP site contract: the attention block hosts one
+//! Q_A/Q_E site, `{name}.attn.act`, applied to the per-head-merged
+//! context *before* the output projection (mirroring the Python
+//! reference's `qa("…attn.act")` placement); its seed derives from
+//! `(step, site_id, TAG_A/TAG_E)` like every other site. The projection
+//! GEMMs run on the blocked [`gemm::Engine`]; the per-head score /
+//! context matmuls iterate `(batch, head)` serially and call the engine
+//! inside, so the whole layer stays bit-identical at any thread count
+//! (the engine splits by rows only, and the softmax reductions are
+//! serial f64 per row).
+//!
+//! Weight-quantization policy comes for free: the embedding tables and
+//! the projection matrices are ordinary 2-D trainables, so Q_W/Q_G/Q_M
+//! see them with the standard per-row BFP block exponents.
+
+use anyhow::{bail, Result};
+
+use crate::quant::{self, spec::Role};
+use crate::rng::StreamRng;
+use crate::tensor::{NamedTensors, Tensor};
+
+use super::super::gemm::{self, Epilogue};
+use super::{expect_ch, idx_of, Act, LayerCache, LayerCtx, QLayer, Tape};
+
+/// Token embedding: `out[b,t] = W[token] + P[t]` over a `[b, seq, 1, 1]`
+/// token activation (exact-integral f32 ids), producing `[b, seq, 1, d]`.
+///
+/// Backward is the scatter-add adjoint of the gather: each cotangent row
+/// accumulates into its token's table row (`g_W[token] += d_row`) and
+/// its position's row (`g_P[t] += Σ_batch d_row`), serially in forward
+/// order — deterministic at any thread count and FD-checked against a
+/// dense perturbation in `tests/layer_gradients.rs`.
+pub struct Embedding {
+    name: String,
+    w_name: String,
+    pos_name: String,
+    pub vocab: usize,
+    pub d: usize,
+    /// Positional-table length — the maximum sequence length.
+    pub seq: usize,
+    w_idx: usize,
+    pos_idx: usize,
+}
+
+impl Embedding {
+    pub fn new(name: &str, vocab: usize, d: usize, seq: usize) -> Embedding {
+        Embedding {
+            name: name.to_string(),
+            w_name: format!("{name}.w"),
+            pos_name: format!("{name}.pos"),
+            vocab,
+            d,
+            seq,
+            w_idx: usize::MAX,
+            pos_idx: usize::MAX,
+        }
+    }
+}
+
+impl QLayer for Embedding {
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        out.push((self.pos_name.clone(), vec![self.seq, self.d]));
+        out.push((self.w_name.clone(), vec![self.vocab, self.d]));
+    }
+
+    fn init(&self, rng: &mut StreamRng, out: &mut NamedTensors) {
+        // Normal(0, 0.02) for both tables, draws in declaration order
+        // (the Python reference's transformer init)
+        let std = 0.02f32;
+        let pos = (0..self.seq * self.d).map(|_| rng.normal() * std).collect();
+        out.push((
+            self.pos_name.clone(),
+            Tensor { shape: vec![self.seq, self.d], data: pos },
+        ));
+        let w = (0..self.vocab * self.d).map(|_| rng.normal() * std).collect();
+        out.push((
+            self.w_name.clone(),
+            Tensor { shape: vec![self.vocab, self.d], data: w },
+        ));
+    }
+
+    fn resolve(&mut self, tr_names: &[String], _state_names: &[String]) {
+        self.w_idx = idx_of(tr_names, &self.w_name);
+        self.pos_idx = idx_of(tr_names, &self.pos_name);
+    }
+
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        if act.ch != 1 || act.w != 1 {
+            bail!(
+                "{}: input is [{}x{}x{}], want a [seq, 1, 1] token batch",
+                self.name,
+                act.h,
+                act.w,
+                act.ch
+            );
+        }
+        if act.h > self.seq {
+            bail!("{}: sequence {} exceeds table length {}", self.name, act.h, self.seq);
+        }
+        let w = cx.tr.at(self.w_idx, &self.w_name)?;
+        let pos = cx.tr.at(self.pos_idx, &self.pos_name)?;
+        let seq = act.h;
+        let mut out = vec![0.0f32; act.b * seq * self.d];
+        for (i, &tv) in act.data.iter().enumerate() {
+            let tok = tv as usize;
+            if tok as f32 != tv || tok >= self.vocab {
+                bail!("{}: token {tv} is not an id below vocab {}", self.name, self.vocab);
+            }
+            let t = i % seq;
+            let orow = &mut out[i * self.d..(i + 1) * self.d];
+            let wrow = &w.data[tok * self.d..(tok + 1) * self.d];
+            let prow = &pos.data[t * self.d..(t + 1) * self.d];
+            for ((o, &wv), &pv) in orow.iter_mut().zip(wrow).zip(prow) {
+                *o = wv + pv;
+            }
+        }
+        if cx.q.train() {
+            tape.caches.push(LayerCache::Embed { tokens: act.data });
+        }
+        Ok(Act { data: out, b: act.b, h: seq, w: 1, ch: self.d })
+    }
+
+    fn backward(
+        &self,
+        _cx: &LayerCtx,
+        d: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        _need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Embed { tokens } = cache else {
+            bail!("{}: forward/backward cache mismatch", self.name);
+        };
+        let seq = d.h;
+        let mut gw = vec![0.0f32; self.vocab * self.d];
+        let mut gp = vec![0.0f32; self.seq * self.d];
+        // serial scatter-add in forward order: repeated tokens accumulate
+        // deterministically regardless of thread count
+        for (i, &tv) in tokens.iter().enumerate() {
+            let tok = tv as usize;
+            let t = i % seq;
+            let drow = &d.data[i * self.d..(i + 1) * self.d];
+            let grow = &mut gw[tok * self.d..(tok + 1) * self.d];
+            for (g, &dv) in grow.iter_mut().zip(drow) {
+                *g += dv;
+            }
+            let prow = &mut gp[t * self.d..(t + 1) * self.d];
+            for (g, &dv) in prow.iter_mut().zip(drow) {
+                *g += dv;
+            }
+        }
+        grads.push((self.pos_name.clone(), Tensor::new(vec![self.seq, self.d], gp)?));
+        grads.push((self.w_name.clone(), Tensor::new(vec![self.vocab, self.d], gw)?));
+        // integer tokens carry no gradient — the embedding is always the
+        // entry layer, so an empty cotangent suffices
+        Ok(Act { data: Vec::new(), b: d.b, h: seq, w: 1, ch: 1 })
+    }
+}
+
+/// Numerically stable row softmax over a `[t, t]` score matrix, in
+/// place. With `causal`, row `i` attends to columns `j ≤ i` only; masked
+/// entries come out exactly 0 (no `-1e9` fill — the mask never enters
+/// the arithmetic). Each row subtracts its live maximum before
+/// exponentiating and normalizes by a serial f64 sum, so arbitrarily
+/// large logit magnitudes stay finite (pinned by `gemm_parity`'s
+/// masked-softmax test).
+pub fn masked_softmax_rows(scores: &mut [f32], t: usize, causal: bool) {
+    debug_assert_eq!(scores.len(), t * t);
+    for (i, row) in scores.chunks_mut(t).enumerate() {
+        let live = if causal { i + 1 } else { t };
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &row[..live] {
+            if v > mx {
+                mx = v;
+            }
+        }
+        let mut sum = 0.0f64;
+        for v in row[..live].iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v as f64;
+        }
+        let inv = (1.0 / sum) as f32;
+        for v in row[..live].iter_mut() {
+            *v *= inv;
+        }
+        for v in row[live..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Causal multi-head self-attention over `[b, seq, 1, d]` activations:
+/// a combined QKV projection `[d, 3d]`, per-head `q·kᵀ` scores through
+/// [`masked_softmax_rows`], context `probs·v`, one Q_A/Q_E site on the
+/// merged context, and the output projection `[d, d]`.
+pub struct MultiHeadAttention {
+    name: String,
+    qkv_name: String,
+    out_name: String,
+    site: String,
+    pub d: usize,
+    pub heads: usize,
+    /// Causal (autoregressive) masking; FD tests also exercise the
+    /// unmasked variant.
+    pub causal: bool,
+    qkv_idx: usize,
+    out_idx: usize,
+}
+
+impl MultiHeadAttention {
+    pub fn new(name: &str, d: usize, heads: usize) -> MultiHeadAttention {
+        assert!(heads > 0 && d % heads == 0, "{name}: d {d} not divisible by heads {heads}");
+        MultiHeadAttention {
+            name: name.to_string(),
+            qkv_name: format!("{name}.attn.qkv.w"),
+            out_name: format!("{name}.attn.out.w"),
+            site: format!("{name}.attn.act"),
+            d,
+            heads,
+            causal: true,
+            qkv_idx: usize::MAX,
+            out_idx: usize::MAX,
+        }
+    }
+
+    /// Disable the causal mask (the FD tests' full-attention variant).
+    pub fn non_causal(mut self) -> MultiHeadAttention {
+        self.causal = false;
+        self
+    }
+
+    /// Copy head `h`'s `[t, hd]` panel out of a `[rows, width]` buffer.
+    fn gather(
+        src: &[f32],
+        rows0: usize,
+        t: usize,
+        width: usize,
+        col0: usize,
+        hd: usize,
+        dst: &mut [f32],
+    ) {
+        for i in 0..t {
+            let s = (rows0 + i) * width + col0;
+            dst[i * hd..(i + 1) * hd].copy_from_slice(&src[s..s + hd]);
+        }
+    }
+
+    /// Add head `h`'s `[t, hd]` panel into a `[rows, width]` buffer.
+    fn scatter(
+        dst: &mut [f32],
+        rows0: usize,
+        t: usize,
+        width: usize,
+        col0: usize,
+        hd: usize,
+        src: &[f32],
+    ) {
+        for i in 0..t {
+            let s = (rows0 + i) * width + col0;
+            dst[s..s + hd].copy_from_slice(&src[i * hd..(i + 1) * hd]);
+        }
+    }
+}
+
+impl QLayer for MultiHeadAttention {
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        out.push((self.qkv_name.clone(), vec![self.d, 3 * self.d]));
+        out.push((self.out_name.clone(), vec![self.d, self.d]));
+    }
+
+    fn init(&self, rng: &mut StreamRng, out: &mut NamedTensors) {
+        // Normal(0, 0.02) projections, draws in declaration order
+        let std = 0.02f32;
+        let qkv = (0..self.d * 3 * self.d).map(|_| rng.normal() * std).collect();
+        out.push((
+            self.qkv_name.clone(),
+            Tensor { shape: vec![self.d, 3 * self.d], data: qkv },
+        ));
+        let w = (0..self.d * self.d).map(|_| rng.normal() * std).collect();
+        out.push((
+            self.out_name.clone(),
+            Tensor { shape: vec![self.d, self.d], data: w },
+        ));
+    }
+
+    fn resolve(&mut self, tr_names: &[String], _state_names: &[String]) {
+        self.qkv_idx = idx_of(tr_names, &self.qkv_name);
+        self.out_idx = idx_of(tr_names, &self.out_name);
+    }
+
+    fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
+        expect_ch(&act, self.d, &self.name)?;
+        if act.w != 1 {
+            bail!(
+                "{}: input is [{}x{}x{}], want a [seq, 1, d] sequence",
+                self.name,
+                act.h,
+                act.w,
+                act.ch
+            );
+        }
+        let wqkv = cx.tr.at(self.qkv_idx, &self.qkv_name)?;
+        let wout = cx.tr.at(self.out_idx, &self.out_name)?;
+        let (b, t) = (act.b, act.h);
+        let rows = b * t;
+        let (d, hd) = (self.d, self.d / self.heads);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let train = cx.q.train();
+
+        // combined QKV projection: one [rows, 3d] GEMM on the engine
+        let mut qkv = vec![0.0f32; rows * 3 * d];
+        gemm::matmul_into_quant(
+            &act.data,
+            &wqkv.data,
+            rows,
+            d,
+            3 * d,
+            &mut qkv,
+            &Epilogue { bias: None, relu: false, quant: None, b_cache: cx.q.panel_cache },
+        );
+
+        // per-(batch, head) attention: serial outer loop (bit-identical
+        // ordering), engine GEMMs inside
+        let mut ctx = vec![0.0f32; rows * d];
+        let mut probs_tape = if train { vec![0.0f32; b * self.heads * t * t] } else { Vec::new() };
+        let mut q = vec![0.0f32; t * hd];
+        let mut k = vec![0.0f32; t * hd];
+        let mut v = vec![0.0f32; t * hd];
+        let mut scores = vec![0.0f32; t * t];
+        let mut cvec = vec![0.0f32; t * hd];
+        for bi in 0..b {
+            for h in 0..self.heads {
+                let r0 = bi * t;
+                Self::gather(&qkv, r0, t, 3 * d, h * hd, hd, &mut q);
+                Self::gather(&qkv, r0, t, 3 * d, d + h * hd, hd, &mut k);
+                Self::gather(&qkv, r0, t, 3 * d, 2 * d + h * hd, hd, &mut v);
+                gemm::matmul_a_bt(&q, &k, t, hd, t, &mut scores);
+                for s in scores.iter_mut() {
+                    *s *= scale;
+                }
+                masked_softmax_rows(&mut scores, t, self.causal);
+                if train {
+                    let p0 = (bi * self.heads + h) * t * t;
+                    probs_tape[p0..p0 + t * t].copy_from_slice(&scores);
+                }
+                gemm::matmul(&scores, &v, t, t, hd, &mut cvec);
+                Self::scatter(&mut ctx, r0, t, d, h * hd, hd, &cvec);
+            }
+        }
+
+        // Q_A on the merged context — the block's activation site
+        let ctx_q = quant::apply_format_owned(
+            cx.q.a_fmt,
+            ctx,
+            &[rows, d],
+            cx.q.act_seed(&self.site),
+            Role::Act,
+            false,
+        );
+
+        // output projection
+        let mut out = vec![0.0f32; rows * d];
+        gemm::matmul_into_quant(
+            &ctx_q,
+            &wout.data,
+            rows,
+            d,
+            d,
+            &mut out,
+            &Epilogue { bias: None, relu: false, quant: None, b_cache: cx.q.panel_cache },
+        );
+        if train {
+            tape.caches.push(LayerCache::Attn {
+                x: act.data,
+                qkv,
+                probs: probs_tape,
+                ctx_q,
+            });
+        }
+        Ok(Act { data: out, b, h: t, w: 1, ch: d })
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        d_out: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::Attn { x, qkv, probs, ctx_q } = cache else {
+            bail!("{}: forward/backward cache mismatch", self.name);
+        };
+        let wqkv = cx.tr.at(self.qkv_idx, &self.qkv_name)?;
+        let wout = cx.tr.at(self.out_idx, &self.out_name)?;
+        let (b, t) = (d_out.b, d_out.h);
+        let rows = b * t;
+        let (d, hd) = (self.d, self.d / self.heads);
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        // output projection: weight grad, then the context cotangent
+        let mut gwo = vec![0.0f32; d * d];
+        gemm::matmul_at_b(&ctx_q, &d_out.data, rows, d, d, &mut gwo);
+        let mut d_ctx = vec![0.0f32; rows * d];
+        gemm::matmul_a_bt(&d_out.data, &wout.data, rows, d, d, &mut d_ctx);
+
+        // Q_E on the context cotangent — the adjoint of the Q_A site
+        let d_ctx = quant::apply_format_owned(
+            cx.q.e_fmt,
+            d_ctx,
+            &[rows, d],
+            cx.q.err_seed(&self.site),
+            Role::Err,
+            false,
+        );
+
+        // per-(batch, head) attention backward, serial outer loop
+        let mut d_qkv = vec![0.0f32; rows * 3 * d];
+        let mut q = vec![0.0f32; t * hd];
+        let mut k = vec![0.0f32; t * hd];
+        let mut v = vec![0.0f32; t * hd];
+        let mut dch = vec![0.0f32; t * hd];
+        let mut ds = vec![0.0f32; t * t];
+        let mut gh = vec![0.0f32; t * hd];
+        for bi in 0..b {
+            for h in 0..self.heads {
+                let r0 = bi * t;
+                Self::gather(&qkv, r0, t, 3 * d, h * hd, hd, &mut q);
+                Self::gather(&qkv, r0, t, 3 * d, d + h * hd, hd, &mut k);
+                Self::gather(&qkv, r0, t, 3 * d, 2 * d + h * hd, hd, &mut v);
+                Self::gather(&d_ctx, r0, t, d, h * hd, hd, &mut dch);
+                let p = &probs[(bi * self.heads + h) * t * t..(bi * self.heads + h + 1) * t * t];
+                // dv = probsᵀ · d_ctx_head
+                gemm::matmul_at_b(p, &dch, t, t, hd, &mut gh);
+                Self::scatter(&mut d_qkv, r0, t, 3 * d, 2 * d + h * hd, hd, &gh);
+                // d_probs = d_ctx_head · vᵀ
+                gemm::matmul_a_bt(&dch, &v, t, hd, t, &mut ds);
+                // softmax backward per row (masked entries have p = 0, so
+                // they drop out of both the dot and the product), then
+                // the forward 1/√hd scale
+                for (row_p, row_ds) in p.chunks(t).zip(ds.chunks_mut(t)) {
+                    let mut dot = 0.0f64;
+                    for (&pv, &dv) in row_p.iter().zip(row_ds.iter()) {
+                        dot += pv as f64 * dv as f64;
+                    }
+                    let dotf = dot as f32;
+                    for (dv, &pv) in row_ds.iter_mut().zip(row_p.iter()) {
+                        *dv = pv * (*dv - dotf) * scale;
+                    }
+                }
+                // dq = ds · k ; dk = dsᵀ · q
+                gemm::matmul(&ds, &k, t, t, hd, &mut gh);
+                Self::scatter(&mut d_qkv, r0, t, 3 * d, h * hd, hd, &gh);
+                gemm::matmul_at_b(&ds, &q, t, t, hd, &mut gh);
+                Self::scatter(&mut d_qkv, r0, t, 3 * d, d + h * hd, hd, &gh);
+            }
+        }
+
+        // QKV projection: weight grad + input cotangent
+        let mut gwqkv = vec![0.0f32; d * 3 * d];
+        gemm::matmul_at_b(&x, &d_qkv, rows, d, 3 * d, &mut gwqkv);
+        grads.push((self.qkv_name.clone(), Tensor::new(vec![d, 3 * d], gwqkv)?));
+        grads.push((self.out_name.clone(), Tensor::new(vec![d, d], gwo)?));
+        if !need_dx {
+            return Ok(Act { data: Vec::new(), b, h: t, w: 1, ch: d });
+        }
+        let mut dx = vec![0.0f32; rows * d];
+        gemm::matmul_a_bt(&d_qkv, &wqkv.data, rows, 3 * d, d, &mut dx);
+        Ok(Act { data: dx, b, h: t, w: 1, ch: d })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_softmax_rows_is_causal_and_normalized() {
+        let mut s = vec![0.5f32; 16];
+        masked_softmax_rows(&mut s, 4, true);
+        for (i, row) in s.chunks(4).enumerate() {
+            let live = i + 1;
+            for (j, &v) in row.iter().enumerate() {
+                if j < live {
+                    assert!((v - 1.0 / live as f32).abs() < 1e-6, "row {i} col {j}: {v}");
+                } else {
+                    assert_eq!(v, 0.0, "masked entry row {i} col {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_rejects_out_of_range_tokens() {
+        use super::super::{Mode, Params, QCtx};
+        use crate::quant::QuantFormat;
+        let mut e = Embedding::new("emb", 4, 2, 3);
+        let mut tr = NamedTensors::new();
+        e.init(&mut StreamRng::new(1), &mut tr);
+        tr.sort_by(|a, b| a.0.cmp(&b.0));
+        let names: Vec<String> = tr.iter().map(|(n, _)| n.clone()).collect();
+        e.resolve(&names, &[]);
+        let q = QCtx::new(&QuantFormat::None, &QuantFormat::None, 0, Mode::Eval);
+        let cx = LayerCtx { q: &q, tr: Params::new(&tr), state: Params::new(&[]) };
+        let bad = Act { data: vec![0.0, 4.0, 1.0], b: 1, h: 3, w: 1, ch: 1 };
+        assert!(e.forward(&cx, bad, &mut Tape::default()).is_err());
+        let frac = Act { data: vec![0.0, 1.5, 1.0], b: 1, h: 3, w: 1, ch: 1 };
+        assert!(e.forward(&cx, frac, &mut Tape::default()).is_err());
+        let ok = Act { data: vec![0.0, 3.0, 1.0], b: 1, h: 3, w: 1, ch: 1 };
+        let out = e.forward(&cx, ok, &mut Tape::default()).unwrap();
+        assert_eq!((out.b, out.h, out.w, out.ch), (1, 3, 1, 2));
+    }
+}

@@ -18,7 +18,7 @@ use crate::tensor::{NamedTensors, Tensor};
 use super::super::gemm::{self, Epilogue, FusedQuant};
 use super::super::kernels;
 use super::fuse::{FuseTail, GemmLayer};
-use super::{col_sums, expect_flat, idx_of, Act, LayerCache, LayerCtx, QLayer, Tape};
+use super::{col_sums, expect_ch, idx_of, Act, LayerCache, LayerCtx, QLayer, Tape};
 
 /// Fully connected layer `z = x·W (+ b)`.
 ///
@@ -35,6 +35,9 @@ pub struct Dense {
     /// `[d_in, d_out]`; the data layout is identical.
     vec_w: bool,
     he_init: bool,
+    /// Explicit normal-init std overriding the He/zeros choice (the
+    /// transformer layers' 0.02 init).
+    init_std: Option<f32>,
     l2: f32,
     w_idx: usize,
     b_idx: usize,
@@ -55,6 +58,7 @@ impl Dense {
             bias,
             vec_w: false,
             he_init,
+            init_std: None,
             l2: 0.0,
             w_idx: usize::MAX,
             b_idx: usize::MAX,
@@ -75,6 +79,20 @@ impl Dense {
     pub fn vector(d_in: usize) -> Dense {
         let mut d = Dense::named("", d_in, 1, false, false);
         d.vec_w = true;
+        d
+    }
+
+    /// He-normal weights, no bias (the transformer FFN expansion — the
+    /// Python reference's bias-free `ff1`).
+    pub fn he_no_bias(name: &str, d_in: usize, d_out: usize) -> Dense {
+        Dense::named(name, d_in, d_out, false, true)
+    }
+
+    /// Normal(0, std) weights, no bias (the transformer projections'
+    /// 0.02 init, mirroring the Python reference).
+    pub fn normal_std(name: &str, d_in: usize, d_out: usize, std: f32) -> Dense {
+        let mut d = Dense::named(name, d_in, d_out, false, false);
+        d.init_std = Some(std);
         d
     }
 
@@ -107,9 +125,13 @@ impl QLayer for Dense {
         if self.bias {
             out.push((self.b_name.clone(), Tensor::zeros(&[self.d_out])));
         }
-        let w = if self.he_init {
-            // He-normal: std = sqrt(2 / fan_in), draws in declaration order
-            let std = (2.0 / self.d_in as f32).sqrt();
+        // He-normal: std = sqrt(2 / fan_in), draws in declaration order
+        let std = if self.he_init {
+            Some((2.0 / self.d_in as f32).sqrt())
+        } else {
+            self.init_std
+        };
+        let w = if let Some(std) = std {
             let data = (0..self.d_in * self.d_out).map(|_| rng.normal() * std).collect();
             Tensor { shape: self.w_shape(), data }
         } else {
@@ -140,14 +162,15 @@ impl QLayer for Dense {
     }
 
     fn forward(&self, cx: &LayerCtx, act: Act, tape: &mut Tape) -> Result<Act> {
-        expect_flat(&act, self.d_in, &self.w_name)?;
+        expect_ch(&act, self.d_in, &self.w_name)?;
         let w = cx.tr.at(self.w_idx, &self.w_name)?;
         let bias_t = if self.bias { Some(cx.tr.at(self.b_idx, &self.b_name)?) } else { None };
-        let mut z = vec![0.0f32; act.b * self.d_out];
+        let rows = act.rows();
+        let mut z = vec![0.0f32; rows * self.d_out];
         gemm::matmul_into_quant(
             &act.data,
             &w.data,
-            act.b,
+            rows,
             self.d_in,
             self.d_out,
             &mut z,
@@ -159,10 +182,11 @@ impl QLayer for Dense {
                 b_cache: cx.q.panel_cache,
             },
         );
+        let out = Act { data: z, b: act.b, h: act.h, w: act.w, ch: self.d_out };
         if cx.q.train() {
             tape.caches.push(LayerCache::Dense { input: act.data });
         }
-        Ok(Act::flat(act.b, self.d_out, z))
+        Ok(out)
     }
 
     fn backward(
@@ -177,9 +201,9 @@ impl QLayer for Dense {
             bail!("{}: forward/backward cache mismatch", self.w_name);
         };
         let w = cx.tr.at(self.w_idx, &self.w_name)?;
-        let b = d.b;
+        let rows = d.rows();
         let mut gw = vec![0.0f32; self.d_in * self.d_out];
-        gemm::matmul_at_b(&input, &d.data, b, self.d_in, self.d_out, &mut gw);
+        gemm::matmul_at_b(&input, &d.data, rows, self.d_in, self.d_out, &mut gw);
         if self.l2 != 0.0 {
             for (g, &wv) in gw.iter_mut().zip(&w.data) {
                 *g += self.l2 * wv;
@@ -191,24 +215,25 @@ impl QLayer for Dense {
             grads.push((self.b_name.clone(), Tensor::new(vec![self.d_out], gb)?));
         }
         if !need_dx {
-            return Ok(Act::flat(b, self.d_in, Vec::new()));
+            return Ok(Act { data: Vec::new(), b: d.b, h: d.h, w: d.w, ch: self.d_in });
         }
-        let mut dx = vec![0.0f32; b * self.d_in];
-        gemm::matmul_a_bt(&d.data, &w.data, b, self.d_out, self.d_in, &mut dx);
-        Ok(Act::flat(b, self.d_in, dx))
+        let mut dx = vec![0.0f32; rows * self.d_in];
+        gemm::matmul_a_bt(&d.data, &w.data, rows, self.d_out, self.d_in, &mut dx);
+        Ok(Act { data: dx, b: d.b, h: d.h, w: d.w, ch: self.d_in })
     }
 }
 
 impl GemmLayer for Dense {
     fn forward_fused(&self, cx: &LayerCtx, act: Act, tail: &FuseTail) -> Result<Act> {
-        expect_flat(&act, self.d_in, &self.w_name)?;
+        expect_ch(&act, self.d_in, &self.w_name)?;
         let w = cx.tr.at(self.w_idx, &self.w_name)?;
         let bias_t = if self.bias { Some(cx.tr.at(self.b_idx, &self.b_name)?) } else { None };
-        let mut z = vec![0.0f32; act.b * self.d_out];
+        let rows = act.rows();
+        let mut z = vec![0.0f32; rows * self.d_out];
         gemm::matmul_into_quant(
             &act.data,
             &w.data,
-            act.b,
+            rows,
             self.d_in,
             self.d_out,
             &mut z,
@@ -225,7 +250,7 @@ impl GemmLayer for Dense {
                 b_cache: cx.q.panel_cache,
             },
         );
-        Ok(Act::flat(act.b, self.d_out, z))
+        Ok(Act { data: z, b: act.b, h: act.h, w: act.w, ch: self.d_out })
     }
 }
 

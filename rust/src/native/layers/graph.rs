@@ -19,12 +19,19 @@ pub enum InputKind {
     Flat { d: usize },
     /// A `[b, ch, hw, hw]` image batch, transposed once to channels-last.
     Image { ch: usize, hw: usize },
+    /// A `[b, seq]` integer-token batch (tokens arrive as exact-integral
+    /// f32 ids). Enters the stack as `[b, seq, 1, 1]` so an `Embedding`
+    /// layer can gather rows; every downstream layer sees `rows = b·seq`
+    /// position-wise activations.
+    Tokens { seq: usize },
 }
 
 /// The loss head closing the graph.
 pub enum Head {
-    /// Softmax cross-entropy over `classes` logits; eval metric is the
-    /// batch error count.
+    /// Softmax cross-entropy over `classes` logits, averaged over output
+    /// rows (`b` for flat/image models, `b·seq` for token models — the
+    /// per-token LM loss, so `exp(loss)` is perplexity); eval metric is
+    /// the row error count.
     SoftmaxCe { classes: usize },
     /// Squared error against a scalar target (linear regression):
     /// loss = Σr²/b, eval metric = Σr², gradient post-scaled by 2/b (the
@@ -168,6 +175,21 @@ impl GraphModel {
                 }
                 Ok(Act { data: nchw_to_nhwc(x, b, ch, hw, hw), b, h: hw, w: hw, ch })
             }
+            InputKind::Tokens { seq } => {
+                if x.len() != b * seq {
+                    bail!("input length {} != batch {b} × seq {seq}", x.len());
+                }
+                Ok(Act { data: x.to_vec(), b, h: seq, w: 1, ch: 1 })
+            }
+        }
+    }
+
+    /// Output rows per sample: 1 for flat/image models, `seq` for token
+    /// models (one logit row per position).
+    fn rows_per_sample(&self) -> usize {
+        match self.input {
+            InputKind::Tokens { seq } => seq,
+            _ => 1,
         }
     }
 
@@ -186,9 +208,10 @@ impl GraphModel {
         let out = forward_stack(&self.layers, &cx, act, &mut tape)?;
         match self.head {
             Head::SoftmaxCe { classes } => {
-                if out.h != 1 || out.w != 1 || out.ch != classes {
+                let per = self.rows_per_sample();
+                if out.h * out.w != per || out.ch != classes {
                     bail!(
-                        "model output is [{}x{}x{}], expected logits [{b}, {classes}]",
+                        "model output is [{}x{}x{}], expected logits [{b}·{per}, {classes}]",
                         out.h,
                         out.w,
                         out.ch
@@ -239,12 +262,16 @@ impl GraphModel {
         let mut grads = NamedTensors::new();
         let loss = match self.head {
             Head::SoftmaxCe { classes } => {
-                let ce = kernels::softmax_ce(&out.data, y, b, classes, 1.0 / b as f32);
-                let mut loss = ce.loss_sum / b as f64;
+                // n = output rows (b for flat/image, b·seq for tokens):
+                // the loss and its gradient are per-row means, identical
+                // to the historical per-sample mean when rows == b
+                let n = out.rows();
+                let ce = kernels::softmax_ce(&out.data, y, n, classes, 1.0 / n as f32);
+                let mut loss = ce.loss_sum / n as f64;
                 if let Some(reg) = self.reg_sum(Params::new(tr))? {
                     loss += reg;
                 }
-                let d = Act::flat(b, classes, ce.dlogits);
+                let d = Act { data: ce.dlogits, b: out.b, h: out.h, w: out.w, ch: classes };
                 backward_stack(&self.layers, &cx, d, &mut tape.caches, &mut grads, false)?;
                 loss
             }
@@ -279,11 +306,11 @@ impl GraphModel {
         Ok(TrainGrads { loss, grads, state_updates: tape.state_updates })
     }
 
-    /// Output elements per sample: `classes` for the softmax head, 1
-    /// for the regression head.
+    /// Output elements per sample: `classes` (× positions for token
+    /// models) for the softmax head, 1 for the regression head.
     pub fn out_elems(&self) -> usize {
         match self.head {
-            Head::SoftmaxCe { classes } => classes,
+            Head::SoftmaxCe { classes } => classes * self.rows_per_sample(),
             Head::SumSquares => 1,
         }
     }
@@ -323,8 +350,9 @@ impl GraphModel {
         let (out, _tape) = self.forward(q, tr, state, x, b)?;
         match self.head {
             Head::SoftmaxCe { classes } => {
-                let ce = kernels::softmax_ce(&out.data, y, b, classes, 1.0);
-                let mut loss = ce.loss_sum / b as f64;
+                let n = out.rows();
+                let ce = kernels::softmax_ce(&out.data, y, n, classes, 1.0);
+                let mut loss = ce.loss_sum / n as f64;
                 if let Some(reg) = self.reg_sum(Params::new(tr))? {
                     loss += reg;
                 }

@@ -59,16 +59,18 @@
 //! assert_eq!(out.grads.len(), tr.len()); // one gradient per trainable
 //! ```
 
+pub mod attn;
 pub mod dense;
 pub mod fuse;
 pub mod graph;
 pub mod norm;
 pub mod spatial;
 
+pub use attn::{masked_softmax_rows, Embedding, MultiHeadAttention};
 pub use dense::{Dense, QuantSite, Relu};
 pub use fuse::{FuseTail, FusedPair, GemmLayer};
 pub use graph::{GraphModel, Head, InputKind, TrainGrads};
-pub use norm::BatchNorm2d;
+pub use norm::{BatchNorm2d, LayerNorm};
 pub use spatial::{Conv, Flatten, GlobalAvgPool, MaxPool2, Residual};
 
 use anyhow::{anyhow, bail, Result};
@@ -197,6 +199,14 @@ pub enum LayerCache {
     Dense { input: Vec<f32> },
     Residual { body: Vec<LayerCache>, proj: Vec<LayerCache> },
     BatchNorm { xhat: Vec<f32>, ivar: Vec<f32> },
+    /// [`LayerNorm`]'s tape: normalized rows + one inverse-std per row.
+    LayerNorm { xhat: Vec<f32>, ivar: Vec<f32> },
+    /// [`Embedding`]'s tape: the integer token ids (as f32).
+    Embed { tokens: Vec<f32> },
+    /// [`MultiHeadAttention`]'s tape: the layer input, the QKV
+    /// projections, every head's softmax probabilities and the
+    /// post-Q_A merged context (the output projection's input).
+    Attn { x: Vec<f32>, qkv: Vec<f32>, probs: Vec<f32>, ctx_q: Vec<f32> },
     /// A [`fuse::FusedPair`]'s train-mode container: the two inner
     /// layers' caches, in forward order (train mode never fuses).
     Pair(Vec<LayerCache>),
@@ -374,11 +384,13 @@ pub(crate) fn col_sums(x: &[f32], cols: usize) -> Vec<f32> {
     out
 }
 
-/// Shape guard shared by the flat layers (Dense and friends).
-pub(crate) fn expect_flat(act: &Act, d_in: usize, what: &str) -> Result<()> {
-    if act.h != 1 || act.w != 1 || act.ch != d_in {
+/// Channel guard shared by the position-wise layers (Dense and friends):
+/// they contract over `ch` only and treat every `b·h·w` row alike, so a
+/// flat `[b, d]` batch and a token-sequence `[b·seq, d]` batch both pass.
+pub(crate) fn expect_ch(act: &Act, d_in: usize, what: &str) -> Result<()> {
+    if act.ch != d_in {
         bail!(
-            "{what}: input is [{}x{}x{}], want a flat [{d_in}]",
+            "{what}: input is [{}x{}x{}], want {d_in} channels",
             act.h,
             act.w,
             act.ch

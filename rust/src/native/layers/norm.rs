@@ -260,6 +260,160 @@ impl QLayer for BatchNorm2d {
     }
 }
 
+/// [`LayerNorm`] — per-row normalization over the channel axis, the
+/// transformer's normalizer. Unlike [`BatchNorm2d`] it carries no
+/// running state: train, eval and batch-stats-eval all compute the same
+/// function (each row normalizes over its own `ch` features), so SWA
+/// evaluation needs no statistics recompute. `gamma`/`beta` follow the
+/// BatchNorm conventions: ordinary trainables, per-tensor shared
+/// exponent under BFP (the `is_per_tensor` leaf-name policy), folded
+/// into the SWA average.
+///
+/// Row statistics and the gradient reductions accumulate in f64 per row,
+/// serially — deterministic at any thread count by construction.
+pub struct LayerNorm {
+    name: String,
+    g_name: String,
+    b_name: String,
+    pub ch: usize,
+    pub eps: f32,
+    g_idx: usize,
+    b_idx: usize,
+}
+
+impl LayerNorm {
+    pub fn new(name: &str, ch: usize) -> LayerNorm {
+        LayerNorm {
+            name: name.to_string(),
+            g_name: format!("{name}.gamma"),
+            b_name: format!("{name}.beta"),
+            ch,
+            eps: 1e-5,
+            g_idx: usize::MAX,
+            b_idx: usize::MAX,
+        }
+    }
+}
+
+impl QLayer for LayerNorm {
+    fn param_specs(&self, out: &mut Vec<(String, Vec<usize>)>) {
+        out.push((self.b_name.clone(), vec![self.ch]));
+        out.push((self.g_name.clone(), vec![self.ch]));
+    }
+
+    fn init(&self, _rng: &mut StreamRng, out: &mut NamedTensors) {
+        out.push((self.b_name.clone(), Tensor::zeros(&[self.ch])));
+        out.push((
+            self.g_name.clone(),
+            Tensor { shape: vec![self.ch], data: vec![1.0; self.ch] },
+        ));
+    }
+
+    fn resolve(&mut self, tr_names: &[String], _state_names: &[String]) {
+        self.g_idx = idx_of(tr_names, &self.g_name);
+        self.b_idx = idx_of(tr_names, &self.b_name);
+    }
+
+    fn forward(&self, cx: &LayerCtx, mut act: Act, tape: &mut Tape) -> Result<Act> {
+        if act.ch != self.ch {
+            bail!("{}: input has {} channels, want {}", self.name, act.ch, self.ch);
+        }
+        if act.rows() == 0 {
+            bail!("{}: empty activation", self.name);
+        }
+        let gamma = cx.tr.at(self.g_idx, &self.g_name)?;
+        let beta = cx.tr.at(self.b_idx, &self.b_name)?;
+        let train = cx.q.train();
+        let mut xhat = if train { vec![0.0f32; act.data.len()] } else { Vec::new() };
+        let mut ivars = if train { vec![0.0f32; act.rows()] } else { Vec::new() };
+        let n = self.ch as f64;
+        for (r, row) in act.data.chunks_mut(self.ch).enumerate() {
+            let mut mean = 0.0f64;
+            for &v in row.iter() {
+                mean += v as f64;
+            }
+            mean /= n;
+            let mut var = 0.0f64;
+            for &v in row.iter() {
+                let d = v as f64 - mean;
+                var += d * d;
+            }
+            var /= n;
+            let meanf = mean as f32;
+            let ivar = 1.0 / ((var as f32) + self.eps).sqrt();
+            for c in 0..self.ch {
+                let xh = (row[c] - meanf) * ivar;
+                if train {
+                    xhat[r * self.ch + c] = xh;
+                }
+                row[c] = gamma.data[c] * xh + beta.data[c];
+            }
+            if train {
+                ivars[r] = ivar;
+            }
+        }
+        if train {
+            tape.caches.push(LayerCache::LayerNorm { xhat, ivar: ivars });
+        }
+        Ok(act)
+    }
+
+    fn backward(
+        &self,
+        cx: &LayerCtx,
+        mut d: Act,
+        cache: LayerCache,
+        grads: &mut NamedTensors,
+        need_dx: bool,
+    ) -> Result<Act> {
+        let LayerCache::LayerNorm { xhat, ivar } = cache else {
+            bail!("{}: forward/backward cache mismatch", self.name);
+        };
+        let gamma = cx.tr.at(self.g_idx, &self.g_name)?;
+        let n = self.ch as f64;
+        let mut dbeta = vec![0.0f64; self.ch];
+        let mut dgamma = vec![0.0f64; self.ch];
+        for (r, (drow, xrow)) in d
+            .data
+            .chunks_mut(self.ch)
+            .zip(xhat.chunks(self.ch))
+            .enumerate()
+        {
+            // per-row means of dxhat and dxhat·xhat in f64, then the
+            // standard normalization gradient (BatchNorm's formula with
+            // the reduction over the row instead of the batch)
+            let mut m1 = 0.0f64;
+            let mut m2 = 0.0f64;
+            for c in 0..self.ch {
+                let dv = drow[c] as f64;
+                let xh = xrow[c] as f64;
+                dbeta[c] += dv;
+                dgamma[c] += dv * xh;
+                let dxh = dv * gamma.data[c] as f64;
+                m1 += dxh;
+                m2 += dxh * xh;
+            }
+            if need_dx {
+                let m1f = (m1 / n) as f32;
+                let m2f = (m2 / n) as f32;
+                for c in 0..self.ch {
+                    let dxh = drow[c] * gamma.data[c];
+                    drow[c] = ivar[r] * (dxh - m1f - xrow[c] * m2f);
+                }
+            }
+        }
+        grads.push((
+            self.g_name.clone(),
+            Tensor::new(vec![self.ch], dgamma.iter().map(|&v| v as f32).collect())?,
+        ));
+        grads.push((
+            self.b_name.clone(),
+            Tensor::new(vec![self.ch], dbeta.iter().map(|&v| v as f32).collect())?,
+        ));
+        Ok(d)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{Mode, Params, QCtx};
@@ -340,5 +494,47 @@ mod tests {
         let mean: f32 = c0.iter().sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-5, "batch-stats eval must renormalize: {mean}");
         assert!(tape.state_updates.is_empty() && tape.caches.is_empty());
+    }
+
+    fn ln_fixture() -> (LayerNorm, NamedTensors) {
+        let mut ln = LayerNorm::new("ln", 4);
+        let mut tr = NamedTensors::new();
+        ln.init(&mut StreamRng::new(1), &mut tr);
+        tr.sort_by(|a, b| a.0.cmp(&b.0));
+        let tr_names: Vec<String> = tr.iter().map(|(n, _)| n.clone()).collect();
+        ln.resolve(&tr_names, &[]);
+        (ln, tr)
+    }
+
+    #[test]
+    fn layernorm_normalizes_each_row_and_eval_matches_train_bitwise() {
+        let (ln, tr) = ln_fixture();
+        let st = NamedTensors::new();
+        let data = vec![1.0, 2.0, 3.0, 4.0, -8.0, 0.0, 8.0, 16.0, 5.0, 5.0, 5.0, 5.0];
+
+        let q = ctx_parts(Mode::Train);
+        let cx = LayerCtx { q: &q, tr: Params::new(&tr), state: Params::new(&st) };
+        let mut tape = Tape::default();
+        let out = ln.forward(&cx, Act::flat(3, 4, data.clone()), &mut tape).unwrap();
+        assert_eq!(tape.caches.len(), 1);
+        // every row: zero mean, unit variance (gamma=1, beta=0)
+        for row in out.data.chunks(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "row mean {mean}");
+            assert!(var < 1.01, "row var {var}");
+        }
+        // constant row eps-floors to ~0, not NaN
+        assert!(out.data[8..].iter().all(|v| v.abs() < 1e-2));
+
+        // LayerNorm is stateless: eval computes the identical function
+        for mode in [Mode::Eval, Mode::EvalBatchStats] {
+            let q = ctx_parts(mode);
+            let cx = LayerCtx { q: &q, tr: Params::new(&tr), state: Params::new(&st) };
+            let mut tape = Tape::default();
+            let e = ln.forward(&cx, Act::flat(3, 4, data.clone()), &mut tape).unwrap();
+            assert_eq!(e.data, out.data, "{mode:?} must match train bitwise");
+            assert!(tape.caches.is_empty());
+        }
     }
 }

@@ -24,6 +24,7 @@
 //! | `{cifar10,cifar100}_{vgg,prn}_{fp32,bfp8big,bfp8small}` | VGG-mini / PreResNet-mini CNN | none or all five roles 8-bit BFP, ρ=0.9 |
 //! | `cifar10_prn20_{fp32,bfp8big,bfp8small}` | BatchNorm PreResNet-20 | as above |
 //! | `imagenet_rn_{fp32,bfp8big,bfp8small}` | PreResNet-mini CNN | as above |
+//! | `lm_{fp32,bfp8big,bfp8small}` | causal transformer LM (vocab 64, d 96, 3 blocks) | none or all five roles 8-bit BFP, ρ=0.9 |
 //! | `wage_cnn`         | WAGE-style CNN     | W fixed W2F0; A/G/E fixed W8F5 |
 //!
 //! Every row is a [`layers::GraphModel`] — layer stacks declared as data
@@ -85,6 +86,9 @@ pub fn model_names() -> Vec<String> {
     for fmt in CNN_FORMATS {
         names.push(format!("imagenet_rn_{fmt}"));
     }
+    for fmt in CNN_FORMATS {
+        names.push(format!("lm_{fmt}"));
+    }
     names.push("wage_cnn".to_string());
     names
 }
@@ -118,6 +122,9 @@ pub fn supports(name: &str) -> bool {
         return f.parse::<i32>().map(|fl| (1..=20).contains(&fl)).unwrap_or(false);
     }
     if parse_cnn(name).is_some() {
+        return true;
+    }
+    if name.strip_prefix("lm_").is_some_and(|f| CNN_FORMATS.contains(&f)) {
         return true;
     }
     matches!(
@@ -216,6 +223,16 @@ fn spec(
     }
 }
 
+/// Transformer-LM scale, mirroring the Python reference
+/// (`python/models/transformer.py`): vocab 64, d_model 96, 3 pre-LN
+/// blocks of 4 heads with a 256-wide FFN, sequence length 64.
+pub const LM_VOCAB: usize = 64;
+pub const LM_D: usize = 96;
+pub const LM_LAYERS: usize = 3;
+pub const LM_HEADS: usize = 4;
+pub const LM_FF: usize = 256;
+pub const LM_SEQ: usize = 64;
+
 const LINREG_D: usize = 256;
 const LOGREG_D: usize = 784;
 const LOGREG_K: usize = 10;
@@ -312,6 +329,34 @@ fn cnn(
     NativeBackend::new(s, net)
 }
 
+/// Build the transformer-LM backend: a token-sequence task (`task:
+/// "lm"`), so the trainer normalizes the error metric per token and
+/// `exp(loss)` is the perplexity. `y_shape` is one label per position —
+/// the only registered spec with a non-scalar target.
+fn lm(name: &str, quant: QuantSet) -> NativeBackend {
+    let net = models::transformer_lm(LM_VOCAB, LM_D, LM_LAYERS, LM_HEADS, LM_FF, LM_SEQ);
+    let trainable = net
+        .param_specs()
+        .into_iter()
+        .map(|(n, shape)| IoSpec { name: n, shape })
+        .collect();
+    let mut s = spec(
+        name,
+        "transformer_lm",
+        "lm",
+        "zipf_lm",
+        LM_VOCAB,
+        quant,
+        8,
+        16,
+        vec![LM_SEQ],
+        trainable,
+        vec![],
+    );
+    s.y_shape = vec![LM_SEQ];
+    NativeBackend::new(s, net)
+}
+
 fn mlp(name: &str, quant: QuantSet) -> NativeBackend {
     let s = spec(
         name,
@@ -357,6 +402,16 @@ pub fn load(name: &str) -> Result<NativeBackend> {
             _ => models::prn_mini(classes), // "prn" and the imagenet "rn"
         };
         return Ok(cnn(name, arch, dataset, classes, net, quant));
+    }
+    if let Some(fmt) = name.strip_prefix("lm_") {
+        if CNN_FORMATS.contains(&fmt) {
+            let quant = match fmt {
+                "fp32" => fp32_quant(0.9),
+                "bfp8big" => bfp8(false, 0.9),
+                _ => bfp8(true, 0.9),
+            };
+            return Ok(lm(name, quant));
+        }
     }
     Ok(match name {
         "linreg_fp32" => linreg(name, fp32_quant(0.0)),
@@ -413,6 +468,10 @@ mod tests {
                 "cifar10_prn20_bfp8small",
                 "cifar100_prn20_bfp8small",
                 "imagenet_prn20_fp32",
+                "lm_bfp8small",
+                "lm_fx86",
+                "lm_",
+                "lm",
                 "wage_cnn",
                 "mlp",
                 "nope",
@@ -456,6 +515,25 @@ mod tests {
         // momentum starts at zero, state is empty
         assert!(a.momentum.iter().all(|(_, t)| t.data.iter().all(|&v| v == 0.0)));
         assert!(a.state.is_empty());
+    }
+
+    #[test]
+    fn lm_spec_is_a_per_token_task() {
+        let m = load("lm_bfp8small").unwrap();
+        let spec = m.spec();
+        assert_eq!(spec.task, "lm");
+        assert_eq!(spec.dataset, "zipf_lm");
+        assert_eq!(spec.classes, LM_VOCAB);
+        assert_eq!(spec.x_shape, vec![LM_SEQ]);
+        assert_eq!(spec.y_shape, vec![LM_SEQ], "one label per position");
+        assert!(spec.state.is_empty(), "LayerNorm has no running stats");
+        // trainables follow the sorted-name artifact convention
+        let names: Vec<&str> = spec.trainable.iter().map(|t| t.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        assert!(names.contains(&"embed.w"));
+        assert!(names.contains(&"l2.attn.qkv.w"));
     }
 
     #[test]

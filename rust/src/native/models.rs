@@ -7,8 +7,8 @@
 //! feature vectors for the convex/dense models.
 
 use super::layers::{
-    BatchNorm2d, Conv, Dense, Flatten, GlobalAvgPool, GraphModel, Head, InputKind, MaxPool2,
-    QLayer, QuantSite, Relu, Residual,
+    BatchNorm2d, Conv, Dense, Embedding, Flatten, GlobalAvgPool, GraphModel, Head, InputKind,
+    LayerNorm, MaxPool2, MultiHeadAttention, QLayer, QuantSite, Relu, Residual,
 };
 
 fn conv3(name: &str, in_ch: usize, out_ch: usize) -> Box<dyn QLayer> {
@@ -133,6 +133,47 @@ pub fn wage_mini(classes: usize) -> GraphModel {
     )
 }
 
+/// Pre-LN causal transformer language model, mirroring the Python
+/// reference (`python/models/transformer.py`): token + positional
+/// embedding, `n_layers` blocks of
+///
+/// ```text
+/// h = h + MHA(LN(h))        // Q_A/Q_E site "l{i}.attn.act"
+/// h = h + FF2(ReLU(FF1(LN(h))))  // Q_A/Q_E site "l{i}.ff.act"
+/// ```
+///
+/// then a final LayerNorm and a dense vocab head. Every projection is
+/// bias-free; embeddings and projections draw Normal(0, 0.02), the FFN
+/// expansion He-normal — all in declaration order, so init is a pure
+/// function of the rng stream like every other registered model.
+pub fn transformer_lm(
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    heads: usize,
+    d_ff: usize,
+    seq: usize,
+) -> GraphModel {
+    let mut layers: Vec<Box<dyn QLayer>> =
+        vec![Box::new(Embedding::new("embed", vocab, d_model, seq))];
+    for i in 0..n_layers {
+        let tag = format!("l{i}");
+        layers.push(Box::new(Residual::new(vec![
+            Box::new(LayerNorm::new(&format!("{tag}.ln1"), d_model)),
+            Box::new(MultiHeadAttention::new(&tag, d_model, heads)),
+        ])));
+        layers.push(Box::new(Residual::new(vec![
+            Box::new(LayerNorm::new(&format!("{tag}.ln2"), d_model)),
+            Box::new(Dense::he_no_bias(&format!("{tag}.ff1"), d_model, d_ff)),
+            relu(&format!("{tag}.ff.act")),
+            Box::new(Dense::normal_std(&format!("{tag}.ff2"), d_ff, d_model, 0.02)),
+        ])));
+    }
+    layers.push(Box::new(LayerNorm::new("final.ln", d_model)));
+    layers.push(Box::new(Dense::normal_std("head", d_model, vocab, 0.02)));
+    GraphModel::new(InputKind::Tokens { seq }, Head::SoftmaxCe { classes: vocab }, layers)
+}
+
 /// One pre-activation residual block `BN → ReLU → conv → BN → ReLU →
 /// conv` with an identity skip (`ch` unchanged).
 fn prn_block(tag: &str, ch: usize) -> Box<dyn QLayer> {
@@ -200,7 +241,13 @@ mod tests {
 
     #[test]
     fn registered_architectures_have_sorted_specs() {
-        for net in [vgg_mini(10), prn_mini(100), wage_mini(10), prn20(10)] {
+        for net in [
+            vgg_mini(10),
+            prn_mini(100),
+            wage_mini(10),
+            prn20(10),
+            transformer_lm(16, 8, 2, 2, 16, 6),
+        ] {
             let specs = net.param_specs();
             let names: Vec<&String> = specs.iter().map(|(n, _)| n).collect();
             let mut sorted = names.clone();
@@ -222,6 +269,24 @@ mod tests {
                 assert_eq!(shape, &t.shape);
             }
         }
+    }
+
+    #[test]
+    fn transformer_lm_declares_the_expected_tensors() {
+        let net = transformer_lm(16, 8, 2, 2, 16, 6);
+        let specs = net.param_specs();
+        let names: Vec<&str> = specs.iter().map(|(n, _)| n.as_str()).collect();
+        // 2 embedding tables + 8 per block (2 LN affine pairs, 2 attention
+        // projections, 2 FFN projections) × 2 blocks + final LN pair + head
+        assert_eq!(names.len(), 2 + 8 * 2 + 2 + 1);
+        for n in ["embed.pos", "embed.w", "l0.ln1.gamma", "l1.attn.qkv.w", "l1.ff2.w", "head.w"] {
+            assert!(names.contains(&n), "missing {n}");
+        }
+        let (_, qkv) = specs.iter().find(|(n, _)| n == "l0.attn.qkv.w").unwrap();
+        assert_eq!(qkv, &vec![8, 24]);
+        let (_, pos) = specs.iter().find(|(n, _)| n == "embed.pos").unwrap();
+        assert_eq!(pos, &vec![6, 8]);
+        assert!(net.state_specs().is_empty(), "LayerNorm carries no running stats");
     }
 
     #[test]

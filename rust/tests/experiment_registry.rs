@@ -126,7 +126,7 @@ fn every_registered_experiment_runs_end_to_end() {
     let dir = std::env::temp_dir().join(format!("swalp_exp_smoke_{}", std::process::id()));
     let ctx = CtxConfig::new().smoke(true).out_dir(&dir).build().unwrap();
     let runner = Runner::new(&ctx);
-    assert_eq!(registry::all().len(), 10);
+    assert_eq!(registry::all().len(), 11);
     for spec in registry::all() {
         let report = runner
             .run(spec)

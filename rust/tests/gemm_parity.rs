@@ -218,6 +218,74 @@ fn fused_epilogue_bit_matches_separate_pipeline() {
 }
 
 #[test]
+fn attention_shape_gemms_bit_match_naive() {
+    // the MHA inner loops at LM sequence lengths: per-head scores
+    // q·kᵀ ([t,hd]·[t,hd]ᵀ → [t,t]) and context probs·v ([t,t]·[t,hd]) —
+    // tall-skinny and big-square extents the DIMS sweep never reaches,
+    // with the probs operand coming through the real masked softmax
+    let e = gemm::Engine::dispatched();
+    for &(t, hd) in &[(64usize, 24usize), (256, 24)] {
+        let mut rng = StreamRng::new((t * 10 + hd) as u64);
+        let q = mat(&mut rng, t * hd);
+        let k = mat(&mut rng, t * hd);
+
+        let mut want = vec![0.0f32; t * t];
+        kernels::matmul_a_bt_serial(&q, &k, t, hd, t, &mut want);
+        let mut got = vec![0.0f32; t * t];
+        e.matmul_a_bt(&q, &k, t, hd, t, &mut got);
+        assert_bits(&got, &want, "attn scores", t, hd, t);
+        let mut got = vec![0.0f32; t * t];
+        e.matmul_a_bt_serial(&q, &k, t, hd, t, &mut got);
+        assert_bits(&got, &want, "attn scores serial", t, hd, t);
+
+        let mut probs = want;
+        swalp::native::layers::masked_softmax_rows(&mut probs, t, true);
+        let v = mat(&mut rng, t * hd);
+        let mut want = vec![0.0f32; t * hd];
+        kernels::matmul_serial(&probs, &v, t, t, hd, &mut want);
+        let mut got = vec![0.0f32; t * hd];
+        e.matmul(&probs, &v, t, t, hd, &mut got);
+        assert_bits(&got, &want, "attn context", t, t, hd);
+        let mut got = vec![0.0f32; t * hd];
+        e.matmul_serial(&probs, &v, t, t, hd, &mut got);
+        assert_bits(&got, &want, "attn context serial", t, t, hd);
+    }
+}
+
+#[test]
+fn masked_softmax_survives_large_logits() {
+    use swalp::native::layers::masked_softmax_rows;
+    // logit magnitudes near the f32 range edge: the max-subtraction can
+    // underflow to -inf (exp → 0) but must never produce a NaN, and
+    // every live row still normalizes to 1 with masked entries exact 0
+    let t = 8;
+    for causal in [true, false] {
+        let mut s: Vec<f32> = (0..t * t)
+            .map(|i| match i % 4 {
+                0 => 3.0e38,
+                1 => -3.0e38,
+                2 => 200.0,
+                _ => -200.0,
+            })
+            .collect();
+        masked_softmax_rows(&mut s, t, causal);
+        for (i, row) in s.chunks(t).enumerate() {
+            let live = if causal { i + 1 } else { t };
+            assert!(
+                row.iter().all(|v| v.is_finite()),
+                "causal={causal} row {i} not finite: {row:?}"
+            );
+            let sum: f64 = row[..live].iter().map(|&v| v as f64).sum();
+            assert!(
+                (sum - 1.0).abs() < 1e-5,
+                "causal={causal} row {i} sums to {sum}"
+            );
+            assert!(row[live..].iter().all(|&v| v == 0.0), "mask leaked in row {i}");
+        }
+    }
+}
+
+#[test]
 fn parity_holds_at_pinned_thread_counts() {
     // child processes run only the two sweeps above (RAYON_NUM_THREADS
     // is latched at first pool use, hence one process per count)
@@ -231,6 +299,7 @@ fn parity_holds_at_pinned_thread_counts() {
                 "blocked_matmuls_bit_match_naive_across_shapes",
                 "every_exact_kernel_bit_matches_naive_across_shapes",
                 "fused_epilogue_bit_matches_separate_pipeline",
+                "attention_shape_gemms_bit_match_naive",
                 "--exact",
                 "--test-threads",
                 "1",

@@ -466,6 +466,74 @@ fn prop_ledger_single_byte_corruption_is_detected() {
 }
 
 #[test]
+fn prop_zipf_lm_split_tokens_shift_and_seeding() {
+    use swalp::data::text::zipf_lm_split;
+    check("zipf_lm invariants", &cfg(30), |rng, _| {
+        let vocab = 1 + rng.below(64);
+        let seq = 1 + rng.below(24);
+        let n_train = rng.below(12);
+        let n_test = rng.below(8);
+        let seed = rng.next_u64();
+        let s = zipf_lm_split(vocab, seq, n_train, n_test, seed);
+        for (ds, n) in [(&s.train, n_train), (&s.test, n_test)] {
+            if ds.n != n || ds.x.len() != n * seq || ds.y.len() != n * seq {
+                return Err(format!("{}: bad shape for n={n} seq={seq}", ds.name));
+            }
+            if ds.classes != vocab || ds.x_shape != vec![seq] || ds.y_shape != vec![seq] {
+                return Err(format!("{}: bad metadata", ds.name));
+            }
+            // every token is an exact integer id below the vocabulary
+            for &t in ds.x.iter().chain(ds.y.iter()) {
+                if (t as usize) as f32 != t || t as usize >= vocab {
+                    return Err(format!("{}: token {t} outside vocab {vocab}", ds.name));
+                }
+            }
+            // next-token objective: y is x shifted left by one position
+            for i in 0..ds.n {
+                let (xs, ys) = (ds.sample_x(i), ds.sample_y(i));
+                for t in 0..seq - 1 {
+                    if ys[t] != xs[t + 1] {
+                        return Err(format!("{}: y[{t}] != x[{}] in sample {i}", ds.name, t + 1));
+                    }
+                }
+            }
+        }
+        // same arguments → bit-identical corpus
+        let s2 = zipf_lm_split(vocab, seq, n_train, n_test, seed);
+        if s2.train.x != s.train.x || s2.train.y != s.train.y || s2.test.x != s.test.x {
+            return Err("split is not a pure function of its arguments".into());
+        }
+        // per-split stream seeding: resizing the train split must never
+        // shift a single test token (quick-mode scaling shrinks n_train)
+        let s3 = zipf_lm_split(vocab, seq, n_train + 5, n_test, seed);
+        if s3.test.x != s.test.x || s3.test.y != s.test.y {
+            return Err("test split depends on n_train".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zipf_lm_split_floors_degenerate_sizes() {
+    use swalp::data::text::zipf_lm_split;
+    // vocab = 0 and seq_len = 0 floor to 1 instead of panicking (empty
+    // Zipf weight table / no (x, y) pair to emit); n = 0 is just an
+    // empty dataset with valid shapes
+    for (vocab, seq, n_train, n_test) in
+        [(0, 0, 0, 0), (1, 1, 1, 1), (0, 5, 2, 2), (5, 0, 2, 2), (64, 1, 1, 0)]
+    {
+        let s = zipf_lm_split(vocab, seq, n_train, n_test, 3);
+        let (v, sq) = (vocab.max(1), seq.max(1));
+        assert_eq!(s.train.n, n_train);
+        assert_eq!(s.train.x.len(), n_train * sq);
+        assert_eq!(s.test.x.len(), n_test * sq);
+        assert_eq!(s.train.x_shape, vec![sq]);
+        assert_eq!(s.train.classes, v);
+        assert!(s.train.x.iter().all(|&t| (t as usize) < v));
+    }
+}
+
+#[test]
 fn prop_loader_preserves_sample_label_pairing() {
     use swalp::data::images::flat_split;
     use swalp::data::loader::Loader;
