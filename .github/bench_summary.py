@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
-"""Render the gemm/*, attn/* and infer/* entries of a swalp-bench-v1
-JSON as markdown tables.
+"""Render the gemm/*, attn/*, infer/* and net/* entries of a
+swalp-bench-v1 JSON as markdown tables.
 
 CI's bench-smoke job pipes the output into $GITHUB_STEP_SUMMARY so the
 GEMM GFLOP/s trend — and the inference batching amplification — are
@@ -60,6 +60,7 @@ def main(path: str) -> int:
         print(f"\nfused-simd / fused (scalar) speedup on 256^3: **{fused_simd / fused:.1f}x**")
     attn_section(doc)
     infer_section(doc)
+    net_section(doc)
     return 0
 
 
@@ -121,6 +122,52 @@ def infer_section(doc) -> None:
     b64 = sps.get("infer/predict mlp_qmm_fx86 b=64")
     if b1 and b64:
         print(f"\nbatch-64 / batch-1 predict throughput on mlp_qmm_fx86: **{b64 / b1:.1f}x**")
+
+
+def net_section(doc) -> None:
+    """Network front-end rows: over-the-wire predict throughput and
+    latency percentiles at 1/8/64 concurrent HTTP clients, with the
+    overhead line against the in-process infer/batcher baseline
+    (bench_perf_hotpath "network front-end" section)."""
+    rps = {}
+    p50 = {}
+    p99 = {}
+    order = []
+    batcher_sps = None
+    for r in doc.get("results", []):
+        name = r.get("name", "")
+        # the in-process baseline for the overhead line (the reqs/cli
+        # counts in the name vary with --quick, so match the prefix)
+        if name.startswith("infer/batcher") and r.get("unit") == "samples/s":
+            batcher_sps = r["value"]
+        if not name.startswith("net/"):
+            continue
+        if r.get("unit") == "req/s":
+            if name not in order:
+                order.append(name)
+            rps[name] = r["value"]
+        elif name.endswith(" p50") and r.get("unit") == "ms":
+            p50[name[: -len(" p50")]] = r["value"]
+        elif name.endswith(" p99") and r.get("unit") == "ms":
+            p99[name[: -len(" p99")]] = r["value"]
+    if not order:
+        return
+    print("\n### Network front-end (serve_net daemon over loopback)\n")
+    print("| bench | req/s | p50 ms | p99 ms |")
+    print("|---|---:|---:|---:|")
+    for name in order:
+        cells = [
+            f"{v:.2f}" if v is not None else "—"
+            for v in (p50.get(name), p99.get(name))
+        ]
+        print(f"| `{name}` | {rps[name]:.0f} | {cells[0]} | {cells[1]} |")
+    wire = rps.get("net/predict mlp_qmm_fx86 c=8")
+    if batcher_sps and wire:
+        print(
+            f"\nover-the-wire (c=8) vs in-process infer/batcher throughput: "
+            f"**{wire / batcher_sps:.2f}x** "
+            f"({wire:.0f} req/s over TCP vs {batcher_sps:.0f} samples/s in-process)"
+        )
 
 
 if __name__ == "__main__":

@@ -309,7 +309,7 @@ fn main() {
                         s.spawn(move || {
                             let rxs: Vec<_> = (c..reqs)
                                 .step_by(clients)
-                                .map(|i| batcher.submit(xs[i % xs.len()].clone()))
+                                .map(|i| batcher.submit(xs[i % xs.len()].clone()).unwrap())
                                 .collect();
                             for rx in rxs {
                                 rx.recv().unwrap().unwrap();
@@ -320,6 +320,92 @@ fn main() {
             },
         );
         report(&mut log, &r, "samples/s", reqs as f64 / r.median_s);
+    }
+
+    // ---- network front-end (serve_net daemon over loopback) ----
+    // `net/predict ... c=N` measures the full over-the-wire path —
+    // keep-alive HTTP, JSON body, batcher, JSON response — at 1/8/64
+    // concurrent clients. The in-process `infer/batcher` row above is
+    // the baseline the bench summary renders the overhead line against.
+    {
+        use std::io::BufReader;
+        use std::net::{TcpListener, TcpStream};
+        use std::sync::Mutex;
+        use swalp::serve_net::{NetOpts, NetServer, SessionPool};
+        use swalp::util::http;
+        use swalp::util::json::Value;
+        use swalp::util::percentile;
+
+        let model = native::load("mlp_qmm_fx86").unwrap();
+        let split = data::build(&model.spec().dataset, 3, 0.1).unwrap();
+        let t = &split.test;
+        let ms = model.init(1).unwrap();
+        let session = InferSession::from_parts(
+            Box::new(model),
+            ms.trainable.clone(),
+            ms.state.clone(),
+            WeightChoice::Raw,
+        );
+        let mut pool = SessionPool::new();
+        pool.add_session("mlp", session, BatchOpts { max_batch: 64, max_wait_us: 200 })
+            .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        // one worker per client at the largest row, so keep-alive
+        // connections never starve the hand-off queue
+        let opts = NetOpts { workers: 64, queue: 256, max_conns: 512, ..NetOpts::default() };
+        let server = NetServer::start(pool, listener, opts, None).unwrap();
+        let addr = server.addr();
+        let bodies: Vec<Vec<u8>> = (0..64)
+            .map(|i| {
+                let row = t.sample_x(i % t.n);
+                let input = Value::Arr(row.iter().map(|&x| Value::Num(x as f64)).collect());
+                Value::obj(vec![("input", input), ("model", Value::str("mlp"))])
+                    .to_string()
+                    .into_bytes()
+            })
+            .collect();
+        for clients in [1usize, 8, 64] {
+            let reqs = (if quick { 2 } else { 8 }) * clients.max(8);
+            let lat = Mutex::new(Vec::new());
+            let name = format!("net/predict mlp_qmm_fx86 c={clients}");
+            let r = bench(&name, warm.min(1), iters.min(3), secs.min(0.5), || {
+                // keep only the last iteration's latencies for p50/p99
+                lat.lock().unwrap().clear();
+                std::thread::scope(|s| {
+                    for c in 0..clients {
+                        let lat = &lat;
+                        let bodies = &bodies;
+                        s.spawn(move || {
+                            let stream = TcpStream::connect(addr).unwrap();
+                            stream.set_nodelay(true).unwrap();
+                            let mut reader = BufReader::new(stream.try_clone().unwrap());
+                            let mut stream = stream;
+                            let mut times = Vec::new();
+                            for i in (c..reqs).step_by(clients) {
+                                let t0 = std::time::Instant::now();
+                                http::write_request(
+                                    &mut stream,
+                                    "POST",
+                                    "/v1/predict",
+                                    Some(&bodies[i % bodies.len()]),
+                                    false,
+                                )
+                                .unwrap();
+                                let resp = http::read_response(&mut reader).unwrap();
+                                assert_eq!(resp.status, 200, "{}", resp.body_str());
+                                times.push(t0.elapsed().as_secs_f64() * 1e3);
+                            }
+                            lat.lock().unwrap().extend(times);
+                        });
+                    }
+                });
+            });
+            report(&mut log, &r, "req/s", reqs as f64 / r.median_s);
+            let lat = lat.into_inner().unwrap();
+            log.push_metric(&format!("{name} p50"), "ms", percentile(&lat, 0.50));
+            log.push_metric(&format!("{name} p99"), "ms", percentile(&lat, 0.99));
+        }
+        drop(server);
     }
 
     println!("kernel threads: {}", rayon::current_num_threads());

@@ -50,6 +50,28 @@ impl Default for BatchOpts {
 /// this request (not the whole batch) failed.
 pub type Response = std::result::Result<Vec<f32>, String>;
 
+/// Typed submission failure. [`Batcher::submit`] returns this instead
+/// of handing out a receiver that would panic-by-disconnect once the
+/// worker has exited — the network front-end drains batchers while
+/// HTTP workers may still race a last submit, so the race must be a
+/// value, not a crash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InferError {
+    /// The batcher is draining (explicit [`Batcher::shutdown`]/drop) or
+    /// its worker thread exited; no new requests are accepted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::ShuttingDown => write!(f, "inference session is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
 struct Pending {
     x: Vec<f32>,
     t0: Instant,
@@ -68,17 +90,39 @@ struct Shared {
     metrics: Mutex<Metrics>,
     model: String,
     weights: &'static str,
+    x_elems: usize,
+    out_elems: usize,
+    step: u64,
     opts: BatchOpts,
 }
 
 pub struct Batcher {
     shared: Arc<Shared>,
-    worker: Option<JoinHandle<()>>,
+    // Mutex so a shared-reference drain works: the multi-model session
+    // pool shuts all batchers down through `&self` after the HTTP
+    // workers are joined.
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Flips the shutdown flag when the worker exits for *any* reason —
+/// including a panic inside the step — so a post-exit `submit()` gets a
+/// typed [`InferError::ShuttingDown`] instead of a receiver that can
+/// never be answered.
+struct WorkerExitGuard(Arc<Shared>);
+
+impl Drop for WorkerExitGuard {
+    fn drop(&mut self) {
+        if let Ok(mut g) = self.0.q.lock() {
+            g.shutdown = true;
+        }
+        self.0.cv.notify_all();
+    }
 }
 
 impl Batcher {
     /// Spawn the worker thread; it owns `session` until the batcher is
-    /// dropped (drop drains every queued request before joining).
+    /// drained or dropped (both flush every queued request before
+    /// joining).
     pub fn start(session: InferSession, opts: BatchOpts) -> Batcher {
         let shared = Arc::new(Shared {
             q: Mutex::new(Queue::default()),
@@ -86,34 +130,67 @@ impl Batcher {
             metrics: Mutex::new(Metrics::new()),
             model: session.model().to_string(),
             weights: session.weights().name(),
+            x_elems: session.x_elems(),
+            out_elems: session.out_elems(),
+            step: session.step(),
             opts,
         });
         let worker_shared = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
             .name("swalp-infer".into())
-            .spawn(move || worker_loop(session, worker_shared, opts))
+            .spawn(move || {
+                let _guard = WorkerExitGuard(Arc::clone(&worker_shared));
+                worker_loop(session, worker_shared, opts)
+            })
             .expect("spawning the inference worker thread");
-        Batcher { shared, worker: Some(worker) }
+        Batcher { shared, worker: Mutex::new(Some(worker)) }
     }
 
     /// Enqueue one sample and return its response channel immediately
     /// (submit-all-then-collect is how concurrent requests coalesce).
-    pub fn submit(&self, x: Vec<f32>) -> mpsc::Receiver<Response> {
+    /// After [`Batcher::shutdown`] — or after the worker exited on its
+    /// own — this returns [`InferError::ShuttingDown`].
+    pub fn submit(
+        &self,
+        x: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Response>, InferError> {
         let (tx, rx) = mpsc::channel();
         {
             let mut g = self.shared.q.lock().unwrap();
+            if g.shutdown {
+                return Err(InferError::ShuttingDown);
+            }
             g.items.push_back(Pending { x, t0: Instant::now(), tx });
         }
         self.shared.cv.notify_all();
-        rx
+        Ok(rx)
     }
 
     /// Submit one sample and block for its output row.
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
-        match self.submit(x).recv() {
+        match self.submit(x)?.recv() {
             Ok(Ok(row)) => Ok(row),
             Ok(Err(e)) => bail!("{e}"),
             Err(_) => bail!("inference worker exited before responding"),
+        }
+    }
+
+    /// Stop accepting new requests. Already-queued requests are still
+    /// served (the worker drains the queue before exiting); subsequent
+    /// [`Batcher::submit`] calls return [`InferError::ShuttingDown`].
+    pub fn shutdown(&self) {
+        self.shared.q.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Shut down and join the worker. Idempotent and callable through a
+    /// shared reference; after it returns every in-flight request has
+    /// been answered and [`Batcher::report`] reflects the final counts.
+    pub fn drain(&self) {
+        self.shutdown();
+        let handle = self.worker.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
         }
     }
 
@@ -126,15 +203,41 @@ impl Batcher {
             self.shared.opts.max_wait_us,
         )
     }
+
+    /// Model id of the session behind this batcher.
+    pub fn model(&self) -> &str {
+        &self.shared.model
+    }
+
+    /// Deployed weight-set name (`swa` / `raw` / `qswa`).
+    pub fn weights_name(&self) -> &'static str {
+        self.shared.weights
+    }
+
+    /// Elements per input sample the model expects.
+    pub fn x_elems(&self) -> usize {
+        self.shared.x_elems
+    }
+
+    /// Elements per output row.
+    pub fn out_elems(&self) -> usize {
+        self.shared.out_elems
+    }
+
+    /// Training step the checkpoint was taken at.
+    pub fn step(&self) -> u64 {
+        self.shared.step
+    }
+
+    /// Batching policy this batcher runs with.
+    pub fn opts(&self) -> BatchOpts {
+        self.shared.opts
+    }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        self.shared.q.lock().unwrap().shutdown = true;
-        self.shared.cv.notify_all();
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
+        self.drain();
     }
 }
 

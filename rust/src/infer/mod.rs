@@ -26,7 +26,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod session;
 
-pub use batcher::{BatchOpts, Batcher};
+pub use batcher::{BatchOpts, Batcher, InferError};
 pub use metrics::Metrics;
 pub use session::{InferSession, WeightChoice};
 
@@ -162,8 +162,11 @@ pub fn run(opts: &RunOpts) -> Result<(Value, Vec<Vec<f32>>)> {
                     .map(|i| (i, batcher.submit(xs[i].clone())))
                     .collect();
                 let mut got = Vec::with_capacity(rxs.len());
-                for (i, rx) in rxs {
-                    let r = rx.recv().unwrap_or(Err("worker exited".to_string()));
+                for (i, sub) in rxs {
+                    let r = match sub {
+                        Ok(rx) => rx.recv().unwrap_or(Err("worker exited".to_string())),
+                        Err(e) => Err(e.to_string()),
+                    };
                     got.push((i, r));
                 }
                 results.lock().unwrap().extend(got);

@@ -71,7 +71,10 @@ pub const JOBS_SCHEMA: &str = "swalp-jobs-v1";
 /// Daemon policy knobs (`swalp serve` flags).
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
-    /// Spool scan interval when idle.
+    /// Spool scan interval when idle. Defaults to 500ms, overridable
+    /// with the `SWALP_SPOOL_POLL_MS` environment variable (the CI
+    /// serve jobs drop it to 50ms so spool turnaround doesn't dominate
+    /// wall-clock); an explicit `--poll-ms` flag still wins.
     pub poll_ms: u64,
     /// Re-executions granted to a failing job beyond its first attempt.
     pub retries: u64,
@@ -87,8 +90,12 @@ pub struct ServeOpts {
 
 impl Default for ServeOpts {
     fn default() -> Self {
+        let poll_ms = std::env::var("SWALP_SPOOL_POLL_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(500);
         ServeOpts {
-            poll_ms: 500,
+            poll_ms,
             retries: 2,
             backoff_ms: 250,
             max_jobs: 0,
@@ -104,9 +111,11 @@ fn sub(dir: &Path, name: &str) -> PathBuf {
 
 /// SIGTERM-driven graceful shutdown. The handler only flips an atomic;
 /// the serve loop polls it between jobs and during idle sleeps, so
-/// in-flight work always drains before exit.
+/// in-flight work always drains before exit. Crate-visible because the
+/// network front-end (`serve_net`) shares the same drain signal — one
+/// SIGTERM turns both the spool loop and the HTTP listener around.
 #[cfg(unix)]
-mod sig {
+pub(crate) mod sig {
     use std::sync::atomic::{AtomicBool, Ordering};
 
     static TERM: AtomicBool = AtomicBool::new(false);
@@ -134,7 +143,7 @@ mod sig {
 }
 
 #[cfg(not(unix))]
-mod sig {
+pub(crate) mod sig {
     pub fn install() {}
 
     pub fn requested() -> bool {

@@ -27,8 +27,13 @@
 //!   deadline-bounded request batcher whose responses are bit-identical
 //!   for every batch composition — exposed as `swalp infer` and the
 //!   serve daemon's `infer` job kind (`swalp-infer-v1` reports).
+//! * [`serve_net`] is the network front-end: a std-only HTTP/1.1
+//!   daemon (`swalp serve --listen`) over a multi-model session pool,
+//!   with admission control, per-connection deadlines, and SIGTERM
+//!   graceful drain — responses bit-identical to in-process inference.
 //! * [`util`] carries the offline-image substrates: JSON, CLI parsing,
-//!   a micro-bench harness and a property-testing harness.
+//!   HTTP parse/format helpers, a micro-bench harness and a
+//!   property-testing harness.
 
 pub mod config;
 pub mod coordinator;
@@ -39,6 +44,7 @@ pub mod native;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod serve_net;
 pub mod sim;
 pub mod tensor;
 pub mod util;

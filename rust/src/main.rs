@@ -15,6 +15,8 @@
 //! report <path> [--check]      render (or schema-check) a report file
 //!                              (swalp-report-v1 or swalp-infer-v1)
 //! serve <dir> [--once ...]     job daemon over a spool dir + run ledger
+//! serve --listen addr:port     multi-model HTTP inference daemon
+//!       [--config m.json] [--model name=ckpt.bin ...]
 //! jobs <dir> [--json]          job/ledger status of a serve directory
 //! infer <ckpt> [--input f]     batched inference over a checkpoint;
 //!                              emits a swalp-infer-v1 latency report
@@ -41,6 +43,7 @@ use swalp::data;
 use swalp::infer;
 use swalp::native;
 use swalp::runtime::{artifacts_dir, Manifest, ModelBackend};
+use swalp::serve_net;
 use swalp::tensor::NamedTensors;
 use swalp::util::cli::Args;
 use swalp::util::json::Value;
@@ -284,9 +287,13 @@ fn report_check(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
     let parsed = swalp::util::json::parse(&text)
         .map_err(|e| anyhow::anyhow!("{path}: not valid JSON: {e}"))?;
-    // schema dispatch: infer reports validate through their own checker
+    // schema dispatch: infer and net-serving reports validate through
+    // their own checkers
     if let Some(Ok(infer::INFER_SCHEMA)) = parsed.opt("schema").map(|s| s.as_str()) {
         return infer_report(path, &text, &parsed, args.flag("check"));
+    }
+    if let Some(Ok(serve_net::NET_SCHEMA)) = parsed.opt("schema").map(|s| s.as_str()) {
+        return net_report(path, &text, &parsed, args.flag("check"));
     }
     let report = Report::parse(&parsed).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     if args.flag("check") {
@@ -311,15 +318,29 @@ fn report_check(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `swalp serve <dir>` — run the ledger-backed job daemon (see
-/// `swalp::ledger::serve`).
+/// `swalp serve` — the spool daemon (`swalp serve <dir>`), the network
+/// daemon (`swalp serve --listen addr:port --model name=ck.bin ...` /
+/// `--config manifest.json`), or both at once (dir + `--listen`: one
+/// SIGTERM drains both loops).
 fn serve_cmd(args: &Args) -> Result<()> {
+    let net_mode = args.opt("listen").is_some()
+        || args.opt("config").is_some()
+        || !args.opt_all("model").is_empty();
+    if net_mode {
+        return serve_net_cmd(args);
+    }
     let dir = args.positional.get(1).ok_or_else(|| {
         anyhow::anyhow!(
             "usage: swalp serve <dir> [--poll-ms N --retries N --backoff-ms N \
-             --max-jobs N --once --threads N]"
+             --max-jobs N --once --threads N] or swalp serve --listen addr:port \
+             [--config manifest.json] [--model name=ckpt.bin ...]"
         )
     })?;
+    let opts = serve_opts(args)?;
+    swalp::ledger::serve(std::path::Path::new(dir), &opts)
+}
+
+fn serve_opts(args: &Args) -> Result<swalp::ledger::ServeOpts> {
     let defaults = swalp::ledger::ServeOpts::default();
     let mut opts = swalp::ledger::ServeOpts {
         poll_ms: args.u64_or("poll-ms", defaults.poll_ms)?,
@@ -332,7 +353,49 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if let Some(t) = args.opt("threads") {
         opts.threads = Some(t.parse().map_err(|e| anyhow::anyhow!("--threads: {e}"))?);
     }
-    swalp::ledger::serve(std::path::Path::new(dir), &opts)
+    Ok(opts)
+}
+
+/// The `--listen` path: multi-model HTTP daemon (see `swalp::serve_net`).
+fn serve_net_cmd(args: &Args) -> Result<()> {
+    let nd = serve_net::NetOpts::default();
+    let opts = serve_net::NetOpts {
+        workers: args.usize_or("workers", nd.workers)?,
+        queue: args.usize_or("queue", nd.queue)?,
+        max_conns: args.usize_or("max-conns", nd.max_conns)?,
+        read_timeout_ms: args.u64_or("read-timeout-ms", nd.read_timeout_ms)?,
+        write_timeout_ms: args.u64_or("write-timeout-ms", nd.write_timeout_ms)?,
+        max_body: args.usize_or("max-body", nd.max_body)?,
+        retry_after_s: args.u64_or("retry-after-s", nd.retry_after_s)?,
+    };
+    let batch = swalp::infer::BatchOpts {
+        max_batch: args.usize_or("max-batch", 64)?,
+        max_wait_us: args.u64_or("max-wait-us", 200)?,
+    };
+    let weights = infer::WeightChoice::parse(&args.opt_or("weights", "swa"))?;
+    let mut models = Vec::new();
+    for spec in args.opt_all("model") {
+        let (name, ck) = spec.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--model wants name=checkpoint.bin, got {spec:?}")
+        })?;
+        models.push(serve_net::ModelCfg {
+            name: name.to_string(),
+            checkpoint: PathBuf::from(ck),
+            model: None,
+            weights,
+            batch,
+        });
+    }
+    serve_net::run(serve_net::RunCfg {
+        listen: args.opt_or("listen", "127.0.0.1:7878"),
+        manifest: args.opt("config").map(PathBuf::from),
+        models,
+        dir: args.positional.get(1).map(PathBuf::from),
+        opts,
+        batch,
+        serve_opts: serve_opts(args)?,
+        metrics_out: args.opt("metrics-out").map(PathBuf::from),
+    })
 }
 
 /// `swalp jobs <dir> [--json]` — status snapshot of a serve directory.
@@ -430,6 +493,54 @@ fn infer_report(path: &str, text: &str, parsed: &Value, check: bool) -> Result<(
             g.get("swa_metric")?.as_f64()?,
             g.get("qswa_metric")?.as_f64()?,
             g.get("gap")?.as_f64()?
+        );
+    }
+    Ok(())
+}
+
+/// Render or `--check` a `swalp-serve-net-v1` network metrics report
+/// (scraped from `GET /v1/metrics` or written by the SIGTERM drain;
+/// same exit-2 policy and canonical-bytes round-trip as the schemas
+/// above).
+fn net_report(path: &str, text: &str, parsed: &Value, check: bool) -> Result<()> {
+    serve_net::check_report(parsed).map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?;
+    let server = parsed.get("server")?;
+    let models = parsed.get("models")?.as_arr()?;
+    if check {
+        if parsed.to_string() != text.trim_end() {
+            bail!("{path}: file is not the canonical serialization of its report");
+        }
+        println!(
+            "ok: {} requests over {} models on {} (schema {})",
+            server.get("requests")?.as_u64()?,
+            models.len(),
+            parsed.get("listen")?.as_str()?,
+            serve_net::NET_SCHEMA
+        );
+        return Ok(());
+    }
+    println!(
+        "net report: {} over {:.3}s",
+        parsed.get("listen")?.as_str()?,
+        parsed.get("wall_s")?.as_f64()?
+    );
+    println!(
+        "  {} connections accepted, {} requests ({} http errors, {} shed 503)",
+        server.get("accepted")?.as_u64()?,
+        server.get("requests")?.as_u64()?,
+        server.get("http_errors")?.as_u64()?,
+        server.get("overflow_503")?.as_u64()?
+    );
+    for m in models {
+        let lat = m.get("latency_ms")?;
+        println!(
+            "  model {} (weights {}): {} requests, {} errors, p50 {:.3} ms, p99 {:.3} ms",
+            m.get("model")?.as_str()?,
+            m.get("weights")?.as_str()?,
+            m.get("requests")?.as_u64()?,
+            m.get("errors")?.as_u64()?,
+            lat.get("p50")?.as_f64()?,
+            lat.get("p99")?.as_f64()?
         );
     }
     Ok(())
@@ -734,14 +845,28 @@ USAGE: swalp <command> [options]
         emits swalp-report-v1 JSON; unknown --exp exits 2 with the
         registered ids
   report <path> [--check]       render / schema-check a report file,
-        swalp-report-v1 or swalp-infer-v1 (malformed or wrong-schema
-        input exits 2 with a diagnostic)
+        swalp-report-v1, swalp-infer-v1 or swalp-serve-net-v1
+        (malformed or wrong-schema input exits 2 with a diagnostic)
   serve <dir>                   ledger-backed job daemon: watches
         <dir>/spool/ for swalp-job-v1 files, executes them on the
         thread pool with retry + backoff, writes swalp-report-v1 to
         <dir>/reports/ and every cell to <dir>/ledger/
         [--poll-ms 500 --retries 2 --backoff-ms 250 --max-jobs 0
-         --once --threads N]
+         --once --threads N] (poll default overridable via
+        SWALP_SPOOL_POLL_MS)
+  serve --listen addr:port      multi-model HTTP daemon over std::net:
+        loads checkpoints from --config manifest.json
+        (swalp-serve-config-v1) and/or repeated --model name=ckpt.bin
+        flags; serves POST /v1/predict (responses bit-identical to
+        in-process inference), GET /healthz, /v1/models, /v1/metrics
+        (swalp-serve-net-v1); 503 + Retry-After at capacity; SIGTERM
+        drains in-flight work and writes a final metrics report.
+        With a <dir> positional too, the spool daemon runs alongside
+        and POST /v1/jobs spools swalp-job-v1 files into it.
+        [--workers 4 --queue 64 --max-conns 128 --read-timeout-ms 5000
+         --write-timeout-ms 5000 --max-body 1048576 --retry-after-s 1
+         --weights swa|raw|qswa --max-batch 64 --max-wait-us 200
+         --metrics-out path]
   jobs <dir> [--json]           status snapshot of a serve directory
   infer <ckpt>                  batched inference over a trained
         checkpoint: requests from --clients threads coalesce into

@@ -1,0 +1,152 @@
+//! The network serving front-end: a dependency-free HTTP/1.1 daemon
+//! over the multi-model session pool.
+//!
+//! `swalp serve --listen addr:port` turns the spool daemon into a
+//! network service. One daemon loads N checkpoints (a
+//! `swalp-serve-config-v1` manifest and/or repeated `--model
+//! name=ckpt.bin` flags) into named [`crate::infer::InferSession`]s,
+//! each behind its own [`crate::infer::Batcher`], and serves:
+//!
+//! * `POST /v1/predict` — `{"model": name, "input": [...]}` (or
+//!   `"inputs"` for several rows). Rows go through the model's batcher
+//!   exactly like in-process requests, so responses are **bit-identical
+//!   to direct `InferSession` predictions** no matter how connections
+//!   interleave — PR 8's bit-identity contract, extended across the
+//!   wire (pinned by `rust/tests/serve_net.rs`).
+//! * `GET /healthz` — liveness + model names + drain state.
+//! * `GET /v1/models` — per-model identity and shapes.
+//! * `GET /v1/metrics` — a canonical `swalp-serve-net-v1` document
+//!   (server counters + one `swalp-infer-v1` report per model); the
+//!   scraped bytes pass `swalp report --check`.
+//! * `POST /v1/jobs` / `GET /v1/jobs` — when a serve directory is also
+//!   given, net-submitted `swalp-job-v1` jobs land in the same spool →
+//!   daemon → `reports/` flow as file-submitted ones.
+//!
+//! Robustness: bounded accept→worker queue and connection cap with
+//! `503` + `Retry-After` on overflow, per-connection read/write
+//! deadlines, bounded request bodies (413), per-request 4xx on
+//! malformed input without poisoning the worker, and SIGTERM graceful
+//! drain (stop accepting → finish admitted connections → flush
+//! batchers → write the final metrics report) sharing the spool
+//! daemon's signal handler. Module layout:
+//!
+//! * [`pool`] — [`SessionPool`]: named checkpoints → batchers, manifest
+//!   parsing.
+//! * [`server`] — [`NetServer`]: accept loop, admission control,
+//!   router, drain.
+
+pub mod pool;
+pub mod server;
+
+pub use pool::{ModelCfg, SessionPool, CONFIG_SCHEMA};
+pub use server::{NetOpts, NetServer};
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::infer::BatchOpts;
+use crate::ledger::serve::sig;
+use crate::ledger::ServeOpts;
+use crate::util::json::{self, Value};
+
+/// Schema id of the `/v1/metrics` document and the final drain report.
+pub const NET_SCHEMA: &str = "swalp-serve-net-v1";
+
+/// Validate a `swalp-serve-net-v1` report (`swalp report --check` gate,
+/// applied by CI to the scraped `/v1/metrics` bytes and the drain
+/// report). Each per-model entry must itself be a valid
+/// `swalp-infer-v1` report.
+pub fn check_report(v: &Value) -> Result<()> {
+    let schema = v.get("schema")?.as_str()?;
+    if schema != NET_SCHEMA {
+        bail!("unexpected schema {schema:?} (want {NET_SCHEMA})");
+    }
+    v.get("listen")?.as_str()?;
+    v.get("wall_s")?.as_f64()?;
+    let server = v.get("server")?;
+    for k in ["accepted", "requests", "http_errors", "overflow_503"] {
+        server.get(k)?.as_u64()?;
+    }
+    for (i, m) in v.get("models")?.as_arr()?.iter().enumerate() {
+        crate::infer::check_report(m).with_context(|| format!("models[{i}]"))?;
+    }
+    Ok(())
+}
+
+/// One `swalp serve --listen` invocation.
+#[derive(Clone, Debug)]
+pub struct RunCfg {
+    pub listen: String,
+    /// `swalp-serve-config-v1` manifest path (optional).
+    pub manifest: Option<PathBuf>,
+    /// `--model name=ckpt.bin` entries, appended after the manifest's.
+    pub models: Vec<ModelCfg>,
+    /// Serve directory: enables the spool daemon loop and `/v1/jobs`.
+    pub dir: Option<PathBuf>,
+    pub opts: NetOpts,
+    /// Default batching policy for entries that don't override it.
+    pub batch: BatchOpts,
+    /// Spool daemon knobs (only used when `dir` is set).
+    pub serve_opts: ServeOpts,
+    /// Where the final drain report lands (default
+    /// `<dir>/reports/net_metrics.json` when a dir is given).
+    pub metrics_out: Option<PathBuf>,
+}
+
+/// Run the network daemon until SIGTERM, then drain and write the final
+/// metrics report. When a serve directory is configured, the spool
+/// daemon loop runs alongside on its own thread — one SIGTERM drains
+/// both.
+pub fn run(cfg: RunCfg) -> Result<()> {
+    let mut model_cfgs = Vec::new();
+    if let Some(m) = &cfg.manifest {
+        model_cfgs.extend(SessionPool::manifest_file(m, cfg.batch)?);
+    }
+    model_cfgs.extend(cfg.models.iter().cloned());
+    if model_cfgs.is_empty() && cfg.dir.is_none() {
+        bail!(
+            "nothing to serve: pass --model name=ckpt.bin, --config manifest.json, \
+             or a spool directory"
+        );
+    }
+    let pool = SessionPool::load(&model_cfgs)?;
+    let listener = std::net::TcpListener::bind(&cfg.listen)
+        .with_context(|| format!("binding {}", cfg.listen))?;
+    sig::install();
+    let spool = cfg.dir.clone().map(|d| {
+        let opts = cfg.serve_opts.clone();
+        std::thread::Builder::new()
+            .name("swalp-spool".into())
+            .spawn(move || crate::ledger::serve(&d, &opts))
+            .expect("spawning the spool daemon thread")
+    });
+    let server = NetServer::start(pool, listener, cfg.opts, cfg.dir.clone())?;
+    // stdout is line-buffered even when piped, so wrappers (tests, the
+    // CI smoke job) can read the bound address as soon as it prints
+    println!("swalp serve: listening on {} ({} models)", server.addr(), model_cfgs.len());
+    while !sig::requested() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    eprintln!("swalp serve: SIGTERM — draining connections, then batchers");
+    let report = server.shutdown();
+    let metrics_out = cfg
+        .metrics_out
+        .clone()
+        .or_else(|| cfg.dir.as_ref().map(|d| d.join("reports").join("net_metrics.json")));
+    if let Some(path) = metrics_out {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        json::write_file(&path, &report)?;
+        eprintln!("swalp serve: final metrics -> {}", path.display());
+    }
+    if let Some(h) = spool {
+        match h.join() {
+            Ok(r) => r.context("spool daemon loop")?,
+            Err(_) => bail!("spool daemon thread panicked"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,251 @@
+//! The multi-model session pool: N named checkpoints, each loaded into
+//! an [`InferSession`] behind its own [`Batcher`], served by one
+//! daemon.
+//!
+//! Models come from a `swalp-serve-config-v1` manifest or repeated
+//! `--model name=ckpt.bin` flags:
+//!
+//! ```json
+//! {"schema": "swalp-serve-config-v1",
+//!  "models": [
+//!    {"name": "mlp", "checkpoint": "mlp.bin"},
+//!    {"name": "logreg", "checkpoint": "logreg.bin", "weights": "raw",
+//!     "model": "logreg_fx_f6", "max_batch": 32, "max_wait_us": 100}]}
+//! ```
+//!
+//! Per-entry fields mirror the `swalp infer` flags: `model` overrides
+//! the checkpoint's recorded model id, `weights` picks the deployed
+//! weight set (`swa` / `raw` / `qswa`), `max_batch`/`max_wait_us`
+//! override the daemon-wide batching policy. Relative checkpoint paths
+//! resolve against the manifest's directory, so a manifest and its
+//! checkpoints move together.
+//!
+//! Each entry owns an independent `Batcher` worker thread, so requests
+//! for different models batch independently and never block each other;
+//! requests for the *same* model from different connections coalesce
+//! into shared batches exactly as in-process `infer::run` traffic does.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::infer::{BatchOpts, Batcher, InferSession, WeightChoice};
+use crate::util::json::{self, Value};
+
+/// Schema id of the multi-model manifest.
+pub const CONFIG_SCHEMA: &str = "swalp-serve-config-v1";
+
+/// One model entry, resolved from a manifest entry or a `--model` flag.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    /// Name requests address the model by (`"model"` in the predict body).
+    pub name: String,
+    pub checkpoint: PathBuf,
+    /// Model-id override for checkpoints without a recorded id.
+    pub model: Option<String>,
+    pub weights: WeightChoice,
+    pub batch: BatchOpts,
+}
+
+struct Entry {
+    name: String,
+    batcher: Batcher,
+}
+
+/// Named [`Batcher`]s behind one daemon. Lookup is by name; iteration
+/// order is the configuration order (manifest order, then flag order).
+#[derive(Default)]
+pub struct SessionPool {
+    entries: Vec<Entry>,
+}
+
+impl SessionPool {
+    pub fn new() -> Self {
+        SessionPool::default()
+    }
+
+    /// Add an already-open session under `name` (tests and benches use
+    /// this to pool `InferSession::from_parts` sessions without disk).
+    pub fn add_session(
+        &mut self,
+        name: &str,
+        session: InferSession,
+        opts: BatchOpts,
+    ) -> Result<()> {
+        if name.is_empty() {
+            bail!("model name must be non-empty");
+        }
+        if self.get(name).is_some() {
+            bail!("duplicate model name {name:?} in serve configuration");
+        }
+        self.entries.push(Entry {
+            name: name.to_string(),
+            batcher: Batcher::start(session, opts),
+        });
+        Ok(())
+    }
+
+    /// Load every configured checkpoint. Fails fast on the first bad
+    /// entry — a daemon that silently served a subset of its manifest
+    /// would hide deployment mistakes.
+    pub fn load(cfgs: &[ModelCfg]) -> Result<SessionPool> {
+        let mut pool = SessionPool::new();
+        for cfg in cfgs {
+            let session =
+                InferSession::open(&cfg.checkpoint, cfg.model.as_deref(), cfg.weights)
+                    .with_context(|| {
+                        format!("loading model {:?} from {}", cfg.name, cfg.checkpoint.display())
+                    })?;
+            pool.add_session(&cfg.name, session, cfg.batch)?;
+        }
+        Ok(pool)
+    }
+
+    /// Parse a `swalp-serve-config-v1` manifest into model entries.
+    /// Relative checkpoint paths resolve against `base` (the manifest's
+    /// directory); `defaults` fills unset batching fields.
+    pub fn parse_manifest(v: &Value, base: &Path, defaults: BatchOpts) -> Result<Vec<ModelCfg>> {
+        let schema = v.get("schema")?.as_str()?;
+        if schema != CONFIG_SCHEMA {
+            bail!("unexpected manifest schema {schema:?} (want {CONFIG_SCHEMA})");
+        }
+        let mut out = Vec::new();
+        for (i, m) in v.get("models")?.as_arr()?.iter().enumerate() {
+            let ctx = |e: anyhow::Error| anyhow!("manifest models[{i}]: {e:#}");
+            let name = m.get("name").and_then(|n| n.as_str().map(str::to_string)).map_err(ctx)?;
+            let ck = m
+                .get("checkpoint")
+                .and_then(|c| c.as_str().map(PathBuf::from))
+                .map_err(ctx)?;
+            let checkpoint = if ck.is_absolute() { ck } else { base.join(ck) };
+            let model = match m.opt("model") {
+                None | Some(Value::Null) => None,
+                Some(o) => Some(o.as_str().map_err(ctx)?.to_string()),
+            };
+            let weights = match m.opt("weights") {
+                None => WeightChoice::Swa,
+                Some(w) => WeightChoice::parse(w.as_str().map_err(ctx)?)?,
+            };
+            let batch = BatchOpts {
+                max_batch: match m.opt("max_batch") {
+                    Some(b) => b.as_u64().map_err(ctx)? as usize,
+                    None => defaults.max_batch,
+                },
+                max_wait_us: match m.opt("max_wait_us") {
+                    Some(w) => w.as_u64().map_err(ctx)?,
+                    None => defaults.max_wait_us,
+                },
+            };
+            out.push(ModelCfg { name, checkpoint, model, weights, batch });
+        }
+        Ok(out)
+    }
+
+    /// Parse + resolve a manifest file.
+    pub fn manifest_file(path: &Path, defaults: BatchOpts) -> Result<Vec<ModelCfg>> {
+        let v = json::parse_file(path)?;
+        let base = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        Self::parse_manifest(&v, &base, defaults)
+            .with_context(|| format!("reading manifest {}", path.display()))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Batcher> {
+        self.entries.iter().find(|e| e.name == name).map(|e| &e.batcher)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `GET /v1/models` payload: per-entry identity and shapes, enough
+    /// for a client to build valid predict bodies without the manifest.
+    pub fn models_json(&self) -> Value {
+        let models = self
+            .entries
+            .iter()
+            .map(|e| {
+                let b = &e.batcher;
+                Value::obj(vec![
+                    ("name", Value::str(&e.name)),
+                    ("model", Value::str(b.model())),
+                    ("weights", Value::str(b.weights_name())),
+                    ("step", Value::Num(b.step() as f64)),
+                    ("x_elems", Value::Num(b.x_elems() as f64)),
+                    ("out_elems", Value::Num(b.out_elems() as f64)),
+                    ("max_batch", Value::Num(b.opts().max_batch as f64)),
+                    ("max_wait_us", Value::Num(b.opts().max_wait_us as f64)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("models", Value::Arr(models)),
+        ])
+    }
+
+    /// One `swalp-infer-v1` report per model, configuration order.
+    pub fn reports(&self) -> Vec<Value> {
+        self.entries.iter().map(|e| e.batcher.report()).collect()
+    }
+
+    /// Stop accepting new requests on every batcher (queued requests
+    /// still drain — see [`Batcher::shutdown`]).
+    pub fn shutdown(&self) {
+        for e in &self.entries {
+            e.batcher.shutdown();
+        }
+    }
+
+    /// Shut down and join every batcher worker; afterwards
+    /// [`SessionPool::reports`] reflects final counts.
+    pub fn drain(&self) {
+        for e in &self.entries {
+            e.batcher.drain();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_defaults_and_overrides() {
+        let text = r#"{"schema": "swalp-serve-config-v1", "models": [
+            {"name": "a", "checkpoint": "a.bin"},
+            {"name": "b", "checkpoint": "/abs/b.bin", "weights": "raw",
+             "model": "logreg_fx_f6", "max_batch": 32, "max_wait_us": 100}]}"#;
+        let v = json::parse(text).unwrap();
+        let defaults = BatchOpts { max_batch: 64, max_wait_us: 200 };
+        let cfgs = SessionPool::parse_manifest(&v, Path::new("/srv/models"), defaults).unwrap();
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].name, "a");
+        assert_eq!(cfgs[0].checkpoint, Path::new("/srv/models/a.bin"));
+        assert_eq!(cfgs[0].weights, WeightChoice::Swa);
+        assert_eq!(cfgs[0].batch.max_batch, 64);
+        assert_eq!(cfgs[1].checkpoint, Path::new("/abs/b.bin"));
+        assert_eq!(cfgs[1].weights, WeightChoice::Raw);
+        assert_eq!(cfgs[1].model.as_deref(), Some("logreg_fx_f6"));
+        assert_eq!(cfgs[1].batch.max_batch, 32);
+        assert_eq!(cfgs[1].batch.max_wait_us, 100);
+    }
+
+    #[test]
+    fn manifest_rejects_wrong_schema_and_bad_entries() {
+        let defaults = BatchOpts::default();
+        let bad_schema = json::parse(r#"{"schema": "nope", "models": []}"#).unwrap();
+        assert!(SessionPool::parse_manifest(&bad_schema, Path::new("."), defaults).is_err());
+        let no_name =
+            json::parse(r#"{"schema": "swalp-serve-config-v1", "models": [{"checkpoint": "x"}]}"#)
+                .unwrap();
+        let err = SessionPool::parse_manifest(&no_name, Path::new("."), defaults).unwrap_err();
+        assert!(format!("{err:#}").contains("models[0]"), "{err:#}");
+    }
+}

@@ -1,0 +1,544 @@
+//! The HTTP/1.1 server: accept loop, bounded worker hand-off queue,
+//! admission control, the endpoint router, and graceful drain.
+//!
+//! Threading model: one accept thread and a fixed pool of connection
+//! workers share a bounded `VecDeque<TcpStream>`. Admission control
+//! happens at accept time — if the hand-off queue is full or the live
+//! connection count hits the cap, the connection is answered `503` with
+//! a `Retry-After` header and closed *without ever reaching a worker*,
+//! so overload sheds load instead of stalling clients. Admitted
+//! connections are always served: workers only exit once the queue is
+//! empty *and* the stop flag is set.
+//!
+//! Each connection gets read/write deadlines (`set_read_timeout` /
+//! `set_write_timeout`), a bounded request head, and a bounded body;
+//! a malformed or oversized request is answered per-request (400/413)
+//! and never poisons the worker — the next request on a fresh
+//! connection sees a clean server.
+//!
+//! Drain order matters and is pinned by tests: on shutdown the listener
+//! stops accepting, HTTP workers finish every admitted connection
+//! (responses during drain carry `Connection: close`), and only then
+//! are the pool's batchers drained — so a request admitted before the
+//! signal always reaches its batcher, and a submit racing the drain
+//! gets the typed [`crate::infer::InferError::ShuttingDown`] → `503`.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::infer;
+use crate::ledger;
+use crate::util::http::{self, HttpError, Limits, Request};
+use crate::util::json::{self, Value};
+
+use super::pool::SessionPool;
+use super::NET_SCHEMA;
+
+/// Server policy knobs (`swalp serve --listen` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct NetOpts {
+    /// Connection worker threads.
+    pub workers: usize,
+    /// Accept→worker hand-off queue bound; overflow is answered 503.
+    pub queue: usize,
+    /// Cap on connections admitted but not yet finished (queued +
+    /// in-service); overflow is answered 503.
+    pub max_conns: usize,
+    /// Per-connection read deadline. Also bounds how long an idle
+    /// keep-alive connection may pin a worker.
+    pub read_timeout_ms: u64,
+    pub write_timeout_ms: u64,
+    /// Request body limit in bytes (413 above it).
+    pub max_body: usize,
+    /// Seconds advertised in the 503 `Retry-After` header.
+    pub retry_after_s: u64,
+}
+
+impl Default for NetOpts {
+    fn default() -> Self {
+        NetOpts {
+            workers: 4,
+            queue: 64,
+            max_conns: 128,
+            read_timeout_ms: 5000,
+            write_timeout_ms: 5000,
+            max_body: 1 << 20,
+            retry_after_s: 1,
+        }
+    }
+}
+
+#[derive(Default)]
+struct ServerStats {
+    accepted: u64,
+    requests: u64,
+    http_errors: u64,
+    overflow_503: u64,
+}
+
+struct NetShared {
+    pool: SessionPool,
+    /// Serve directory for `/v1/jobs` spool hand-off (None = predict-only).
+    dir: Option<PathBuf>,
+    opts: NetOpts,
+    conns: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    /// Admitted-but-unfinished connections (queued + in-service).
+    active: AtomicUsize,
+    stop: AtomicBool,
+    stats: Mutex<ServerStats>,
+    start: Instant,
+    listen: String,
+    job_seq: AtomicU64,
+}
+
+/// A running network daemon. Dropping without [`NetServer::shutdown`]
+/// still stops the threads, but only `shutdown` returns the final
+/// drained metrics report.
+pub struct NetServer {
+    shared: Arc<NetShared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Take ownership of a bound listener and start serving `pool`.
+    pub fn start(
+        pool: SessionPool,
+        listener: TcpListener,
+        opts: NetOpts,
+        dir: Option<PathBuf>,
+    ) -> Result<NetServer> {
+        let addr = listener.local_addr().context("reading the listener address")?;
+        // nonblocking so the accept loop can poll the stop flag; real
+        // connections are switched back to blocking mode on admission
+        listener.set_nonblocking(true).context("setting the listener nonblocking")?;
+        let shared = Arc::new(NetShared {
+            pool,
+            dir,
+            opts,
+            conns: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            active: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            stats: Mutex::new(ServerStats::default()),
+            start: Instant::now(),
+            listen: addr.to_string(),
+            job_seq: AtomicU64::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("swalp-net-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawning the accept thread")?;
+        let mut workers = Vec::new();
+        for i in 0..opts.workers.max(1) {
+            let worker_shared = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("swalp-net-{i}"))
+                    .spawn(move || worker_loop(worker_shared))
+                    .context("spawning a connection worker")?,
+            );
+        }
+        Ok(NetServer { shared, accept: Some(accept), workers, addr })
+    }
+
+    /// The bound address (resolves `--listen host:0` port selection).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live metrics snapshot — the same document `GET /v1/metrics`
+    /// serves (`swalp-serve-net-v1`).
+    pub fn metrics(&self) -> Value {
+        net_report(&self.shared)
+    }
+
+    /// Graceful drain: stop accepting, finish every admitted
+    /// connection, flush the batchers, and return the final metrics
+    /// report. Connections idle in keep-alive are closed by their read
+    /// deadline, so drain takes at most ~`read_timeout_ms` beyond the
+    /// in-flight work.
+    pub fn shutdown(mut self) -> Value {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // batchers last: every admitted request has already reached its
+        // batcher, so this flushes in-flight batches, then reports
+        self.shared.pool.drain();
+        net_report(&self.shared)
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.pool.drain();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<NetShared>) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return; // drops (closes) the listener
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => admit(&shared, stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                eprintln!("swalp serve: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Admission control: hand the connection to the worker queue, or shed
+/// it with `503` + `Retry-After` when the queue or connection cap is
+/// hit. The rejection never consumes a worker.
+fn admit(shared: &NetShared, stream: TcpStream) {
+    shared.stats.lock().unwrap().accepted += 1;
+    let _ = stream.set_nonblocking(false);
+    {
+        let mut q = shared.conns.lock().unwrap();
+        if shared.active.load(Ordering::SeqCst) < shared.opts.max_conns
+            && q.len() < shared.opts.queue.max(1)
+        {
+            shared.active.fetch_add(1, Ordering::SeqCst);
+            q.push_back(stream);
+            drop(q);
+            shared.cv.notify_one();
+            return;
+        }
+    }
+    shared.stats.lock().unwrap().overflow_503 += 1;
+    let mut stream = stream;
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(shared.opts.write_timeout_ms)));
+    let retry = shared.opts.retry_after_s.to_string();
+    let body = err_body("server at connection capacity, retry later");
+    let _ = http::write_response(
+        &mut stream,
+        503,
+        &[("retry-after", retry.as_str()), ("content-type", "application/json")],
+        &body,
+        true,
+    );
+}
+
+fn worker_loop(shared: Arc<NetShared>) {
+    loop {
+        let conn = {
+            let mut q = shared.conns.lock().unwrap();
+            loop {
+                if let Some(c) = q.pop_front() {
+                    break Some(c);
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                let (back, _t) = shared.cv.wait_timeout(q, Duration::from_millis(100)).unwrap();
+                q = back;
+            }
+        };
+        match conn {
+            Some(c) => {
+                handle_conn(&shared, c);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            }
+            None => return,
+        }
+    }
+}
+
+fn err_body(msg: &str) -> Vec<u8> {
+    Value::obj(vec![("error", Value::str(msg))]).to_string().into_bytes()
+}
+
+/// Serve one connection: keep-alive request loop with per-connection
+/// deadlines. Request-level failures (bad JSON, wrong shape, oversized
+/// body) are answered per-request; transport-level failures end the
+/// connection silently.
+fn handle_conn(shared: &NetShared, stream: TcpStream) {
+    let opts = &shared.opts;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(opts.read_timeout_ms)));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(opts.write_timeout_ms)));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut stream = stream;
+    let limits = Limits { max_head: 16 * 1024, max_body: opts.max_body };
+    loop {
+        let req = match http::read_request(&mut reader, &limits) {
+            Ok(r) => r,
+            // keep-alive ended, idle deadline fired, or transport died
+            Err(HttpError::Closed) | Err(HttpError::Timeout) | Err(HttpError::Io(_)) => return,
+            Err(HttpError::TooLarge(m)) => {
+                respond(shared, &mut stream, 413, &err_body(&m), true);
+                return;
+            }
+            Err(HttpError::Malformed(m)) => {
+                respond(shared, &mut stream, 400, &err_body(&m), true);
+                return;
+            }
+        };
+        // during drain, finish this request but release the worker
+        let close = shared.stop.load(Ordering::SeqCst) || req.wants_close();
+        let (status, body) = route(shared, &req);
+        respond(shared, &mut stream, status, &body, close);
+        if close {
+            return;
+        }
+    }
+}
+
+fn respond(shared: &NetShared, stream: &mut TcpStream, status: u16, body: &[u8], close: bool) {
+    {
+        let mut s = shared.stats.lock().unwrap();
+        s.requests += 1;
+        if status >= 400 {
+            s.http_errors += 1;
+        }
+    }
+    let retry = shared.opts.retry_after_s.to_string();
+    let mut headers: Vec<(&str, &str)> = vec![("content-type", "application/json")];
+    if status == 503 {
+        headers.push(("retry-after", retry.as_str()));
+    }
+    if http::write_response(stream, status, &headers, body, close).is_err() {
+        let _ = stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+const ROUTES: &[(&str, &str)] = &[
+    ("GET", "/healthz"),
+    ("GET", "/v1/models"),
+    ("GET", "/v1/metrics"),
+    ("POST", "/v1/predict"),
+    ("POST", "/v1/jobs"),
+    ("GET", "/v1/jobs"),
+];
+
+fn route(shared: &NetShared, req: &Request) -> (u16, Vec<u8>) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let names = shared.pool.names().iter().map(|n| Value::str(n)).collect();
+            let body = Value::obj(vec![
+                ("status", Value::str("ok")),
+                ("models", Value::Arr(names)),
+                ("draining", Value::Bool(shared.stop.load(Ordering::SeqCst))),
+            ]);
+            (200, body.to_string().into_bytes())
+        }
+        ("GET", "/v1/models") => (200, shared.pool.models_json().to_string().into_bytes()),
+        ("GET", "/v1/metrics") => (200, net_report(shared).to_string().into_bytes()),
+        ("POST", "/v1/predict") => predict(shared, &req.body),
+        ("POST", "/v1/jobs") => submit_job(shared, &req.body),
+        ("GET", "/v1/jobs") => jobs_snapshot(shared),
+        (method, path) => {
+            if ROUTES.iter().any(|(_, p)| *p == path) {
+                let allowed: Vec<&str> = ROUTES
+                    .iter()
+                    .filter(|(_, p)| *p == path)
+                    .map(|(m, _)| *m)
+                    .collect();
+                let msg =
+                    format!("{method} not allowed on {path} (use {})", allowed.join("/"));
+                (405, err_body(&msg))
+            } else {
+                (404, err_body(&format!("no route for {path}")))
+            }
+        }
+    }
+}
+
+/// `POST /v1/predict`: `{"model": name, "input": [...]}` for one sample
+/// or `{"model": name, "inputs": [[...], ...]}` for several. Rows go
+/// through the model's [`crate::infer::Batcher`] exactly like
+/// in-process requests, so responses are bit-identical to direct
+/// `InferSession::predict` output — the JSON number formatting is
+/// shortest-round-trip f64, which is exact for every f32.
+fn predict(shared: &NetShared, body: &[u8]) -> (u16, Vec<u8>) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, err_body("request body is not utf-8")),
+    };
+    let v = match json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return (400, err_body(&format!("request body is not valid JSON: {e:#}"))),
+    };
+    let model = match v.get("model").and_then(|m| m.as_str()) {
+        Ok(m) => m.to_string(),
+        Err(_) => return (400, err_body("body needs a \"model\" field naming the session")),
+    };
+    let batcher = match shared.pool.get(&model) {
+        Some(b) => b,
+        None => {
+            let msg = format!(
+                "unknown model {:?}; this daemon serves: {}",
+                model,
+                shared.pool.names().join(", ")
+            );
+            return (404, err_body(&msg));
+        }
+    };
+    let (single, samples) = if let Some(i) = v.opt("input") {
+        match i.as_f32_vec() {
+            Ok(row) => (true, vec![row]),
+            Err(e) => return (400, err_body(&format!("input: {e:#}"))),
+        }
+    } else if let Some(many) = v.opt("inputs") {
+        let arr = match many.as_arr() {
+            Ok(a) => a,
+            Err(e) => return (400, err_body(&format!("inputs: {e:#}"))),
+        };
+        let mut rows = Vec::with_capacity(arr.len());
+        for (i, s) in arr.iter().enumerate() {
+            match s.as_f32_vec() {
+                Ok(row) => rows.push(row),
+                Err(e) => return (400, err_body(&format!("inputs[{i}]: {e:#}"))),
+            }
+        }
+        (false, rows)
+    } else {
+        return (400, err_body("body needs an \"input\" row or an \"inputs\" array"));
+    };
+    if samples.is_empty() {
+        return (400, err_body("inputs array is empty"));
+    }
+    // submit-all-then-collect so a multi-sample request coalesces
+    let mut rxs = Vec::with_capacity(samples.len());
+    for row in samples {
+        match batcher.submit(row) {
+            Ok(rx) => rxs.push(rx),
+            Err(infer::InferError::ShuttingDown) => {
+                return (503, err_body("model is shutting down"));
+            }
+        }
+    }
+    let mut outputs = Vec::with_capacity(rxs.len());
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv() {
+            Ok(Ok(row)) => {
+                outputs.push(Value::Arr(row.iter().map(|&x| Value::Num(x as f64)).collect()))
+            }
+            Ok(Err(msg)) => return (400, err_body(&format!("sample {i}: {msg}"))),
+            Err(_) => return (503, err_body("model worker exited before responding")),
+        }
+    }
+    let mut pairs = vec![
+        ("model", Value::str(&model)),
+        ("weights", Value::str(batcher.weights_name())),
+    ];
+    let out = if single {
+        pairs.push(("output", outputs.into_iter().next().expect("one output row")));
+        Value::obj(pairs)
+    } else {
+        pairs.push(("outputs", Value::Arr(outputs)));
+        Value::obj(pairs)
+    };
+    (200, out.to_string().into_bytes())
+}
+
+/// `POST /v1/jobs`: validate a `swalp-job-v1` document and drop it into
+/// the serve directory's spool — net-submitted jobs land in exactly the
+/// same spool → daemon → `reports/` flow as file-submitted ones.
+fn submit_job(shared: &NetShared, body: &[u8]) -> (u16, Vec<u8>) {
+    let dir = match &shared.dir {
+        Some(d) => d,
+        None => {
+            return (404, err_body(
+                "no spool directory configured (start as `swalp serve <dir> --listen ...`)",
+            ))
+        }
+    };
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, err_body("request body is not utf-8")),
+    };
+    let v = match json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return (400, err_body(&format!("job body is not valid JSON: {e:#}"))),
+    };
+    match v.get("schema").and_then(|s| s.as_str()) {
+        Ok(s) if s == ledger::serve::JOB_SCHEMA => {}
+        Ok(s) => {
+            return (400, err_body(&format!(
+                "job schema {s:?} unsupported (want {})",
+                ledger::serve::JOB_SCHEMA
+            )))
+        }
+        Err(_) => return (400, err_body("job body needs a \"schema\" field")),
+    }
+    let seq = shared.job_seq.fetch_add(1, Ordering::SeqCst);
+    let job = format!("net-{}-{seq:04}", std::process::id());
+    let path = dir.join("spool").join(format!("{job}.json"));
+    if let Err(e) = std::fs::create_dir_all(dir.join("spool")).and_then(|_| {
+        std::fs::write(&path, v.to_string())
+    }) {
+        return (500, err_body(&format!("spooling job: {e}")));
+    }
+    let body = Value::obj(vec![
+        ("job", Value::str(&job)),
+        ("spooled", Value::str(&path.display().to_string())),
+    ]);
+    (202, body.to_string().into_bytes())
+}
+
+fn jobs_snapshot(shared: &NetShared) -> (u16, Vec<u8>) {
+    let dir = match &shared.dir {
+        Some(d) => d,
+        None => return (404, err_body("no spool directory configured")),
+    };
+    match ledger::jobs_status(dir) {
+        Ok(v) => (200, v.to_string().into_bytes()),
+        Err(e) => (500, err_body(&format!("reading job status: {e:#}"))),
+    }
+}
+
+/// The `swalp-serve-net-v1` document: server counters plus one
+/// `swalp-infer-v1` report per model. Serialized canonically, so the
+/// bytes scraped from `/v1/metrics` pass `swalp report --check`.
+fn net_report(shared: &NetShared) -> Value {
+    let s = shared.stats.lock().unwrap();
+    Value::obj(vec![
+        ("schema", Value::str(NET_SCHEMA)),
+        ("listen", Value::str(&shared.listen)),
+        ("wall_s", Value::Num(shared.start.elapsed().as_secs_f64())),
+        (
+            "server",
+            Value::obj(vec![
+                ("accepted", Value::Num(s.accepted as f64)),
+                ("requests", Value::Num(s.requests as f64)),
+                ("http_errors", Value::Num(s.http_errors as f64)),
+                ("overflow_503", Value::Num(s.overflow_503 as f64)),
+            ]),
+        ),
+        ("models", Value::Arr(shared.pool.reports())),
+    ])
+}

@@ -11,6 +11,10 @@ pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
+    /// Every `--key value` / `--key=value` pair in argv order. `options`
+    /// keeps last-wins semantics; repeatable options (`--model name=ck`
+    /// in `swalp serve`) read all occurrences from here via [`Args::opt_all`].
+    pub pairs: Vec<(String, String)>,
 }
 
 /// Boolean switches that never consume a following value — keeps
@@ -29,6 +33,7 @@ impl Args {
         while let Some(a) = iter.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
+                    out.pairs.push((k.to_string(), v.to_string()));
                     out.options.insert(k.to_string(), v.to_string());
                 } else if KNOWN_FLAGS.contains(&rest) {
                     out.flags.push(rest.to_string());
@@ -38,6 +43,7 @@ impl Args {
                     .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
+                    out.pairs.push((rest.to_string(), v.clone()));
                     out.options.insert(rest.to_string(), v);
                 } else {
                     out.flags.push(rest.to_string());
@@ -63,6 +69,15 @@ impl Args {
 
     pub fn opt_or(&self, name: &str, default: &str) -> String {
         self.opt(name).unwrap_or(default).to_string()
+    }
+
+    /// Every value given for a repeatable option, in argv order.
+    pub fn opt_all(&self, name: &str) -> Vec<&str> {
+        self.pairs
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn req(&self, name: &str) -> Result<&str> {
@@ -117,6 +132,15 @@ mod tests {
         assert_eq!(a.f64_or("x", 0.0).unwrap(), 2.5);
         assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
         assert!(a.req("absent").is_err());
+    }
+
+    #[test]
+    fn repeated_options_keep_all_values_in_order() {
+        let a = parse("serve --model m1=a.bin --model m2=b.bin --listen 127.0.0.1:0");
+        assert_eq!(a.opt_all("model"), vec!["m1=a.bin", "m2=b.bin"]);
+        // the map accessor still sees the last occurrence
+        assert_eq!(a.opt("model"), Some("m2=b.bin"));
+        assert!(a.opt_all("absent").is_empty());
     }
 
     #[test]

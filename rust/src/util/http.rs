@@ -1,0 +1,400 @@
+//! Minimal HTTP/1.1 parsing and formatting over `std::net`.
+//!
+//! The network serving front-end (`serve_net`) is dependency-free by
+//! policy — no hyper, no tokio — so this module carries exactly the
+//! slice of HTTP/1.1 the daemon needs: request-line + header parsing
+//! with hard size limits, `Content-Length` bodies (chunked transfer is
+//! rejected with 400), keep-alive / `Connection: close` semantics, and
+//! a response writer that always emits `Content-Length` so clients can
+//! frame responses without sniffing. A tiny client half (used by tests
+//! and the `net/*` benches) lives here too so both sides agree on the
+//! wire format.
+//!
+//! Errors are deliberately coarse: the server maps `TooLarge` to 413,
+//! `Malformed` to 400, and treats `Closed`/`Timeout`/`Io` as
+//! end-of-connection. A malformed request never panics the worker —
+//! the connection is answered and closed, and the worker moves on.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// One parsed HTTP/1.1 request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Header names are lowercased at parse time; values are trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// True when the client asked for the connection to be closed after
+    /// this exchange (`Connection: close`).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+/// Why a request could not be read off the socket.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Clean EOF before any request bytes — keep-alive connection ended.
+    Closed,
+    /// The read deadline fired. The server closes the connection.
+    Timeout,
+    /// Header block or declared body exceeds the configured limit (413).
+    TooLarge(String),
+    /// Unparseable request line / header / truncated body (400).
+    Malformed(String),
+    /// Any other transport error; the connection is abandoned.
+    Io(io::Error),
+}
+
+/// Parse limits for [`read_request`]. `max_head` bounds the request
+/// line plus all header lines; `max_body` bounds the declared
+/// `Content-Length`.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    pub max_head: usize,
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_head: 16 * 1024, max_body: 1 << 20 }
+    }
+}
+
+fn classify(e: io::Error) -> HttpError {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => HttpError::Timeout,
+        _ => HttpError::Io(e),
+    }
+}
+
+fn read_line_limited(
+    r: &mut impl BufRead,
+    budget: &mut usize,
+    what: &str,
+) -> Result<Option<String>, HttpError> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).map_err(classify)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n > *budget {
+        return Err(HttpError::TooLarge(format!("{what} exceeds head limit")));
+    }
+    *budget -= n;
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(Some(line))
+}
+
+/// Read one request. Blocks until a full request arrives, the
+/// connection closes, or the stream's read timeout fires.
+pub fn read_request(r: &mut impl BufRead, limits: &Limits) -> Result<Request, HttpError> {
+    let mut budget = limits.max_head;
+    let line = match read_line_limited(r, &mut budget, "request line")? {
+        None => return Err(HttpError::Closed),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if parts.next().is_none() => (m, p, v),
+        _ => return Err(HttpError::Malformed(format!("bad request line {line:?}"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line_limited(r, &mut budget, "header block")? {
+            None => return Err(HttpError::Malformed("eof inside header block".into())),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("bad header line {line:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: Vec::new(),
+    };
+    if let Some(te) = req.header("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(HttpError::Malformed(format!(
+                "transfer-encoding {te:?} unsupported; send content-length"
+            )));
+        }
+    }
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed(format!("bad content-length {v:?}")))?,
+    };
+    if len > limits.max_body {
+        return Err(HttpError::TooLarge(format!(
+            "body of {len} bytes exceeds limit of {} bytes",
+            limits.max_body
+        )));
+    }
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).map_err(|e| match e.kind() {
+            io::ErrorKind::UnexpectedEof => {
+                HttpError::Malformed(format!("body truncated before {len} declared bytes"))
+            }
+            _ => classify(e),
+        })?;
+        req.body = body;
+    }
+    Ok(req)
+}
+
+/// Canonical reason phrase for the status codes the daemon emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one response. `Content-Length` and `Connection` are always
+/// emitted; extra headers come first so callers can add `Retry-After`
+/// or `Content-Type`.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    extra: &[(&str, &str)],
+    body: &[u8],
+    close: bool,
+) -> io::Result<()> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", status, reason(status));
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str(&format!("content-length: {}\r\n", body.len()));
+    head.push_str(if close { "connection: close\r\n" } else { "connection: keep-alive\r\n" });
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Client half — used by tests, the CI smoke job recipe, and net/* benches.
+// ---------------------------------------------------------------------------
+
+/// One parsed HTTP/1.1 response (client side).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("<non-utf8 body>")
+    }
+}
+
+/// Write one request on an open stream (keep-alive unless `close`).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    close: bool,
+) -> io::Result<()> {
+    let body = body.unwrap_or(&[]);
+    let mut head = format!("{method} {path} HTTP/1.1\r\nhost: swalp\r\n");
+    if !body.is_empty() {
+        head.push_str("content-type: application/json\r\n");
+    }
+    head.push_str(&format!("content-length: {}\r\n", body.len()));
+    if close {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one response off a stream (requires `Content-Length` framing,
+/// which [`write_response`] guarantees).
+pub fn read_response(r: &mut impl BufRead) -> io::Result<Response> {
+    let bad = |m: String| io::Error::new(io::ErrorKind::InvalidData, m);
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof before status line"));
+    }
+    let status = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| bad(format!("bad status line {line:?}")))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof inside headers"));
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| bad(format!("bad header line {line:?}")))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let len = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .ok_or_else(|| bad("response without content-length".into()))?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Response { status, headers, body })
+}
+
+/// One-shot request: connect, send with `Connection: close`, read the
+/// response. Tests and the bench single-request path use this.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> io::Result<Response> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    write_request(&mut stream, method, path, body, true)?;
+    read_response(&mut reader)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8], limits: &Limits) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(bytes.to_vec()), limits)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/predict HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = parse(raw, &Limits::default()).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/predict");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"abcd");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn close_header_is_case_insensitive() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: Close\r\n\r\n";
+        assert!(parse(raw, &Limits::default()).unwrap().wants_close());
+    }
+
+    #[test]
+    fn truncated_body_is_malformed() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        match parse(raw, &Limits::default()) {
+            Err(HttpError::Malformed(m)) => assert!(m.contains("truncated"), "{m}"),
+            other => panic!("want Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_too_large() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 1000\r\n\r\n";
+        let limits = Limits { max_head: 16 * 1024, max_body: 100 };
+        match parse(raw, &limits) {
+            Err(HttpError::TooLarge(m)) => assert!(m.contains("1000"), "{m}"),
+            other => panic!("want TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_head_is_too_large() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend_from_slice(format!("x-pad: {}\r\n\r\n", "a".repeat(64)).as_bytes());
+        let limits = Limits { max_head: 32, max_body: 100 };
+        assert!(matches!(parse(&raw, &limits), Err(HttpError::TooLarge(_))));
+    }
+
+    #[test]
+    fn garbage_request_line_is_malformed() {
+        assert!(matches!(
+            parse(b"garbage\r\n\r\n", &Limits::default()),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse(b"GET / SPDY/3\r\n\r\n", &Limits::default()),
+            Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn eof_before_request_is_closed() {
+        assert!(matches!(parse(b"", &Limits::default()), Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 503, &[("retry-after", "1")], b"{}", true).unwrap();
+        let resp = read_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.header("connection"), Some("close"));
+        assert_eq!(resp.body, b"{}");
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod http;
 pub mod json;
 pub mod prop;
 

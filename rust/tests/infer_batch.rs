@@ -128,7 +128,7 @@ fn run_clients(
                     .iter()
                     .skip(c)
                     .step_by(threads)
-                    .map(|&i| (i, batcher.submit(xs[i].clone())))
+                    .map(|&i| (i, batcher.submit(xs[i].clone()).unwrap()))
                     .collect();
                 let mut got = Vec::with_capacity(rxs.len());
                 for (i, rx) in rxs {
@@ -203,7 +203,7 @@ fn partial_batches_flush_at_the_deadline() {
     // max_batch far above the request count: only the deadline can
     // dispatch; recv would hang forever if partial batches starved
     let batcher = Batcher::start(session, BatchOpts { max_batch: 1000, max_wait_us: 50_000 });
-    let rxs: Vec<_> = xs.iter().map(|x| batcher.submit(x.clone())).collect();
+    let rxs: Vec<_> = xs.iter().map(|x| batcher.submit(x.clone()).unwrap()).collect();
     for rx in rxs {
         rx.recv().unwrap().unwrap();
     }
@@ -220,8 +220,8 @@ fn partial_batches_flush_at_the_deadline() {
 fn wrong_sized_requests_fail_alone_without_poisoning_their_batch() {
     let (session, xs) = session_and_inputs("mlp_qmm_fx86", 2);
     let batcher = Batcher::start(session, BatchOpts { max_batch: 8, max_wait_us: 20_000 });
-    let good: Vec<_> = xs.iter().map(|x| batcher.submit(x.clone())).collect();
-    let bad = batcher.submit(vec![1.0; 3]);
+    let good: Vec<_> = xs.iter().map(|x| batcher.submit(x.clone()).unwrap()).collect();
+    let bad = batcher.submit(vec![1.0; 3]).unwrap();
     let err = bad.recv().unwrap().unwrap_err();
     assert!(err.contains("sample size"), "diagnostic names the size mismatch: {err}");
     for rx in good {
@@ -231,6 +231,28 @@ fn wrong_sized_requests_fail_alone_without_poisoning_their_batch() {
     infer::check_report(&report).unwrap();
     assert_eq!(report.get("errors").unwrap().as_u64().unwrap(), 1);
     assert_eq!(report.get("samples").unwrap().as_u64().unwrap(), 2);
+}
+
+#[test]
+fn submit_after_shutdown_returns_typed_error_and_flushes_in_flight_work() {
+    let (session, xs) = session_and_inputs("mlp_qmm_fx86", 2);
+    let batcher = Batcher::start(session, BatchOpts { max_batch: 4, max_wait_us: 100 });
+    let rx = batcher.submit(xs[0].clone()).unwrap();
+    // drain joins the worker; the already-queued request must still be
+    // answered (shutdown flushes, it never drops work on the floor)
+    batcher.drain();
+    rx.recv().unwrap().unwrap();
+    // post-drain submissions fail with the typed error, not a panic
+    let err = batcher.submit(xs[1].clone()).unwrap_err();
+    assert_eq!(err, infer::InferError::ShuttingDown);
+    let err = batcher.infer(xs[1].clone()).unwrap_err();
+    assert!(err.to_string().contains("shutting down"), "{err:#}");
+    // the final report is still readable and consistent after drain
+    let report = batcher.report();
+    infer::check_report(&report).unwrap();
+    assert_eq!(report.get("requests").unwrap().as_u64().unwrap(), 1);
+    // drain is idempotent
+    batcher.drain();
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,484 @@
+//! Proofs for the network serving front-end: the bit-identity contract
+//! extended across TCP, per-request failure isolation, admission
+//! control, the metrics/jobs surface, and graceful drain.
+//!
+//! Structure:
+//! * two models behind one daemon, hammered by concurrent clients at
+//!   several thread counts — every response bitwise equal to a direct
+//!   `InferSession::predict` reference, single-row and multi-row,
+//! * a malformed-request corpus (bad JSON, missing/unknown model, wrong
+//!   shape, oversized body, truncated body, bad method/path/request
+//!   line) answered per-request with 4xx, each followed by a clean 200
+//!   on a fresh connection (no worker poisoning),
+//! * deterministic 503 + `Retry-After` when the connection cap is held,
+//!   and recovery once it is released,
+//! * `/healthz`, `/v1/models`, `/v1/metrics` (canonical bytes,
+//!   `check_report`-valid), `/v1/jobs` spool hand-off,
+//! * `NetServer::shutdown` drain report + listener teardown, the
+//!   `SWALP_SPOOL_POLL_MS` override, and a real `swalp serve --listen`
+//!   subprocess driven over TCP and drained with SIGTERM.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use swalp::data;
+use swalp::infer::{BatchOpts, InferSession, WeightChoice};
+use swalp::ledger::ServeOpts;
+use swalp::native;
+use swalp::serve_net::{self, NetOpts, NetServer, SessionPool};
+use swalp::util::http;
+use swalp::util::json::{self, Value};
+
+const BIN: &str = env!("CARGO_BIN_EXE_swalp");
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("swalp_net_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A raw-weights session over a freshly initialized model. The seed is
+/// fixed, so twin calls build bit-identical sessions — one goes behind
+/// the daemon, its twin computes reference predictions directly.
+fn session_and_inputs(model: &str, n: usize) -> (InferSession, Vec<Vec<f32>>) {
+    let backend = native::load(model).unwrap();
+    let ms = backend.init(3).unwrap();
+    let split = data::build(&backend.spec().dataset, 5, 0.1).unwrap();
+    let t = &split.test;
+    assert!(t.n > 0, "{model}: empty test split");
+    let xs: Vec<Vec<f32>> = (0..n).map(|i| t.sample_x(i % t.n).to_vec()).collect();
+    let session =
+        InferSession::from_parts(Box::new(backend), ms.trainable, ms.state, WeightChoice::Raw);
+    (session, xs)
+}
+
+fn start_server(models: &[&str], opts: NetOpts, dir: Option<PathBuf>) -> NetServer {
+    let mut pool = SessionPool::new();
+    for m in models {
+        let (session, _) = session_and_inputs(m, 1);
+        pool.add_session(m, session, BatchOpts { max_batch: 4, max_wait_us: 200 }).unwrap();
+    }
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    NetServer::start(pool, listener, opts, dir).unwrap()
+}
+
+fn predict_body(model: &str, x: &[f32]) -> Vec<u8> {
+    let input = Value::Arr(x.iter().map(|&v| Value::Num(v as f64)).collect());
+    Value::obj(vec![("input", input), ("model", Value::str(model))])
+        .to_string()
+        .into_bytes()
+}
+
+/// POST /v1/predict and return the decoded output row, asserting 200.
+fn predict(addr: SocketAddr, model: &str, x: &[f32]) -> Vec<f32> {
+    let body = predict_body(model, x);
+    let resp = http::request(addr, "POST", "/v1/predict", Some(&body)).unwrap();
+    assert_eq!(resp.status, 200, "predict failed: {}", resp.body_str());
+    let v = json::parse(resp.body_str()).unwrap();
+    assert_eq!(v.get("model").unwrap().as_str().unwrap(), model);
+    v.get("output").unwrap().as_f32_vec().unwrap()
+}
+
+fn assert_bits_eq(ctx: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{ctx}: row length");
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: element {k}: {g} vs {w}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// bit-identity across the wire
+// ---------------------------------------------------------------------
+
+#[test]
+fn two_models_over_tcp_are_bit_identical_to_direct_predictions() {
+    let models = ["mlp_qmm_fx86", "logreg_fx_f6"];
+    let n = 8;
+    // twin sessions compute the references the daemon must match bitwise
+    let mut refs = Vec::new();
+    let mut inputs = Vec::new();
+    for m in &models {
+        let (session, xs) = session_and_inputs(m, n);
+        refs.push(xs.iter().map(|x| session.predict(x).unwrap()).collect::<Vec<_>>());
+        inputs.push(xs);
+    }
+    let server = start_server(&models, NetOpts::default(), None);
+    let addr = server.addr();
+
+    for &threads in &[1usize, 4, 9] {
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let (refs, inputs) = (&refs, &inputs);
+                s.spawn(move || {
+                    // interleave both models from every client thread
+                    for i in 0..n {
+                        let m = (t + i) % models.len();
+                        let out = predict(addr, models[m], &inputs[m][i]);
+                        let ctx = format!("t={t} model={} sample={i}", models[m]);
+                        assert_bits_eq(&ctx, &out, &refs[m][i]);
+                    }
+                });
+            }
+        });
+    }
+
+    // multi-row requests coalesce through the same batcher and stay exact
+    let rows = Value::Arr(
+        inputs[0]
+            .iter()
+            .map(|x| Value::Arr(x.iter().map(|&v| Value::Num(v as f64)).collect()))
+            .collect(),
+    );
+    let body = Value::obj(vec![("inputs", rows), ("model", Value::str(models[0]))])
+        .to_string()
+        .into_bytes();
+    let resp = http::request(addr, "POST", "/v1/predict", Some(&body)).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let v = json::parse(resp.body_str()).unwrap();
+    let outs = v.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(outs.len(), n);
+    for (i, out) in outs.iter().enumerate() {
+        assert_bits_eq(&format!("batch sample {i}"), &out.as_f32_vec().unwrap(), &refs[0][i]);
+    }
+
+    let report = server.shutdown();
+    serve_net::check_report(&report).unwrap();
+    let srv = report.get("server").unwrap();
+    assert!(srv.get("requests").unwrap().as_u64().unwrap() >= (14 * n + 1) as u64);
+    assert_eq!(srv.get("http_errors").unwrap().as_u64().unwrap(), 0);
+}
+
+// ---------------------------------------------------------------------
+// malformed requests: per-request 4xx, no worker poisoning
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_requests_get_4xx_and_never_poison_the_next_request() {
+    let model = "mlp_qmm_fx86";
+    let (reference, xs) = session_and_inputs(model, 1);
+    let want = reference.predict(&xs[0]).unwrap();
+    let opts = NetOpts { max_body: 4096, ..NetOpts::default() };
+    let server = start_server(&[model], opts, None);
+    let addr = server.addr();
+
+    // (request bytes or (path, body), expected status, expected message bit)
+    let corpus: Vec<(&str, Vec<u8>, u16, &str)> = vec![
+        ("bad json", b"{not json".to_vec(), 400, "valid JSON"),
+        ("missing model", br#"{"input": [1.0]}"#.to_vec(), 400, "model"),
+        (
+            "unknown model",
+            br#"{"model": "nope", "input": [1.0]}"#.to_vec(),
+            404,
+            "mlp_qmm_fx86",
+        ),
+        (
+            "wrong shape",
+            predict_body(model, &[1.0, 2.0, 3.0]),
+            400,
+            "sample 0",
+        ),
+        (
+            "missing input",
+            format!(r#"{{"model": "{model}"}}"#).into_bytes(),
+            400,
+            "input",
+        ),
+        (
+            "empty inputs",
+            format!(r#"{{"model": "{model}", "inputs": []}}"#).into_bytes(),
+            400,
+            "empty",
+        ),
+        ("oversized body", vec![b' '; 8192], 413, "exceeds"),
+    ];
+    for (name, body, status, msg) in corpus {
+        let resp = http::request(addr, "POST", "/v1/predict", Some(&body)).unwrap();
+        assert_eq!(resp.status, status, "{name}: {}", resp.body_str());
+        assert!(resp.body_str().contains(msg), "{name}: {}", resp.body_str());
+        // the very next request on a fresh connection is served cleanly
+        let out = predict(addr, model, &xs[0]);
+        assert_bits_eq(&format!("after {name}"), &out, &want);
+    }
+
+    // transport-level garbage: truncated body, then a raw bad request line
+    {
+        use std::io::Write;
+        // a header promising more bytes than the stream delivers
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"POST /v1/predict HTTP/1.1\r\ncontent-length: 50\r\n\r\nshort").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let resp = http::read_response(&mut BufReader::new(s)).unwrap();
+        assert_eq!(resp.status, 400, "truncated body: {}", resp.body_str());
+        assert!(resp.body_str().contains("truncated"), "{}", resp.body_str());
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"garbage\r\n\r\n").unwrap();
+        let resp = http::read_response(&mut BufReader::new(s.try_clone().unwrap())).unwrap();
+        assert_eq!(resp.status, 400, "garbage request line: {}", resp.body_str());
+    }
+
+    // wrong method / unknown path
+    let resp = http::request(addr, "GET", "/v1/predict", None).unwrap();
+    assert_eq!(resp.status, 405, "{}", resp.body_str());
+    assert!(resp.body_str().contains("POST"), "names the allowed method: {}", resp.body_str());
+    let resp = http::request(addr, "GET", "/v1/nope", None).unwrap();
+    assert_eq!(resp.status, 404, "{}", resp.body_str());
+
+    // the daemon is still healthy and the errors were counted
+    let out = predict(addr, model, &xs[0]);
+    assert_bits_eq("after corpus", &out, &want);
+    let report = server.shutdown();
+    let srv = report.get("server").unwrap();
+    assert!(srv.get("http_errors").unwrap().as_u64().unwrap() >= 11);
+}
+
+// ---------------------------------------------------------------------
+// admission control: deterministic 503 + Retry-After, then recovery
+// ---------------------------------------------------------------------
+
+#[test]
+fn connection_cap_returns_503_with_retry_after_and_recovers() {
+    let opts = NetOpts {
+        workers: 1,
+        queue: 1,
+        max_conns: 1,
+        read_timeout_ms: 2000,
+        ..NetOpts::default()
+    };
+    let server = start_server(&["mlp_qmm_fx86"], opts, None);
+    let addr = server.addr();
+
+    // hold the only connection slot: a served keep-alive connection
+    // stays admitted (active=1) until it closes or its read deadline
+    let held = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(held.try_clone().unwrap());
+    let mut held_w = held.try_clone().unwrap();
+    http::write_request(&mut held_w, "GET", "/healthz", None, false).unwrap();
+    let resp = http::read_response(&mut reader).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    assert_eq!(resp.header("connection"), Some("keep-alive"));
+
+    // the next connection is shed at accept time without a worker
+    let resp = http::request(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(resp.status, 503, "{}", resp.body_str());
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert!(resp.body_str().contains("capacity"), "{}", resp.body_str());
+
+    // release the slot; the daemon recovers within the retry window
+    drop((held, held_w, reader));
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let resp = http::request(addr, "GET", "/healthz", None).unwrap();
+        if resp.status == 200 {
+            break;
+        }
+        assert_eq!(resp.status, 503);
+        assert!(std::time::Instant::now() < deadline, "daemon never recovered from 503");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    let report = server.shutdown();
+    let srv = report.get("server").unwrap();
+    assert!(srv.get("overflow_503").unwrap().as_u64().unwrap() >= 1);
+}
+
+// ---------------------------------------------------------------------
+// metrics / models / jobs endpoints
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_and_models_endpoints_serve_canonical_checkable_documents() {
+    let server = start_server(&["mlp_qmm_fx86", "logreg_fx_f6"], NetOpts::default(), None);
+    let addr = server.addr();
+
+    let resp = http::request(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(resp.status, 200);
+    let v = json::parse(resp.body_str()).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+    assert!(!v.get("draining").unwrap().as_bool().unwrap());
+
+    let resp = http::request(addr, "GET", "/v1/models", None).unwrap();
+    assert_eq!(resp.status, 200);
+    let v = json::parse(resp.body_str()).unwrap();
+    let models = v.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    assert_eq!(models[0].get("name").unwrap().as_str().unwrap(), "mlp_qmm_fx86");
+    assert_eq!(models[0].get("weights").unwrap().as_str().unwrap(), "raw");
+    assert!(models[0].get("x_elems").unwrap().as_u64().unwrap() > 0);
+
+    // /v1/metrics: schema-valid AND byte-canonical, so the scraped
+    // bytes pass `swalp report --check` unmodified
+    let resp = http::request(addr, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(resp.status, 200);
+    let v = json::parse(resp.body_str()).unwrap();
+    serve_net::check_report(&v).unwrap();
+    assert_eq!(resp.body_str(), v.to_string(), "metrics bytes are canonical");
+    assert_eq!(v.get("models").unwrap().as_arr().unwrap().len(), 2);
+
+    let dir = tmp("metrics_check");
+    let path = dir.join("scraped.json");
+    std::fs::write(&path, &resp.body).unwrap();
+    let out =
+        Command::new(BIN).args(["report", path.to_str().unwrap(), "--check"]).output().unwrap();
+    assert!(out.status.success(), "stderr:\n{}", String::from_utf8_lossy(&out.stderr));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn net_jobs_land_in_the_same_spool_flow_as_file_jobs() {
+    let dir = tmp("jobs");
+    let server = start_server(&["mlp_qmm_fx86"], NetOpts::default(), Some(dir.clone()));
+    let addr = server.addr();
+
+    let job: &[u8] =
+        br#"{"schema":"swalp-job-v1","kind":"infer","checkpoint":"ck.bin","samples":4}"#;
+    let resp = http::request(addr, "POST", "/v1/jobs", Some(job)).unwrap();
+    assert_eq!(resp.status, 202, "{}", resp.body_str());
+    let v = json::parse(resp.body_str()).unwrap();
+    let spooled = PathBuf::from(v.get("spooled").unwrap().as_str().unwrap());
+    assert!(spooled.exists(), "{} not spooled", spooled.display());
+    // spooled bytes are the canonical form of the submitted document
+    let on_disk = std::fs::read_to_string(&spooled).unwrap();
+    let submitted = json::parse(std::str::from_utf8(job).unwrap()).unwrap();
+    assert_eq!(on_disk, submitted.to_string());
+
+    let resp = http::request(addr, "GET", "/v1/jobs", None).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+
+    let bad: &[u8] = br#"{"schema":"swalp-job-v2","kind":"infer"}"#;
+    let resp = http::request(addr, "POST", "/v1/jobs", Some(bad)).unwrap();
+    assert_eq!(resp.status, 400, "{}", resp.body_str());
+    assert!(resp.body_str().contains("swalp-job-v1"), "{}", resp.body_str());
+
+    drop(server);
+
+    // predict-only daemons (no spool directory) say so
+    let server = start_server(&["mlp_qmm_fx86"], NetOpts::default(), None);
+    let resp = http::request(server.addr(), "POST", "/v1/jobs", Some(job)).unwrap();
+    assert_eq!(resp.status, 404, "{}", resp.body_str());
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// drain + configuration knobs
+// ---------------------------------------------------------------------
+
+#[test]
+fn shutdown_returns_a_final_report_and_tears_down_the_listener() {
+    let (reference, xs) = session_and_inputs("mlp_qmm_fx86", 2);
+    let server = start_server(&["mlp_qmm_fx86"], NetOpts::default(), None);
+    let addr = server.addr();
+    let want = reference.predict(&xs[0]).unwrap();
+    let out = predict(addr, "mlp_qmm_fx86", &xs[0]);
+    assert_bits_eq("pre-drain", &out, &want);
+
+    let report = server.shutdown();
+    serve_net::check_report(&report).unwrap();
+    let srv = report.get("server").unwrap();
+    assert!(srv.get("requests").unwrap().as_u64().unwrap() >= 1);
+    let models = report.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models[0].get("requests").unwrap().as_u64().unwrap(), 1);
+    // the report is canonical — `swalp report --check` accepts its bytes
+    assert_eq!(report.to_string(), json::parse(&report.to_string()).unwrap().to_string());
+
+    // the listener is gone: new connections are refused, not queued
+    assert!(TcpStream::connect(addr).is_err(), "listener still accepting after shutdown");
+}
+
+#[test]
+fn spool_poll_interval_env_override_feeds_serve_opts_default() {
+    // integration-test binaries are their own process, and no other
+    // test in this file touches ServeOpts::default(), so the env var
+    // mutation cannot race another reader
+    std::env::set_var("SWALP_SPOOL_POLL_MS", "25");
+    assert_eq!(ServeOpts::default().poll_ms, 25);
+    std::env::set_var("SWALP_SPOOL_POLL_MS", "not a number");
+    assert_eq!(ServeOpts::default().poll_ms, 500, "garbage falls back to the default");
+    std::env::remove_var("SWALP_SPOOL_POLL_MS");
+    assert_eq!(ServeOpts::default().poll_ms, 500);
+}
+
+// ---------------------------------------------------------------------
+// the real daemon: `swalp serve --listen`, driven over TCP, SIGTERM drain
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn serve_listen_subprocess_serves_predicts_and_drains_on_sigterm() {
+    use std::io::BufRead;
+
+    let dir = tmp("daemon");
+    let ck = dir.join("ck.bin");
+    let out = Command::new(BIN)
+        .args([
+            "train", "--model", "mlp_qmm_fx86", "--steps", "24", "--warmup", "8", "--cycle", "4",
+            "--eval-every", "24", "--data-scale", "0.1", "--quiet", "--save",
+            ck.to_str().unwrap(), "--export-qswa",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "train failed:\n{}", String::from_utf8_lossy(&out.stderr));
+
+    let metrics = dir.join("net_metrics.json");
+    let model_spec = format!("m={}", ck.to_str().unwrap());
+    let mut child = Command::new(BIN)
+        .args([
+            "serve", "--listen", "127.0.0.1:0", "--model", &model_spec, "--workers", "2",
+            "--metrics-out", metrics.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // stdout is line-buffered even piped; the first line carries the
+    // bound address ("swalp serve: listening on 127.0.0.1:PORT ...")
+    let mut stdout = std::io::BufReader::new(child.stdout.take().unwrap());
+    let mut line = String::new();
+    stdout.read_line(&mut line).unwrap();
+    let addr: SocketAddr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|r| r.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in {line:?}"))
+        .parse()
+        .unwrap();
+
+    // discover the input width from the daemon itself, then predict
+    let resp = http::request(addr, "GET", "/v1/models", None).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let v = json::parse(resp.body_str()).unwrap();
+    let m = &v.get("models").unwrap().as_arr().unwrap()[0];
+    assert_eq!(m.get("name").unwrap().as_str().unwrap(), "m");
+    assert_eq!(m.get("weights").unwrap().as_str().unwrap(), "swa");
+    let x_elems = m.get("x_elems").unwrap().as_usize().unwrap();
+    let x = vec![0.25f32; x_elems];
+    let first = predict(addr, "m", &x);
+    // the daemon is deterministic across connections too
+    let second = predict(addr, "m", &x);
+    assert_bits_eq("subprocess predict", &second, &first);
+
+    // SIGTERM: drain in-flight work, write the final metrics, exit 0
+    let kill = Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .unwrap();
+    assert!(kill.success());
+    let status = child.wait().unwrap();
+    assert!(status.success(), "daemon exit after SIGTERM: {status:?}");
+
+    let v = json::parse_file(&metrics).unwrap();
+    serve_net::check_report(&v).unwrap();
+    let srv = v.get("server").unwrap();
+    assert!(srv.get("requests").unwrap().as_u64().unwrap() >= 3);
+    // the written report passes the canonical-bytes gate
+    let out = Command::new(BIN)
+        .args(["report", metrics.to_str().unwrap(), "--check"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr:\n{}", String::from_utf8_lossy(&out.stderr));
+    let _ = std::fs::remove_dir_all(&dir);
+}
